@@ -1,0 +1,87 @@
+//! End-to-end driver: full MobileNetV2-style backbone inference through the
+//! whole system, proving all layers compose (DESIGN.md §2):
+//!
+//!   * 16 inverted-residual blocks + classifier head,
+//!   * every block executed by the fused CFU driven by RV32IM firmware on
+//!     the cycle-accurate core (the paper's measurement methodology),
+//!   * logits cross-checked bit-exactly against the PJRT-executed
+//!     `backbone.hlo.txt` (the AOT JAX/Pallas golden model),
+//!   * per-layer cycle table + headline end-to-end speedup vs the software
+//!     baseline.
+//!
+//! Recorded in EXPERIMENTS.md §E2E.
+//! Run: `make artifacts && cargo run --release --example mobilenet_e2e`
+
+use fused_dsc::cfu::PipelineVersion;
+use fused_dsc::coordinator::{infer_golden, Backend, Engine};
+use fused_dsc::model::blocks::NUM_CLASSES;
+use fused_dsc::model::weights::{gen_input, make_model_params};
+use fused_dsc::runtime::{artifact_path, Runtime};
+use fused_dsc::tensor::TensorI8;
+use fused_dsc::util::stats::fmt_cycles;
+
+fn main() -> anyhow::Result<()> {
+    let params = make_model_params(None);
+    let c0 = params.blocks[0].cfg;
+    let x = TensorI8::from_vec(
+        &[c0.h as usize, c0.w as usize, c0.cin as usize],
+        gen_input("e2e.x", (c0.h * c0.w * c0.cin) as usize, params.blocks[0].zp_in()),
+    );
+    println!(
+        "input: {}x{}x{} synthetic int8 image features; {} blocks + head -> {} classes\n",
+        c0.h, c0.w, c0.cin, params.blocks.len(), NUM_CLASSES
+    );
+
+    // --- Fused v3 on the ISS, per-layer cycles. ---
+    let engine = Engine::new(params.clone(), Backend::FusedIss(PipelineVersion::V3));
+    let mut a = x.clone();
+    let mut total_v3 = 0u64;
+    println!("{:<5} {:<16} {:>12} {:>10}", "blk", "shape", "v3 cycles", "ms@100MHz");
+    let mut per_block = Vec::new();
+    for i in 0..engine.params.blocks.len() {
+        let cfg = engine.params.blocks[i].cfg;
+        let (out, cycles) = engine.run_block(i, &a)?;
+        println!(
+            "{:<5} {:<16} {:>12} {:>10.3}",
+            i + 1,
+            format!("{}x{}x{}->{}", cfg.h, cfg.w, cfg.cin, cfg.cout),
+            fmt_cycles(cycles),
+            cycles as f64 / 100e6 * 1e3
+        );
+        per_block.push(cycles);
+        total_v3 += cycles;
+        a = out;
+    }
+    let out_v3 = engine.infer(&x)?;
+    println!(
+        "\nfused v3 total: {} cycles = {:.2} ms @100MHz, predicted class {}",
+        fmt_cycles(total_v3),
+        total_v3 as f64 / 100e6 * 1e3,
+        out_v3.class
+    );
+
+    // --- Golden cross-check: PJRT backbone artifact. ---
+    let rt = Runtime::cpu()?;
+    let exe = rt.load_hlo(
+        &artifact_path("backbone.hlo.txt")?,
+        (c0.h * c0.w * c0.cin) as usize,
+    )?;
+    let golden = infer_golden(&exe, &x)?;
+    anyhow::ensure!(golden.logits == out_v3.logits, "logits mismatch vs golden model");
+    println!("logits bit-exact vs PJRT backbone golden model ✓ ({:?})", golden.logits);
+
+    // --- Baseline comparison (software-only, whole network). ---
+    println!("\nrunning the software baseline over the whole network (~250M simulated cycles)...");
+    let sw = Engine::new(params, Backend::SoftwareIss).infer(&x)?;
+    anyhow::ensure!(sw.logits == out_v3.logits, "baseline logits mismatch");
+    println!(
+        "software total: {} cycles = {:.1} ms @100MHz",
+        fmt_cycles(sw.sim_cycles),
+        sw.sim_cycles as f64 / 100e6 * 1e3
+    );
+    println!(
+        "END-TO-END SPEEDUP (full network): {:.1}x   (paper reports up to 59.3x per layer)",
+        sw.sim_cycles as f64 / total_v3 as f64
+    );
+    Ok(())
+}

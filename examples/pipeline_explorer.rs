@@ -1,0 +1,93 @@
+//! Design-space explorer: sweep the pipeline versions and timing parameters
+//! across block shapes to see *where* inter- and intra-stage pipelining pay
+//! off — the ablation behind the paper's §III-C design evolution.
+//!
+//! Run: `cargo run --release --example pipeline_explorer`
+
+use fused_dsc::cfu::{PipelineVersion, StageTimes, TimingParams};
+use fused_dsc::driver::run_block_fused;
+use fused_dsc::model::blocks::BlockConfig;
+use fused_dsc::model::weights::{gen_input, make_block_params};
+use fused_dsc::tensor::TensorI8;
+use fused_dsc::util::stats::fmt_cycles;
+
+fn main() -> anyhow::Result<()> {
+    println!("== analytical: initiation interval per version (cycles/pixel) ==");
+    println!(
+        "{:<26} {:>8} {:>8} {:>8}  ratio v1/v3",
+        "shape (Cin->M->Cout)", "II v1", "II v2", "II v3"
+    );
+    let p = TimingParams::default();
+    for (cin, m, cout) in [(8u32, 48u32, 8u32), (16, 96, 16), (24, 144, 24), (56, 336, 56), (8, 48, 64)] {
+        let cfg = fused_dsc::cfu::LayerConfig {
+            h: 16, w: 16, cin, m, cout, stride: 1, ..Default::default()
+        };
+        let t = StageTimes::for_layer(&cfg);
+        let (i1, i2, i3) = (
+            t.ii(PipelineVersion::V1, &p),
+            t.ii(PipelineVersion::V2, &p),
+            t.ii(PipelineVersion::V3, &p),
+        );
+        println!(
+            "{:<26} {:>8} {:>8} {:>8}  {:.2}x",
+            format!("{cin}->{m}->{cout}"),
+            i1,
+            i2,
+            i3,
+            i1 as f64 / i3 as f64
+        );
+    }
+
+    println!("\n== measured on the ISS (driver overhead included) ==");
+    println!(
+        "{:<30} {:>10} {:>10} {:>10}  v1/v3",
+        "block", "v1", "v2", "v3"
+    );
+    let blocks = [
+        BlockConfig::new(20, 20, 8, 48, 8, 1, true),
+        BlockConfig::new(20, 20, 16, 96, 16, 1, true),
+        BlockConfig::new(10, 10, 24, 144, 24, 1, true),
+        BlockConfig::new(10, 10, 8, 48, 16, 2, false),
+    ];
+    for cfg in blocks {
+        let bp = make_block_params(7, cfg, -3);
+        let x = TensorI8::from_vec(
+            &[cfg.h as usize, cfg.w as usize, cfg.cin as usize],
+            gen_input("explorer.x", (cfg.h * cfg.w * cfg.cin) as usize, bp.zp_in()),
+        );
+        let mut cycles = [0u64; 3];
+        for (i, v) in PipelineVersion::ALL.iter().enumerate() {
+            cycles[i] = run_block_fused(&bp, &x, *v)?.cycles;
+        }
+        println!(
+            "{:<30} {:>10} {:>10} {:>10}  {:.2}x",
+            format!(
+                "{}x{}x{}->M{}->{} s{}{}",
+                cfg.h, cfg.w, cfg.cin, cfg.m, cfg.cout, cfg.stride,
+                if cfg.residual { " +res" } else { "" }
+            ),
+            fmt_cycles(cycles[0]),
+            fmt_cycles(cycles[1]),
+            fmt_cycles(cycles[2]),
+            cycles[0] as f64 / cycles[2] as f64
+        );
+    }
+
+    println!("\n== sensitivity: stage overhead vs pipelining gain (layer-3 shape) ==");
+    let cfg = fused_dsc::cfu::LayerConfig { h: 40, w: 40, cin: 8, m: 48, cout: 8, stride: 1, ..Default::default() };
+    let t = StageTimes::for_layer(&cfg);
+    println!("{:>14} {:>8} {:>8} {:>8}", "stage_overhead", "II v1", "II v2", "II v3");
+    for ovh in [0u64, 4, 16, 64, 256] {
+        let p = TimingParams { start_overhead: 8, stage_overhead: ovh };
+        println!(
+            "{:>14} {:>8} {:>8} {:>8}",
+            ovh,
+            t.ii(PipelineVersion::V1, &p),
+            t.ii(PipelineVersion::V2, &p),
+            t.ii(PipelineVersion::V3, &p)
+        );
+    }
+    println!("\n(With large per-stage overheads the versions converge — pipelining only pays");
+    println!(" when stage boundaries are cheap, which is the v3 design point the paper picks.)");
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! Quickstart: run one inverted-residual block three ways and check they
+//! agree bit-exactly —
+//!
+//!   1. the layer-by-layer Rust reference (the conventional model),
+//!   2. the fused CFU simulator (the paper's zero-buffer dataflow),
+//!   3. the PJRT-executed HLO artifact (the JAX/Pallas golden model),
+//!
+//! then print the measured speedup of the fused design over the software
+//! baseline on the simulated RISC-V core.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use fused_dsc::baseline::run_block_v0;
+use fused_dsc::cfu::{CfuUnit, PipelineVersion};
+use fused_dsc::driver::run_block_fused;
+use fused_dsc::model::refimpl::block_ref;
+use fused_dsc::model::weights::{gen_input, make_model_params};
+use fused_dsc::runtime::{artifact_path, Runtime};
+use fused_dsc::tensor::TensorI8;
+use fused_dsc::util::stats::fmt_cycles;
+
+fn main() -> anyhow::Result<()> {
+    // The paper's "3rd layer": 40x40x8, expanded to 48 channels, residual.
+    let params = make_model_params(None);
+    let bp = &params.blocks[2];
+    let cfg = bp.cfg;
+    println!(
+        "block: {}x{}x{} -> M={} -> {} (stride {}, residual {})",
+        cfg.h, cfg.w, cfg.cin, cfg.m, cfg.cout, cfg.stride, cfg.residual
+    );
+
+    let n = (cfg.h * cfg.w * cfg.cin) as usize;
+    let x = TensorI8::from_vec(
+        &[cfg.h as usize, cfg.w as usize, cfg.cin as usize],
+        gen_input("quickstart.x", n, bp.zp_in()),
+    );
+
+    // 1. Conventional layer-by-layer reference (materializes F1, F2).
+    let reference = block_ref(&x, bp);
+
+    // 2. Fused pixel-wise CFU (no intermediate feature maps anywhere).
+    let mut unit = CfuUnit::new(PipelineVersion::V3);
+    let (fused, _) = unit.run_block_host(bp, &x);
+    assert_eq!(fused.data, reference.data);
+    println!("fused CFU        == layer-by-layer reference  ✓ (bit-exact)");
+
+    // 3. PJRT golden model (the AOT-compiled JAX/Pallas kernel).
+    let rt = Runtime::cpu()?;
+    let exe = rt.load_hlo(&artifact_path("block_l3.hlo.txt")?, n)?;
+    let golden = exe.run_i8(&x.data, &[cfg.h as i64, cfg.w as i64, cfg.cin as i64])?;
+    assert_eq!(golden, reference.data);
+    println!("PJRT golden HLO  == layer-by-layer reference  ✓ (bit-exact)");
+
+    // Cycle-accurate speedup on the simulated VexRiscv core.
+    println!("\nmeasuring on the cycle-accurate RV32IM core (this runs ~60M simulated cycles)...");
+    let v0 = run_block_v0(bp, &x)?;
+    let v3 = run_block_fused(bp, &x, PipelineVersion::V3)?;
+    assert_eq!(v0.out.data, v3.out.data);
+    println!(
+        "software baseline: {} cycles   fused v3: {} cycles   speedup: {:.1}x (paper: 59.3x)",
+        fmt_cycles(v0.cycles),
+        fmt_cycles(v3.cycles),
+        v0.cycles as f64 / v3.cycles as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! Edge-serving scenario: a camera-like stream of inference requests goes
+//! through the batching coordinator backed by the fused accelerator model.
+//! Reports latency percentiles, throughput, and the simulated hardware
+//! time per request — the deployment shape the paper's intro motivates
+//! (always-on TinyML vision at the edge).
+//!
+//! Run: `cargo run --release --example serve_edge`
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use fused_dsc::cfu::PipelineVersion;
+use fused_dsc::coordinator::{Backend, Coordinator, Engine, ServeConfig};
+use fused_dsc::model::weights::{gen_input, make_model_params};
+use fused_dsc::tensor::TensorI8;
+use fused_dsc::util::stats::fmt_cycles;
+
+fn main() -> anyhow::Result<()> {
+    let params = make_model_params(None);
+    let engine = Arc::new(Engine::new(params, Backend::FusedHost(PipelineVersion::V3)));
+    let cfg = ServeConfig {
+        max_batch: 8,
+        batch_timeout: Duration::from_millis(2),
+        workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+    };
+    println!(
+        "coordinator: max_batch={} workers={} backend={}",
+        cfg.max_batch,
+        cfg.workers,
+        engine.backend.name()
+    );
+    let coord = Coordinator::start(Arc::clone(&engine), cfg);
+
+    // 256 requests arriving in bursts (camera frames + sporadic events).
+    let n = 256;
+    let t0 = std::time::Instant::now();
+    let mut tickets = Vec::with_capacity(n);
+    for i in 0..n {
+        tickets.push(coord.submit(frame(&engine, i as u64)));
+        if i % 16 == 15 {
+            std::thread::sleep(Duration::from_millis(1)); // burst boundary
+        }
+    }
+    let mut class_histogram = vec![0usize; 16];
+    for t in tickets {
+        let r = t.wait()?;
+        class_histogram[r.class] += 1;
+    }
+    let wall = t0.elapsed();
+    let snap = coord.metrics.snapshot();
+    println!(
+        "\nserved {} requests in {:.2}s -> {:.1} req/s (host wall-clock)",
+        snap.completed,
+        wall.as_secs_f64(),
+        snap.completed as f64 / wall.as_secs_f64()
+    );
+    if let (Some(q), Some(tot)) = (snap.queue_latency, snap.total_latency) {
+        println!(
+            "latency  p50/p95/p99: {:.1}/{:.1}/{:.1} ms (queue p95 {:.1} ms)",
+            tot.p50 * 1e3,
+            tot.p95 * 1e3,
+            tot.p99 * 1e3,
+            q.p95 * 1e3
+        );
+    }
+    println!(
+        "batches: {} (max batch seen {}); simulated accelerator: {} cycles total, {:.2} ms @100MHz per request",
+        snap.batches,
+        snap.max_batch_seen,
+        fmt_cycles(snap.sim_cycles),
+        snap.sim_cycles as f64 / snap.completed as f64 / 100e6 * 1e3
+    );
+    println!("class histogram: {class_histogram:?}");
+    coord.shutdown();
+    Ok(())
+}
+
+fn frame(engine: &Engine, salt: u64) -> TensorI8 {
+    let c = engine.params.blocks[0].cfg;
+    TensorI8::from_vec(
+        &[c.h as usize, c.w as usize, c.cin as usize],
+        gen_input(&format!("serve_edge.{salt}"), (c.h * c.w * c.cin) as usize, engine.params.blocks[0].zp_in()),
+    )
+}

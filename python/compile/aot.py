@@ -1,0 +1,104 @@
+"""AOT compile path: lower the JAX model to HLO *text* artifacts + weights.
+
+Run once by ``make artifacts``; python never appears on the request path.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts written to --out-dir (default ../artifacts):
+
+    block_l{3,5,8,15}.hlo.txt      fused single evaluated block (paper layers)
+    block_l{...}_layerwise.hlo.txt ablation: conventional layer-by-layer graph
+    backbone.hlo.txt               full 16-block backbone + classifier head
+    model.qmw                      weights + quant params (QMW binary)
+    manifest.txt                   shapes/zero-points the Rust side asserts on
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+os.environ.setdefault("JAX_ENABLE_X64", "1")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc
+
+from .blocks import EVALUATED_LAYERS, NUM_CLASSES, backbone
+from .model import make_backbone_fn, make_block_fn
+from .weights import make_model_params, serialize_qmw
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants is essential: the default elides big weight
+    # literals as "{...}", which the HLO text parser then silently turns
+    # into garbage data on the Rust side.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_fn(fn, in_shape) -> str:
+    spec = jax.ShapeDtypeStruct(in_shape, jnp.int32)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--skip-backbone", action="store_true", help="blocks only (faster CI)")
+    args = ap.parse_args()
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    params = make_model_params()
+    manifest: list[str] = []
+
+    def emit(name: str, text: str) -> None:
+        path = os.path.join(out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  wrote {name} ({len(text)} chars)")
+
+    for idx, tag in EVALUATED_LAYERS.items():
+        bp = params.blocks[idx - 1]
+        cfg = bp.cfg
+        in_shape = (cfg.h, cfg.w, cfg.cin)
+        print(f"[aot] block {tag} (b{idx}): {cfg.h}x{cfg.w}x{cfg.cin} -> M={cfg.m} -> {cfg.cout}")
+        emit(f"block_l{idx}.hlo.txt", lower_fn(make_block_fn(bp, fused=True), in_shape))
+        emit(f"block_l{idx}_layerwise.hlo.txt", lower_fn(make_block_fn(bp, fused=False), in_shape))
+        manifest.append(
+            f"block_l{idx} in={cfg.h}x{cfg.w}x{cfg.cin} out={cfg.h_out}x{cfg.w_out}x{cfg.cout} "
+            f"zp_in={bp.zp_in} zp_out={bp.zp_out}"
+        )
+
+    if not args.skip_backbone:
+        bb = backbone()
+        in_shape = (bb[0].h, bb[0].w, bb[0].cin)
+        print(f"[aot] backbone: {in_shape} -> logits[{NUM_CLASSES}] (16 fused blocks)")
+        emit("backbone.hlo.txt", lower_fn(make_backbone_fn(params, fused=True), in_shape))
+        manifest.append(
+            f"backbone in={in_shape[0]}x{in_shape[1]}x{in_shape[2]} classes={NUM_CLASSES} "
+            f"zp_in={params.input_zp}"
+        )
+
+    qmw = serialize_qmw(params)
+    with open(os.path.join(out_dir, "model.qmw"), "wb") as f:
+        f.write(qmw)
+    print(f"  wrote model.qmw ({len(qmw)} bytes)")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""MobileNetV2-style block configurations (shared spec with the Rust side).
+
+The four *evaluated* blocks come straight from the paper (Table VI fixes the
+intermediate feature-map sizes; expansion factor 6 recovers the channel
+counts — see DESIGN.md §5):
+
+    3rd :  40x40x8   -> M=48  -> 8    stride 1, residual
+    5th :  20x20x16  -> M=96  -> 16   stride 1, residual
+    8th :  10x10x24  -> M=144 -> 24   stride 1, residual
+    15th:  5x5x56    -> M=336 -> 56   stride 1, residual
+
+The synthetic backbone ("mnv2-edge") chains these together with stride-2
+downsampling blocks, mirroring MobileNetV2's topology at an 80x80 stem
+resolution so the evaluated blocks land at their paper indices (1-based
+block numbers 3, 5, 8, 15).
+
+Rust mirror: ``rust/src/model/blocks.rs``.  Any change here must be made
+there too; the integration test compares the serialized config in the QMW
+artifact against the Rust-side table.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class BlockConfig:
+    """One inverted-residual block: Expansion 1x1 -> Depthwise 3x3 -> Projection 1x1."""
+
+    h: int  # input height
+    w: int  # input width
+    cin: int  # input channels  (multiple of 8 — paper's MAC-tree alignment)
+    m: int  # expanded channels (multiple of 8)
+    cout: int  # output channels  (multiple of 8)
+    stride: int  # 1 or 2 (applies to the depthwise stage)
+    residual: bool  # skip connection (requires stride=1 and cin==cout)
+
+    def __post_init__(self):
+        assert self.cin % 8 == 0 and self.m % 8 == 0 and self.cout % 8 == 0
+        assert self.stride in (1, 2)
+        if self.residual:
+            assert self.stride == 1 and self.cin == self.cout
+
+    @property
+    def h_out(self) -> int:
+        return (self.h + self.stride - 1) // self.stride
+
+    @property
+    def w_out(self) -> int:
+        return (self.w + self.stride - 1) // self.stride
+
+    @property
+    def f1_bytes(self) -> int:
+        """Intermediate feature map F1 size (== F2 size for stride 1)."""
+        return self.h * self.w * self.m
+
+    @property
+    def f2_bytes(self) -> int:
+        return self.h_out * self.w_out * self.m
+
+    @property
+    def macs(self) -> int:
+        """Total MAC count: expansion + depthwise + projection."""
+        ex = self.h * self.w * self.cin * self.m
+        dw = self.h_out * self.w_out * 9 * self.m
+        pr = self.h_out * self.w_out * self.m * self.cout
+        return ex + dw + pr
+
+    def as_ints(self) -> list[int]:
+        return [self.h, self.w, self.cin, self.m, self.cout, self.stride, int(self.residual)]
+
+
+def backbone() -> list[BlockConfig]:
+    """The synthetic "mnv2-edge" backbone (16 blocks). 1-based indices 3, 5,
+    8, 15 are the paper's evaluated layers."""
+    b = BlockConfig
+    return [
+        b(80, 80, 8, 48, 8, 2, False),      # 1  downsample 80->40
+        b(40, 40, 8, 48, 8, 1, True),       # 2
+        b(40, 40, 8, 48, 8, 1, True),       # 3  <- paper "3rd layer"
+        b(40, 40, 8, 48, 16, 2, False),     # 4  downsample 40->20
+        b(20, 20, 16, 96, 16, 1, True),     # 5  <- paper "5th layer"
+        b(20, 20, 16, 96, 16, 1, True),     # 6
+        b(20, 20, 16, 96, 24, 2, False),    # 7  downsample 20->10
+        b(10, 10, 24, 144, 24, 1, True),    # 8  <- paper "8th layer"
+        b(10, 10, 24, 144, 24, 1, True),    # 9
+        b(10, 10, 24, 144, 32, 2, False),   # 10 downsample 10->5
+        b(5, 5, 32, 192, 32, 1, True),      # 11
+        b(5, 5, 32, 192, 40, 1, False),     # 12
+        b(5, 5, 40, 240, 48, 1, False),     # 13
+        b(5, 5, 48, 288, 56, 1, False),     # 14
+        b(5, 5, 56, 336, 56, 1, True),      # 15 <- paper "15th layer"
+        b(5, 5, 56, 336, 56, 1, True),      # 16
+    ]
+
+
+# Paper's evaluated layers: 1-based index into backbone() -> paper tag.
+EVALUATED_LAYERS = {3: "3rd", 5: "5th", 8: "8th", 15: "15th"}
+
+NUM_CLASSES = 16  # classifier head width (multiple of 8)
+
+
+def evaluated_blocks() -> dict[str, BlockConfig]:
+    bb = backbone()
+    return {tag: bb[idx - 1] for idx, tag in EVALUATED_LAYERS.items()}

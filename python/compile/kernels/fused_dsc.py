@@ -1,0 +1,163 @@
+"""Fused pixel-wise DSC block as a Pallas kernel (the paper's L1 hot spot).
+
+The paper's accelerator streams each output pixel through Expansion ->
+Depthwise -> Projection without ever materializing the intermediate feature
+maps F1/F2 (zero-buffer dataflow, §III-A).  This kernel is the TPU
+re-expression of that insight (DESIGN.md §Hardware-Adaptation):
+
+  * the grid walks **output rows** — a row of pixels is the natural TPU
+    vector granule where the FPGA streams single pixels;
+  * the whole (TinyML-sized) input feature map lives in VMEM; the three F1
+    rows a depthwise window needs are **recomputed per step** and live only
+    in VMEM scratch — recompute-over-store, exactly the paper's trade;
+  * Expansion and Projection are MXU-shaped matmuls over
+    (row-pixels x channels) panels — channel parallelism mapped onto the
+    systolic array instead of onto 9 parallel engines / 56 OS engines;
+  * padding is applied **on the fly** with index masks (paper §III-E) —
+    the padded tensor never exists;
+  * F1/F2 never reach HBM: the emitted HLO contains no intermediate
+    feature-map buffers.
+
+Lowered with ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); correctness is pinned to the numpy oracle in ``ref.py`` by
+pytest + hypothesis, and the lowered HLO is the golden model for the Rust
+CFU simulator.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import quantize_jnp as qj
+from ..weights import BlockParams
+
+
+def _fused_block_kernel(
+    x_ref,
+    exw_ref,
+    exb_ref,
+    dww_ref,
+    dwb_ref,
+    prw_ref,
+    prb_ref,
+    o_ref,
+    *,
+    bp_static,
+):
+    """One grid step computes one complete output row (all Cout channels).
+
+    bp_static: (h, w, stride, residual, ex_mult, ex_shift, dw_mult, dw_shift,
+               pr_mult, pr_shift, zp_in, zp_f1, zp_f2, zp_out) — all python
+    ints, baked at trace time (they are per-layer constants, like the CFU's
+    CFG registers).
+    """
+    (h, w, stride, residual,
+     ex_mult, ex_shift, dw_mult, dw_shift, pr_mult, pr_shift,
+     zp_in, zp_f1, zp_f2, zp_out) = bp_static
+
+    i = pl.program_id(0)
+    w_out = (w + stride - 1) // stride
+    m = dwb_ref.shape[0]
+
+    dw_acc = jnp.zeros((w_out, m), dtype=jnp.int32)
+    for ky in range(3):
+        # --- On-the-fly padding (paper §III-E): rows outside the feature map
+        # are the quantization zero point; nothing is ever stored padded.
+        r = i * stride - 1 + ky
+        valid = jnp.logical_and(r >= 0, r < h)
+        rc = jnp.clip(r, 0, h - 1)
+        xrow = pl.load(x_ref, (pl.ds(rc, 1), slice(None), slice(None)))[0]  # (W, Cin)
+
+        # --- Expansion (1x1): one F1 row, MXU matmul over (W x Cin) @ (Cin x M).
+        xc = xrow.astype(jnp.int32) - jnp.int32(zp_in)
+        ex_acc = jnp.dot(xc, exw_ref[...].astype(jnp.int32)) + exb_ref[...].astype(jnp.int32)
+        f1row = qj.requantize(ex_acc, ex_mult, ex_shift, zp_f1, relu=True)  # (W, M) i32
+        f1row = jnp.where(valid, f1row, jnp.int32(zp_f1))
+
+        # Horizontal on-the-fly padding, then recenter once.
+        zp_col = jnp.full((1, m), zp_f1, dtype=jnp.int32)
+        f1c = jnp.concatenate([zp_col, f1row, zp_col], axis=0) - jnp.int32(zp_f1)  # (W+2, M)
+
+        # --- Depthwise (3x3): consume the F1 row immediately (NLR dataflow).
+        for kx in range(3):
+            cols = f1c[kx : kx + (w_out - 1) * stride + 1 : stride]  # (W_out, M)
+            dw_acc = dw_acc + cols * dww_ref[ky, kx, :].astype(jnp.int32)
+
+    dw_acc = dw_acc + dwb_ref[...].astype(jnp.int32)
+    f2row = qj.requantize(dw_acc, dw_mult, dw_shift, zp_f2, relu=True)  # (W_out, M) i32
+
+    # --- Projection (1x1): output-stationary contraction over M.
+    pr_acc = jnp.dot(f2row - jnp.int32(zp_f2), prw_ref[...].astype(jnp.int32))
+    pr_acc = pr_acc + prb_ref[...].astype(jnp.int32)
+    out = qj.requantize(pr_acc, pr_mult, pr_shift, zp_out, relu=False)  # (W_out, Cout)
+
+    if residual:
+        xrow_out = pl.load(x_ref, (pl.ds(i, 1), slice(None), slice(None)))[0]
+        out = qj.residual_add(out, xrow_out, zp_in)
+
+    pl.store(o_ref, (pl.ds(0, 1), slice(None), slice(None)), out.astype(jnp.int8)[None])
+
+
+def fused_block(x_q, bp: BlockParams):
+    """Apply one fused inverted-residual block. x_q: (H, W, Cin) int8 jax array.
+
+    Returns (H_out, W_out, Cout) int8.
+    """
+    cfg = bp.cfg
+    h_out, w_out = cfg.h_out, cfg.w_out
+    bp_static = (
+        cfg.h, cfg.w, cfg.stride, cfg.residual,
+        bp.ex_q.multiplier, bp.ex_q.shift,
+        bp.dw_q.multiplier, bp.dw_q.shift,
+        bp.pr_q.multiplier, bp.pr_q.shift,
+        bp.ex_q.zp_in, bp.ex_q.zp_out, bp.dw_q.zp_out, bp.pr_q.zp_out,
+    )
+    kernel = functools.partial(_fused_block_kernel, bp_static=bp_static)
+    grid = (h_out,)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            # Whole IFMAP resident in VMEM (TinyML sizes: <= 51 KiB across the
+            # backbone) — the analogue of the paper's banked IFMAP buffer.
+            pl.BlockSpec((cfg.h, cfg.w, cfg.cin), lambda i: (0, 0, 0)),
+            pl.BlockSpec((cfg.cin, cfg.m), lambda i: (0, 0)),
+            pl.BlockSpec((cfg.m,), lambda i: (0,)),
+            pl.BlockSpec((3, 3, cfg.m), lambda i: (0, 0, 0)),
+            pl.BlockSpec((cfg.m,), lambda i: (0,)),
+            pl.BlockSpec((cfg.m, cfg.cout), lambda i: (0, 0)),
+            pl.BlockSpec((cfg.cout,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, w_out, cfg.cout), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h_out, w_out, cfg.cout), jnp.int8),
+        interpret=True,
+    )(
+        x_q,
+        jnp.asarray(bp.ex_w), jnp.asarray(bp.ex_b),
+        jnp.asarray(bp.dw_w), jnp.asarray(bp.dw_b),
+        jnp.asarray(bp.pr_w), jnp.asarray(bp.pr_b),
+    )
+
+
+def vmem_footprint_bytes(bp: BlockParams) -> dict:
+    """Static VMEM usage estimate per grid step (DESIGN.md §Perf / L1).
+
+    This is the quantity to compare against the paper's zero-buffer claim:
+    the *intermediate* footprint is three F1 rows + one F2 row, independent
+    of H — versus H*W*M for a layer-by-layer design.
+    """
+    cfg = bp.cfg
+    i32 = 4
+    return {
+        "ifmap": cfg.h * cfg.w * cfg.cin,
+        "weights": cfg.cin * cfg.m + 9 * cfg.m + cfg.m * cfg.cout,
+        "bias_qp": (2 * cfg.m + cfg.cout) * i32,
+        "f1_rows": 3 * (cfg.w + 2) * cfg.m * i32,
+        "f2_row": cfg.w_out * cfg.m * i32,
+        "out_row": cfg.w_out * cfg.cout,
+        "layerwise_intermediate_for_comparison": cfg.f1_bytes + cfg.f2_bytes,
+    }

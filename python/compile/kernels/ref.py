@@ -1,0 +1,91 @@
+"""Pure-numpy layer-by-layer oracle for the fused DSC block.
+
+This is the *conventional* execution model the paper argues against
+(§II-C): each stage materializes its full intermediate feature map (F1 after
+expansion, F2 after depthwise) before the next stage starts.  It is the
+correctness reference for
+
+  * the Pallas fused kernel (pytest/hypothesis, this package), and
+  * transitively the Rust CFU model (which is checked against the PJRT-
+    executed HLO of the JAX model, which is checked against this oracle).
+
+All arithmetic is the integer-exact INT8 spec from ``..quantize``.
+Feature maps are HWC (height, width, channel), int8.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..quantize import StageQuant, residual_add
+from ..weights import BlockParams
+
+
+def conv1x1_ref(x_q: np.ndarray, w: np.ndarray, bias: np.ndarray, sq: StageQuant) -> np.ndarray:
+    """Pointwise convolution. x_q: (H, W, Cin) i8; w: (Cin, Cout) i8."""
+    xc = x_q.astype(np.int32) - np.int32(sq.zp_in)
+    acc = np.tensordot(xc, w.astype(np.int32), axes=([2], [0]))  # (H, W, Cout)
+    acc = acc + bias.astype(np.int32)
+    return sq.requantize(acc)
+
+
+def dwconv3x3_ref(
+    x_q: np.ndarray, w: np.ndarray, bias: np.ndarray, sq: StageQuant, stride: int
+) -> np.ndarray:
+    """Depthwise 3x3, SAME padding (pad value = input zero point, which is
+    exactly what the paper's on-the-fly padding hardware injects).
+
+    x_q: (H, W, M) i8; w: (3, 3, M) i8.
+    """
+    h, wdt, m = x_q.shape
+    ho = (h + stride - 1) // stride
+    wo = (wdt + stride - 1) // stride
+    # Explicit padding — the conventional software approach (paper Fig. 13a).
+    xp = np.full((h + 2, wdt + 2, m), sq.zp_in, dtype=np.int8)
+    xp[1 : h + 1, 1 : wdt + 1, :] = x_q
+    xc = xp.astype(np.int32) - np.int32(sq.zp_in)
+    acc = np.zeros((ho, wo, m), dtype=np.int32)
+    for ky in range(3):
+        for kx in range(3):
+            tile = xc[ky : ky + h : stride, kx : kx + wdt : stride, :]
+            acc += tile[:ho, :wo, :] * w[ky, kx, :].astype(np.int32)
+    acc = acc + bias.astype(np.int32)
+    return sq.requantize(acc)
+
+
+def block_ref(x_q: np.ndarray, bp: BlockParams) -> np.ndarray:
+    """Full inverted-residual block, layer by layer (materializing F1, F2)."""
+    cfg = bp.cfg
+    assert x_q.shape == (cfg.h, cfg.w, cfg.cin), (x_q.shape, cfg)
+    f1 = conv1x1_ref(x_q, bp.ex_w, bp.ex_b, bp.ex_q)  # (H, W, M)
+    f2 = dwconv3x3_ref(f1, bp.dw_w, bp.dw_b, bp.dw_q, cfg.stride)  # (Ho, Wo, M)
+    out = conv1x1_ref(f2, bp.pr_w, bp.pr_b, bp.pr_q)  # (Ho, Wo, Cout)
+    if cfg.residual:
+        out = residual_add(out, x_q, bp.zp_in)
+    return out
+
+
+def intermediate_traffic_bytes(cfg) -> int:
+    """Paper Eq. (1): DRAM traffic of the layer-by-layer model — each
+    intermediate map written once and read once."""
+    return 2 * cfg.f1_bytes + 2 * cfg.f2_bytes
+
+
+def avgpool_fc_ref(x_q: np.ndarray, fc_w: np.ndarray, fc_b: np.ndarray, zp_in: int) -> np.ndarray:
+    """Classifier head: global average pool (rounding division) + int8 FC.
+    Returns int32 logits."""
+    h, w, c = x_q.shape
+    s = x_q.astype(np.int64).sum(axis=(0, 1))  # (C,)
+    n = h * w
+    # Round-half-away-from-zero integer mean.
+    pooled = np.where(s >= 0, (s + n // 2) // n, -((-s + n // 2) // n)).astype(np.int32)
+    pc = pooled - np.int32(zp_in)
+    return np.tensordot(pc, fc_w.astype(np.int32), axes=([0], [0])) + fc_b.astype(np.int32)
+
+
+def model_ref(x_q: np.ndarray, params) -> np.ndarray:
+    """Whole backbone + head. Returns int32 logits (NUM_CLASSES,)."""
+    a = x_q
+    for bp in params.blocks:
+        a = block_ref(a, bp)
+    return avgpool_fc_ref(a, params.head.fc_w, params.head.fc_b, params.head.zp_in)

@@ -1,0 +1,114 @@
+"""L2 — the quantized MobileNetV2-style compute graph in JAX.
+
+Two block implementations exist on purpose:
+
+  * ``block_fused``   — calls the L1 Pallas kernel (zero intermediate
+    feature maps); this is what ships in the AOT artifacts.
+  * ``block_layerwise`` — plain jnp, materializes F1/F2 exactly like the
+    conventional layer-by-layer model the paper baselines against; used for
+    ablation (does XLA fuse it away? see EXPERIMENTS.md) and as an in-JAX
+    cross-check of the kernel.
+
+All arithmetic is the shared integer-exact INT8 spec.  Weights are baked as
+constants at trace time, so an artifact's only runtime input is the i32-boxed
+image tensor (the ``xla`` crate's literal API speaks i32/i64/f32/f64 — int8
+payloads travel in i32 lanes at the HLO boundary and are narrowed inside).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import quantize_jnp as qj
+from .kernels.fused_dsc import fused_block
+from .weights import BlockParams, HeadParams, ModelParams
+
+
+def block_layerwise(x_q, bp: BlockParams):
+    """Conventional execution: materialize F1 then F2 (paper Fig. 3a/b)."""
+    cfg = bp.cfg
+    ex = bp.ex_q
+    xc = x_q.astype(jnp.int32) - jnp.int32(ex.zp_in)
+    f1 = qj.requantize(
+        jnp.dot(xc, jnp.asarray(bp.ex_w, dtype=jnp.int32)) + jnp.asarray(bp.ex_b),
+        ex.multiplier, ex.shift, ex.zp_out, relu=True,
+    )  # (H, W, M) int32 lanes
+
+    dw = bp.dw_q
+    h, w = cfg.h, cfg.w
+    ho, wo = cfg.h_out, cfg.w_out
+    f1p = jnp.pad(f1, ((1, 1), (1, 1), (0, 0)), constant_values=dw.zp_in)
+    f1c = f1p - jnp.int32(dw.zp_in)
+    acc = jnp.zeros((ho, wo, cfg.m), dtype=jnp.int32)
+    for ky in range(3):
+        for kx in range(3):
+            tile = f1c[ky : ky + h : cfg.stride, kx : kx + w : cfg.stride]
+            acc = acc + tile[:ho, :wo] * jnp.asarray(bp.dw_w[ky, kx], dtype=jnp.int32)
+    f2 = qj.requantize(acc + jnp.asarray(bp.dw_b), dw.multiplier, dw.shift, dw.zp_out, relu=True)
+
+    pr = bp.pr_q
+    out = qj.requantize(
+        jnp.dot(f2 - jnp.int32(pr.zp_in), jnp.asarray(bp.pr_w, dtype=jnp.int32))
+        + jnp.asarray(bp.pr_b),
+        pr.multiplier, pr.shift, pr.zp_out, relu=False,
+    )
+    if cfg.residual:
+        out = qj.residual_add(out, x_q, bp.zp_in)
+    return out.astype(jnp.int8)
+
+
+def block_fused(x_q, bp: BlockParams):
+    """Fused pixel-wise execution via the L1 Pallas kernel."""
+    return fused_block(x_q, bp)
+
+
+def head(x_q, hp: HeadParams):
+    """Global average pool (rounding mean) + int8 FC -> int32 logits."""
+    h, w, _ = x_q.shape
+    n = h * w
+    s = x_q.astype(jnp.int64).sum(axis=(0, 1))
+    pooled = jnp.where(s >= 0, (s + n // 2) // n, -((-s + n // 2) // n)).astype(jnp.int32)
+    pc = pooled - jnp.int32(hp.zp_in)
+    return jnp.dot(pc, jnp.asarray(hp.fc_w, dtype=jnp.int32)) + jnp.asarray(hp.fc_b)
+
+
+def _boxed(fn):
+    """Wrap an int8-valued function with the i32 HLO boundary convention."""
+
+    def wrapped(x_i32):
+        y = fn(x_i32.astype(jnp.int8))
+        return (y.astype(jnp.int32),)
+
+    return wrapped
+
+
+def make_block_fn(bp: BlockParams, fused: bool = True):
+    """(H, W, Cin) i32 -> ((Ho, Wo, Cout) i32,) single-block entry point."""
+    impl = block_fused if fused else block_layerwise
+    return _boxed(lambda x: impl(x, bp))
+
+
+def make_backbone_fn(params: ModelParams, fused: bool = True):
+    """(H, W, C) i32 image features -> ((NUM_CLASSES,) i32 logits,)."""
+    impl = block_fused if fused else block_layerwise
+
+    def fn(x_i32):
+        a = x_i32.astype(jnp.int8)
+        for bp in params.blocks:
+            a = impl(a, bp)
+        return (head(a, params.head).astype(jnp.int32),)
+
+    return fn
+
+
+def make_features_fn(params: ModelParams, fused: bool = True):
+    """Backbone without the head: (H, W, C) i32 -> final feature map i32."""
+    impl = block_fused if fused else block_layerwise
+
+    def fn(x_i32):
+        a = x_i32.astype(jnp.int8)
+        for bp in params.blocks:
+            a = impl(a, bp)
+        return (a.astype(jnp.int32),)
+
+    return fn

@@ -1,0 +1,42 @@
+"""JAX mirror of the INT8 requantization spec in ``quantize.py``.
+
+Used inside the Pallas fused kernel and the JAX model so that the lowered
+HLO computes bit-exactly what the numpy oracle and the Rust simulator
+compute.  Requires ``jax_enable_x64`` (the SRDHM needs a 64-bit product);
+``aot.py`` and ``conftest.py`` turn it on before tracing.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+QMIN = -128
+QMAX = 127
+
+
+def srdhm(a, multiplier: int):
+    """SaturatingRoundingDoublingHighMul (round-half-up floor-shift variant,
+    see quantize.py docstring). ``a`` int32 array, ``multiplier`` positive
+    compile-time int."""
+    ab = a.astype(jnp.int64) * jnp.int64(multiplier)
+    return ((ab + jnp.int64(1 << 30)) >> 31).astype(jnp.int32)
+
+
+def rounding_rshift(x, exponent: int):
+    """Round-half-up arithmetic right shift, int32."""
+    if exponent == 0:
+        return x
+    return (x + jnp.int32(1 << (exponent - 1))) >> exponent
+
+
+def requantize(acc, multiplier: int, shift: int, zp_out: int, relu: bool):
+    """int32 accumulator -> int8-valued int32 array (kept in i32 lanes; the
+    caller narrows when storing)."""
+    q = rounding_rshift(srdhm(acc, multiplier), shift) + jnp.int32(zp_out)
+    lo = jnp.int32(zp_out if relu else QMIN)
+    return jnp.clip(q, lo, jnp.int32(QMAX))
+
+
+def residual_add(proj_q, input_q, zp: int):
+    s = proj_q.astype(jnp.int32) + input_q.astype(jnp.int32) - jnp.int32(zp)
+    return jnp.clip(s, jnp.int32(QMIN), jnp.int32(QMAX))

@@ -1,0 +1,291 @@
+"""Deterministic synthetic weight & quant-param generation + QMW serialization.
+
+The paper evaluates on TFLite MobileNetV2 (ImageNet weights).  Trained weight
+*values* do not affect cycle counts, traffic, area or power — only layer
+shapes and arithmetic do — so we substitute deterministic pseudo-random INT8
+weights (DESIGN.md §1).  The generator (splitmix64 seeded by an FNV-1a hash
+of the tensor name) is implemented identically in Rust
+(``rust/src/model/weights.rs``); the QMW artifact written here is compared
+bit-for-bit against the Rust generator in the integration suite, pinning the
+two implementations together.
+
+QMW ("Quantized Model Weights") binary layout, little-endian:
+
+    magic  b"QMW1"
+    u32    n_tensors
+    repeat n_tensors:
+        u16   name_len
+        bytes name (utf-8)
+        u8    dtype      (0 = i8, 1 = i32)
+        u8    ndim
+        u32   dims[ndim]
+        bytes data       (row-major; i32 little-endian)
+"""
+
+from __future__ import annotations
+
+import struct
+from dataclasses import dataclass
+
+import numpy as np
+
+from .blocks import NUM_CLASSES, BlockConfig, backbone
+from .quantize import StageQuant, derive_stage_scale, quantize_multiplier
+
+GLOBAL_SEED = 0x1E_D5C0FFEE  # shared with rust/src/model/weights.rs
+
+_M64 = (1 << 64) - 1
+
+
+def fnv1a64(s: str) -> int:
+    h = 0xCBF29CE484222325
+    for byte in s.encode("utf-8"):
+        h = ((h ^ byte) * 0x100000001B3) & _M64
+    return h
+
+
+class SplitMix64:
+    """splitmix64 PRNG — trivially portable, bit-identical in Rust."""
+
+    GAMMA = 0x9E3779B97F4A7C15
+
+    def __init__(self, seed: int):
+        self.state = seed & _M64
+
+    def next_u64(self) -> int:
+        self.state = (self.state + self.GAMMA) & _M64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & _M64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & _M64
+        return z ^ (z >> 31)
+
+    def next_n(self, n: int) -> np.ndarray:
+        """Vectorized: splitmix64 is counter-based — the k-th output is
+        mix(seed + k*gamma) — so a batch is a pure numpy expression.
+        Bit-identical to n calls of next_u64()."""
+        ks = np.arange(1, n + 1, dtype=np.uint64)
+        with np.errstate(over="ignore"):
+            z = np.uint64(self.state) + ks * np.uint64(self.GAMMA)
+            z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+            z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+            out = z ^ (z >> np.uint64(31))
+        self.state = (self.state + n * self.GAMMA) & _M64
+        return out
+
+
+def tensor_rng(name: str) -> SplitMix64:
+    return SplitMix64(fnv1a64(name) ^ GLOBAL_SEED)
+
+
+def gen_i8(name: str, shape: tuple[int, ...]) -> np.ndarray:
+    """INT8 weights uniform in [-127, 127] (symmetric; -128 never used,
+    matching TFLite's symmetric weight quantization)."""
+    rng = tensor_rng(name)
+    n = int(np.prod(shape))
+    vals = (rng.next_n(n) % np.uint64(255)).astype(np.int64) - 127
+    return vals.astype(np.int8).reshape(shape)
+
+
+def gen_bias(name: str, n: int) -> np.ndarray:
+    rng = tensor_rng(name)
+    vals = (rng.next_n(n) % np.uint64(4097)).astype(np.int64) - 2048
+    return vals.astype(np.int32)
+
+
+def gen_zp(name: str) -> int:
+    """Activation zero points in [-8, 8] — nonzero so the on-the-fly padding
+    logic (pad with zero *point*, not zero) is actually exercised."""
+    return int(tensor_rng(name).next_u64() % 17) - 8
+
+
+@dataclass(frozen=True)
+class BlockParams:
+    """All tensors + quant params for one inverted-residual block."""
+
+    cfg: BlockConfig
+    ex_w: np.ndarray  # (Cin, M) i8
+    ex_b: np.ndarray  # (M,) i32
+    dw_w: np.ndarray  # (3, 3, M) i8
+    dw_b: np.ndarray  # (M,) i32
+    pr_w: np.ndarray  # (M, Cout) i8
+    pr_b: np.ndarray  # (Cout,) i32
+    ex_q: StageQuant
+    dw_q: StageQuant
+    pr_q: StageQuant
+
+    @property
+    def zp_in(self) -> int:
+        return self.ex_q.zp_in
+
+    @property
+    def zp_out(self) -> int:
+        return self.pr_q.zp_out
+
+    def qp_words(self) -> np.ndarray:
+        """The i32[12] quant-param tensor stored in QMW (order is part of the
+        format; the Rust reader indexes these positions)."""
+        return np.array(
+            [
+                self.ex_q.multiplier, self.ex_q.shift,
+                self.dw_q.multiplier, self.dw_q.shift,
+                self.pr_q.multiplier, self.pr_q.shift,
+                self.ex_q.zp_in, self.ex_q.zp_out,
+                self.dw_q.zp_out, self.pr_q.zp_out,
+                int(self.ex_q.relu), int(self.pr_q.relu),
+            ],
+            dtype=np.int32,
+        )
+
+
+def make_block_params(idx: int, cfg: BlockConfig, zp_in: int) -> BlockParams:
+    """idx is the 1-based block number (stable across languages)."""
+    p = f"b{idx}"
+    zp_f1 = gen_zp(f"{p}.f1.zp")
+    zp_f2 = gen_zp(f"{p}.f2.zp")
+    # Residual blocks share input/output scale+zp so the skip-add needs no
+    # rescaling (DESIGN.md; applied identically in Rust).
+    zp_out = zp_in if cfg.residual else gen_zp(f"{p}.out.zp")
+
+    ex_mult, ex_shift = quantize_multiplier(derive_stage_scale(cfg.cin))
+    dw_mult, dw_shift = quantize_multiplier(derive_stage_scale(9))
+    pr_mult, pr_shift = quantize_multiplier(derive_stage_scale(cfg.m))
+
+    return BlockParams(
+        cfg=cfg,
+        ex_w=gen_i8(f"{p}.ex.w", (cfg.cin, cfg.m)),
+        ex_b=gen_bias(f"{p}.ex.b", cfg.m),
+        dw_w=gen_i8(f"{p}.dw.w", (3, 3, cfg.m)),
+        dw_b=gen_bias(f"{p}.dw.b", cfg.m),
+        pr_w=gen_i8(f"{p}.pr.w", (cfg.m, cfg.cout)),
+        pr_b=gen_bias(f"{p}.pr.b", cfg.cout),
+        ex_q=StageQuant(ex_mult, ex_shift, zp_in, zp_f1, relu=True),
+        dw_q=StageQuant(dw_mult, dw_shift, zp_f1, zp_f2, relu=True),
+        pr_q=StageQuant(pr_mult, pr_shift, zp_f2, zp_out, relu=False),
+    )
+
+
+@dataclass(frozen=True)
+class HeadParams:
+    """Classifier head: global average pool + 1x1 FC to NUM_CLASSES logits."""
+
+    fc_w: np.ndarray  # (C, NUM_CLASSES) i8
+    fc_b: np.ndarray  # (NUM_CLASSES,) i32
+    zp_in: int
+
+
+def make_head_params(cin: int, zp_in: int) -> HeadParams:
+    return HeadParams(
+        fc_w=gen_i8("head.fc.w", (cin, NUM_CLASSES)),
+        fc_b=gen_bias("head.fc.b", NUM_CLASSES),
+        zp_in=zp_in,
+    )
+
+
+@dataclass(frozen=True)
+class ModelParams:
+    blocks: list[BlockParams]
+    head: HeadParams
+
+    @property
+    def input_zp(self) -> int:
+        return self.blocks[0].zp_in
+
+
+def make_model_params(cfgs: list[BlockConfig] | None = None) -> ModelParams:
+    cfgs = backbone() if cfgs is None else cfgs
+    zp = gen_zp("act0.zp")
+    blocks = []
+    for i, cfg in enumerate(cfgs, start=1):
+        bp = make_block_params(i, cfg, zp)
+        blocks.append(bp)
+        zp = bp.zp_out
+    return ModelParams(blocks=blocks, head=make_head_params(cfgs[-1].cout, zp))
+
+
+def gen_input(name: str, shape: tuple[int, ...], zp: int) -> np.ndarray:
+    """Synthetic int8 activation input, biased around the zero point."""
+    rng = tensor_rng(name)
+    n = int(np.prod(shape))
+    vals = (rng.next_n(n) % np.uint64(200)).astype(np.int64) - 100 + zp
+    return np.clip(vals, -128, 127).astype(np.int8).reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# QMW serialization
+# ---------------------------------------------------------------------------
+
+_DTYPE_I8 = 0
+_DTYPE_I32 = 1
+
+
+def _write_tensor(out: bytearray, name: str, arr: np.ndarray) -> None:
+    if arr.dtype == np.int8:
+        dtype = _DTYPE_I8
+        data = arr.astype("<i1").tobytes()
+    elif arr.dtype == np.int32:
+        dtype = _DTYPE_I32
+        data = arr.astype("<i4").tobytes()
+    else:
+        raise TypeError(f"unsupported dtype {arr.dtype} for {name}")
+    nb = name.encode("utf-8")
+    out += struct.pack("<H", len(nb))
+    out += nb
+    out += struct.pack("<BB", dtype, arr.ndim)
+    for d in arr.shape:
+        out += struct.pack("<I", d)
+    out += data
+
+
+def serialize_qmw(params: ModelParams) -> bytes:
+    tensors: list[tuple[str, np.ndarray]] = []
+    cfg_words = [len(params.blocks)]
+    for bp in params.blocks:
+        cfg_words.extend(bp.cfg.as_ints())
+    tensors.append(("model.cfg", np.array(cfg_words, dtype=np.int32)))
+    for i, bp in enumerate(params.blocks, start=1):
+        p = f"b{i}"
+        tensors.append((f"{p}.ex.w", bp.ex_w))
+        tensors.append((f"{p}.ex.b", bp.ex_b))
+        tensors.append((f"{p}.dw.w", bp.dw_w))
+        tensors.append((f"{p}.dw.b", bp.dw_b))
+        tensors.append((f"{p}.pr.w", bp.pr_w))
+        tensors.append((f"{p}.pr.b", bp.pr_b))
+        tensors.append((f"{p}.qp", bp.qp_words()))
+    tensors.append(("head.fc.w", params.head.fc_w))
+    tensors.append(("head.fc.b", params.head.fc_b))
+    tensors.append(("head.qp", np.array([params.head.zp_in], dtype=np.int32)))
+
+    out = bytearray(b"QMW1")
+    out += struct.pack("<I", len(tensors))
+    for name, arr in tensors:
+        _write_tensor(out, name, arr)
+    return bytes(out)
+
+
+def parse_qmw(data: bytes) -> dict[str, np.ndarray]:
+    """Reference parser (used by tests to round-trip the writer)."""
+    assert data[:4] == b"QMW1", "bad magic"
+    (n,) = struct.unpack_from("<I", data, 4)
+    off = 8
+    out: dict[str, np.ndarray] = {}
+    for _ in range(n):
+        (name_len,) = struct.unpack_from("<H", data, off)
+        off += 2
+        name = data[off : off + name_len].decode("utf-8")
+        off += name_len
+        dtype, ndim = struct.unpack_from("<BB", data, off)
+        off += 2
+        dims = struct.unpack_from(f"<{ndim}I", data, off) if ndim else ()
+        off += 4 * ndim
+        count = int(np.prod(dims)) if ndim else 1
+        if dtype == _DTYPE_I8:
+            arr = np.frombuffer(data, dtype="<i1", count=count, offset=off)
+            off += count
+        elif dtype == _DTYPE_I32:
+            arr = np.frombuffer(data, dtype="<i4", count=count, offset=off)
+            off += 4 * count
+        else:
+            raise ValueError(f"bad dtype {dtype}")
+        out[name] = arr.reshape(dims)
+    assert off == len(data), "trailing bytes"
+    return out

@@ -1,0 +1,9 @@
+import os
+import sys
+
+# x64 must be on before jax initializes: the requantization spec needs 64-bit
+# products (quantize_jnp.srdhm).
+os.environ.setdefault("JAX_ENABLE_X64", "1")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.dirname(__file__))

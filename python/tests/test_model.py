@@ -1,0 +1,97 @@
+"""L2 model-level checks: backbone + head vs numpy oracle; AOT lowering."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile.blocks import NUM_CLASSES, BlockConfig, backbone
+from compile.kernels.ref import avgpool_fc_ref, model_ref
+from compile.model import head, make_backbone_fn, make_block_fn
+from compile.weights import gen_input, make_model_params
+
+
+@pytest.fixture(scope="module")
+def small_params():
+    """A 4-block mini-backbone for fast model-level checks."""
+    cfgs = [
+        BlockConfig(12, 12, 8, 24, 8, 2, False),
+        BlockConfig(6, 6, 8, 24, 8, 1, True),
+        BlockConfig(6, 6, 8, 24, 16, 2, False),
+        BlockConfig(3, 3, 16, 48, 16, 1, True),
+    ]
+    return make_model_params(cfgs)
+
+
+def test_mini_backbone_fused_matches_oracle(small_params):
+    p = small_params
+    cfg0 = p.blocks[0].cfg
+    x = gen_input("model.x", (cfg0.h, cfg0.w, cfg0.cin), p.input_zp)
+    want = model_ref(x, p)
+    fn = make_backbone_fn(p, fused=True)
+    (got,) = fn(jnp.asarray(x, dtype=jnp.int32))
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_mini_backbone_layerwise_matches_oracle(small_params):
+    p = small_params
+    cfg0 = p.blocks[0].cfg
+    x = gen_input("model.x", (cfg0.h, cfg0.w, cfg0.cin), p.input_zp)
+    want = model_ref(x, p)
+    fn = make_backbone_fn(p, fused=False)
+    (got,) = fn(jnp.asarray(x, dtype=jnp.int32))
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_block_fn_boxed_i32_boundary(small_params):
+    bp = small_params.blocks[1]
+    cfg = bp.cfg
+    x = gen_input("model.bx", (cfg.h, cfg.w, cfg.cin), bp.zp_in)
+    fn = make_block_fn(bp, fused=True)
+    (out,) = fn(jnp.asarray(x, dtype=jnp.int32))
+    assert out.dtype == jnp.int32
+    assert out.shape == (cfg.h_out, cfg.w_out, cfg.cout)
+    assert int(out.min()) >= -128 and int(out.max()) <= 127
+
+
+def test_head_matches_oracle(small_params):
+    p = small_params
+    c = p.blocks[-1].cfg.cout
+    x = gen_input("model.hx", (3, 3, c), p.head.zp_in)
+    want = avgpool_fc_ref(x, p.head.fc_w, p.head.fc_b, p.head.zp_in)
+    got = np.asarray(head(jnp.asarray(x), p.head))
+    np.testing.assert_array_equal(got, want)
+    assert got.shape == (NUM_CLASSES,)
+
+
+def test_full_backbone_shapes_chain():
+    bb = backbone()
+    for prev, nxt in zip(bb, bb[1:]):
+        assert prev.h_out == nxt.h and prev.w_out == nxt.w and prev.cout == nxt.cin
+
+
+def test_lowering_produces_hlo_text(small_params):
+    """The AOT path (stablehlo -> XlaComputation -> HLO text) must succeed
+    and contain no custom-calls (CPU-PJRT executability)."""
+    from compile.aot import lower_fn
+
+    bp = small_params.blocks[1]
+    cfg = bp.cfg
+    text = lower_fn(make_block_fn(bp, fused=True), (cfg.h, cfg.w, cfg.cin))
+    assert text.startswith("HloModule")
+    assert "custom-call" not in text
+    assert f"s32[{cfg.h},{cfg.w},{cfg.cin}]" in text
+
+
+def test_lowered_block_executes_like_oracle(small_params):
+    """Execute the jitted (HLO-equivalent) function and compare — this is the
+    same computation the Rust PJRT runtime will load."""
+    from compile.kernels.ref import block_ref
+
+    bp = small_params.blocks[3]
+    cfg = bp.cfg
+    x = gen_input("model.lx", (cfg.h, cfg.w, cfg.cin), bp.zp_in)
+    fn = jax.jit(make_block_fn(bp, fused=True))
+    (got,) = fn(jnp.asarray(x, dtype=jnp.int32))
+    np.testing.assert_array_equal(np.asarray(got, dtype=np.int8), block_ref(x, bp))

@@ -1,0 +1,110 @@
+"""Quantization primitive exactness: numpy spec vs jnp mirror vs big-int oracle."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax.numpy as jnp
+
+from compile import quantize as q
+from compile import quantize_jnp as qj
+
+i32s = st.integers(min_value=-(2**31), max_value=2**31 - 1)
+mults = st.integers(min_value=2**30, max_value=2**31 - 1)
+shifts = st.integers(min_value=0, max_value=24)
+
+
+def srdhm_bigint(a: int, b: int) -> int:
+    """Arbitrary-precision oracle for the round-half-up SRDHM spec."""
+    return (a * b + (1 << 30)) >> 31
+
+
+def rdivpot_bigint(x: int, exponent: int) -> int:
+    if exponent == 0:
+        return x
+    s = (x + (1 << (exponent - 1)) + 2**31) % 2**32 - 2**31  # wrapping i32 add
+    return s >> exponent
+
+
+@given(a=i32s, b=mults)
+@settings(max_examples=300)
+def test_srdhm_matches_bigint(a, b):
+    got = int(q.saturating_rounding_doubling_high_mul(a, b))
+    assert got == srdhm_bigint(a, b)
+
+
+@given(a=i32s, b=mults)
+@settings(max_examples=200)
+def test_srdhm_jnp_matches_numpy(a, b):
+    got = int(qj.srdhm(jnp.int32(a), b))
+    assert got == int(q.saturating_rounding_doubling_high_mul(a, b))
+
+
+@given(x=i32s, e=shifts)
+@settings(max_examples=300)
+def test_rounding_divide_by_pot_matches_bigint(x, e):
+    assert int(q.rounding_divide_by_pot(x, e)) == rdivpot_bigint(x, e)
+
+
+@given(x=i32s, e=shifts)
+@settings(max_examples=200)
+def test_rounding_rshift_jnp_matches_numpy(x, e):
+    assert int(qj.rounding_rshift(jnp.int32(x), e)) == int(q.rounding_divide_by_pot(x, e))
+
+
+@given(
+    acc=st.integers(min_value=-(2**26), max_value=2**26),
+    mult=mults,
+    shift=shifts,
+    zp=st.integers(min_value=-16, max_value=16),
+    relu=st.booleans(),
+)
+@settings(max_examples=200)
+def test_stagequant_numpy_vs_jnp(acc, mult, shift, zp, relu):
+    sq = q.StageQuant(mult, shift, zp_in=0, zp_out=zp, relu=relu)
+    a = int(sq.requantize(np.int32(acc)))
+    b = int(qj.requantize(jnp.int32(acc), mult, shift, zp, relu))
+    assert a == b
+    assert q.QMIN <= a <= q.QMAX
+    if relu:
+        assert a >= zp
+
+
+@given(real=st.floats(min_value=1e-8, max_value=0.999, allow_nan=False))
+@settings(max_examples=300)
+def test_quantize_multiplier_roundtrip(real):
+    mult, shift = q.quantize_multiplier(real)
+    assert 2**30 <= mult < 2**31
+    assert shift >= 0
+    approx = mult / float(1 << (31 + shift))
+    assert abs(approx - real) / real < 1e-6
+
+
+def test_quantize_multiplier_rejects_out_of_range():
+    with pytest.raises(ValueError):
+        q.quantize_multiplier(1.5)
+    with pytest.raises(ValueError):
+        q.quantize_multiplier(0.0)
+
+
+def test_requantize_known_vectors():
+    """Hand-checked vectors; also pinned in rust/src/quant (same table)."""
+    sq = q.StageQuant(multiplier=1 << 30, shift=0, zp_in=0, zp_out=0, relu=False)
+    # real multiplier = 0.5 exactly.
+    assert int(sq.requantize(np.int32(200))) == 100
+    assert int(sq.requantize(np.int32(-200))) == -100
+    assert int(sq.requantize(np.int32(3))) == 2  # 1.5 rounds half-up to 2
+    assert int(sq.requantize(np.int32(-3))) == -1  # -1.5 rounds half-up to -1
+    assert int(sq.requantize(np.int32(1000))) == 127  # clamp QMAX
+    sq2 = q.StageQuant(multiplier=0x60000000, shift=2, zp_in=0, zp_out=5, relu=True)
+    # real = 0.75 / 4 = 0.1875; acc=100 -> srdhm 75 -> (75+2)>>2 = 19 -> +5 = 24
+    assert int(sq2.requantize(np.int32(100))) == 24
+    assert int(sq2.requantize(np.int32(-1000))) == 5  # relu clamps to zp_out
+
+
+def test_residual_add_clamps():
+    p = np.array([[100, -100, 5]], dtype=np.int8)
+    x = np.array([[100, -100, -3]], dtype=np.int8)
+    out = q.residual_add(p, x, zp=-3)
+    assert out.tolist() == [[127, -128, 5]]

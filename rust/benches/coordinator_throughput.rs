@@ -1,0 +1,50 @@
+//! Bench: serving throughput/latency of the batching coordinator across
+//! batch sizes and worker counts (the L3 serving hot path).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use fused_dsc::cfu::PipelineVersion;
+use fused_dsc::coordinator::{Backend, Coordinator, Engine, ServeConfig};
+use fused_dsc::model::blocks::BlockConfig;
+use fused_dsc::model::weights::{gen_input, make_model_params};
+use fused_dsc::tensor::TensorI8;
+use fused_dsc::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::from_args();
+    // A small backbone keeps the bench fast while exercising real batching.
+    let params = make_model_params(Some(vec![
+        BlockConfig::new(20, 20, 8, 48, 8, 2, false),
+        BlockConfig::new(10, 10, 8, 48, 8, 1, true),
+        BlockConfig::new(10, 10, 8, 48, 16, 2, false),
+        BlockConfig::new(5, 5, 16, 96, 16, 1, true),
+    ]));
+    let engine = Arc::new(Engine::new(params, Backend::FusedHost(PipelineVersion::V3)));
+
+    for (batch, workers) in [(1usize, 1usize), (4, 2), (8, 4), (16, 8)] {
+        let engine = Arc::clone(&engine);
+        b.bench(&format!("serve/batch{batch}-workers{workers} (64 req)"), || {
+            let cfg = ServeConfig {
+                max_batch: batch,
+                batch_timeout: Duration::from_micros(500),
+                workers,
+            };
+            let coord = Coordinator::start(Arc::clone(&engine), cfg);
+            let tickets: Vec<_> = (0..64)
+                .map(|i| {
+                    let c = engine.params.blocks[0].cfg;
+                    coord.submit(TensorI8::from_vec(
+                        &[c.h as usize, c.w as usize, c.cin as usize],
+                        gen_input(&format!("ct.{i}"), (c.h * c.w * c.cin) as usize, engine.params.blocks[0].zp_in()),
+                    ))
+                })
+                .collect();
+            for t in tickets {
+                t.wait().unwrap();
+            }
+            64
+        });
+    }
+    b.finish();
+}

@@ -1,0 +1,54 @@
+//! Bench: regenerate Fig. 14 — cycles per evaluated layer for v0 and the
+//! three accelerator versions, with speedup labels (paper §IV-B).
+//!
+//! `cargo bench --bench fig14_pipeline_evolution` (add `--quick` for 3 runs).
+
+use fused_dsc::baseline::run_block_v0;
+use fused_dsc::cfu::PipelineVersion;
+use fused_dsc::driver::run_block_fused;
+use fused_dsc::model::blocks::evaluated_blocks;
+use fused_dsc::model::weights::{gen_input, make_block_params};
+use fused_dsc::tensor::TensorI8;
+use fused_dsc::util::bench::Bencher;
+use fused_dsc::util::stats::fmt_cycles;
+
+fn main() {
+    let mut b = Bencher::from_args();
+    println!("== Fig. 14: pipeline evolution (simulated cycles; bench times are host wall-clock) ==");
+    let mut rows = Vec::new();
+    for (tag, cfg) in evaluated_blocks() {
+        let idx = match tag { "3rd" => 3, "5th" => 5, "8th" => 8, _ => 15 };
+        let bp = make_block_params(idx, cfg, -3);
+        let x = TensorI8::from_vec(
+            &[cfg.h as usize, cfg.w as usize, cfg.cin as usize],
+            gen_input("fig14.x", (cfg.h * cfg.w * cfg.cin) as usize, bp.zp_in()),
+        );
+        let mut v0_cycles = 0;
+        b.bench(&format!("fig14/{tag}/v0-software"), || {
+            let r = run_block_v0(&bp, &x).unwrap();
+            v0_cycles = r.cycles;
+            r.cycles
+        });
+        let mut fused = [0u64; 3];
+        for (i, v) in PipelineVersion::ALL.iter().enumerate() {
+            b.bench(&format!("fig14/{tag}/fused-{}", v.name()), || {
+                let r = run_block_fused(&bp, &x, *v).unwrap();
+                fused[i] = r.cycles;
+                r.cycles
+            });
+        }
+        rows.push((tag, v0_cycles, fused));
+    }
+    println!("\nlayer  v0           v1 (speedup)      v2 (speedup)      v3 (speedup)   [paper v1/v2/v3 on 3rd: 27.4x/46.3x/59.3x]");
+    for (tag, v0, fused) in rows {
+        if v0 == 0 {
+            continue;
+        }
+        print!("{tag:<6} {:<12}", fmt_cycles(v0));
+        for f in fused {
+            print!(" {:<8}({:>5.1}x) ", fmt_cycles(f), v0 as f64 / f as f64);
+        }
+        println!();
+    }
+    b.finish();
+}

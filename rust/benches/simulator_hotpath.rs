@@ -1,0 +1,71 @@
+//! Bench: the L3 hot paths themselves (host throughput of the simulator) —
+//! the targets of EXPERIMENTS.md §Perf.  Reports simulated-cycles-per-
+//! second for the ISS and pixel throughput for the CFU functional model.
+
+use fused_dsc::baseline::run_block_v0;
+use fused_dsc::cfu::{CfuUnit, PipelineVersion};
+use fused_dsc::driver::run_block_fused;
+use fused_dsc::isa::asm::Asm;
+use fused_dsc::isa::*;
+use fused_dsc::cpu::core::Machine;
+use fused_dsc::cpu::NoCfu;
+use fused_dsc::model::blocks::BlockConfig;
+use fused_dsc::model::weights::{gen_input, make_block_params};
+use fused_dsc::tensor::TensorI8;
+use fused_dsc::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::from_args();
+
+    // Raw ISS dispatch rate: a tight ALU loop (icache-resident).
+    b.bench("iss/alu-loop (Msim-cycles/s)", || {
+        let mut a = Asm::new();
+        a.li(T0, 0);
+        a.li(T1, 2_000_000);
+        a.label("l");
+        a.addi(T0, T0, 1);
+        a.xor(T2, T0, T1);
+        a.and(T3, T2, T0);
+        a.blt(T0, T1, "l");
+        a.ebreak();
+        let prog = a.assemble().unwrap();
+        let mut m = Machine::new(1 << 16, NoCfu);
+        m.load_program(0, &prog).unwrap();
+        m.run(u64::MAX).unwrap().cycles
+    });
+
+    // Memory-heavy ISS rate (D$ exercise).
+    b.bench("iss/memcpy-loop (Msim-cycles/s)", || {
+        let mut a = Asm::new();
+        a.li(S0, 0x8000);
+        a.li(S1, 0x20000);
+        a.li(S2, 64 * 1024);
+        a.label("l");
+        a.lw(T0, S0, 0);
+        a.sw(T0, S1, 0);
+        a.addi(S0, S0, 4);
+        a.addi(S1, S1, 4);
+        a.addi(S2, S2, -4);
+        a.bnez(S2, "l");
+        a.ebreak();
+        let prog = a.assemble().unwrap();
+        let mut m = Machine::new(1 << 20, NoCfu);
+        m.load_program(0, &prog).unwrap();
+        m.run(u64::MAX).unwrap().cycles
+    });
+
+    // End-to-end block paths (the report workloads).
+    let cfg = BlockConfig::new(20, 20, 16, 96, 16, 1, true);
+    let bp = make_block_params(5, cfg, -3);
+    let x = TensorI8::from_vec(
+        &[20, 20, 16],
+        gen_input("hot.x", (cfg.h * cfg.w * cfg.cin) as usize, bp.zp_in()),
+    );
+    b.bench("block/v0-software-iss", || run_block_v0(&bp, &x).unwrap().cycles);
+    b.bench("block/fused-v3-iss", || run_block_fused(&bp, &x, PipelineVersion::V3).unwrap().cycles);
+    b.bench("block/fused-v3-host-functional", || {
+        let mut u = CfuUnit::new(PipelineVersion::V3);
+        u.run_block_host(&bp, &x).1
+    });
+    b.finish();
+}

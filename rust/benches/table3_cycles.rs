@@ -1,0 +1,54 @@
+//! Bench: regenerate Table III-A — baseline vs CFU-Playground comparator vs
+//! fused v3 cycle counts on the four evaluated layers.
+
+use fused_dsc::baseline::cfu_playground::run_block_cfu_playground;
+use fused_dsc::baseline::run_block_v0;
+use fused_dsc::cfu::PipelineVersion;
+use fused_dsc::driver::run_block_fused;
+use fused_dsc::model::blocks::evaluated_blocks;
+use fused_dsc::model::weights::{gen_input, make_block_params};
+use fused_dsc::tensor::TensorI8;
+use fused_dsc::util::bench::Bencher;
+use fused_dsc::util::stats::fmt_cycles;
+
+fn main() {
+    let mut b = Bencher::from_args();
+    println!("== Table III-A: cycles @100 MHz (paper: 109.7M / 45.6M / 1.8M on 3rd, etc.) ==");
+    let mut rows = Vec::new();
+    for (tag, cfg) in evaluated_blocks() {
+        let idx = match tag { "3rd" => 3, "5th" => 5, "8th" => 8, _ => 15 };
+        let bp = make_block_params(idx, cfg, -3);
+        let x = TensorI8::from_vec(
+            &[cfg.h as usize, cfg.w as usize, cfg.cin as usize],
+            gen_input("t3.x", (cfg.h * cfg.w * cfg.cin) as usize, bp.zp_in()),
+        );
+        let (mut c0, mut cpg, mut c3) = (0u64, 0u64, 0u64);
+        b.bench(&format!("table3/{tag}/baseline"), || {
+            c0 = run_block_v0(&bp, &x).unwrap().cycles;
+            c0
+        });
+        b.bench(&format!("table3/{tag}/cfu-playground"), || {
+            cpg = run_block_cfu_playground(&bp, &x).unwrap().cycles;
+            cpg
+        });
+        b.bench(&format!("table3/{tag}/fused-v3"), || {
+            c3 = run_block_fused(&bp, &x, PipelineVersion::V3).unwrap().cycles;
+            c3
+        });
+        rows.push((tag, c0, cpg, c3));
+    }
+    println!("\nlayer  baseline     cfu-playground  fused-v3    v3-vs-pg");
+    for (tag, c0, cpg, c3) in rows {
+        if c3 == 0 {
+            continue;
+        }
+        println!(
+            "{tag:<6} {:<12} {:<15} {:<11} {:.1}x",
+            fmt_cycles(c0),
+            fmt_cycles(cpg),
+            fmt_cycles(c3),
+            cpg as f64 / c3 as f64
+        );
+    }
+    b.finish();
+}

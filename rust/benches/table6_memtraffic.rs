@@ -1,0 +1,51 @@
+//! Bench: regenerate Table VI — intermediate memory access cycles + bytes
+//! moved for the layer-by-layer baseline, measured with exact region
+//! watches on the F1/F2 buffers, plus the fused design's traffic and the
+//! §IV-D reduction figure.
+
+use fused_dsc::baseline::run_block_v0;
+use fused_dsc::memtraffic;
+use fused_dsc::model::blocks::evaluated_blocks;
+use fused_dsc::model::weights::{gen_input, make_block_params};
+use fused_dsc::tensor::TensorI8;
+use fused_dsc::util::bench::Bencher;
+use fused_dsc::util::stats::fmt_cycles;
+
+fn main() {
+    let mut b = Bencher::from_args();
+    println!("== Table VI: intermediate memory access (paper: 14.0M/307200 on 3rd, etc.) ==");
+    let mut rows = Vec::new();
+    for (tag, cfg) in evaluated_blocks() {
+        let idx = match tag { "3rd" => 3, "5th" => 5, "8th" => 8, _ => 15 };
+        let bp = make_block_params(idx, cfg, -3);
+        let x = TensorI8::from_vec(
+            &[cfg.h as usize, cfg.w as usize, cfg.cin as usize],
+            gen_input("t6.x", (cfg.h * cfg.w * cfg.cin) as usize, bp.zp_in()),
+        );
+        let mut row = (tag, 0u64, 0u64, cfg);
+        b.bench(&format!("table6/{tag}/baseline-traffic"), || {
+            let r = run_block_v0(&bp, &x).unwrap();
+            row.1 = r.f1_watch.cycles + r.f2_watch.cycles;
+            row.2 = r.f1_watch.bytes + r.f2_watch.bytes;
+            r.cycles
+        });
+        rows.push(row);
+    }
+    println!("\nlayer  workload      access-cycles  bytes-moved  Eq.1-analytic  fused-bytes");
+    for (tag, cycles, bytes, cfg) in &rows {
+        println!(
+            "{tag:<6} {:<13} {:<14} {:<12} {:<14} {}",
+            format!("{}x{}x{}", cfg.h, cfg.w, cfg.cin),
+            fmt_cycles(*cycles),
+            bytes,
+            memtraffic::traffic_dram_bytes(cfg),
+            memtraffic::fused_traffic_bytes(cfg)
+        );
+    }
+    let cfgs: Vec<_> = rows.iter().map(|r| r.3).collect();
+    println!(
+        "\naggregate data-movement reduction: {:.1}% (paper ~87%)",
+        100.0 * memtraffic::aggregate_reduction(&cfgs)
+    );
+    b.finish();
+}

@@ -1,0 +1,218 @@
+//! The CFU-Playground comparator (Prakash et al. [23], the paper's Table
+//! III/IV reference): a minimal CFU that accelerates **only 1×1 pointwise
+//! convolutions** with a 4-way SIMD MAC custom instruction.  The 3×3
+//! depthwise stage, requantization, and all inter-layer data movement stay
+//! in software — which is precisely why the paper's fused design beats it
+//! by 20-30×: the memory wall between stages is untouched.
+
+use anyhow::Result;
+
+use crate::cpu::core::{ExitReason, Machine};
+use crate::cpu::{CfuPort, CfuResponse};
+use crate::isa::asm::Asm;
+use crate::isa::*;
+use crate::model::weights::BlockParams;
+use crate::quant::StageQuant;
+use crate::tensor::TensorI8;
+
+use super::layout::{BlockLayout, PROG_BASE};
+#[cfg(test)]
+use super::sw_kernels;
+
+/// The 1×1-conv accelerator: a single 4-lane signed MAC with an
+/// accumulator register (the shape of Prakash et al.'s mnv2 CFU).
+#[derive(Debug, Default)]
+pub struct SimdMacCfu {
+    acc: i32,
+    zp_in: i32,
+    pub macc_ops: u64,
+}
+
+/// funct7 opcodes of the comparator CFU.
+pub mod pg_opcodes {
+    /// acc = rs1 (accumulator init, typically the bias).
+    pub const INIT: u8 = 0x00;
+    /// acc += Σ (sign(rs1.byte k) - zp_in) * sign(rs2.byte k), k = 0..4.
+    pub const MACC4: u8 = 0x01;
+    /// rd = acc.
+    pub const READ: u8 = 0x02;
+    /// zp_in = rs1 (signed).
+    pub const SET_ZP: u8 = 0x03;
+}
+
+impl CfuPort for SimdMacCfu {
+    fn execute(&mut self, funct7: u8, _f3: u8, rs1: u32, rs2: u32, _now: u64) -> CfuResponse {
+        match funct7 {
+            pg_opcodes::INIT => {
+                self.acc = rs1 as i32;
+                CfuResponse::ready(0)
+            }
+            pg_opcodes::MACC4 => {
+                let xs = rs1.to_le_bytes();
+                let ws = rs2.to_le_bytes();
+                for k in 0..4 {
+                    self.acc +=
+                        (xs[k] as i8 as i32 - self.zp_in) * (ws[k] as i8 as i32);
+                }
+                self.macc_ops += 1;
+                CfuResponse::ready(0)
+            }
+            pg_opcodes::READ => CfuResponse::ready(self.acc as u32),
+            pg_opcodes::SET_ZP => {
+                self.zp_in = rs1 as i32;
+                CfuResponse::ready(0)
+            }
+            op => panic!("unknown CFU-playground opcode {op:#x}"),
+        }
+    }
+}
+
+/// Emit a CFU-accelerated 1×1 convolution pass.  Weights must be laid out
+/// **column-major** (Cout, Cin) so the 4-byte MACC reads are contiguous —
+/// the host pre-packs them at `w_addr` (Prakash's kernels repack likewise).
+#[allow(clippy::too_many_arguments)]
+fn emit_conv1x1_cfu(
+    a: &mut Asm,
+    uniq: &str,
+    src: u32,
+    dst: u32,
+    w_addr: u32,
+    b_addr: u32,
+    n_px: u32,
+    cin: u32,
+    cout: u32,
+    q: &StageQuant,
+) {
+    use super::sw_kernels::emit_requant;
+    // S0 src px ptr, S1 dst ptr, S2 px count, S3 co, S5 acc via CFU,
+    // S7 bias ptr, S8 x word ptr, S9 w word ptr, S6 chunk counter.
+    a.li(T0, q.zp_in);
+    a.cfu(pg_opcodes::SET_ZP, ZERO, T0, ZERO);
+    a.li(S0, src as i32);
+    a.li(S1, dst as i32);
+    a.li(S2, n_px as i32);
+    a.label(&format!("pg_px_{uniq}"));
+    a.li(S3, 0); // co
+    a.li(S7, b_addr as i32);
+    a.li(S9, w_addr as i32); // row-contiguous (Cout, Cin)
+    a.label(&format!("pg_co_{uniq}"));
+    a.lw(T1, S7, 0);
+    a.cfu(pg_opcodes::INIT, ZERO, T1, ZERO); // acc = bias
+    a.mv(S8, S0);
+    a.li(S6, (cin / 4) as i32);
+    a.label(&format!("pg_ci_{uniq}"));
+    a.lw(T1, S8, 0); // 4 input bytes
+    a.lw(T2, S9, 0); // 4 weight bytes
+    a.cfu(pg_opcodes::MACC4, ZERO, T1, T2);
+    a.addi(S8, S8, 4);
+    a.addi(S9, S9, 4);
+    a.addi(S6, S6, -1);
+    a.bnez(S6, &format!("pg_ci_{uniq}"));
+    a.cfu(pg_opcodes::READ, S5, ZERO, ZERO);
+    emit_requant(a, T6, S5, q, &format!("pg_{uniq}"));
+    a.sb(T6, S1, 0);
+    a.addi(S1, S1, 1);
+    a.addi(S7, S7, 4);
+    a.addi(S3, S3, 1);
+    a.li(T0, cout as i32);
+    a.blt(S3, T0, &format!("pg_co_{uniq}"));
+    a.addi(S0, S0, cin as i32);
+    a.addi(S2, S2, -1);
+    a.bnez(S2, &format!("pg_px_{uniq}"));
+}
+
+/// Result of a CFU-Playground-comparator run.
+#[derive(Debug, Clone)]
+pub struct PgResult {
+    pub out: TensorI8,
+    pub cycles: u64,
+    pub instret: u64,
+    pub macc_ops: u64,
+}
+
+/// Run one block: 1×1 stages on the SIMD-MAC CFU, depthwise + residual in
+/// software, all intermediates materialized (layer-by-layer, like [23]).
+pub fn run_block_cfu_playground(bp: &BlockParams, x: &TensorI8) -> Result<PgResult> {
+    let cfg = &bp.cfg;
+    let l = BlockLayout::for_block(cfg);
+    // Column-major repack of the 1x1 weights for contiguous MACC4 reads.
+    let (cin, m, cout) = (cfg.cin as usize, cfg.m as usize, cfg.cout as usize);
+    let mut ex_w_cm = vec![0i8; cin * m];
+    for ci in 0..cin {
+        for f in 0..m {
+            ex_w_cm[f * cin + ci] = bp.ex_w[ci * m + f];
+        }
+    }
+    let mut pr_w_cm = vec![0i8; m * cout];
+    for ci in 0..m {
+        for co in 0..cout {
+            pr_w_cm[co * m + ci] = bp.pr_w[ci * cout + co];
+        }
+    }
+
+    let mut a = Asm::new();
+    let n_in_px = cfg.h * cfg.w;
+    let n_out_px = cfg.h_out() * cfg.w_out();
+    emit_conv1x1_cfu(&mut a, "ex", l.x, l.f1, l.ex_w, l.ex_b, n_in_px, cfg.cin, cfg.m, &bp.ex_q);
+    // Depthwise: plain software (the comparator does not accelerate it).
+    super::sw_kernels::emit_dwconv3x3(
+        &mut a, "dw", l.f1, l.f2, l.dw_w, l.dw_b, cfg.h, cfg.w, cfg.m, cfg.stride, &bp.dw_q,
+    );
+    emit_conv1x1_cfu(&mut a, "pr", l.f2, l.out, l.pr_w, l.pr_b, n_out_px, cfg.m, cfg.cout, &bp.pr_q);
+    if cfg.residual {
+        super::sw_kernels::emit_residual(
+            &mut a, "r", l.out, l.x, n_out_px * cfg.cout, bp.zp_in(),
+        );
+    }
+    a.ebreak();
+    let prog = a.assemble()?;
+
+    let mem_size = (l.required_mem() + (1 << 16)).next_power_of_two();
+    let mut mach = Machine::new(mem_size, SimdMacCfu::default());
+    mach.load_program(PROG_BASE, &prog)?;
+    l.place(&mut mach.mem, bp, &x.data)?;
+    // Overwrite the 1x1 weights with the column-major packs.
+    mach.mem.write_i8_slice(l.ex_w, &ex_w_cm)?;
+    mach.mem.write_i8_slice(l.pr_w, &pr_w_cm)?;
+    let r = mach.run(20_000_000_000)?;
+    anyhow::ensure!(r.reason == ExitReason::Halted, "cfu-playground run did not halt");
+    let (ho, wo) = (cfg.h_out() as usize, cfg.w_out() as usize);
+    let out = TensorI8::from_vec(&[ho, wo, cout], mach.mem.read_i8_slice(l.out, ho * wo * cout)?);
+    Ok(PgResult { out, cycles: r.cycles, instret: r.instret, macc_ops: mach.cfu.macc_ops })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::blocks::BlockConfig;
+    use crate::model::refimpl::block_ref;
+    use crate::model::weights::{gen_input, make_block_params};
+
+    fn run(cfg: BlockConfig) -> (PgResult, u64) {
+        let bp = make_block_params(5, cfg, -3);
+        let x = TensorI8::from_vec(
+            &[cfg.h as usize, cfg.w as usize, cfg.cin as usize],
+            gen_input("pg.x", (cfg.h * cfg.w * cfg.cin) as usize, bp.zp_in()),
+        );
+        let want = block_ref(&x, &bp);
+        let got = run_block_cfu_playground(&bp, &x).unwrap();
+        assert_eq!(got.out.data, want.data, "cfg {cfg:?}");
+        let v0 = sw_kernels::run_block_v0(&bp, &x).unwrap();
+        (got, v0.cycles)
+    }
+
+    #[test]
+    fn matches_reference_and_beats_v0() {
+        let (pg, v0_cycles) = run(BlockConfig::new(6, 6, 8, 16, 8, 1, true));
+        assert!(pg.macc_ops > 0);
+        // Faster than pure software, but far from the fused design (the
+        // depthwise stage + intermediate traffic still dominate).
+        assert!(pg.cycles < v0_cycles, "pg {} !< v0 {v0_cycles}", pg.cycles);
+        assert!(pg.cycles * 10 > v0_cycles, "should NOT be a 10x win");
+    }
+
+    #[test]
+    fn stride2_matches_reference() {
+        run(BlockConfig::new(7, 5, 8, 16, 16, 2, false));
+    }
+}

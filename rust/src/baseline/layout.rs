@@ -1,0 +1,107 @@
+//! Simulated-RAM layout for per-layer kernel programs (software baseline,
+//! CFU-Playground comparator, and the fused-CFU drivers share it).
+//!
+//! The host writes tensors at these addresses before the run and reads the
+//! output afterwards; the generated programs get the addresses baked in as
+//! immediates (per-layer codegen, the firmware equivalent of a compiled
+//! TFLite model).
+
+use crate::model::blocks::BlockConfig;
+use crate::model::weights::BlockParams;
+use crate::cpu::core::Memory;
+
+/// Program text base (pc starts here).
+pub const PROG_BASE: u32 = 0x0000_0000;
+/// Data region base.
+pub const DATA_BASE: u32 = 0x0010_0000;
+
+/// Addresses of every tensor a block kernel touches.
+#[derive(Debug, Clone, Copy)]
+pub struct BlockLayout {
+    pub x: u32,     // input (H, W, Cin) i8
+    pub ex_w: u32,  // (Cin, M) i8
+    pub ex_b: u32,  // (M,) i32
+    pub f1: u32,    // intermediate (H, W, M) i8 — materialized by v0 only
+    pub dw_w: u32,  // (3, 3, M) i8
+    pub dw_b: u32,  // (M,) i32
+    pub f2: u32,    // intermediate (Ho, Wo, M) i8 — materialized by v0 only
+    pub pr_w: u32,  // (M, Cout) i8
+    pub pr_b: u32,  // (Cout,) i32
+    pub out: u32,   // (Ho, Wo, Cout) i8
+    pub end: u32,   // first free byte after the layout
+}
+
+fn align4(x: u32) -> u32 {
+    (x + 3) & !3
+}
+
+impl BlockLayout {
+    pub fn for_block(cfg: &BlockConfig) -> Self {
+        let (h, w, cin, m, cout) = (cfg.h, cfg.w, cfg.cin, cfg.m, cfg.cout);
+        let (ho, wo) = (cfg.h_out(), cfg.w_out());
+        let mut p = DATA_BASE;
+        let mut take = |bytes: u32| {
+            let at = p;
+            p = align4(p + bytes);
+            at
+        };
+        Self {
+            x: take(h * w * cin),
+            ex_w: take(cin * m),
+            ex_b: take(4 * m),
+            f1: take(h * w * m),
+            dw_w: take(9 * m),
+            dw_b: take(4 * m),
+            f2: take(ho * wo * m),
+            pr_w: take(m * cout),
+            pr_b: take(4 * cout),
+            out: take(ho * wo * cout),
+            end: p,
+        }
+    }
+
+    /// Write all of a block's tensors into simulated RAM.
+    pub fn place(&self, mem: &mut Memory, bp: &BlockParams, x: &[i8]) -> anyhow::Result<()> {
+        mem.write_i8_slice(self.x, x)?;
+        mem.write_i8_slice(self.ex_w, &bp.ex_w)?;
+        mem.write_i32_slice(self.ex_b, &bp.ex_b)?;
+        mem.write_i8_slice(self.dw_w, &bp.dw_w)?;
+        mem.write_i32_slice(self.dw_b, &bp.dw_b)?;
+        mem.write_i8_slice(self.pr_w, &bp.pr_w)?;
+        mem.write_i32_slice(self.pr_b, &bp.pr_b)?;
+        Ok(())
+    }
+
+    pub fn required_mem(&self) -> usize {
+        self.end as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn regions_are_disjoint_and_ordered() {
+        let cfg = BlockConfig::new(40, 40, 8, 48, 8, 1, true);
+        let l = BlockLayout::for_block(&cfg);
+        let regions = [
+            (l.x, 40 * 40 * 8),
+            (l.ex_w, 8 * 48),
+            (l.ex_b, 4 * 48),
+            (l.f1, 40 * 40 * 48),
+            (l.dw_w, 9 * 48),
+            (l.dw_b, 4 * 48),
+            (l.f2, 40 * 40 * 48),
+            (l.pr_w, 48 * 8),
+            (l.pr_b, 4 * 8),
+            (l.out, 40 * 40 * 8),
+        ];
+        for w in regions.windows(2) {
+            assert!(w[0].0 + w[0].1 <= w[1].0, "{w:?}");
+        }
+        assert!(l.end > l.out);
+        assert_eq!(l.x % 4, 0);
+        assert_eq!(l.ex_b % 4, 0);
+    }
+}

@@ -1,0 +1,19 @@
+//! Baselines the paper compares against:
+//!
+//! * [`layout`] — the shared RAM layout for per-layer kernel programs.
+//! * [`sw_kernels`] — **v0**: the software-only layer-by-layer INT8 kernels
+//!   (TFLite-reference style: materialized F1/F2, per-access offset
+//!   arithmetic, software requantization), assembled to RV32IM and run on
+//!   the ISS.  This is the "Baseline[36]" column of Tables III/VI and the
+//!   denominator of every speedup in the paper.
+//! * [`cfu_playground`] — the Prakash et al. CFU-Playground comparator: a
+//!   1×1-convolution-only 4-way SIMD MAC CFU; the depthwise stage and all
+//!   inter-layer data movement stay on the CPU (paper §IV-B: "the
+//!   CFU-Playground accelerator only targets 1x1 convolutions").
+
+pub mod cfu_playground;
+pub mod layout;
+pub mod sw_kernels;
+
+pub use layout::BlockLayout;
+pub use sw_kernels::{run_block_v0, V0Result};

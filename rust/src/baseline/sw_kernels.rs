@@ -1,0 +1,387 @@
+//! **v0** — the software-only layer-by-layer baseline, as real RV32IM
+//! programs generated per layer and executed on the cycle-accurate core.
+//!
+//! Faithful to the TFLite-Micro reference kernels in structure:
+//!
+//! * three separate convolution passes, each **materializing its full
+//!   output feature map in RAM** (F1 after expansion, F2 after depthwise) —
+//!   the exact layer-by-layer execution model the paper attacks;
+//! * per-element integer requantization (SRDHM + rounding shift) in
+//!   software, with the branchy clamp of the reference implementation;
+//! * explicit padding handled by bounds checks inside the depthwise loop
+//!   (the software analogue of Fig. 13a).
+//!
+//! The expected outputs are pinned against [`crate::model::refimpl`]
+//! (bit-exact), so v0 is *correct* — just slow, which is the point.
+
+use anyhow::Result;
+
+use crate::cpu::core::{ExitReason, Machine, RegionWatch};
+use crate::cpu::NoCfu;
+use crate::isa::asm::Asm;
+use crate::isa::*;
+use crate::model::weights::BlockParams;
+use crate::quant::StageQuant;
+use crate::tensor::TensorI8;
+
+use super::layout::{BlockLayout, PROG_BASE};
+
+/// Marker tags emitted by the generated program (phase boundaries).
+pub mod markers {
+    pub const EXPANSION_DONE: u32 = 1;
+    pub const DEPTHWISE_DONE: u32 = 2;
+    pub const PROJECTION_DONE: u32 = 3;
+}
+
+/// Emit `rd = requantize(acc)` for stage `q` (constants baked as immediates).
+///
+/// Sequence (matches `crate::quant` exactly):
+///   hi:lo = acc * mult (64-bit);  +2^30;  >>31 (arith);
+///   rounding right shift;  + zp_out;  clamp.
+/// Clobbers T0..T3; `acc_reg` may be any register, result in `rd`.
+pub fn emit_requant(a: &mut Asm, rd: Reg, acc_reg: Reg, q: &StageQuant, uniq: &str) {
+    // t0 = mult
+    a.li(T0, q.multiplier);
+    a.mulh(T1, acc_reg, T0); // hi
+    a.mul(T2, acc_reg, T0); // lo
+    // 64-bit add of 2^30 to {t1:t2}
+    a.li(T0, 1 << 30);
+    a.add(T3, T2, T0); // lo' = lo + 2^30
+    a.sltu(T0, T3, T2); // carry
+    a.add(T1, T1, T0); // hi += carry
+    // q = (hi << 1) | (lo' >>> 31)
+    a.slli(T1, T1, 1);
+    a.srli(T3, T3, 31);
+    a.or(rd, T1, T3);
+    // rounding right shift (wrapping add of 2^(s-1), then arithmetic shift)
+    if q.shift > 0 {
+        a.li(T0, 1 << (q.shift - 1));
+        a.add(rd, rd, T0);
+        a.srai(rd, rd, q.shift as i32);
+    }
+    // + zp_out
+    if q.zp_out != 0 {
+        a.addi(rd, rd, q.zp_out);
+    }
+    // clamp
+    let lo = if q.relu { q.zp_out.max(-128) } else { -128 };
+    a.li(T0, lo);
+    a.bge(rd, T0, &format!("rq_lo_{uniq}"));
+    a.mv(rd, T0);
+    a.label(&format!("rq_lo_{uniq}"));
+    a.li(T0, 127);
+    a.bge(T0, rd, &format!("rq_hi_{uniq}"));
+    a.mv(rd, T0);
+    a.label(&format!("rq_hi_{uniq}"));
+}
+
+/// Emit a pointwise 1×1 convolution pass:
+/// `dst[p, co] = requant(bias[co] + sum_ci (src[p, ci] - zp) * w[ci, cout])`
+/// over `n_px` pixels.  Weights are channel-major (Cin, Cout) — the inner
+/// loop strides by `cout`, as the TFLite reference kernel does.
+#[allow(clippy::too_many_arguments)]
+fn emit_conv1x1(
+    a: &mut Asm,
+    uniq: &str,
+    src: u32,
+    dst: u32,
+    w_addr: u32,
+    b_addr: u32,
+    n_px: u32,
+    cin: u32,
+    cout: u32,
+    q: &StageQuant,
+) {
+    // Register map: S0 src px ptr, S1 dst ptr, S2 pixel counter,
+    // S3 co counter, S4 w column base, S5 acc, S6 ci counter, S7 bias ptr,
+    // S8 x ptr (inner), S9 w ptr (inner), S10 zp_in, S11 saved dst base.
+    a.li(S0, src as i32);
+    a.li(S1, dst as i32);
+    a.li(S2, n_px as i32);
+    a.li(S10, q.zp_in);
+    a.label(&format!("c1_px_{uniq}"));
+    // per-pixel: iterate output channels
+    a.li(S3, 0); // co
+    a.li(S4, w_addr as i32); // first column base (w + co)
+    a.li(S7, b_addr as i32);
+    a.label(&format!("c1_co_{uniq}"));
+    a.lw(S5, S7, 0); // acc = bias[co]
+    a.mv(S8, S0); // x ptr
+    a.mv(S9, S4); // w ptr (strides by cout)
+    a.li(S6, cin as i32); // ci counter
+    a.label(&format!("c1_ci_{uniq}"));
+    a.lb(T4, S8, 0); // x
+    a.lb(T5, S9, 0); // w
+    a.sub(T4, T4, S10); // x - zp
+    a.mul(T4, T4, T5);
+    a.add(S5, S5, T4);
+    a.addi(S8, S8, 1);
+    a.addi(S9, S9, cout as i32);
+    a.addi(S6, S6, -1);
+    a.bnez(S6, &format!("c1_ci_{uniq}"));
+    emit_requant(a, T6, S5, q, &format!("c1_{uniq}"));
+    a.sb(T6, S1, 0);
+    a.addi(S1, S1, 1);
+    a.addi(S4, S4, 1); // next weight column
+    a.addi(S7, S7, 4); // next bias
+    a.addi(S3, S3, 1);
+    a.li(T0, cout as i32);
+    a.blt(S3, T0, &format!("c1_co_{uniq}"));
+    a.addi(S0, S0, cin as i32); // next input pixel
+    a.addi(S2, S2, -1);
+    a.bnez(S2, &format!("c1_px_{uniq}"));
+}
+
+/// Emit the depthwise 3×3 pass with software bounds-checked padding.
+#[allow(clippy::too_many_arguments)]
+pub fn emit_dwconv3x3(
+    a: &mut Asm,
+    uniq: &str,
+    src: u32, // (H, W, M)
+    dst: u32, // (Ho, Wo, M)
+    w_addr: u32,
+    b_addr: u32,
+    h: u32,
+    w: u32,
+    m: u32,
+    stride: u32,
+    q: &StageQuant,
+) {
+    let ho = h.div_ceil(stride);
+    let wo = w.div_ceil(stride);
+    // Register map: S0 oy, S1 ox, S2 ch, S3 acc, S4 ky, S5 kx,
+    // S6 dst ptr, S7 scratch r, S8 scratch c, S9 x value, S10 zp, S11 w ptr.
+    a.li(S6, dst as i32);
+    a.li(S10, q.zp_in);
+    a.li(S0, 0); // oy
+    a.label(&format!("dw_oy_{uniq}"));
+    a.li(S1, 0); // ox
+    a.label(&format!("dw_ox_{uniq}"));
+    a.li(S2, 0); // ch
+    a.label(&format!("dw_ch_{uniq}"));
+    // acc = bias[ch]
+    a.li(T0, b_addr as i32);
+    a.slli(T1, S2, 2);
+    a.add(T0, T0, T1);
+    a.lw(S3, T0, 0);
+    a.li(S11, w_addr as i32);
+    a.add(S11, S11, S2); // &w[0][0][ch]
+    a.li(S4, 0); // ky
+    a.label(&format!("dw_ky_{uniq}"));
+    a.li(S5, 0); // kx
+    a.label(&format!("dw_kx_{uniq}"));
+    // r = oy*stride - 1 + ky ; c = ox*stride - 1 + kx
+    if stride == 1 {
+        a.add(S7, S0, S4);
+    } else {
+        a.slli(S7, S0, 1);
+        a.add(S7, S7, S4);
+    }
+    a.addi(S7, S7, -1);
+    if stride == 1 {
+        a.add(S8, S1, S5);
+    } else {
+        a.slli(S8, S1, 1);
+        a.add(S8, S8, S5);
+    }
+    a.addi(S8, S8, -1);
+    // bounds check -> x = pad (zp) or load
+    a.mv(S9, S10); // default: zero point
+    a.blt(S7, ZERO, &format!("dw_pad_{uniq}"));
+    a.blt(S8, ZERO, &format!("dw_pad_{uniq}"));
+    a.li(T0, h as i32);
+    a.bge(S7, T0, &format!("dw_pad_{uniq}"));
+    a.li(T0, w as i32);
+    a.bge(S8, T0, &format!("dw_pad_{uniq}"));
+    // addr = src + ((r*w + c) * m) + ch  — offset recomputed per access,
+    // exactly like the reference kernel's Offset() helper.
+    a.li(T0, w as i32);
+    a.mul(T1, S7, T0);
+    a.add(T1, T1, S8);
+    a.li(T0, m as i32);
+    a.mul(T1, T1, T0);
+    a.add(T1, T1, S2);
+    a.li(T0, src as i32);
+    a.add(T1, T1, T0);
+    a.lb(S9, T1, 0);
+    a.label(&format!("dw_pad_{uniq}"));
+    // acc += (x - zp) * w[ky][kx][ch]
+    a.lb(T2, S11, 0);
+    a.sub(T3, S9, S10);
+    a.mul(T3, T3, T2);
+    a.add(S3, S3, T3);
+    a.addi(S11, S11, m as i32); // next kernel position for this channel
+    a.addi(S5, S5, 1);
+    a.li(T0, 3);
+    a.blt(S5, T0, &format!("dw_kx_{uniq}"));
+    a.addi(S4, S4, 1);
+    a.blt(S4, T0, &format!("dw_ky_{uniq}"));
+    emit_requant(a, T6, S3, q, &format!("dw_{uniq}"));
+    a.sb(T6, S6, 0);
+    a.addi(S6, S6, 1);
+    a.addi(S2, S2, 1);
+    a.li(T0, m as i32);
+    a.blt(S2, T0, &format!("dw_ch_{uniq}"));
+    a.addi(S1, S1, 1);
+    a.li(T0, wo as i32);
+    a.blt(S1, T0, &format!("dw_ox_{uniq}"));
+    a.addi(S0, S0, 1);
+    a.li(T0, ho as i32);
+    a.blt(S0, T0, &format!("dw_oy_{uniq}"));
+}
+
+/// Emit the software residual add: `out[i] = clamp(out[i] + x[i] - zp)`.
+pub fn emit_residual(a: &mut Asm, uniq: &str, out: u32, x: u32, n: u32, zp: i32) {
+    a.li(S0, out as i32);
+    a.li(S1, x as i32);
+    a.li(S2, n as i32);
+    a.label(&format!("res_{uniq}"));
+    a.lb(T1, S0, 0);
+    a.lb(T2, S1, 0);
+    a.add(T1, T1, T2);
+    a.addi(T1, T1, -zp);
+    // clamp
+    a.li(T0, -128);
+    a.bge(T1, T0, &format!("res_lo_{uniq}"));
+    a.mv(T1, T0);
+    a.label(&format!("res_lo_{uniq}"));
+    a.li(T0, 127);
+    a.bge(T0, T1, &format!("res_hi_{uniq}"));
+    a.mv(T1, T0);
+    a.label(&format!("res_hi_{uniq}"));
+    a.sb(T1, S0, 0);
+    a.addi(S0, S0, 1);
+    a.addi(S1, S1, 1);
+    a.addi(S2, S2, -1);
+    a.bnez(S2, &format!("res_{uniq}"));
+}
+
+/// Generate the full v0 block program (three layer passes + residual).
+pub fn build_block_program_v0(bp: &BlockParams, l: &BlockLayout) -> Asm {
+    let cfg = &bp.cfg;
+    let mut a = Asm::new();
+    let n_in_px = cfg.h * cfg.w;
+    let n_out_px = cfg.h_out() * cfg.w_out();
+    // Pass 1: expansion 1x1 -> F1 (materialized in RAM).
+    emit_conv1x1(&mut a, "ex", l.x, l.f1, l.ex_w, l.ex_b, n_in_px, cfg.cin, cfg.m, &bp.ex_q);
+    a.li(A0, markers::EXPANSION_DONE as i32);
+    a.ecall();
+    // Pass 2: depthwise 3x3 -> F2 (materialized in RAM).
+    emit_dwconv3x3(
+        &mut a, "dw", l.f1, l.f2, l.dw_w, l.dw_b, cfg.h, cfg.w, cfg.m, cfg.stride, &bp.dw_q,
+    );
+    a.li(A0, markers::DEPTHWISE_DONE as i32);
+    a.ecall();
+    // Pass 3: projection 1x1 -> out.
+    emit_conv1x1(&mut a, "pr", l.f2, l.out, l.pr_w, l.pr_b, n_out_px, cfg.m, cfg.cout, &bp.pr_q);
+    a.li(A0, markers::PROJECTION_DONE as i32);
+    a.ecall();
+    if cfg.residual {
+        emit_residual(&mut a, "r", l.out, l.x, n_out_px * cfg.cout, bp.zp_in());
+    }
+    a.ebreak();
+    a
+}
+
+/// Result of a v0 run.
+#[derive(Debug, Clone)]
+pub struct V0Result {
+    pub out: TensorI8,
+    pub cycles: u64,
+    pub instret: u64,
+    /// Watch counters over the F1 / F2 intermediate buffers.
+    pub f1_watch: RegionWatch,
+    pub f2_watch: RegionWatch,
+    /// Phase boundaries (marker tag -> cycle).
+    pub phase_cycles: Vec<(u32, u64)>,
+}
+
+/// Run one block through the v0 software kernels on the ISS.
+pub fn run_block_v0(bp: &BlockParams, x: &TensorI8) -> Result<V0Result> {
+    let cfg = &bp.cfg;
+    let l = BlockLayout::for_block(cfg);
+    let prog = build_block_program_v0(bp, &l).assemble()?;
+    let mem_size = (l.required_mem() + (1 << 16)).next_power_of_two();
+    let mut m = Machine::new(mem_size, NoCfu);
+    m.load_program(PROG_BASE, &prog)?;
+    l.place(&mut m.mem, bp, &x.data)?;
+    let f1_w = m.watch(l.f1, l.f1 + cfg.h * cfg.w * cfg.m);
+    let f2_w = m.watch(l.f2, l.f2 + cfg.h_out() * cfg.w_out() * cfg.m);
+    let r = m.run(20_000_000_000)?;
+    anyhow::ensure!(r.reason == ExitReason::Halted, "v0 did not halt");
+    let (ho, wo, cout) = (cfg.h_out() as usize, cfg.w_out() as usize, cfg.cout as usize);
+    let out = TensorI8::from_vec(
+        &[ho, wo, cout],
+        m.mem.read_i8_slice(l.out, ho * wo * cout)?,
+    );
+    Ok(V0Result {
+        out,
+        cycles: r.cycles,
+        instret: r.instret,
+        f1_watch: m.watches[f1_w],
+        f2_watch: m.watches[f2_w],
+        phase_cycles: m.markers.iter().map(|mk| (mk.tag, mk.cycle)).collect(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::blocks::BlockConfig;
+    use crate::model::refimpl::block_ref;
+    use crate::model::weights::{gen_input, make_block_params};
+
+    fn check_block(cfg: BlockConfig) -> V0Result {
+        let bp = make_block_params(5, cfg, -3);
+        let x = TensorI8::from_vec(
+            &[cfg.h as usize, cfg.w as usize, cfg.cin as usize],
+            gen_input("v0.x", (cfg.h * cfg.w * cfg.cin) as usize, bp.zp_in()),
+        );
+        let want = block_ref(&x, &bp);
+        let got = run_block_v0(&bp, &x).unwrap();
+        assert_eq!(got.out.data, want.data, "cfg {cfg:?}");
+        got
+    }
+
+    #[test]
+    fn v0_matches_reference_small() {
+        check_block(BlockConfig::new(5, 5, 8, 16, 8, 1, true));
+    }
+
+    #[test]
+    fn v0_matches_reference_stride2() {
+        check_block(BlockConfig::new(7, 5, 8, 16, 16, 2, false));
+    }
+
+    #[test]
+    fn v0_matches_reference_wide_channels() {
+        check_block(BlockConfig::new(4, 4, 16, 32, 24, 1, false));
+    }
+
+    #[test]
+    fn v0_intermediate_traffic_is_substantial() {
+        // The defining property of layer-by-layer execution: every F1/F2
+        // byte is written once and read at least once.
+        let cfg = BlockConfig::new(6, 6, 8, 16, 8, 1, true);
+        let r = check_block(cfg);
+        let f1_bytes = (cfg.h * cfg.w * cfg.m) as u64;
+        let f2_bytes = f1_bytes; // stride 1
+        assert!(r.f1_watch.stores >= f1_bytes, "F1 fully materialized");
+        assert!(r.f1_watch.loads >= f2_bytes, "F1 re-read by depthwise");
+        assert!(r.f2_watch.stores >= f2_bytes);
+        assert!(r.f2_watch.loads >= f2_bytes, "F2 re-read by projection");
+        assert!(r.f1_watch.cycles > 0 && r.f2_watch.cycles > 0);
+        // Phase markers arrived in order.
+        let tags: Vec<u32> = r.phase_cycles.iter().map(|p| p.0).collect();
+        assert_eq!(tags, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn v0_cycle_count_scales_with_macs() {
+        let small = check_block(BlockConfig::new(4, 4, 8, 16, 8, 1, false));
+        let large = check_block(BlockConfig::new(8, 8, 8, 16, 8, 1, false));
+        // 4x the pixels -> roughly 4x the cycles (within 2x slack).
+        let ratio = large.cycles as f64 / small.cycles as f64;
+        assert!(ratio > 2.5 && ratio < 6.0, "ratio {ratio}");
+    }
+}

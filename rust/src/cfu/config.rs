@@ -1,0 +1,200 @@
+//! CFU configuration register file (written through the `CFG` opcode).
+//!
+//! These are the per-layer parameters the Instruction Controller holds in
+//! hardware: geometry, zero points, and the three stages' requantization
+//! constants.  The driver programs them once per layer (paper §III-B).
+
+use crate::quant::StageQuant;
+
+/// CFG word indices (rs1 of the CFG instruction).
+pub mod CFG {
+    #![allow(non_snake_case, non_upper_case_globals)]
+    pub const H: u32 = 0;
+    pub const W: u32 = 1;
+    pub const CIN: u32 = 2;
+    pub const M: u32 = 3;
+    pub const COUT: u32 = 4;
+    pub const STRIDE: u32 = 5;
+    pub const ZP_IN: u32 = 6;
+    pub const ZP_F1: u32 = 7;
+    pub const ZP_F2: u32 = 8;
+    pub const ZP_OUT: u32 = 9;
+    pub const EX_MULT: u32 = 10;
+    pub const EX_SHIFT: u32 = 11;
+    pub const DW_MULT: u32 = 12;
+    pub const DW_SHIFT: u32 = 13;
+    pub const PR_MULT: u32 = 14;
+    pub const PR_SHIFT: u32 = 15;
+    /// bit0 = expansion ReLU, bit1 = depthwise ReLU, bit2 = projection ReLU.
+    pub const RELU: u32 = 16;
+    pub const COUNT: usize = 17;
+}
+
+/// Decoded layer configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct LayerConfig {
+    pub h: u32,
+    pub w: u32,
+    pub cin: u32,
+    pub m: u32,
+    pub cout: u32,
+    pub stride: u32,
+    pub zp_in: i32,
+    pub zp_f1: i32,
+    pub zp_f2: i32,
+    pub zp_out: i32,
+    pub ex_mult: i32,
+    pub ex_shift: u32,
+    pub dw_mult: i32,
+    pub dw_shift: u32,
+    pub pr_mult: i32,
+    pub pr_shift: u32,
+    pub relu: u32,
+}
+
+impl LayerConfig {
+    pub fn from_words(words: &[u32; CFG::COUNT]) -> Self {
+        Self {
+            h: words[CFG::H as usize],
+            w: words[CFG::W as usize],
+            cin: words[CFG::CIN as usize],
+            m: words[CFG::M as usize],
+            cout: words[CFG::COUT as usize],
+            stride: words[CFG::STRIDE as usize],
+            zp_in: words[CFG::ZP_IN as usize] as i32,
+            zp_f1: words[CFG::ZP_F1 as usize] as i32,
+            zp_f2: words[CFG::ZP_F2 as usize] as i32,
+            zp_out: words[CFG::ZP_OUT as usize] as i32,
+            ex_mult: words[CFG::EX_MULT as usize] as i32,
+            ex_shift: words[CFG::EX_SHIFT as usize],
+            dw_mult: words[CFG::DW_MULT as usize] as i32,
+            dw_shift: words[CFG::DW_SHIFT as usize],
+            pr_mult: words[CFG::PR_MULT as usize] as i32,
+            pr_shift: words[CFG::PR_SHIFT as usize],
+            relu: words[CFG::RELU as usize],
+        }
+    }
+
+    pub fn h_out(&self) -> u32 {
+        self.h.div_ceil(self.stride.max(1))
+    }
+
+    pub fn w_out(&self) -> u32 {
+        self.w.div_ceil(self.stride.max(1))
+    }
+
+    pub fn num_pixels(&self) -> u32 {
+        self.h_out() * self.w_out()
+    }
+
+    /// Validate the alignment invariants the hardware relies on
+    /// (paper: "all channel dimensions in MobileNetV2 are multiples of 8").
+    pub fn validate(&self) -> Result<(), String> {
+        if self.cin == 0 || self.cin % 8 != 0 {
+            return Err(format!("Cin must be a nonzero multiple of 8, got {}", self.cin));
+        }
+        if self.m == 0 || self.m % 8 != 0 {
+            return Err(format!("M must be a nonzero multiple of 8, got {}", self.m));
+        }
+        if self.cout == 0 || self.cout % 8 != 0 {
+            return Err(format!("Cout must be a nonzero multiple of 8, got {}", self.cout));
+        }
+        if self.stride != 1 && self.stride != 2 {
+            return Err(format!("stride must be 1 or 2, got {}", self.stride));
+        }
+        if self.h == 0 || self.w == 0 {
+            return Err("empty feature map".to_string());
+        }
+        Ok(())
+    }
+
+    pub fn ex_quant(&self) -> StageQuant {
+        StageQuant {
+            multiplier: self.ex_mult,
+            shift: self.ex_shift,
+            zp_in: self.zp_in,
+            zp_out: self.zp_f1,
+            relu: self.relu & 1 != 0,
+        }
+    }
+
+    pub fn dw_quant(&self) -> StageQuant {
+        StageQuant {
+            multiplier: self.dw_mult,
+            shift: self.dw_shift,
+            zp_in: self.zp_f1,
+            zp_out: self.zp_f2,
+            relu: self.relu & 2 != 0,
+        }
+    }
+
+    pub fn pr_quant(&self) -> StageQuant {
+        StageQuant {
+            multiplier: self.pr_mult,
+            shift: self.pr_shift,
+            zp_in: self.zp_f2,
+            zp_out: self.zp_out,
+            relu: self.relu & 4 != 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> LayerConfig {
+        LayerConfig {
+            h: 7,
+            w: 5,
+            cin: 8,
+            m: 16,
+            cout: 8,
+            stride: 2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn output_geometry_ceil_div() {
+        let c = cfg();
+        assert_eq!(c.h_out(), 4);
+        assert_eq!(c.w_out(), 3);
+        assert_eq!(c.num_pixels(), 12);
+    }
+
+    #[test]
+    fn validation_catches_misalignment() {
+        let mut c = cfg();
+        assert!(c.validate().is_ok());
+        c.m = 12;
+        assert!(c.validate().is_err());
+        c.m = 16;
+        c.stride = 3;
+        assert!(c.validate().is_err());
+        c.stride = 1;
+        c.cin = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn from_words_roundtrip() {
+        let mut w = [0u32; CFG::COUNT];
+        w[CFG::H as usize] = 40;
+        w[CFG::W as usize] = 40;
+        w[CFG::CIN as usize] = 8;
+        w[CFG::M as usize] = 48;
+        w[CFG::COUT as usize] = 8;
+        w[CFG::STRIDE as usize] = 1;
+        w[CFG::ZP_IN as usize] = (-3i32) as u32;
+        w[CFG::EX_MULT as usize] = 0x6000_0000;
+        w[CFG::RELU as usize] = 0b011;
+        let c = LayerConfig::from_words(&w);
+        assert_eq!(c.h, 40);
+        assert_eq!(c.zp_in, -3);
+        assert_eq!(c.ex_mult, 0x6000_0000);
+        assert!(c.ex_quant().relu);
+        assert!(c.dw_quant().relu);
+        assert!(!c.pr_quant().relu);
+    }
+}

@@ -1,0 +1,328 @@
+//! The three compute engines + post-processing pipelines (paper Figs. 6-8).
+//!
+//! Functional INT8 arithmetic structured the way the hardware computes it:
+//!
+//! * **Expansion** (Fig. 6): for one output pixel, nine parallel engines —
+//!   one per 3×3 tile position — each build one F1 tile column channel by
+//!   channel with an 8-way MAC tree over input-channel chunks.  The same
+//!   filter chunk is broadcast to all nine engines (Input-Stationary).
+//! * **Depthwise** (Fig. 7): a single nine-way MAC engine consumes one F1
+//!   tile channel per cycle and produces one F2 element (No Local Reuse).
+//! * **Projection** (Fig. 8): 56 output-stationary engines; each F2 element
+//!   is broadcast, every engine MACs it against its private weight and
+//!   accumulates one output channel.
+//!
+//! The intermediate F1 tile (3×3×M) and F2 vector (M) live only in the
+//! transient buffers passed between these functions — the Rust analogue of
+//! "a few clock cycles in hardware registers" (paper §III-A).  Nothing is
+//! written back to the IFMAP buffer or simulated RAM.
+
+use super::config::LayerConfig;
+use super::filters::{
+    DwFilterBuffer, ExpansionFilterBuffer, ProjectionWeightBuffers, NUM_PROJ_ENGINES,
+};
+use super::ifmap::IfmapBuffer;
+
+/// MAC-activity counters (drive the power model's toggle estimates).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct EngineStats {
+    pub ex_macs: u64,
+    pub dw_macs: u64,
+    pub pr_macs: u64,
+    pub requants: u64,
+}
+
+/// Compute the 3×3×M F1 tile for the output pixel at (`oy`, `ox`).
+///
+/// `tile[pos][ch]` is the F1 value at window position `pos` (row-major 3×3)
+/// and expanded channel `ch` — exactly what the nine engines hold in their
+/// output registers before streaming to the depthwise unit.
+pub fn expansion_tile(
+    cfg: &LayerConfig,
+    ifmap: &mut IfmapBuffer,
+    exw: &mut ExpansionFilterBuffer,
+    ex_bias: &[i32],
+    oy: u32,
+    ox: u32,
+    stats: &mut EngineStats,
+) -> Vec<[i8; 9]> {
+    let m = cfg.m as usize;
+    let cin = cfg.cin as usize;
+    let q = cfg.ex_quant();
+    let cy = (oy * cfg.stride) as i64;
+    let cx = (ox * cfg.stride) as i64;
+
+    // Window validity: positions outside the *input* map contribute the F1
+    // zero point downstream — the expansion engines simply skip them (the
+    // depthwise stage sees on-the-fly-padded F1, paper §III-E).
+    let mut tile: Vec<[i8; 9]> = vec![[0i8; 9]; m];
+
+    // Input-Stationary (Fig. 6a): the 3x3 window is fetched ONCE per input
+    // channel from the banked buffer and held in the engines' window
+    // registers for the entire filter sweep — one banked read per channel,
+    // not one per (channel, filter).  Pre-centered to i32 once (§Perf log
+    // iteration 1: this hoist is both the faithful dataflow and a 3.4x
+    // host-speed win on the fused path).
+    let mut xc: Vec<[i32; 9]> = Vec::with_capacity(cin);
+    for ch in 0..cin {
+        let win = ifmap.read_window(cy, cx, ch, cfg.zp_in as i8);
+        let mut c = [0i32; 9];
+        for pos in 0..9 {
+            c[pos] = win[pos] as i32 - cfg.zp_in;
+        }
+        xc.push(c);
+    }
+
+    let mut acc = [0i32; 9];
+    for (f, t) in tile.iter_mut().enumerate() {
+        // Stream filter f chunk by chunk (broadcast to the 9 engines).
+        acc = [ex_bias[f]; 9];
+        for chunk in 0..cin / 8 {
+            let wchunk = exw.read_chunk(f, chunk);
+            for lane in 0..8 {
+                let ch = chunk * 8 + lane;
+                // One cycle: every engine MACs its pixel's channel `ch`.
+                let w = wchunk[lane] as i32;
+                let x = &xc[ch];
+                for pos in 0..9 {
+                    acc[pos] += x[pos] * w;
+                }
+                stats.ex_macs += 9;
+            }
+        }
+        // Post-processing pipeline (Fig. 6b): bias already folded into the
+        // accumulator init; requantize + ReLU per engine.
+        for pos in 0..9 {
+            t[pos] = q.requantize(acc[pos]);
+            stats.requants += 1;
+        }
+    }
+    tile
+}
+
+/// Depthwise: consume the F1 tile, produce the M-element F2 vector for this
+/// pixel.  The window position mask handles F1's *virtual* padding: tile
+/// positions whose source coordinates fall outside the map are replaced by
+/// the F1 zero point before the MAC (the hardware's address-generation
+/// check, Fig. 13b).
+pub fn depthwise_pixel(
+    cfg: &LayerConfig,
+    tile: &[[i8; 9]],
+    dww: &mut DwFilterBuffer,
+    dw_bias: &[i32],
+    oy: u32,
+    ox: u32,
+    stats: &mut EngineStats,
+) -> Vec<i8> {
+    let m = cfg.m as usize;
+    let q = cfg.dw_quant();
+    let cy = (oy * cfg.stride) as i64;
+    let cx = (ox * cfg.stride) as i64;
+    let mut valid = [false; 9];
+    for ky in 0..3i64 {
+        for kx in 0..3i64 {
+            let r = cy - 1 + ky;
+            let c = cx - 1 + kx;
+            valid[(ky * 3 + kx) as usize] =
+                r >= 0 && c >= 0 && r < cfg.h as i64 && c < cfg.w as i64;
+        }
+    }
+    let mut f2 = vec![0i8; m];
+    for ch in 0..m {
+        let w = dww.read_filter(ch); // one-cycle 72-bit fetch
+        let mut acc = dw_bias[ch];
+        // Nine-way MAC array: all nine taps in a single cycle.
+        for pos in 0..9 {
+            let x = if valid[pos] { tile[ch][pos] as i32 } else { cfg.zp_f1 };
+            acc += (x - cfg.zp_f1) * (w[pos] as i32);
+            stats.dw_macs += 1;
+        }
+        f2[ch] = q.requantize(acc);
+        stats.requants += 1;
+    }
+    f2
+}
+
+/// Projection: broadcast each F2 element to the 56 output-stationary
+/// engines; `passes = ceil(Cout/56)` full accumulation rounds cover wider
+/// layers.  Returns the Cout output channels for this pixel.
+pub fn projection_pixel(
+    cfg: &LayerConfig,
+    f2: &[i8],
+    prw: &mut ProjectionWeightBuffers,
+    pr_bias: &[i32],
+    stats: &mut EngineStats,
+) -> Vec<i8> {
+    let m = cfg.m as usize;
+    let cout = cfg.cout as usize;
+    let q = cfg.pr_quant();
+    let passes = cout.div_ceil(NUM_PROJ_ENGINES);
+    let mut out = vec![0i8; cout];
+    // Broadcast values pre-centered once (the hardware subtracts zp_f2 at
+    // the broadcast port, not per engine).
+    let xc: Vec<i32> = f2.iter().take(m).map(|&x| x as i32 - cfg.zp_f2).collect();
+    for pass in 0..passes {
+        let active = (cout - pass * NUM_PROJ_ENGINES).min(NUM_PROJ_ENGINES);
+        for e in 0..active {
+            // Output-stationary: engine e walks its private LUTRAM slice
+            // while the F2 elements are broadcast (§Perf iteration 2).
+            let w = prw.engine_slice(e, pass);
+            let mut a = pr_bias[pass * NUM_PROJ_ENGINES + e];
+            for (c_in, &x) in xc.iter().enumerate() {
+                a += x * w[c_in] as i32;
+            }
+            stats.pr_macs += m as u64;
+            out[pass * NUM_PROJ_ENGINES + e] = q.requantize(a);
+            stats.requants += 1;
+        }
+    }
+    out
+}
+
+/// Full fused pixel: Ex → Dw → Pr, nothing materialized beyond the tile.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_pixel(
+    cfg: &LayerConfig,
+    ifmap: &mut IfmapBuffer,
+    exw: &mut ExpansionFilterBuffer,
+    dww: &mut DwFilterBuffer,
+    prw: &mut ProjectionWeightBuffers,
+    ex_bias: &[i32],
+    dw_bias: &[i32],
+    pr_bias: &[i32],
+    oy: u32,
+    ox: u32,
+    stats: &mut EngineStats,
+) -> Vec<i8> {
+    let tile = expansion_tile(cfg, ifmap, exw, ex_bias, oy, ox, stats);
+    let f2 = depthwise_pixel(cfg, &tile, dww, dw_bias, oy, ox, stats);
+    projection_pixel(cfg, &f2, prw, pr_bias, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::StageQuant;
+
+    /// Build a tiny layer with identity-ish quant (real multiplier 0.5).
+    fn tiny_cfg() -> LayerConfig {
+        LayerConfig {
+            h: 4,
+            w: 4,
+            cin: 8,
+            m: 8,
+            cout: 8,
+            stride: 1,
+            zp_in: 0,
+            zp_f1: 0,
+            zp_f2: 0,
+            zp_out: 0,
+            ex_mult: 1 << 30,
+            ex_shift: 0,
+            dw_mult: 1 << 30,
+            dw_shift: 0,
+            pr_mult: 1 << 30,
+            pr_shift: 0,
+            relu: 0,
+        }
+    }
+
+    #[test]
+    fn expansion_tile_matches_direct_dot_product() {
+        let cfg = tiny_cfg();
+        let mut ifmap = IfmapBuffer::new(4, 4, 8);
+        let mut exw = ExpansionFilterBuffer::new(8, 8);
+        for i in 0..(4 * 4 * 8) {
+            ifmap.write_linear(i, ((i * 7) % 23) as i8 - 11);
+        }
+        for i in 0..64 {
+            exw.write_linear(i, ((i * 5) % 17) as i8 - 8);
+        }
+        let bias = vec![3i32; 8];
+        let mut stats = EngineStats::default();
+        let tile = expansion_tile(&cfg, &mut ifmap, &mut exw, &bias, 1, 1, &mut stats);
+        // direct check for position (0,0) of the window = input pixel (0,0)
+        let q = StageQuant { multiplier: 1 << 30, shift: 0, zp_in: 0, zp_out: 0, relu: false };
+        for f in 0..8 {
+            let mut acc = 3i32;
+            for ch in 0..8 {
+                let x = ifmap.read(0, 0, ch) as i32;
+                let base = f * 8 + ch;
+                let w = (((base * 5) % 17) as i8 - 8) as i32;
+                acc += x * w;
+            }
+            assert_eq!(tile[f][0], q.requantize(acc), "filter {f}");
+        }
+        assert_eq!(stats.ex_macs, 8 * 8 * 9);
+    }
+
+    #[test]
+    fn depthwise_padding_mask_applies_zero_point() {
+        let mut cfg = tiny_cfg();
+        cfg.zp_f1 = 5;
+        let tile = vec![[10i8; 9]; 8];
+        let mut dww = DwFilterBuffer::new(8);
+        for i in 0..72 {
+            dww.write_linear(i, 1);
+        }
+        let bias = vec![0i32; 8];
+        let mut stats = EngineStats::default();
+        // corner pixel (0,0): only taps 4,5,7,8 are valid
+        let f2 = depthwise_pixel(&cfg, &tile, &mut dww, &bias, 0, 0, &mut stats);
+        // acc = 4 valid * (10-5) * 1 = 20; requant 0.5 -> 10
+        assert_eq!(f2, vec![10i8; 8]);
+        // center pixel (1,1): all 9 valid -> acc = 9*5=45 -> 23 (round half up)
+        let f2c = depthwise_pixel(&cfg, &tile, &mut dww, &bias, 1, 1, &mut stats);
+        assert_eq!(f2c, vec![23i8; 8]);
+    }
+
+    #[test]
+    fn projection_multi_pass_covers_wide_cout() {
+        let mut cfg = tiny_cfg();
+        cfg.cout = 64; // two passes: 56 + 8
+        let f2 = vec![2i8; 8];
+        let mut prw = ProjectionWeightBuffers::new(8, 64);
+        // w[c_in][c_out] = 1 for c_out even, -1 for odd
+        for c_in in 0..8usize {
+            for c_out in 0..64usize {
+                prw.write_linear(c_in * 64 + c_out, if c_out % 2 == 0 { 1 } else { -1 });
+            }
+        }
+        let bias = vec![0i32; 64];
+        let mut stats = EngineStats::default();
+        let out = projection_pixel(&cfg, &f2, &mut prw, &bias, &mut stats);
+        // acc = sum over 8 inputs of 2*±1 = ±16 -> requant 0.5 -> ±8
+        for (c, &v) in out.iter().enumerate() {
+            assert_eq!(v, if c % 2 == 0 { 8 } else { -8 }, "channel {c}");
+        }
+        assert_eq!(stats.pr_macs, 8 * 64);
+    }
+
+    #[test]
+    fn fused_pixel_runs_all_stages() {
+        let cfg = tiny_cfg();
+        let mut ifmap = IfmapBuffer::new(4, 4, 8);
+        let mut exw = ExpansionFilterBuffer::new(8, 8);
+        let mut dww = DwFilterBuffer::new(8);
+        let mut prw = ProjectionWeightBuffers::new(8, 8);
+        for i in 0..(4 * 4 * 8) {
+            ifmap.write_linear(i, (i % 13) as i8);
+        }
+        for i in 0..64 {
+            exw.write_linear(i, 1);
+        }
+        for i in 0..72 {
+            dww.write_linear(i, 1);
+        }
+        for i in 0..64 {
+            prw.write_linear(i, 1);
+        }
+        let b = vec![0i32; 8];
+        let mut stats = EngineStats::default();
+        let out = fused_pixel(
+            &cfg, &mut ifmap, &mut exw, &mut dww, &mut prw, &b, &b, &b, 2, 2, &mut stats,
+        );
+        assert_eq!(out.len(), 8);
+        assert!(stats.ex_macs > 0 && stats.dw_macs > 0 && stats.pr_macs > 0);
+    }
+}

@@ -1,0 +1,209 @@
+//! The heterogeneous weight-buffer subsystem (paper §III-D).
+//!
+//! * [`ExpansionFilterBuffer`] — one large sequential BRAM; streams one
+//!   8-channel (64-bit) chunk per cycle, broadcast to all nine Expansion
+//!   Engines (Fig. 11).
+//! * [`DwFilterBuffer`] — nine banks, one per 3×3 kernel position, so a full
+//!   72-bit filter is fetched in one cycle (Fig. 12).
+//! * [`ProjectionWeightBuffers`] — 56 private LUTRAM buffers, one per
+//!   Projection Engine; engine `e` holds the 1×1 filter of output channel
+//!   `e` (plus `e + 56`, `e + 112`, … when Cout > 56) (Fig. 8).
+
+/// Number of parallel projection engines (paper §III-B).
+pub const NUM_PROJ_ENGINES: usize = 56;
+
+/// Expansion filter store: M filters of 1×1×Cin, stored sequentially.
+#[derive(Debug, Default)]
+pub struct ExpansionFilterBuffer {
+    cin: usize,
+    m: usize,
+    data: Vec<i8>, // [m][cin]
+    pub writes: u64,
+    pub chunk_reads: u64, // 8-byte broadcast reads
+}
+
+impl ExpansionFilterBuffer {
+    pub fn new(cin: usize, m: usize) -> Self {
+        Self { cin, m, data: vec![0; cin * m], writes: 0, chunk_reads: 0 }
+    }
+
+    /// Linear write (filter-major: filter f, channel c at f*cin + c).
+    pub fn write_linear(&mut self, linear: usize, v: i8) {
+        self.data[linear] = v;
+        self.writes += 1;
+    }
+
+    /// Fetch the 8-channel chunk `chunk` of filter `f` (one cycle, one
+    /// 64-bit word broadcast to the nine engines).
+    #[inline(always)]
+    pub fn read_chunk(&mut self, f: usize, chunk: usize) -> [i8; 8] {
+        debug_assert!(f < self.m && chunk * 8 + 8 <= self.cin);
+        self.chunk_reads += 1;
+        let base = f * self.cin + chunk * 8;
+        let mut out = [0i8; 8];
+        out.copy_from_slice(&self.data[base..base + 8]);
+        out
+    }
+
+    pub fn capacity_bytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// Depthwise filter store: bank k holds kernel position k of every filter.
+#[derive(Debug, Default)]
+pub struct DwFilterBuffer {
+    m: usize,
+    banks: [Vec<i8>; 9], // banks[pos][filter]
+    pub writes: u64,
+    pub filter_reads: u64, // 72-bit single-cycle reads
+}
+
+impl DwFilterBuffer {
+    pub fn new(m: usize) -> Self {
+        Self {
+            m,
+            banks: std::array::from_fn(|_| vec![0i8; m]),
+            writes: 0,
+            filter_reads: 0,
+        }
+    }
+
+    /// Linear write: layout (pos, filter) — pos-major, mirroring the QMW
+    /// `dw.w` tensor layout (3, 3, M).
+    pub fn write_linear(&mut self, linear: usize, v: i8) {
+        let pos = linear / self.m;
+        let f = linear % self.m;
+        assert!(pos < 9, "dw filter write out of range: {linear}");
+        self.banks[pos][f] = v;
+        self.writes += 1;
+    }
+
+    /// Fetch all nine weights of filter `f` in one access (Fig. 12).
+    #[inline(always)]
+    pub fn read_filter(&mut self, f: usize) -> [i8; 9] {
+        debug_assert!(f < self.m);
+        self.filter_reads += 1;
+        std::array::from_fn(|pos| self.banks[pos][f])
+    }
+
+    pub fn capacity_bytes(&self) -> usize {
+        self.banks.iter().map(|b| b.len()).sum()
+    }
+}
+
+/// Per-engine private projection weight buffers (distributed LUTRAM).
+#[derive(Debug, Default)]
+pub struct ProjectionWeightBuffers {
+    m: usize,
+    cout: usize,
+    /// engines[e] holds weights for output channels e, e+56, e+112, ...
+    /// engines[e][pass * m + c_in] = w[c_in][e + pass*56].
+    engines: Vec<Vec<i8>>,
+    pub writes: u64,
+    pub reads: u64,
+}
+
+impl ProjectionWeightBuffers {
+    pub fn new(m: usize, cout: usize) -> Self {
+        let passes = cout.div_ceil(NUM_PROJ_ENGINES);
+        Self {
+            m,
+            cout,
+            engines: vec![vec![0i8; passes * m]; NUM_PROJ_ENGINES],
+            writes: 0,
+            reads: 0,
+        }
+    }
+
+    /// Linear write over the QMW `pr.w` layout (M, Cout): linear = c_in*cout + c_out.
+    /// Routed to engine (c_out % 56), slot (c_out / 56)*m + c_in — each
+    /// engine's buffer is private, so all 56 can be loaded without port
+    /// contention.
+    pub fn write_linear(&mut self, linear: usize, v: i8) {
+        let c_in = linear / self.cout;
+        let c_out = linear % self.cout;
+        let engine = c_out % NUM_PROJ_ENGINES;
+        let pass = c_out / NUM_PROJ_ENGINES;
+        self.engines[engine][pass * self.m + c_in] = v;
+        self.writes += 1;
+    }
+
+    /// Engine-local read: weight for input channel `c_in` on `engine`
+    /// during `pass` (one cycle, no contention — private LUTRAM).
+    #[inline(always)]
+    pub fn read(&mut self, engine: usize, pass: usize, c_in: usize) -> i8 {
+        debug_assert!(engine < NUM_PROJ_ENGINES && c_in < self.m);
+        self.reads += 1;
+        self.engines[engine][pass * self.m + c_in]
+    }
+
+    /// The whole per-pass weight slice of one engine (the engine walks its
+    /// private LUTRAM sequentially during accumulation — §Perf iteration 2:
+    /// slice access keeps the host hot loop contiguous).
+    #[inline(always)]
+    pub fn engine_slice(&mut self, engine: usize, pass: usize) -> &[i8] {
+        debug_assert!(engine < NUM_PROJ_ENGINES);
+        self.reads += self.m as u64;
+        &self.engines[engine][pass * self.m..(pass + 1) * self.m]
+    }
+
+    pub fn capacity_bytes(&self) -> usize {
+        self.engines.iter().map(|e| e.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expansion_chunks_stream_filter_major() {
+        let mut b = ExpansionFilterBuffer::new(16, 4);
+        for i in 0..64 {
+            b.write_linear(i, i as i8);
+        }
+        assert_eq!(b.read_chunk(0, 0), [0, 1, 2, 3, 4, 5, 6, 7]);
+        assert_eq!(b.read_chunk(0, 1), [8, 9, 10, 11, 12, 13, 14, 15]);
+        assert_eq!(b.read_chunk(2, 1), [40, 41, 42, 43, 44, 45, 46, 47]);
+        assert_eq!(b.chunk_reads, 3);
+    }
+
+    #[test]
+    fn dw_banks_by_kernel_position() {
+        let m = 8;
+        let mut b = DwFilterBuffer::new(m);
+        // layout (3,3,M): linear = pos*M + f
+        for pos in 0..9 {
+            for f in 0..m {
+                b.write_linear(pos * m + f, (pos * 10 + f) as i8);
+            }
+        }
+        let filt = b.read_filter(3);
+        assert_eq!(filt, [3, 13, 23, 33, 43, 53, 63, 73, 83]);
+    }
+
+    #[test]
+    fn projection_routing_across_engines_and_passes() {
+        let (m, cout) = (8, 64); // 64 > 56: second pass exercises wrap
+        let mut b = ProjectionWeightBuffers::new(m, cout);
+        for c_in in 0..m {
+            for c_out in 0..cout {
+                b.write_linear(c_in * cout + c_out, (c_in * cout + c_out) as i8);
+            }
+        }
+        // channel 3, pass 0 lives on engine 3
+        assert_eq!(b.read(3, 0, 2), (2 * cout + 3) as i8);
+        // channel 59 = engine 3, pass 1
+        assert_eq!(b.read(3, 1, 2), (2 * cout + 59) as i8);
+    }
+
+    #[test]
+    fn capacities_reflect_geometry() {
+        assert_eq!(ExpansionFilterBuffer::new(8, 48).capacity_bytes(), 384);
+        assert_eq!(DwFilterBuffer::new(48).capacity_bytes(), 432);
+        // projection: 56 engines x passes*m bytes
+        assert_eq!(ProjectionWeightBuffers::new(48, 8).capacity_bytes(), 56 * 48);
+        assert_eq!(ProjectionWeightBuffers::new(48, 64).capacity_bytes(), 56 * 96);
+    }
+}

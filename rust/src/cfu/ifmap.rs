@@ -1,0 +1,205 @@
+//! The banked IFMAP buffer with on-the-fly padding (paper Fig. 10 + §III-E).
+//!
+//! Nine independent BRAM banks; pixel (row, col) maps to bank
+//! `(row % 3) * 3 + (col % 3)`, which guarantees every 3×3 window touches
+//! all nine banks exactly once — so a full window is readable in one cycle.
+//! Out-of-bounds window taps return the quantization zero point instead of
+//! fetching (padding is *virtual*; no padded tensor ever exists).
+
+/// One bank entry address: (row/3, col/3, channel) flattened.
+#[derive(Debug)]
+pub struct IfmapBuffer {
+    h: usize,
+    w: usize,
+    c: usize,
+    /// banks[bank][slot] — slot = ((row/3) * ceil(w/3) + col/3) * c + ch.
+    banks: [Vec<i8>; 9],
+    w_groups: usize,
+    /// Total word writes (for the unit's traffic counters).
+    pub writes: u64,
+    /// Total window reads (each models one single-cycle 9-bank access).
+    pub window_reads: u64,
+}
+
+/// Bank id for pixel (row, col) — the paper's mapping rule (Fig. 10).
+#[inline(always)]
+pub fn bank_id(row: usize, col: usize) -> usize {
+    (row % 3) * 3 + (col % 3)
+}
+
+impl IfmapBuffer {
+    pub fn new(h: usize, w: usize, c: usize) -> Self {
+        let h_groups = h.div_ceil(3);
+        let w_groups = w.div_ceil(3);
+        let per_bank = h_groups * w_groups * c;
+        Self {
+            h,
+            w,
+            c,
+            banks: std::array::from_fn(|_| vec![0i8; per_bank]),
+            w_groups,
+            writes: 0,
+            window_reads: 0,
+        }
+    }
+
+    #[inline(always)]
+    fn slot(&self, row: usize, col: usize, ch: usize) -> usize {
+        ((row / 3) * self.w_groups + col / 3) * self.c + ch
+    }
+
+    /// Host/driver write of one byte at linear HWC address.
+    pub fn write_linear(&mut self, linear: usize, v: i8) {
+        let ch = linear % self.c;
+        let col = (linear / self.c) % self.w;
+        let row = linear / (self.c * self.w);
+        assert!(row < self.h, "ifmap write out of range: linear {linear}");
+        let slot = self.slot(row, col, ch);
+        self.banks[bank_id(row, col)][slot] = v;
+        self.writes += 1;
+    }
+
+    /// Read one pixel-channel with bounds check (no padding).
+    #[inline(always)]
+    pub fn read(&self, row: usize, col: usize, ch: usize) -> i8 {
+        debug_assert!(row < self.h && col < self.w && ch < self.c);
+        self.banks[bank_id(row, col)][self.slot(row, col, ch)]
+    }
+
+    /// Read a full 3×3 window centered at (`cy`, `cx`) for channel `ch`,
+    /// applying on-the-fly padding with `zp` for out-of-bounds taps.
+    /// Models a single-cycle parallel access across the nine banks.
+    #[inline]
+    pub fn read_window(&mut self, cy: i64, cx: i64, ch: usize, zp: i8) -> [i8; 9] {
+        self.window_reads += 1;
+        let mut out = [0i8; 9];
+        for ky in 0..3i64 {
+            for kx in 0..3i64 {
+                let r = cy - 1 + ky;
+                let c = cx - 1 + kx;
+                out[(ky * 3 + kx) as usize] =
+                    if r < 0 || c < 0 || r >= self.h as i64 || c >= self.w as i64 {
+                        zp // on-the-fly padding: zero *point*, not zero
+                    } else {
+                        self.read(r as usize, c as usize, ch)
+                    };
+            }
+        }
+        out
+    }
+
+    pub fn dims(&self) -> (usize, usize, usize) {
+        (self.h, self.w, self.c)
+    }
+
+    /// Capacity in bytes across all banks (for the FPGA/ASIC memory model).
+    pub fn capacity_bytes(&self) -> usize {
+        self.banks.iter().map(|b| b.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check;
+
+    #[test]
+    fn bank_mapping_matches_paper_rule() {
+        assert_eq!(bank_id(0, 0), 0);
+        assert_eq!(bank_id(0, 2), 2);
+        assert_eq!(bank_id(1, 0), 3);
+        assert_eq!(bank_id(2, 2), 8);
+        assert_eq!(bank_id(3, 3), 0); // wraps every 3
+        assert_eq!(bank_id(4, 5), 5);
+    }
+
+    #[test]
+    fn every_3x3_window_touches_nine_distinct_banks() {
+        // The property the banking scheme exists to guarantee (Fig. 10):
+        // single-cycle window reads require the 9 taps to hit 9 banks.
+        check("window banks distinct", |g| {
+            let y0 = g.i64(0, 60);
+            let x0 = g.i64(0, 60);
+            let mut seen = [false; 9];
+            for ky in 0..3 {
+                for kx in 0..3 {
+                    let b = bank_id((y0 + ky) as usize, (x0 + kx) as usize);
+                    crate::prop_assert!(!seen[b], "bank {b} hit twice in window at ({y0},{x0})");
+                    seen[b] = true;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn linear_write_then_read() {
+        let (h, w, c) = (5, 4, 8);
+        let mut buf = IfmapBuffer::new(h, w, c);
+        for i in 0..(h * w * c) {
+            buf.write_linear(i, (i % 251) as i8);
+        }
+        for row in 0..h {
+            for col in 0..w {
+                for ch in 0..c {
+                    let lin = (row * w + col) * c + ch;
+                    assert_eq!(buf.read(row, col, ch), (lin % 251) as i8);
+                }
+            }
+        }
+        assert_eq!(buf.writes, (h * w * c) as u64);
+    }
+
+    #[test]
+    fn window_read_pads_with_zero_point() {
+        let mut buf = IfmapBuffer::new(3, 3, 1);
+        for i in 0..9 {
+            buf.write_linear(i, 10 + i as i8);
+        }
+        let zp = -7;
+        // Top-left corner: 5 taps out of bounds.
+        let win = buf.read_window(0, 0, 0, zp);
+        assert_eq!(win, [zp, zp, zp, zp, 10, 11, zp, 13, 14]);
+        // Center: fully in bounds.
+        let win = buf.read_window(1, 1, 0, zp);
+        assert_eq!(win, [10, 11, 12, 13, 14, 15, 16, 17, 18]);
+        // Bottom-right corner.
+        let win = buf.read_window(2, 2, 0, zp);
+        assert_eq!(win, [14, 15, zp, 17, 18, zp, zp, zp, zp]);
+    }
+
+    #[test]
+    fn on_the_fly_padding_equals_explicit_padding() {
+        // Paper Fig. 13: the virtual-padding read must equal reading from an
+        // explicitly padded tensor.
+        check("padding equivalence", |g| {
+            let h = g.usize(1, 8);
+            let w = g.usize(1, 8);
+            let zp = g.i32(-8, 8) as i8;
+            let data: Vec<i8> = (0..h * w).map(|_| g.i8()).collect();
+            let mut buf = IfmapBuffer::new(h, w, 1);
+            for (i, &v) in data.iter().enumerate() {
+                buf.write_linear(i, v);
+            }
+            // Explicit pad (the conventional method, Fig. 13a).
+            let ph = h + 2;
+            let pw = w + 2;
+            let mut padded = vec![zp; ph * pw];
+            for r in 0..h {
+                for c in 0..w {
+                    padded[(r + 1) * pw + (c + 1)] = data[r * w + c];
+                }
+            }
+            let cy = g.usize(0, h - 1) as i64;
+            let cx = g.usize(0, w - 1) as i64;
+            let win = buf.read_window(cy, cx, 0, zp);
+            for ky in 0..3usize {
+                for kx in 0..3usize {
+                    let want = padded[(cy as usize + ky) * pw + cx as usize + kx];
+                    crate::prop_assert_eq!(win[ky * 3 + kx], want);
+                }
+            }
+            Ok(())
+        });
+    }
+}

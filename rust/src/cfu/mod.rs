@@ -1,0 +1,31 @@
+//! The paper's contribution: a fused pixel-wise DSC accelerator modeled as
+//! a Custom Function Unit (paper §III).
+//!
+//! Structure mirrors the hardware block diagram (Fig. 5):
+//!
+//! * [`ifmap`] — the 9-bank IFMAP buffer with on-the-fly padding (Fig. 10, 13b)
+//! * [`filters`] — Expansion filter buffer (Fig. 11), 9-bank Depthwise
+//!   filter buffer (Fig. 12), per-engine LUTRAM Projection buffers (Fig. 8)
+//! * [`engines`] — the three compute engines + post-processing pipelines
+//!   (Figs. 6-8): functional INT8 arithmetic, bit-exact with the JAX golden
+//!   model
+//! * [`pipeline`] — the v1/v2/v3 timing models (Fig. 9): sequential,
+//!   inter-stage, intra-stage
+//! * [`unit`] — the CFU instruction FSM ([`crate::cpu::CfuPort`] impl):
+//!   CFG/WR_*/START/RD_OUT opcodes, output handshake, cycle accounting
+//!
+//! Functional behaviour and timing are deliberately separable: engines
+//! compute values, the pipeline model computes *when* they are ready, and
+//! the unit enforces the CPU↔CFU handshake (a blocked `RD_OUT` returns
+//! stall cycles to the core).
+
+pub mod config;
+pub mod engines;
+pub mod filters;
+pub mod ifmap;
+pub mod pipeline;
+pub mod unit;
+
+pub use config::{LayerConfig, CFG};
+pub use pipeline::{PipelineVersion, StageTimes, TimingParams};
+pub use unit::{opcodes, CfuUnit};

@@ -1,0 +1,220 @@
+//! Pipeline timing models for the three accelerator versions (paper §III-C,
+//! Fig. 9).
+//!
+//! Stage times are *structural* — derived from the engine geometry the paper
+//! fixes (9 expansion engines with 8-way MAC trees, a 9-way depthwise MAC,
+//! 56 output-stationary projection engines) — while the small per-stage /
+//! per-start overhead constants are calibration inputs (EXPERIMENTS.md
+//! §Calibration):
+//!
+//! * `T_ex_mac = M · Cin/8` — M expanded channels, one 8-lane chunk per
+//!   cycle, the nine tile positions in parallel across the nine engines.
+//! * `T_ex_q = M` — nine parallel post-processing pipes, one channel/cycle.
+//! * `T_dw_mac = M` — one channel per cycle through the 9-way MAC array.
+//! * `T_dw_q = M`.
+//! * `T_pr = M · ⌈Cout/56⌉` — one broadcast F2 element per cycle per pass.
+//!
+//! v1 executes the five phases strictly in sequence per pixel; v2 pipelines
+//! the three *units* (Ex | Dw | Pr) across pixels; v3 pipelines all five
+//! phases (MAC and Quantize split).  Because the projection accumulators
+//! double as the output buffer (Fig. 8), the pipeline can only restart
+//! projection for the next pixel after the CPU has drained the previous
+//! one — [`super::unit`] enforces that handshake using `refill_tail`.
+
+use super::config::LayerConfig;
+
+/// Which hardware iteration (identical resources, different pipelining —
+/// paper Table II).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PipelineVersion {
+    /// Sequential (Fig. 9a).
+    V1,
+    /// Inter-stage, 3 stages (Fig. 9b).
+    V2,
+    /// Intra-stage, 5 stages (Fig. 9c).
+    V3,
+}
+
+impl PipelineVersion {
+    pub const ALL: [PipelineVersion; 3] =
+        [PipelineVersion::V1, PipelineVersion::V2, PipelineVersion::V3];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PipelineVersion::V1 => "v1",
+            PipelineVersion::V2 => "v2",
+            PipelineVersion::V3 => "v3",
+        }
+    }
+
+    /// How many pixels may be in flight inside the accelerator.
+    pub fn in_flight(&self) -> usize {
+        match self {
+            PipelineVersion::V1 => 1,
+            PipelineVersion::V2 => 3,
+            PipelineVersion::V3 => 5,
+        }
+    }
+}
+
+/// Calibration constants (documented in EXPERIMENTS.md §Calibration).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TimingParams {
+    /// Instruction-controller dispatch cost per START command.
+    pub start_overhead: u64,
+    /// Pipeline-register/synchronization cost per stage boundary.
+    pub stage_overhead: u64,
+}
+
+impl Default for TimingParams {
+    fn default() -> Self {
+        Self { start_overhead: 8, stage_overhead: 4 }
+    }
+}
+
+/// Per-pixel stage cycle counts for one layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StageTimes {
+    pub ex_mac: u64,
+    pub ex_q: u64,
+    pub dw_mac: u64,
+    pub dw_q: u64,
+    pub pr: u64,
+}
+
+impl StageTimes {
+    pub fn for_layer(cfg: &LayerConfig) -> Self {
+        let m = cfg.m as u64;
+        let passes = (cfg.cout as u64).div_ceil(56);
+        Self {
+            ex_mac: m * (cfg.cin as u64 / 8),
+            ex_q: m,
+            dw_mac: m,
+            dw_q: m,
+            pr: m * passes,
+        }
+    }
+
+    fn five(&self) -> [u64; 5] {
+        [self.ex_mac, self.ex_q, self.dw_mac, self.dw_q, self.pr]
+    }
+
+    /// Latency of one pixel through an empty pipeline.
+    pub fn fill_latency(&self, v: PipelineVersion, p: &TimingParams) -> u64 {
+        let sum: u64 = self.five().iter().sum();
+        match v {
+            // v1/v3 traverse five phase boundaries; v2 groups them in three.
+            PipelineVersion::V1 | PipelineVersion::V3 => sum + 5 * p.stage_overhead,
+            PipelineVersion::V2 => sum + 3 * p.stage_overhead,
+        }
+    }
+
+    /// Steady-state initiation interval (cycles between consecutive pixel
+    /// completions, CPU permitting).
+    pub fn ii(&self, v: PipelineVersion, p: &TimingParams) -> u64 {
+        match v {
+            PipelineVersion::V1 => self.fill_latency(v, p),
+            PipelineVersion::V2 => {
+                let s1 = self.ex_mac + self.ex_q;
+                let s2 = self.dw_mac + self.dw_q;
+                let s3 = self.pr;
+                s1.max(s2).max(s3) + p.stage_overhead
+            }
+            PipelineVersion::V3 => {
+                self.five().into_iter().max().unwrap() + p.stage_overhead
+            }
+        }
+    }
+
+    /// Cycles to restart the tail of the pipeline after the CPU drains the
+    /// projection accumulators (the OS accumulators double as the output
+    /// buffer, so the next pixel's projection can only then run).
+    pub fn refill_tail(&self, v: PipelineVersion, p: &TimingParams) -> u64 {
+        match v {
+            PipelineVersion::V1 => self.fill_latency(v, p),
+            PipelineVersion::V2 | PipelineVersion::V3 => self.pr + p.stage_overhead,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layer3() -> LayerConfig {
+        LayerConfig {
+            h: 40,
+            w: 40,
+            cin: 8,
+            m: 48,
+            cout: 8,
+            stride: 1,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn stage_times_layer3() {
+        let t = StageTimes::for_layer(&layer3());
+        assert_eq!(t.ex_mac, 48);
+        assert_eq!(t.ex_q, 48);
+        assert_eq!(t.dw_mac, 48);
+        assert_eq!(t.dw_q, 48);
+        assert_eq!(t.pr, 48);
+    }
+
+    #[test]
+    fn wide_cout_needs_multiple_projection_passes() {
+        let mut cfg = layer3();
+        cfg.cout = 64;
+        let t = StageTimes::for_layer(&cfg);
+        assert_eq!(t.pr, 96); // two passes
+    }
+
+    #[test]
+    fn ii_strictly_improves_v1_to_v3() {
+        let p = TimingParams::default();
+        let t = StageTimes::for_layer(&layer3());
+        let (i1, i2, i3) = (
+            t.ii(PipelineVersion::V1, &p),
+            t.ii(PipelineVersion::V2, &p),
+            t.ii(PipelineVersion::V3, &p),
+        );
+        assert!(i1 > i2, "{i1} vs {i2}");
+        assert!(i2 > i3, "{i2} vs {i3}");
+        // v3 II is bounded below by the slowest single phase
+        assert!(i3 >= 48);
+    }
+
+    #[test]
+    fn ii_invariants_hold_across_random_layers() {
+        use crate::util::check::check;
+        let p = TimingParams::default();
+        check("pipeline II ordering", |g| {
+            let cfg = LayerConfig {
+                h: g.i32(3, 64) as u32,
+                w: g.i32(3, 64) as u32,
+                cin: 8 * g.i32(1, 8) as u32,
+                m: 8 * g.i32(1, 48) as u32,
+                cout: 8 * g.i32(1, 16) as u32,
+                stride: *g.pick(&[1u32, 2]),
+                ..Default::default()
+            };
+            let t = StageTimes::for_layer(&cfg);
+            let (i1, i2, i3) = (
+                t.ii(PipelineVersion::V1, &p),
+                t.ii(PipelineVersion::V2, &p),
+                t.ii(PipelineVersion::V3, &p),
+            );
+            crate::prop_assert!(i1 >= i2 && i2 >= i3);
+            // II is never below the slowest phase (structural lower bound).
+            let max_phase = t.five().into_iter().max().unwrap();
+            crate::prop_assert!(i3 >= max_phase);
+            // fill latency >= II always
+            for v in PipelineVersion::ALL {
+                crate::prop_assert!(t.fill_latency(v, &p) >= t.ii(v, &p));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,620 @@
+//! The CFU top level: instruction FSM + output handshake + cycle accounting.
+//!
+//! Implements [`crate::cpu::CfuPort`].  The driver programs a layer
+//! (CFG + WR_* opcodes), issues `START(first_pixel, count)`, then reads
+//! each pixel's outputs with `RD_OUT` — which *blocks* (returns stall
+//! cycles) until the pipeline model says the pixel is done.  Reading the
+//! last word of a pixel frees the projection accumulators, letting the
+//! pipeline tail restart (see [`super::pipeline`]).
+
+use std::collections::VecDeque;
+
+use crate::cpu::{CfuPort, CfuResponse};
+
+use super::config::{LayerConfig, CFG};
+use super::engines::{self, EngineStats};
+use super::filters::{DwFilterBuffer, ExpansionFilterBuffer, ProjectionWeightBuffers};
+use super::ifmap::IfmapBuffer;
+use super::pipeline::{PipelineVersion, StageTimes, TimingParams};
+
+/// CFU opcodes (funct7 of the custom-0 instruction) — DESIGN.md §6.
+pub mod opcodes {
+    pub const STATUS: u8 = 0x00;
+    pub const CFG: u8 = 0x01;
+    pub const WR_IFMAP: u8 = 0x02;
+    pub const WR_EXW: u8 = 0x03;
+    pub const WR_DWW: u8 = 0x04;
+    pub const WR_PRW: u8 = 0x05;
+    pub const WR_BIAS: u8 = 0x06;
+    pub const START: u8 = 0x08;
+    pub const RD_OUT: u8 = 0x09;
+    pub const RD_CYCLES: u8 = 0x0A;
+}
+
+/// Counter selectors for `RD_CYCLES`.
+pub mod counters {
+    pub const BUSY: u32 = 0;
+    pub const PIXELS: u32 = 1;
+    pub const WINDOW_READS: u32 = 2;
+    pub const MACS_LO: u32 = 3;
+    pub const MACS_HI: u32 = 4;
+    pub const STALL: u32 = 5;
+}
+
+/// The fused-DSC accelerator as seen from the CPU.
+pub struct CfuUnit {
+    pub version: PipelineVersion,
+    pub timing: TimingParams,
+    cfg_words: [u32; CFG::COUNT],
+    cfg: LayerConfig,
+    times: StageTimes,
+    // Memory subsystem (allocated when geometry is configured).
+    ifmap: Option<IfmapBuffer>,
+    exw: Option<ExpansionFilterBuffer>,
+    dww: Option<DwFilterBuffer>,
+    prw: Option<ProjectionWeightBuffers>,
+    ex_bias: Vec<i32>,
+    dw_bias: Vec<i32>,
+    pr_bias: Vec<i32>,
+    // Active START batch.
+    batch_first: u32,
+    batch_count: u32,
+    outputs: Vec<Vec<i8>>,
+    /// Next unread pixel (index into the batch) and word within it.
+    rd_pixel: u32,
+    rd_word: u32,
+    /// Completion time of pixel `rd_pixel` (the handshake recurrence).
+    ready_time: u64,
+    /// read_done times of the last `in_flight` pixels (output-buffer gating).
+    read_done_window: VecDeque<u64>,
+    // Statistics.
+    pub stats: EngineStats,
+    pub busy_cycles: u64,
+    pub stall_cycles: u64,
+    pub pixels_done: u64,
+    start_time: u64,
+}
+
+impl CfuUnit {
+    pub fn new(version: PipelineVersion) -> Self {
+        Self::with_timing(version, TimingParams::default())
+    }
+
+    pub fn with_timing(version: PipelineVersion, timing: TimingParams) -> Self {
+        Self {
+            version,
+            timing,
+            cfg_words: [0; CFG::COUNT],
+            cfg: LayerConfig::default(),
+            times: StageTimes { ex_mac: 0, ex_q: 0, dw_mac: 0, dw_q: 0, pr: 0 },
+            ifmap: None,
+            exw: None,
+            dww: None,
+            prw: None,
+            ex_bias: Vec::new(),
+            dw_bias: Vec::new(),
+            pr_bias: Vec::new(),
+            batch_first: 0,
+            batch_count: 0,
+            outputs: Vec::new(),
+            rd_pixel: 0,
+            rd_word: 0,
+            ready_time: 0,
+            read_done_window: VecDeque::new(),
+            stats: EngineStats::default(),
+            busy_cycles: 0,
+            stall_cycles: 0,
+            pixels_done: 0,
+            start_time: 0,
+        }
+    }
+
+    /// (Re)allocate buffers for the configured geometry.
+    fn materialize(&mut self) {
+        let cfg = LayerConfig::from_words(&self.cfg_words);
+        cfg.validate().expect("invalid CFU layer configuration");
+        self.cfg = cfg;
+        self.times = StageTimes::for_layer(&cfg);
+        self.ifmap = Some(IfmapBuffer::new(cfg.h as usize, cfg.w as usize, cfg.cin as usize));
+        self.exw = Some(ExpansionFilterBuffer::new(cfg.cin as usize, cfg.m as usize));
+        self.dww = Some(DwFilterBuffer::new(cfg.m as usize));
+        self.prw = Some(ProjectionWeightBuffers::new(cfg.m as usize, cfg.cout as usize));
+        self.ex_bias = vec![0; cfg.m as usize];
+        self.dw_bias = vec![0; cfg.m as usize];
+        self.pr_bias = vec![0; cfg.cout as usize];
+        // Reprogramming fully resets batch/readback state (no stale outputs).
+        self.outputs.clear();
+        self.batch_count = 0;
+        self.batch_first = 0;
+        self.rd_pixel = 0;
+        self.rd_word = 0;
+        self.ready_time = 0;
+        self.read_done_window.clear();
+    }
+
+    fn write_packed(&mut self, op: u8, addr: u32, word: u32) {
+        let bytes = word.to_le_bytes();
+        for (k, &b) in bytes.iter().enumerate() {
+            let lin = addr as usize * 4 + k;
+            match op {
+                opcodes::WR_IFMAP => self.ifmap.as_mut().expect("CFG first").write_linear(lin, b as i8),
+                opcodes::WR_EXW => self.exw.as_mut().expect("CFG first").write_linear(lin, b as i8),
+                opcodes::WR_DWW => self.dww.as_mut().expect("CFG first").write_linear(lin, b as i8),
+                opcodes::WR_PRW => self.prw.as_mut().expect("CFG first").write_linear(lin, b as i8),
+                _ => unreachable!(),
+            }
+        }
+    }
+
+    /// Compute the whole batch functionally (values only; readiness times
+    /// are produced by the handshake recurrence as the CPU reads).
+    fn start(&mut self, first: u32, count: u32, now: u64) {
+        assert!(
+            self.rd_pixel == self.batch_count,
+            "START while {} pixels of the previous batch are unread",
+            self.batch_count - self.rd_pixel
+        );
+        let w_out = self.cfg.w_out();
+        assert!(first + count <= self.cfg.num_pixels(), "START range out of bounds");
+        self.batch_first = first;
+        self.batch_count = count;
+        self.rd_pixel = 0;
+        self.rd_word = 0;
+        self.read_done_window.clear();
+        self.start_time = now;
+        self.outputs.clear();
+        let (ifmap, exw, dww, prw) = (
+            self.ifmap.as_mut().unwrap(),
+            self.exw.as_mut().unwrap(),
+            self.dww.as_mut().unwrap(),
+            self.prw.as_mut().unwrap(),
+        );
+        for k in 0..count {
+            let lin = first + k;
+            let (oy, ox) = (lin / w_out, lin % w_out);
+            self.outputs.push(engines::fused_pixel(
+                &self.cfg,
+                ifmap,
+                exw,
+                dww,
+                prw,
+                &self.ex_bias,
+                &self.dw_bias,
+                &self.pr_bias,
+                oy,
+                ox,
+                &mut self.stats,
+            ));
+        }
+        // First pixel completes after dispatch + pipeline fill.
+        self.ready_time =
+            now + self.timing.start_overhead + self.times.fill_latency(self.version, &self.timing);
+    }
+
+    fn rd_out(&mut self, now: u64) -> CfuResponse {
+        assert!(self.rd_pixel < self.batch_count, "RD_OUT past end of batch");
+        let cout = self.cfg.cout;
+        let words_per_pixel = cout.div_ceil(4);
+        let stall = self.ready_time.saturating_sub(now);
+        self.stall_cycles += stall;
+        let px = &self.outputs[self.rd_pixel as usize];
+        let base = (self.rd_word * 4) as usize;
+        let mut bytes = [0u8; 4];
+        for k in 0..4 {
+            if base + k < px.len() {
+                bytes[k] = px[base + k] as u8;
+            }
+        }
+        let value = u32::from_le_bytes(bytes);
+        self.rd_word += 1;
+        if self.rd_word == words_per_pixel {
+            // Pixel drained: the projection accumulators are free again.
+            let read_done = now + stall + 1;
+            self.read_done_window.push_back(read_done);
+            self.pixels_done += 1;
+            self.rd_word = 0;
+            self.rd_pixel += 1;
+            if self.rd_pixel < self.batch_count {
+                // Next completion: pipeline II after the previous one, but
+                // never before the output buffer slot freed `in_flight`
+                // pixels ago allows the tail to refill.
+                let ii = self.times.ii(self.version, &self.timing);
+                let refill = self.times.refill_tail(self.version, &self.timing);
+                let mut next = self.ready_time + ii;
+                if self.read_done_window.len() >= self.version.in_flight() {
+                    let gate = self.read_done_window
+                        [self.read_done_window.len() - self.version.in_flight()];
+                    next = next.max(gate + refill);
+                }
+                while self.read_done_window.len() > self.version.in_flight() {
+                    self.read_done_window.pop_front();
+                }
+                self.busy_cycles += next - self.ready_time;
+                self.ready_time = next;
+            } else {
+                self.busy_cycles += self.ready_time.saturating_sub(self.start_time);
+            }
+        }
+        CfuResponse { value, stall_cycles: stall }
+    }
+}
+
+impl CfuUnit {
+    /// Host-side convenience: program a whole block from [`BlockParams`] and
+    /// run every output pixel, returning the output feature map (and the
+    /// final CFU-side completion time).  This is the "functional backend"
+    /// used by the coordinator and the golden cross-check; the ISS + driver
+    /// path ([`crate::driver`]) exercises the same opcodes from simulated
+    /// RV32IM code for cycle measurements.
+    pub fn run_block_host(
+        &mut self,
+        bp: &crate::model::weights::BlockParams,
+        x: &crate::tensor::TensorI8,
+    ) -> (crate::tensor::TensorI8, u64) {
+        use crate::quant::residual_add;
+        let cfg = &bp.cfg;
+        assert_eq!(x.dims, vec![cfg.h as usize, cfg.w as usize, cfg.cin as usize]);
+        let mut now = 0u64;
+        let op = |u: &mut Self, f7: u8, rs1: u32, rs2: u32, now: &mut u64| -> u32 {
+            let r = u.execute(f7, 0, rs1, rs2, *now);
+            *now += 1 + r.stall_cycles;
+            r.value
+        };
+        // CFG block (ascending order; RELU last triggers materialization).
+        let qp = [
+            (CFG::H, cfg.h),
+            (CFG::W, cfg.w),
+            (CFG::CIN, cfg.cin),
+            (CFG::M, cfg.m),
+            (CFG::COUT, cfg.cout),
+            (CFG::STRIDE, cfg.stride),
+            (CFG::ZP_IN, bp.ex_q.zp_in as u32),
+            (CFG::ZP_F1, bp.ex_q.zp_out as u32),
+            (CFG::ZP_F2, bp.dw_q.zp_out as u32),
+            (CFG::ZP_OUT, bp.pr_q.zp_out as u32),
+            (CFG::EX_MULT, bp.ex_q.multiplier as u32),
+            (CFG::EX_SHIFT, bp.ex_q.shift),
+            (CFG::DW_MULT, bp.dw_q.multiplier as u32),
+            (CFG::DW_SHIFT, bp.dw_q.shift),
+            (CFG::PR_MULT, bp.pr_q.multiplier as u32),
+            (CFG::PR_SHIFT, bp.pr_q.shift),
+            (
+                CFG::RELU,
+                (bp.ex_q.relu as u32) | ((bp.dw_q.relu as u32) << 1) | ((bp.pr_q.relu as u32) << 2),
+            ),
+        ];
+        for (i, v) in qp {
+            op(self, opcodes::CFG, i, v, &mut now);
+        }
+        let pack = |bytes: &[i8]| -> u32 {
+            let mut w = [0u8; 4];
+            for (k, &b) in bytes.iter().enumerate().take(4) {
+                w[k] = b as u8;
+            }
+            u32::from_le_bytes(w)
+        };
+        for (a, chunk) in x.data.chunks(4).enumerate() {
+            op(self, opcodes::WR_IFMAP, a as u32, pack(chunk), &mut now);
+        }
+        // The expansion filter buffer stores filters *sequentially* (filter-
+        // major, Fig. 11); QMW holds (Cin, M) channel-major — the loader
+        // transposes, exactly as the real driver firmware would.
+        let (cin, m) = (cfg.cin as usize, cfg.m as usize);
+        let mut exw_fm = vec![0i8; cin * m];
+        for ci in 0..cin {
+            for f in 0..m {
+                exw_fm[f * cin + ci] = bp.ex_w[ci * m + f];
+            }
+        }
+        for (a, chunk) in exw_fm.chunks(4).enumerate() {
+            op(self, opcodes::WR_EXW, a as u32, pack(chunk), &mut now);
+        }
+        for (a, chunk) in bp.dw_w.chunks(4).enumerate() {
+            op(self, opcodes::WR_DWW, a as u32, pack(chunk), &mut now);
+        }
+        for (a, chunk) in bp.pr_w.chunks(4).enumerate() {
+            op(self, opcodes::WR_PRW, a as u32, pack(chunk), &mut now);
+        }
+        for (stage, biases) in [(0u32, &bp.ex_b), (1, &bp.dw_b), (2, &bp.pr_b)] {
+            for (i, &b) in biases.iter().enumerate() {
+                op(self, opcodes::WR_BIAS, (stage << 24) | i as u32, b as u32, &mut now);
+            }
+        }
+        let (ho, wo, cout) = (cfg.h_out() as usize, cfg.w_out() as usize, cfg.cout as usize);
+        let n_px = (ho * wo) as u32;
+        op(self, opcodes::START, 0, n_px, &mut now);
+        let mut out = crate::tensor::TensorI8::zeros(&[ho, wo, cout]);
+        let words = cout.div_ceil(4);
+        for px in 0..(ho * wo) {
+            for w in 0..words {
+                let v = op(self, opcodes::RD_OUT, w as u32, 0, &mut now);
+                for (k, b) in v.to_le_bytes().iter().enumerate() {
+                    let ch = w * 4 + k;
+                    if ch < cout {
+                        out.data[px * cout + ch] = *b as i8;
+                    }
+                }
+            }
+        }
+        if cfg.residual {
+            // Software residual add (the paper leaves this to the CPU).
+            for i in 0..out.data.len() {
+                out.data[i] = residual_add(out.data[i], x.data[i], bp.zp_in());
+            }
+        }
+        (out, now)
+    }
+}
+
+impl CfuPort for CfuUnit {
+    fn execute(&mut self, funct7: u8, _funct3: u8, rs1: u32, rs2: u32, now: u64) -> CfuResponse {
+        match funct7 {
+            opcodes::STATUS => {
+                let ready = self.rd_pixel < self.batch_count && now >= self.ready_time;
+                CfuResponse::ready(ready as u32)
+            }
+            opcodes::CFG => {
+                let idx = rs1 as usize;
+                assert!(idx < CFG::COUNT, "bad CFG index {idx}");
+                self.cfg_words[idx] = rs2;
+                // Geometry complete once RELU (the last word) is written —
+                // drivers write CFG words in ascending order.
+                if rs1 == CFG::RELU {
+                    self.materialize();
+                }
+                CfuResponse::ready(0)
+            }
+            opcodes::WR_IFMAP | opcodes::WR_EXW | opcodes::WR_DWW | opcodes::WR_PRW => {
+                self.write_packed(funct7, rs1, rs2);
+                CfuResponse::ready(0)
+            }
+            opcodes::WR_BIAS => {
+                let stage = rs1 >> 24;
+                let idx = (rs1 & 0xFF_FFFF) as usize;
+                let v = rs2 as i32;
+                match stage {
+                    0 => self.ex_bias[idx] = v,
+                    1 => self.dw_bias[idx] = v,
+                    2 => self.pr_bias[idx] = v,
+                    s => panic!("bad bias stage {s}"),
+                }
+                CfuResponse::ready(0)
+            }
+            opcodes::START => {
+                self.start(rs1, rs2, now);
+                CfuResponse::ready(0)
+            }
+            opcodes::RD_OUT => self.rd_out(now),
+            opcodes::RD_CYCLES => {
+                let v = match rs1 {
+                    counters::BUSY => self.busy_cycles as u32,
+                    counters::PIXELS => self.pixels_done as u32,
+                    counters::WINDOW_READS => {
+                        self.ifmap.as_ref().map_or(0, |b| b.window_reads as u32)
+                    }
+                    counters::MACS_LO => {
+                        (self.stats.ex_macs + self.stats.dw_macs + self.stats.pr_macs) as u32
+                    }
+                    counters::MACS_HI => {
+                        ((self.stats.ex_macs + self.stats.dw_macs + self.stats.pr_macs) >> 32)
+                            as u32
+                    }
+                    counters::STALL => self.stall_cycles as u32,
+                    _ => 0,
+                };
+                CfuResponse::ready(v)
+            }
+            op => panic!("unknown CFU opcode {op:#x}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpu::CfuPort;
+
+    /// Program a 4x4x8 -> M=8 -> Cout=8 layer with simple constants.
+    fn setup(version: PipelineVersion) -> CfuUnit {
+        let mut u = CfuUnit::new(version);
+        let words: [(u32, u32); 17] = [
+            (CFG::H, 4),
+            (CFG::W, 4),
+            (CFG::CIN, 8),
+            (CFG::M, 8),
+            (CFG::COUT, 8),
+            (CFG::STRIDE, 1),
+            (CFG::ZP_IN, 0),
+            (CFG::ZP_F1, 0),
+            (CFG::ZP_F2, 0),
+            (CFG::ZP_OUT, 0),
+            (CFG::EX_MULT, 1 << 30),
+            (CFG::EX_SHIFT, 0),
+            (CFG::DW_MULT, 1 << 30),
+            (CFG::DW_SHIFT, 0),
+            (CFG::PR_MULT, 1 << 30),
+            (CFG::PR_SHIFT, 0),
+            (CFG::RELU, 0),
+        ];
+        for (i, v) in words {
+            u.execute(opcodes::CFG, 0, i, v, 0);
+        }
+        // ifmap: all ones (packed 4x 0x01)
+        for a in 0..(4 * 4 * 8 / 4) {
+            u.execute(opcodes::WR_IFMAP, 0, a, 0x0101_0101, 0);
+        }
+        // weights: all ones
+        for a in 0..(8 * 8 / 4) {
+            u.execute(opcodes::WR_EXW, 0, a, 0x0101_0101, 0);
+        }
+        for a in 0..(72 / 4) {
+            u.execute(opcodes::WR_DWW, 0, a, 0x0101_0101, 0);
+        }
+        for a in 0..(8 * 8 / 4) {
+            u.execute(opcodes::WR_PRW, 0, a, 0x0101_0101, 0);
+        }
+        u
+    }
+
+    fn read_pixel(u: &mut CfuUnit, now: &mut u64) -> Vec<i8> {
+        let mut out = Vec::new();
+        for w in 0..2 {
+            let r = u.execute(opcodes::RD_OUT, 0, w, 0, *now);
+            *now += 1 + r.stall_cycles;
+            out.extend(r.value.to_le_bytes().iter().map(|&b| b as i8));
+        }
+        out
+    }
+
+    #[test]
+    fn functional_output_known_value() {
+        // All-ones everything, zps=0, multipliers 0.5:
+        // Ex: acc = 8 -> f1 = 4 (all tile positions in bounds for center px)
+        // Dw center: acc = 9*4 = 36 -> f2 = 18
+        // Pr: acc = 8*18 = 144 -> out = 72
+        let mut u = setup(PipelineVersion::V3);
+        u.execute(opcodes::START, 0, 5, 1, 0); // pixel (1,1)
+        let mut now = 1000;
+        let px = read_pixel(&mut u, &mut now);
+        assert_eq!(px, vec![72i8; 8]);
+    }
+
+    #[test]
+    fn corner_pixel_uses_padding() {
+        // Corner (0,0): 4 valid taps -> dw acc = 4*4 = 16 -> f2 = 8 -> out = 32.
+        let mut u = setup(PipelineVersion::V1);
+        u.execute(opcodes::START, 0, 0, 1, 0);
+        let mut now = 1000;
+        let px = read_pixel(&mut u, &mut now);
+        assert_eq!(px, vec![32i8; 8]);
+    }
+
+    #[test]
+    fn rd_out_blocks_until_ready() {
+        let mut u = setup(PipelineVersion::V1);
+        u.execute(opcodes::START, 0, 5, 1, 100);
+        // Immediately reading at t=100 must stall for fill latency + overhead.
+        let r = u.execute(opcodes::RD_OUT, 0, 0, 0, 100);
+        let expect =
+            u.timing.start_overhead + u.times.fill_latency(PipelineVersion::V1, &u.timing);
+        assert_eq!(r.stall_cycles, expect);
+        // Reading long after completion: no stall.
+        let r2 = u.execute(opcodes::RD_OUT, 0, 1, 0, 1_000_000);
+        assert_eq!(r2.stall_cycles, 0);
+    }
+
+    #[test]
+    fn deeper_pipelines_finish_batches_faster() {
+        let mut totals = Vec::new();
+        for v in PipelineVersion::ALL {
+            let mut u = setup(v);
+            u.execute(opcodes::START, 0, 0, 16, 0);
+            let mut now = 0u64;
+            for _ in 0..16 {
+                read_pixel(&mut u, &mut now);
+                now += 3; // a fast CPU readback loop
+            }
+            totals.push(now);
+        }
+        assert!(totals[0] > totals[1], "v1 {} <= v2 {}", totals[0], totals[1]);
+        assert!(totals[1] > totals[2], "v2 {} <= v3 {}", totals[1], totals[2]);
+    }
+
+    #[test]
+    fn slow_reader_gates_the_pipeline() {
+        // If the CPU dawdles, completions track the reader, not the II.
+        let mut u = setup(PipelineVersion::V3);
+        u.execute(opcodes::START, 0, 0, 8, 0);
+        let mut now = 0u64;
+        let mut stalls = 0u64;
+        for _ in 0..8 {
+            for w in 0..2 {
+                let r = u.execute(opcodes::RD_OUT, 0, w, 0, now);
+                stalls += r.stall_cycles;
+                now += 1 + r.stall_cycles;
+            }
+            now += 10_000; // very slow CPU
+        }
+        // After the pipeline fills, the CFU is never the bottleneck.
+        assert!(stalls < 2 * u.times.fill_latency(PipelineVersion::V3, &u.timing) + 10 * 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "unread")]
+    fn start_with_unread_outputs_panics() {
+        let mut u = setup(PipelineVersion::V2);
+        u.execute(opcodes::START, 0, 0, 4, 0);
+        u.execute(opcodes::START, 0, 4, 4, 0);
+    }
+
+    #[test]
+    fn fused_cfu_equals_layerwise_reference() {
+        // THE core functional claim: the zero-buffer fused dataflow computes
+        // exactly what the conventional layer-by-layer model computes.
+        use crate::model::blocks::BlockConfig;
+        use crate::model::refimpl::block_ref;
+        use crate::model::weights::{gen_input, make_block_params};
+        use crate::util::check::check;
+
+        check("fused CFU == layerwise reference", |g| {
+            let cin = 8 * g.i32(1, 3) as u32;
+            let m = 8 * g.i32(1, 4) as u32;
+            let cout = 8 * g.i32(1, 3) as u32;
+            let stride = *g.pick(&[1u32, 2]);
+            let h = g.i32(3, 9) as u32;
+            let w = g.i32(3, 9) as u32;
+            let residual = stride == 1 && cin == cout && g.bool();
+            let cfg = BlockConfig::new(h, w, cin, m, cout, stride, residual);
+            let bp = make_block_params(g.i32(1, 16) as usize, cfg, g.i32(-8, 8));
+            let x = crate::tensor::TensorI8::from_vec(
+                &[h as usize, w as usize, cin as usize],
+                gen_input("cfu.prop.x", (h * w * cin) as usize, bp.zp_in()),
+            );
+            let want = block_ref(&x, &bp);
+            for v in PipelineVersion::ALL {
+                let mut unit = CfuUnit::new(v);
+                let (got, _) = unit.run_block_host(&bp, &x);
+                crate::prop_assert!(
+                    got.data == want.data,
+                    "mismatch on {} for cfg {cfg:?}",
+                    v.name()
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn evaluated_layers_run_through_cfu() {
+        use crate::model::blocks::evaluated_blocks;
+        use crate::model::refimpl::block_ref;
+        use crate::model::weights::{gen_input, make_block_params};
+        for (tag, cfg) in evaluated_blocks() {
+            let bp = make_block_params(3, cfg, -3);
+            let x = crate::tensor::TensorI8::from_vec(
+                &[cfg.h as usize, cfg.w as usize, cfg.cin as usize],
+                gen_input("cfu.eval.x", (cfg.h * cfg.w * cfg.cin) as usize, bp.zp_in()),
+            );
+            let want = block_ref(&x, &bp);
+            let mut unit = CfuUnit::new(PipelineVersion::V3);
+            let (got, cycles) = unit.run_block_host(&bp, &x);
+            assert_eq!(got.data, want.data, "layer {tag}");
+            assert!(cycles > 0);
+        }
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let mut u = setup(PipelineVersion::V3);
+        u.execute(opcodes::START, 0, 0, 16, 0);
+        let mut now = 0u64;
+        for _ in 0..16 {
+            read_pixel(&mut u, &mut now);
+        }
+        let px = u.execute(opcodes::RD_CYCLES, 0, counters::PIXELS, 0, now).value;
+        assert_eq!(px, 16);
+        let macs = u.execute(opcodes::RD_CYCLES, 0, counters::MACS_LO, 0, now).value;
+        // 16 px * (ex 8*8*9 + dw 8*9 + pr 8*8) MACs
+        assert_eq!(macs as u64, 16 * (8 * 8 * 9 + 72 + 64));
+    }
+}

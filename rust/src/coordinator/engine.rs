@@ -1,0 +1,180 @@
+//! Backend-pluggable model execution.
+
+use anyhow::Result;
+
+use crate::baseline::{self, cfu_playground};
+use crate::cfu::{CfuUnit, PipelineVersion};
+use crate::driver;
+use crate::model::refimpl;
+use crate::model::weights::ModelParams;
+use crate::runtime::HloExecutable;
+use crate::tensor::TensorI8;
+
+/// Where a block's computation runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Pure-Rust layer-by-layer reference (no simulation, no cycles).
+    Reference,
+    /// v0: software kernels on the cycle-accurate RV32IM core.
+    SoftwareIss,
+    /// Prakash et al. 1×1-only SIMD-MAC CFU on the ISS.
+    CfuPlaygroundIss,
+    /// The fused CFU driven by RV32IM firmware on the ISS (paper's system).
+    FusedIss(PipelineVersion),
+    /// The fused CFU programmed directly from the host (fast functional
+    /// path; CFU-side cycle model only, no CPU cycles).
+    FusedHost(PipelineVersion),
+}
+
+impl Backend {
+    pub fn name(&self) -> String {
+        match self {
+            Backend::Reference => "reference".into(),
+            Backend::SoftwareIss => "v0-software".into(),
+            Backend::CfuPlaygroundIss => "cfu-playground".into(),
+            Backend::FusedIss(v) => format!("fused-{}", v.name()),
+            Backend::FusedHost(v) => format!("fused-host-{}", v.name()),
+        }
+    }
+}
+
+/// Output of one inference.
+#[derive(Debug, Clone)]
+pub struct InferenceOutput {
+    pub logits: Vec<i32>,
+    /// Simulated hardware cycles (0 for Reference / golden backends).
+    pub sim_cycles: u64,
+    /// argmax class.
+    pub class: usize,
+}
+
+/// The model engine: parameters + backend.
+///
+/// Deliberately `Send + Sync` (shared across worker threads): the PJRT
+/// golden model is *not* embedded here — xla handles are not `Send` — use
+/// [`infer_golden`] on the main thread for cross-checks.
+pub struct Engine {
+    pub params: ModelParams,
+    pub backend: Backend,
+}
+
+impl Engine {
+    pub fn new(params: ModelParams, backend: Backend) -> Self {
+        Self { params, backend }
+    }
+
+    /// Run one block on the configured backend.
+    pub fn run_block(&self, idx: usize, x: &TensorI8) -> Result<(TensorI8, u64)> {
+        let bp = &self.params.blocks[idx];
+        Ok(match self.backend {
+            Backend::Reference => (refimpl::block_ref(x, bp), 0),
+            Backend::SoftwareIss => {
+                let r = baseline::run_block_v0(bp, x)?;
+                (r.out, r.cycles)
+            }
+            Backend::CfuPlaygroundIss => {
+                let r = cfu_playground::run_block_cfu_playground(bp, x)?;
+                (r.out, r.cycles)
+            }
+            Backend::FusedIss(v) => {
+                let r = driver::run_block_fused(bp, x, v)?;
+                (r.out, r.cycles)
+            }
+            Backend::FusedHost(v) => {
+                let mut unit = CfuUnit::new(v);
+                let (out, cycles) = unit.run_block_host(bp, x);
+                (out, cycles)
+            }
+        })
+    }
+
+    /// Full backbone + head on the configured backend.
+    pub fn infer(&self, x: &TensorI8) -> Result<InferenceOutput> {
+        let mut a = x.clone();
+        let mut cycles = 0u64;
+        for i in 0..self.params.blocks.len() {
+            let (out, c) = self.run_block(i, &a)?;
+            a = out;
+            cycles += c;
+        }
+        let logits = refimpl::head_ref(&a, &self.params.head);
+        let class = argmax(&logits);
+        Ok(InferenceOutput { logits, sim_cycles: cycles, class })
+    }
+
+}
+
+/// Run the whole model through a PJRT golden executable (main thread only —
+/// xla handles are not `Send`).
+pub fn infer_golden(exe: &HloExecutable, x: &TensorI8) -> Result<InferenceOutput> {
+    let dims: Vec<i64> = x.dims.iter().map(|&d| d as i64).collect();
+    let logits =
+        exe.run_i32(&x.data.iter().map(|&v| v as i32).collect::<Vec<_>>(), &dims)?;
+    let class = argmax(&logits);
+    Ok(InferenceOutput { logits, sim_cycles: 0, class })
+}
+
+fn argmax(xs: &[i32]) -> usize {
+    xs.iter().enumerate().max_by_key(|(_, &v)| v).map(|(i, _)| i).unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::blocks::BlockConfig;
+    use crate::model::weights::{gen_input, make_model_params};
+
+    fn mini_params() -> ModelParams {
+        make_model_params(Some(vec![
+            BlockConfig::new(8, 8, 8, 16, 8, 2, false),
+            BlockConfig::new(4, 4, 8, 16, 8, 1, true),
+        ]))
+    }
+
+    fn input(p: &ModelParams) -> TensorI8 {
+        let c = p.blocks[0].cfg;
+        TensorI8::from_vec(
+            &[c.h as usize, c.w as usize, c.cin as usize],
+            gen_input("eng.x", (c.h * c.w * c.cin) as usize, p.blocks[0].zp_in()),
+        )
+    }
+
+    #[test]
+    fn all_backends_agree_on_logits() {
+        let p = mini_params();
+        let x = input(&p);
+        let want = Engine::new(p.clone(), Backend::Reference).infer(&x).unwrap();
+        for backend in [
+            Backend::SoftwareIss,
+            Backend::CfuPlaygroundIss,
+            Backend::FusedIss(PipelineVersion::V3),
+            Backend::FusedHost(PipelineVersion::V1),
+            Backend::FusedHost(PipelineVersion::V2),
+            Backend::FusedHost(PipelineVersion::V3),
+        ] {
+            let got = Engine::new(p.clone(), backend).infer(&x).unwrap();
+            assert_eq!(got.logits, want.logits, "{}", backend.name());
+            if backend != Backend::Reference {
+                assert!(got.sim_cycles > 0, "{} should report cycles", backend.name());
+            }
+        }
+    }
+
+    #[test]
+    fn fused_cycles_below_software_cycles() {
+        let p = mini_params();
+        let x = input(&p);
+        let sw = Engine::new(p.clone(), Backend::SoftwareIss).infer(&x).unwrap();
+        let fu = Engine::new(p.clone(), Backend::FusedIss(PipelineVersion::V3)).infer(&x).unwrap();
+        assert!(fu.sim_cycles * 4 < sw.sim_cycles, "fused {} vs sw {}", fu.sim_cycles, sw.sim_cycles);
+    }
+
+    #[test]
+    fn class_is_argmax() {
+        let p = mini_params();
+        let x = input(&p);
+        let out = Engine::new(p, Backend::Reference).infer(&x).unwrap();
+        let best = out.logits.iter().copied().max().unwrap();
+        assert_eq!(out.logits[out.class], best);
+    }
+}

@@ -1,0 +1,98 @@
+//! Serving metrics: request counters + latency distribution.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::stats::Summary;
+
+#[derive(Debug, Default)]
+struct Inner {
+    submitted: u64,
+    completed: u64,
+    batches: u64,
+    max_batch_seen: usize,
+    queue_latencies_s: Vec<f64>,
+    total_latencies_s: Vec<f64>,
+    sim_cycles: u64,
+}
+
+/// Thread-safe metrics sink shared by the batcher and workers.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+/// A point-in-time snapshot.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub batches: u64,
+    pub max_batch_seen: usize,
+    pub queue_latency: Option<Summary>,
+    pub total_latency: Option<Summary>,
+    pub sim_cycles: u64,
+}
+
+impl Metrics {
+    pub fn note_submitted(&self) {
+        self.inner.lock().unwrap().submitted += 1;
+    }
+
+    pub fn note_batch(&self, size: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.batches += 1;
+        g.max_batch_seen = g.max_batch_seen.max(size);
+    }
+
+    pub fn note_completed(&self, queue: Duration, total: Duration, sim_cycles: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.completed += 1;
+        g.queue_latencies_s.push(queue.as_secs_f64());
+        g.total_latencies_s.push(total.as_secs_f64());
+        g.sim_cycles += sim_cycles;
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let g = self.inner.lock().unwrap();
+        MetricsSnapshot {
+            submitted: g.submitted,
+            completed: g.completed,
+            batches: g.batches,
+            max_batch_seen: g.max_batch_seen,
+            queue_latency: (!g.queue_latencies_s.is_empty())
+                .then(|| Summary::of(&g.queue_latencies_s)),
+            total_latency: (!g.total_latencies_s.is_empty())
+                .then(|| Summary::of(&g.total_latencies_s)),
+            sim_cycles: g.sim_cycles,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::default();
+        m.note_submitted();
+        m.note_submitted();
+        m.note_batch(2);
+        m.note_completed(Duration::from_millis(1), Duration::from_millis(5), 100);
+        m.note_completed(Duration::from_millis(2), Duration::from_millis(6), 200);
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 2);
+        assert_eq!(s.completed, 2);
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.max_batch_seen, 2);
+        assert_eq!(s.sim_cycles, 300);
+        assert!(s.total_latency.unwrap().mean > s.queue_latency.unwrap().mean);
+    }
+
+    #[test]
+    fn empty_snapshot_has_no_latency() {
+        let s = Metrics::default().snapshot();
+        assert!(s.queue_latency.is_none());
+    }
+}

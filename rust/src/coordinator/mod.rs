@@ -1,0 +1,18 @@
+//! The inference coordinator (L3 serving layer): backend-pluggable model
+//! execution, a batching request scheduler on the thread-pool runtime, and
+//! serving metrics.
+//!
+//! The paper's contribution is the accelerator itself, so the coordinator
+//! is the thin-but-real driver the system prompt calls for: it owns the
+//! request loop, routes blocks to execution backends (software baseline /
+//! CFU-Playground comparator / fused CFU v1-v3 on the ISS / fast functional
+//! CFU / PJRT golden model), batches concurrent requests, and reports
+//! latency + simulated-hardware throughput.
+
+pub mod engine;
+pub mod metrics;
+pub mod serve;
+
+pub use engine::{infer_golden, Backend, Engine, InferenceOutput};
+pub use metrics::Metrics;
+pub use serve::{Coordinator, Request, Response, ServeConfig};

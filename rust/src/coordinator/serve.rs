@@ -1,0 +1,233 @@
+//! The batching request scheduler: an edge-serving loop over the
+//! thread-pool runtime.
+//!
+//! Requests enter a queue; a batcher thread forms batches (up to
+//! `max_batch`, waiting at most `batch_timeout` for stragglers) and
+//! dispatches them to worker threads running [`Engine`] inferences.  Each
+//! request gets exactly one response on its own channel — the scheduler
+//! invariants (no loss, no duplication, bounded batches) are property-
+//! tested in `rust/tests/proptests.rs`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::tensor::TensorI8;
+
+use super::engine::Engine;
+use super::metrics::Metrics;
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub max_batch: usize,
+    pub batch_timeout: Duration,
+    pub workers: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self { max_batch: 8, batch_timeout: Duration::from_millis(2), workers: 4 }
+    }
+}
+
+/// An in-flight request.
+pub struct Request {
+    pub id: u64,
+    pub input: TensorI8,
+    submitted_at: Instant,
+    respond: Sender<Response>,
+}
+
+/// A completed inference.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub logits: Vec<i32>,
+    pub class: usize,
+    pub sim_cycles: u64,
+    pub queue_time: Duration,
+    pub total_time: Duration,
+}
+
+/// Handle for awaiting a response.
+pub struct Ticket {
+    pub id: u64,
+    rx: Receiver<Response>,
+}
+
+impl Ticket {
+    pub fn wait(self) -> Result<Response> {
+        Ok(self.rx.recv()?)
+    }
+}
+
+/// The batching coordinator.
+pub struct Coordinator {
+    tx: Option<Sender<Request>>,
+    batcher: Option<JoinHandle<()>>,
+    next_id: AtomicU64,
+    pub metrics: Arc<Metrics>,
+}
+
+impl Coordinator {
+    /// Spawn the batcher + worker pool around a shared engine.
+    pub fn start(engine: Arc<Engine>, cfg: ServeConfig) -> Self {
+        assert!(cfg.max_batch > 0 && cfg.workers > 0);
+        let (tx, rx) = mpsc::channel::<Request>();
+        let metrics = Arc::new(Metrics::default());
+        let m2 = Arc::clone(&metrics);
+        let batcher = std::thread::spawn(move || {
+            batcher_loop(rx, engine, cfg, m2);
+        });
+        Self { tx: Some(tx), batcher: Some(batcher), next_id: AtomicU64::new(0), metrics }
+    }
+
+    /// Submit an inference request; returns a ticket to wait on.
+    pub fn submit(&self, input: TensorI8) -> Ticket {
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        let (rtx, rrx) = mpsc::channel();
+        self.metrics.note_submitted();
+        self.tx
+            .as_ref()
+            .expect("coordinator stopped")
+            .send(Request { id, input, submitted_at: Instant::now(), respond: rtx })
+            .expect("batcher gone");
+        Ticket { id, rx: rrx }
+    }
+
+    /// Stop accepting requests and drain (joins the batcher).
+    pub fn shutdown(mut self) {
+        drop(self.tx.take());
+        if let Some(b) = self.batcher.take() {
+            let _ = b.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(b) = self.batcher.take() {
+            let _ = b.join();
+        }
+    }
+}
+
+fn batcher_loop(rx: Receiver<Request>, engine: Arc<Engine>, cfg: ServeConfig, metrics: Arc<Metrics>) {
+    let pool = crate::util::pool::ThreadPool::new(cfg.workers);
+    loop {
+        // Block for the first request of a batch.
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => break, // all senders dropped
+        };
+        let mut batch = vec![first];
+        let deadline = Instant::now() + cfg.batch_timeout;
+        while batch.len() < cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => batch.push(r),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        metrics.note_batch(batch.len());
+        let started = Instant::now();
+        for req in batch {
+            let engine = Arc::clone(&engine);
+            let metrics = Arc::clone(&metrics);
+            pool.spawn(move || {
+                let queue_time = started.duration_since(req.submitted_at);
+                let out = engine.infer(&req.input).expect("inference failed");
+                let total = req.submitted_at.elapsed();
+                metrics.note_completed(queue_time, total, out.sim_cycles);
+                let _ = req.respond.send(Response {
+                    id: req.id,
+                    logits: out.logits,
+                    class: out.class,
+                    sim_cycles: out.sim_cycles,
+                    queue_time,
+                    total_time: total,
+                });
+            });
+        }
+    }
+    // pool drops here, joining workers after queued jobs drain.
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::Backend;
+    use crate::model::blocks::BlockConfig;
+    use crate::model::weights::{gen_input, make_model_params};
+
+    fn mini_engine() -> Arc<Engine> {
+        let p = make_model_params(Some(vec![
+            BlockConfig::new(6, 6, 8, 16, 8, 1, true),
+            BlockConfig::new(6, 6, 8, 16, 8, 1, true),
+        ]));
+        Arc::new(Engine::new(p, Backend::Reference))
+    }
+
+    fn input(engine: &Engine, salt: u64) -> TensorI8 {
+        let c = engine.params.blocks[0].cfg;
+        TensorI8::from_vec(
+            &[c.h as usize, c.w as usize, c.cin as usize],
+            gen_input(&format!("serve.x{salt}"), (c.h * c.w * c.cin) as usize, engine.params.blocks[0].zp_in()),
+        )
+    }
+
+    #[test]
+    fn serves_all_requests_exactly_once() {
+        let engine = mini_engine();
+        let coord = Coordinator::start(Arc::clone(&engine), ServeConfig::default());
+        let tickets: Vec<Ticket> = (0..32).map(|i| coord.submit(input(&engine, i))).collect();
+        let mut ids: Vec<u64> = tickets.into_iter().map(|t| {
+            let id = t.id;
+            let r = t.wait().unwrap();
+            assert_eq!(r.id, id);
+            id
+        }).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..32).collect::<Vec<u64>>());
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.completed, 32);
+        assert!(snap.max_batch_seen <= ServeConfig::default().max_batch);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn responses_match_direct_inference() {
+        let engine = mini_engine();
+        let coord = Coordinator::start(Arc::clone(&engine), ServeConfig::default());
+        let x = input(&engine, 7);
+        let want = engine.infer(&x).unwrap();
+        let got = coord.submit(x).wait().unwrap();
+        assert_eq!(got.logits, want.logits);
+        assert_eq!(got.class, want.class);
+    }
+
+    #[test]
+    fn batching_respects_max_batch_under_load() {
+        let engine = mini_engine();
+        let cfg = ServeConfig { max_batch: 4, batch_timeout: Duration::from_millis(20), workers: 2 };
+        let coord = Coordinator::start(Arc::clone(&engine), cfg);
+        let tickets: Vec<Ticket> = (0..17).map(|i| coord.submit(input(&engine, i))).collect();
+        for t in tickets {
+            t.wait().unwrap();
+        }
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.completed, 17);
+        assert!(snap.max_batch_seen <= 4);
+        assert!(snap.batches >= 5); // 17 requests / max 4 per batch
+    }
+}

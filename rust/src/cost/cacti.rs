@@ -1,0 +1,134 @@
+//! CACTI-style analytical SRAM model (the paper models its buffers with
+//! CACTI 7.0).  Small single-port SRAM macros at 40/28 nm: area from a
+//! per-KB density with a fixed periphery floor; energy from per-access
+//! dynamic energy plus per-KB leakage.  Constants are calibrated to land on
+//! the paper's Table V memory rows (EXPERIMENTS.md §Calibration) and sit in
+//! the plausible range of published CACTI numbers for these nodes.
+
+use super::asic::AsicNode;
+
+/// One SRAM macro estimate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SramEstimate {
+    pub area_mm2: f64,
+    /// Dynamic read/write energy per 8-byte access (pJ).
+    pub access_energy_pj: f64,
+    /// Leakage power (mW).
+    pub leakage_mw: f64,
+}
+
+/// Per-node SRAM constants.
+#[derive(Debug, Clone, Copy)]
+pub struct SramTech {
+    /// mm^2 per KB of capacity (bit-cell + local periphery).
+    pub mm2_per_kb: f64,
+    /// Fixed periphery floor per macro (mm^2).
+    pub macro_floor_mm2: f64,
+    /// pJ per 64-bit access.
+    pub pj_per_access: f64,
+    /// Leakage mW per KB.
+    pub leak_mw_per_kb: f64,
+}
+
+impl SramTech {
+    pub fn for_node(node: AsicNode) -> Self {
+        match node {
+            AsicNode::N40 => Self {
+                mm2_per_kb: 0.00125,
+                macro_floor_mm2: 0.0022,
+                pj_per_access: 108.8,
+                leak_mw_per_kb: 0.052,
+            },
+            AsicNode::N28 => Self {
+                mm2_per_kb: 0.000403,
+                macro_floor_mm2: 0.0011,
+                pj_per_access: 13.0,
+                leak_mw_per_kb: 0.061,
+            },
+        }
+    }
+}
+
+/// Estimate one macro of `bytes` capacity.
+pub fn sram_macro(node: AsicNode, bytes: u64) -> SramEstimate {
+    let t = SramTech::for_node(node);
+    let kb = bytes as f64 / 1024.0;
+    SramEstimate {
+        area_mm2: t.macro_floor_mm2 + kb * t.mm2_per_kb,
+        access_energy_pj: t.pj_per_access,
+        leakage_mw: kb * t.leak_mw_per_kb,
+    }
+}
+
+/// The CFU's on-chip memory macro list (mirrors the FPGA buffer inventory;
+/// double-buffered like the FPGA model).
+pub fn cfu_macros(p: &super::fpga::ArchParams) -> Vec<(&'static str, u64)> {
+    vec![
+        ("ifmap bank x18 (2x9 double-buffered)", 18 * (p.ifmap_bytes as u64).div_ceil(9)),
+        ("expansion filter buffer x2", 2 * p.exw_bytes as u64),
+        ("dw filter banks x18", 18 * (p.dww_bytes as u64).div_ceil(9)),
+        ("projection weight LUTRAM-equivalents", 56 * p.max_m as u64),
+        ("bias/config/output staging", 4 * 1024),
+    ]
+}
+
+/// Total memory area (mm^2) and power (mW) for the CFU at `node`,
+/// given an average of `accesses_per_cycle` 64-bit buffer accesses and
+/// clock `freq_mhz`.
+pub fn memory_area_power(
+    node: AsicNode,
+    p: &super::fpga::ArchParams,
+    accesses_per_cycle: f64,
+    freq_mhz: f64,
+) -> (f64, f64) {
+    let mut area = 0.0;
+    let mut leak = 0.0;
+    let mut access_pj = 0.0;
+    for (_, bytes) in cfu_macros(p) {
+        let est = sram_macro(node, bytes);
+        area += est.area_mm2;
+        leak += est.leakage_mw;
+        access_pj = est.access_energy_pj; // same per node
+    }
+    // dynamic mW = accesses/s * pJ = (f(MHz)*1e6 * apc) * pJ * 1e-9
+    let dyn_mw = freq_mhz * 1e6 * accesses_per_cycle * access_pj * 1e-9;
+    (area, leak + dyn_mw)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::fpga::ArchParams;
+
+    #[test]
+    fn area_scales_with_capacity_and_node() {
+        let small = sram_macro(AsicNode::N40, 1024);
+        let big = sram_macro(AsicNode::N40, 16 * 1024);
+        assert!(big.area_mm2 > 10.0 * small.area_mm2 / 2.0);
+        let n28 = sram_macro(AsicNode::N28, 16 * 1024);
+        assert!(n28.area_mm2 < big.area_mm2 / 2.0, "28nm must be much denser");
+    }
+
+    #[test]
+    fn table5_memory_rows_within_tolerance() {
+        // Paper Table V: memory 0.218 mm^2 / 106.5 mW @ 40nm 300MHz;
+        //                0.072 mm^2 / 88.2 mW @ 28nm 2GHz.
+        let p = ArchParams::for_backbone();
+        // Average buffer port activity of the fused pipeline (ifmap window
+        // read + filter stream + projection reads ≈ 3 concurrent 64-bit
+        // ports active).
+        let (a40, p40) = memory_area_power(AsicNode::N40, &p, 3.0, 300.0);
+        let (a28, p28) = memory_area_power(AsicNode::N28, &p, 3.0, 2000.0);
+        assert!((a40 - 0.218).abs() / 0.218 < 0.20, "40nm area {a40:.3}");
+        assert!((a28 - 0.072).abs() / 0.072 < 0.25, "28nm area {a28:.3}");
+        assert!((p40 - 106.5).abs() / 106.5 < 0.25, "40nm power {p40:.1}");
+        assert!((p28 - 88.2).abs() / 88.2 < 0.30, "28nm power {p28:.1}");
+    }
+
+    #[test]
+    fn macro_list_covers_all_buffers() {
+        let macros = cfu_macros(&ArchParams::for_backbone());
+        assert_eq!(macros.len(), 5);
+        assert!(macros.iter().all(|(_, b)| *b > 0));
+    }
+}

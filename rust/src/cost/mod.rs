@@ -1,0 +1,18 @@
+//! Hardware cost models: FPGA resources & power (Vivado substitute, Tables
+//! I/II/III-B) and ASIC area & power at 40/28 nm (Genus + CACTI substitute,
+//! Table V).
+//!
+//! Resource counts of a fixed RTL are deterministic functions of the
+//! architecture parameters (MAC counts → DSPs, buffer bytes → BRAMs,
+//! pipeline registers → FFs); these models derive them from the same
+//! parameters, with per-technology constants calibrated once against the
+//! published v3 row and documented in EXPERIMENTS.md §Calibration.
+
+pub mod asic;
+pub mod cacti;
+pub mod fpga;
+pub mod power;
+
+pub use asic::{asic_summary, AsicNode, AsicSummary};
+pub use fpga::{cfu_resources, ArchParams, FpgaResources, ARTIX7_XC7A100T, BASE_SOC, CFU_PLAYGROUND_REF};
+pub use power::{fpga_power_w, PowerBreakdown};

@@ -1,0 +1,117 @@
+//! Direct-mapped cache model (VexRiscv/LiteX default: 4 KiB I$ + 4 KiB D$,
+//! 32-byte lines).  Only hit/miss timing is modeled — data always comes from
+//! the flat RAM — which is exactly what a cycle cost model needs.
+
+/// Direct-mapped cache: tag array + valid bits.
+#[derive(Debug, Clone)]
+pub struct Cache {
+    line_bits: u32,
+    set_bits: u32,
+    tags: Vec<u32>,
+    valid: Vec<bool>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl Cache {
+    /// `size_bytes` / `line_bytes` must be powers of two.
+    pub fn new(size_bytes: usize, line_bytes: usize) -> Self {
+        assert!(size_bytes.is_power_of_two() && line_bytes.is_power_of_two());
+        assert!(size_bytes >= line_bytes);
+        let sets = size_bytes / line_bytes;
+        Self {
+            line_bits: line_bytes.trailing_zeros(),
+            set_bits: sets.trailing_zeros(),
+            tags: vec![0; sets],
+            valid: vec![false; sets],
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// VexRiscv/LiteX default configuration.
+    pub fn default_l1() -> Self {
+        Self::new(4096, 32)
+    }
+
+    #[inline(always)]
+    fn set_and_tag(&self, addr: u32) -> (usize, u32) {
+        let line = addr >> self.line_bits;
+        let set = (line & ((1 << self.set_bits) - 1)) as usize;
+        (set, line >> self.set_bits)
+    }
+
+    /// Access `addr`; returns true on hit. Miss fills the line.
+    #[inline(always)]
+    pub fn access(&mut self, addr: u32) -> bool {
+        let (set, tag) = self.set_and_tag(addr);
+        if self.valid[set] && self.tags[set] == tag {
+            self.hits += 1;
+            true
+        } else {
+            self.valid[set] = true;
+            self.tags[set] = tag;
+            self.misses += 1;
+            false
+        }
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.hits = 0;
+        self.misses = 0;
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            1.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequential_access_within_line_hits() {
+        let mut c = Cache::new(4096, 32);
+        assert!(!c.access(0x100)); // cold miss
+        for off in 1..32 {
+            assert!(c.access(0x100 + off), "offset {off} should hit");
+        }
+        assert_eq!(c.misses, 1);
+        assert_eq!(c.hits, 31);
+    }
+
+    #[test]
+    fn conflict_misses_same_set() {
+        let mut c = Cache::new(4096, 32);
+        assert!(!c.access(0x0000));
+        assert!(!c.access(0x1000)); // same set (4K apart), different tag
+        assert!(!c.access(0x0000)); // evicted
+        assert_eq!(c.misses, 3);
+    }
+
+    #[test]
+    fn distinct_sets_dont_conflict() {
+        let mut c = Cache::new(4096, 32);
+        c.access(0x000);
+        c.access(0x020); // next line, different set
+        assert!(c.access(0x000));
+        assert!(c.access(0x020));
+    }
+
+    #[test]
+    fn hit_rate_reporting() {
+        let mut c = Cache::new(128, 32);
+        assert_eq!(c.hit_rate(), 1.0); // vacuous
+        c.access(0);
+        c.access(0);
+        assert_eq!(c.hit_rate(), 0.5);
+        c.reset_stats();
+        assert_eq!(c.hits + c.misses, 0);
+    }
+}

@@ -1,0 +1,669 @@
+//! The instruction-set simulator core: pre-decoded execution with the
+//! VexRiscv cycle model, I$/D$ simulation, ecall markers and a CFU port.
+
+use anyhow::{bail, Result};
+
+use super::{Cache, CfuPort, CostModel};
+use crate::isa::{codec, AluImmOp, AluOp, BranchOp, Instr, LoadOp, StoreOp};
+
+/// Flat little-endian RAM.
+#[derive(Debug, Clone)]
+pub struct Memory {
+    pub data: Vec<u8>,
+}
+
+impl Memory {
+    pub fn new(size: usize) -> Self {
+        Self { data: vec![0; size] }
+    }
+
+    #[inline(always)]
+    fn check(&self, addr: u32, len: u32) -> Result<usize> {
+        let end = addr as u64 + len as u64;
+        if end > self.data.len() as u64 {
+            bail!("memory access out of bounds: {addr:#x}+{len} (size {:#x})", self.data.len());
+        }
+        Ok(addr as usize)
+    }
+
+    #[inline(always)]
+    pub fn read_u8(&self, addr: u32) -> Result<u8> {
+        let i = self.check(addr, 1)?;
+        Ok(self.data[i])
+    }
+
+    #[inline(always)]
+    pub fn read_u16(&self, addr: u32) -> Result<u16> {
+        let i = self.check(addr, 2)?;
+        Ok(u16::from_le_bytes([self.data[i], self.data[i + 1]]))
+    }
+
+    #[inline(always)]
+    pub fn read_u32(&self, addr: u32) -> Result<u32> {
+        let i = self.check(addr, 4)?;
+        Ok(u32::from_le_bytes([
+            self.data[i],
+            self.data[i + 1],
+            self.data[i + 2],
+            self.data[i + 3],
+        ]))
+    }
+
+    #[inline(always)]
+    pub fn write_u8(&mut self, addr: u32, v: u8) -> Result<()> {
+        let i = self.check(addr, 1)?;
+        self.data[i] = v;
+        Ok(())
+    }
+
+    #[inline(always)]
+    pub fn write_u16(&mut self, addr: u32, v: u16) -> Result<()> {
+        let i = self.check(addr, 2)?;
+        self.data[i..i + 2].copy_from_slice(&v.to_le_bytes());
+        Ok(())
+    }
+
+    #[inline(always)]
+    pub fn write_u32(&mut self, addr: u32, v: u32) -> Result<()> {
+        let i = self.check(addr, 4)?;
+        self.data[i..i + 4].copy_from_slice(&v.to_le_bytes());
+        Ok(())
+    }
+
+    /// Bulk host-side writes (loading tensors before a run).
+    pub fn write_bytes(&mut self, addr: u32, bytes: &[u8]) -> Result<()> {
+        let i = self.check(addr, bytes.len() as u32)?;
+        self.data[i..i + bytes.len()].copy_from_slice(bytes);
+        Ok(())
+    }
+
+    pub fn read_bytes(&self, addr: u32, len: usize) -> Result<&[u8]> {
+        let i = self.check(addr, len as u32)?;
+        Ok(&self.data[i..i + len])
+    }
+
+    pub fn write_i8_slice(&mut self, addr: u32, vals: &[i8]) -> Result<()> {
+        // i8 -> u8 reinterpret; safe because i8/u8 have identical layout.
+        let bytes: &[u8] =
+            unsafe { std::slice::from_raw_parts(vals.as_ptr() as *const u8, vals.len()) };
+        self.write_bytes(addr, bytes)
+    }
+
+    pub fn read_i8_slice(&self, addr: u32, len: usize) -> Result<Vec<i8>> {
+        Ok(self.read_bytes(addr, len)?.iter().map(|&b| b as i8).collect())
+    }
+
+    pub fn write_i32_slice(&mut self, addr: u32, vals: &[i32]) -> Result<()> {
+        for (k, v) in vals.iter().enumerate() {
+            self.write_u32(addr + 4 * k as u32, *v as u32)?;
+        }
+        Ok(())
+    }
+}
+
+/// Why the run loop stopped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExitReason {
+    /// `ebreak` — normal program completion.
+    Halted,
+    /// Instruction budget exhausted.
+    MaxInstructions,
+}
+
+/// Outcome of [`Machine::run`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RunResult {
+    pub reason: ExitReason,
+    pub cycles: u64,
+    pub instret: u64,
+}
+
+/// An ecall-emitted measurement marker (used by kernels to delimit phases,
+/// e.g. "intermediate feature-map write loop" for Table VI accounting).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Marker {
+    pub tag: u32,
+    pub cycle: u64,
+    pub loads: u64,
+    pub stores: u64,
+    pub load_bytes: u64,
+    pub store_bytes: u64,
+}
+
+/// Counters for one watched address range (e.g. the F1/F2 intermediate
+/// feature-map buffers — Table VI measures the cost of exactly these
+/// accesses in the layer-by-layer baseline).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RegionWatch {
+    pub lo: u32,
+    pub hi: u32, // exclusive
+    pub loads: u64,
+    pub stores: u64,
+    pub bytes: u64,
+    /// Exact cycles spent in load/store instructions touching this range
+    /// (includes cache-miss penalties).
+    pub cycles: u64,
+}
+
+impl RegionWatch {
+    pub fn new(lo: u32, hi: u32) -> Self {
+        Self { lo, hi, loads: 0, stores: 0, bytes: 0, cycles: 0 }
+    }
+}
+
+/// Execution statistics (cumulative over `run` calls).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Stats {
+    pub loads: u64,
+    pub stores: u64,
+    pub load_bytes: u64,
+    pub store_bytes: u64,
+    pub mem_cycles: u64,
+    pub cfu_ops: u64,
+    pub cfu_stall_cycles: u64,
+    pub branches_taken: u64,
+}
+
+/// The simulated machine: core + memory + caches + CFU.
+pub struct Machine<C: CfuPort> {
+    pub regs: [u32; 32],
+    pub pc: u32,
+    pub mem: Memory,
+    pub cost: CostModel,
+    pub icache: Cache,
+    pub dcache: Cache,
+    pub cycles: u64,
+    pub instret: u64,
+    pub stats: Stats,
+    pub markers: Vec<Marker>,
+    /// Watched address ranges (empty = zero overhead on the hot path).
+    pub watches: Vec<RegionWatch>,
+    pub cfu: C,
+    program: Vec<Instr>,
+    prog_base: u32,
+}
+
+impl<C: CfuPort> Machine<C> {
+    /// Create a machine with `mem_size` bytes of RAM and the given CFU.
+    pub fn new(mem_size: usize, cfu: C) -> Self {
+        Self {
+            regs: [0; 32],
+            pc: 0,
+            mem: Memory::new(mem_size),
+            cost: CostModel::default(),
+            icache: Cache::default_l1(),
+            dcache: Cache::default_l1(),
+            cycles: 0,
+            instret: 0,
+            stats: Stats::default(),
+            markers: Vec::new(),
+            watches: Vec::new(),
+            cfu,
+            program: Vec::new(),
+            prog_base: 0,
+        }
+    }
+
+    /// Register a watched address range; returns its index.
+    pub fn watch(&mut self, lo: u32, hi: u32) -> usize {
+        self.watches.push(RegionWatch::new(lo, hi));
+        self.watches.len() - 1
+    }
+
+    #[inline(always)]
+    fn note_access(&mut self, addr: u32, bytes: u64, cyc: u64, is_store: bool) {
+        for w in &mut self.watches {
+            if addr >= w.lo && addr < w.hi {
+                if is_store {
+                    w.stores += 1;
+                } else {
+                    w.loads += 1;
+                }
+                w.bytes += bytes;
+                w.cycles += cyc;
+            }
+        }
+    }
+
+    /// Load a program (instruction list) at `base`; also writes the machine
+    /// code into RAM so the I$ model indexes real addresses.
+    pub fn load_program(&mut self, base: u32, prog: &[Instr]) -> Result<()> {
+        assert_eq!(base % 4, 0, "program base must be word-aligned");
+        for (k, i) in prog.iter().enumerate() {
+            self.mem.write_u32(base + 4 * k as u32, codec::encode(*i))?;
+        }
+        self.program = prog.to_vec();
+        self.prog_base = base;
+        self.pc = base;
+        Ok(())
+    }
+
+    #[inline(always)]
+    fn rs(&self, r: u8) -> u32 {
+        self.regs[r as usize]
+    }
+
+    #[inline(always)]
+    fn wr(&mut self, r: u8, v: u32) {
+        if r != 0 {
+            self.regs[r as usize] = v;
+        }
+    }
+
+    /// Execute until `ebreak` or `max_instructions`.
+    pub fn run(&mut self, max_instructions: u64) -> Result<RunResult> {
+        let start_instret = self.instret;
+        loop {
+            if self.instret - start_instret >= max_instructions {
+                return Ok(RunResult {
+                    reason: ExitReason::MaxInstructions,
+                    cycles: self.cycles,
+                    instret: self.instret,
+                });
+            }
+            let idx = (self.pc.wrapping_sub(self.prog_base) / 4) as usize;
+            let Some(&instr) = self.program.get(idx) else {
+                bail!("pc {:#x} outside program (base {:#x}, len {})",
+                      self.pc, self.prog_base, self.program.len());
+            };
+
+            // Instruction fetch cost.
+            let mut cyc = self.cost.base;
+            if !self.icache.access(self.pc) {
+                cyc += self.cost.icache_miss_penalty;
+            }
+
+            let mut next_pc = self.pc.wrapping_add(4);
+            match instr {
+                Instr::Alu { op, rd, rs1, rs2 } => {
+                    let a = self.rs(rs1);
+                    let b = self.rs(rs2);
+                    let v = match op {
+                        AluOp::Add => a.wrapping_add(b),
+                        AluOp::Sub => a.wrapping_sub(b),
+                        AluOp::Sll => a.wrapping_shl(b & 31),
+                        AluOp::Slt => ((a as i32) < (b as i32)) as u32,
+                        AluOp::Sltu => (a < b) as u32,
+                        AluOp::Xor => a ^ b,
+                        AluOp::Srl => a.wrapping_shr(b & 31),
+                        AluOp::Sra => ((a as i32).wrapping_shr(b & 31)) as u32,
+                        AluOp::Or => a | b,
+                        AluOp::And => a & b,
+                        AluOp::Mul => {
+                            cyc += self.cost.mul_extra;
+                            a.wrapping_mul(b)
+                        }
+                        AluOp::Mulh => {
+                            cyc += self.cost.mul_extra;
+                            (((a as i32 as i64) * (b as i32 as i64)) >> 32) as u32
+                        }
+                        AluOp::Mulhsu => {
+                            cyc += self.cost.mul_extra;
+                            (((a as i32 as i64) * (b as u64 as i64)) >> 32) as u32
+                        }
+                        AluOp::Mulhu => {
+                            cyc += self.cost.mul_extra;
+                            (((a as u64) * (b as u64)) >> 32) as u32
+                        }
+                        AluOp::Div => {
+                            cyc += self.cost.div_extra;
+                            let (a, b) = (a as i32, b as i32);
+                            if b == 0 {
+                                u32::MAX
+                            } else if a == i32::MIN && b == -1 {
+                                a as u32
+                            } else {
+                                (a / b) as u32
+                            }
+                        }
+                        AluOp::Divu => {
+                            cyc += self.cost.div_extra;
+                            if b == 0 {
+                                u32::MAX
+                            } else {
+                                a / b
+                            }
+                        }
+                        AluOp::Rem => {
+                            cyc += self.cost.div_extra;
+                            let (a, b) = (a as i32, b as i32);
+                            if b == 0 {
+                                a as u32
+                            } else if a == i32::MIN && b == -1 {
+                                0
+                            } else {
+                                (a % b) as u32
+                            }
+                        }
+                        AluOp::Remu => {
+                            cyc += self.cost.div_extra;
+                            if b == 0 {
+                                a
+                            } else {
+                                a % b
+                            }
+                        }
+                    };
+                    self.wr(rd, v);
+                }
+                Instr::AluImm { op, rd, rs1, imm } => {
+                    let a = self.rs(rs1);
+                    let b = imm as u32;
+                    let v = match op {
+                        AluImmOp::Addi => a.wrapping_add(b),
+                        AluImmOp::Slti => ((a as i32) < imm) as u32,
+                        AluImmOp::Sltiu => (a < b) as u32,
+                        AluImmOp::Xori => a ^ b,
+                        AluImmOp::Ori => a | b,
+                        AluImmOp::Andi => a & b,
+                        AluImmOp::Slli => a.wrapping_shl(b & 31),
+                        AluImmOp::Srli => a.wrapping_shr(b & 31),
+                        AluImmOp::Srai => ((a as i32).wrapping_shr(b & 31)) as u32,
+                    };
+                    self.wr(rd, v);
+                }
+                Instr::Load { op, rd, rs1, imm } => {
+                    let addr = self.rs(rs1).wrapping_add(imm as u32);
+                    cyc += self.cost.load_hit_extra;
+                    if !self.dcache.access(addr) {
+                        cyc += self.cost.dcache_miss_penalty;
+                    }
+                    let (v, bytes) = match op {
+                        LoadOp::Lb => (self.mem.read_u8(addr)? as i8 as i32 as u32, 1),
+                        LoadOp::Lbu => (self.mem.read_u8(addr)? as u32, 1),
+                        LoadOp::Lh => (self.mem.read_u16(addr)? as i16 as i32 as u32, 2),
+                        LoadOp::Lhu => (self.mem.read_u16(addr)? as u32, 2),
+                        LoadOp::Lw => (self.mem.read_u32(addr)?, 4),
+                    };
+                    self.wr(rd, v);
+                    self.stats.loads += 1;
+                    self.stats.load_bytes += bytes;
+                    self.stats.mem_cycles += cyc - self.cost.base;
+                    if !self.watches.is_empty() {
+                        self.note_access(addr, bytes, cyc, false);
+                    }
+                }
+                Instr::Store { op, rs1, rs2, imm } => {
+                    let addr = self.rs(rs1).wrapping_add(imm as u32);
+                    let v = self.rs(rs2);
+                    if !self.dcache.access(addr) {
+                        cyc += self.cost.dcache_miss_penalty;
+                    }
+                    let bytes = match op {
+                        StoreOp::Sb => {
+                            self.mem.write_u8(addr, v as u8)?;
+                            1
+                        }
+                        StoreOp::Sh => {
+                            self.mem.write_u16(addr, v as u16)?;
+                            2
+                        }
+                        StoreOp::Sw => {
+                            self.mem.write_u32(addr, v)?;
+                            4
+                        }
+                    };
+                    self.stats.stores += 1;
+                    self.stats.store_bytes += bytes;
+                    self.stats.mem_cycles += cyc - self.cost.base;
+                    if !self.watches.is_empty() {
+                        self.note_access(addr, bytes, cyc, true);
+                    }
+                }
+                Instr::Branch { op, rs1, rs2, imm } => {
+                    let a = self.rs(rs1);
+                    let b = self.rs(rs2);
+                    let taken = match op {
+                        BranchOp::Beq => a == b,
+                        BranchOp::Bne => a != b,
+                        BranchOp::Blt => (a as i32) < (b as i32),
+                        BranchOp::Bge => (a as i32) >= (b as i32),
+                        BranchOp::Bltu => a < b,
+                        BranchOp::Bgeu => a >= b,
+                    };
+                    if taken {
+                        next_pc = self.pc.wrapping_add(imm as u32);
+                        cyc += self.cost.taken_branch_penalty;
+                        self.stats.branches_taken += 1;
+                    }
+                }
+                Instr::Lui { rd, imm } => self.wr(rd, imm as u32),
+                Instr::Auipc { rd, imm } => self.wr(rd, self.pc.wrapping_add(imm as u32)),
+                Instr::Jal { rd, imm } => {
+                    self.wr(rd, self.pc.wrapping_add(4));
+                    next_pc = self.pc.wrapping_add(imm as u32);
+                    cyc += self.cost.taken_branch_penalty;
+                }
+                Instr::Jalr { rd, rs1, imm } => {
+                    let target = self.rs(rs1).wrapping_add(imm as u32) & !1;
+                    self.wr(rd, self.pc.wrapping_add(4));
+                    next_pc = target;
+                    cyc += self.cost.taken_branch_penalty;
+                }
+                Instr::Cfu { funct7, funct3, rd, rs1, rs2 } => {
+                    let a = self.rs(rs1);
+                    let b = self.rs(rs2);
+                    cyc += self.cost.cfu_issue_extra;
+                    let resp = self.cfu.execute(funct7, funct3, a, b, self.cycles + cyc);
+                    cyc += resp.stall_cycles;
+                    self.wr(rd, resp.value);
+                    self.stats.cfu_ops += 1;
+                    self.stats.cfu_stall_cycles += resp.stall_cycles;
+                }
+                Instr::Ecall => {
+                    // Host hook: record a measurement marker (tag = a0).
+                    self.markers.push(Marker {
+                        tag: self.regs[10],
+                        cycle: self.cycles + cyc,
+                        loads: self.stats.loads,
+                        stores: self.stats.stores,
+                        load_bytes: self.stats.load_bytes,
+                        store_bytes: self.stats.store_bytes,
+                    });
+                }
+                Instr::Ebreak => {
+                    self.cycles += cyc;
+                    self.instret += 1;
+                    return Ok(RunResult {
+                        reason: ExitReason::Halted,
+                        cycles: self.cycles,
+                        instret: self.instret,
+                    });
+                }
+            }
+
+            self.cycles += cyc;
+            self.instret += 1;
+            self.pc = next_pc;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpu::NoCfu;
+    use crate::isa::asm::Asm;
+    use crate::isa::*;
+
+    fn run_asm(build: impl FnOnce(&mut Asm)) -> Machine<NoCfu> {
+        let mut a = Asm::new();
+        build(&mut a);
+        a.ebreak();
+        let prog = a.assemble().unwrap();
+        let mut m = Machine::new(1 << 20, NoCfu);
+        m.load_program(0, &prog).unwrap();
+        let r = m.run(10_000_000).unwrap();
+        assert_eq!(r.reason, ExitReason::Halted);
+        m
+    }
+
+    #[test]
+    fn arithmetic_basics() {
+        let m = run_asm(|a| {
+            a.li(A0, 20);
+            a.li(A1, 22);
+            a.add(A2, A0, A1);
+            a.sub(A3, A0, A1);
+            a.mul(A4, A0, A1);
+        });
+        assert_eq!(m.regs[A2 as usize], 42);
+        assert_eq!(m.regs[A3 as usize] as i32, -2);
+        assert_eq!(m.regs[A4 as usize], 440);
+    }
+
+    #[test]
+    fn x0_is_hardwired_zero() {
+        let m = run_asm(|a| {
+            a.li(T0, 99);
+            a.add(ZERO, T0, T0);
+        });
+        assert_eq!(m.regs[0], 0);
+    }
+
+    #[test]
+    fn loop_sums_1_to_100() {
+        let m = run_asm(|a| {
+            a.li(A0, 0); // sum
+            a.li(T0, 1); // i
+            a.li(T1, 101);
+            a.label("loop");
+            a.add(A0, A0, T0);
+            a.addi(T0, T0, 1);
+            a.blt(T0, T1, "loop");
+        });
+        assert_eq!(m.regs[A0 as usize], 5050);
+    }
+
+    #[test]
+    fn loads_stores_sign_extension() {
+        let m = run_asm(|a| {
+            a.li(T0, 0x1000);
+            a.li(T1, -5);
+            a.sb(T1, T0, 0);
+            a.lb(A0, T0, 0); // sign-extended
+            a.lbu(A1, T0, 0); // zero-extended
+            a.li(T2, -1234);
+            a.sh(T2, T0, 4);
+            a.lh(A2, T0, 4);
+            a.lhu(A3, T0, 4);
+            a.li(T3, -100000);
+            a.sw(T3, T0, 8);
+            a.lw(A4, T0, 8);
+        });
+        assert_eq!(m.regs[A0 as usize] as i32, -5);
+        assert_eq!(m.regs[A1 as usize], 0xFB);
+        assert_eq!(m.regs[A2 as usize] as i32, -1234);
+        assert_eq!(m.regs[A3 as usize], 0xFB2E);
+        assert_eq!(m.regs[A4 as usize] as i32, -100000);
+    }
+
+    #[test]
+    fn division_spec_corner_cases() {
+        let m = run_asm(|a| {
+            a.li(T0, 7);
+            a.li(T1, 0);
+            a.div(A0, T0, T1); // div by zero -> -1
+            a.rem(A1, T0, T1); // rem by zero -> rs1
+            a.li(T2, i32::MIN);
+            a.li(T3, -1);
+            a.div(A2, T2, T3); // overflow -> INT_MIN
+            a.rem(A3, T2, T3); // overflow -> 0
+        });
+        assert_eq!(m.regs[A0 as usize], u32::MAX);
+        assert_eq!(m.regs[A1 as usize], 7);
+        assert_eq!(m.regs[A2 as usize] as i32, i32::MIN);
+        assert_eq!(m.regs[A3 as usize], 0);
+    }
+
+    #[test]
+    fn mulh_variants() {
+        let m = run_asm(|a| {
+            a.li(T0, -2);
+            a.li(T1, 3);
+            a.mulh(A0, T0, T1); // high of -6 = -1
+            a.mulhu(A1, T0, T1); // high of (2^32-2)*3
+        });
+        assert_eq!(m.regs[A0 as usize], u32::MAX);
+        assert_eq!(m.regs[A1 as usize], 2);
+    }
+
+    #[test]
+    fn function_call_and_return() {
+        let m = run_asm(|a| {
+            a.li(A0, 5);
+            a.call("double");
+            a.call("double");
+            a.j("end");
+            a.label("double");
+            a.add(A0, A0, A0);
+            a.ret();
+            a.label("end");
+        });
+        assert_eq!(m.regs[A0 as usize], 20);
+    }
+
+    #[test]
+    fn cycle_counting_models_penalties() {
+        // Straight-line adds: base cycles each + initial icache misses.
+        let m = run_asm(|a| {
+            for _ in 0..100 {
+                a.addi(T0, T0, 1);
+            }
+        });
+        // 101 instructions (incl. ebreak), few icache misses (13 lines max).
+        assert!(m.cycles >= 101);
+        assert!(m.cycles < 101 + 14 * m.cost.icache_miss_penalty);
+        // A div-heavy program must be much slower than an add-heavy one.
+        let m2 = run_asm(|a| {
+            a.li(T1, 3);
+            for _ in 0..100 {
+                a.div(T0, T0, T1);
+            }
+        });
+        assert!(m2.cycles > m.cycles + 100 * 30);
+    }
+
+    #[test]
+    fn ecall_records_markers_with_stats() {
+        let m = run_asm(|a| {
+            a.li(A0, 7); // marker tag
+            a.ecall();
+            a.li(T0, 0x2000);
+            a.sw(T0, T0, 0);
+            a.li(A0, 8);
+            a.ecall();
+        });
+        assert_eq!(m.markers.len(), 2);
+        assert_eq!(m.markers[0].tag, 7);
+        assert_eq!(m.markers[1].tag, 8);
+        assert_eq!(m.markers[1].stores - m.markers[0].stores, 1);
+        assert_eq!(m.markers[1].store_bytes - m.markers[0].store_bytes, 4);
+        assert!(m.markers[1].cycle > m.markers[0].cycle);
+    }
+
+    #[test]
+    fn out_of_bounds_access_errors() {
+        let mut a = Asm::new();
+        a.li(T0, 0x7FFFF000u32 as i32);
+        a.lw(A0, T0, 0);
+        a.ebreak();
+        let prog = a.assemble().unwrap();
+        let mut m = Machine::new(1 << 16, NoCfu);
+        m.load_program(0, &prog).unwrap();
+        assert!(m.run(100).is_err());
+    }
+
+    #[test]
+    fn max_instruction_budget() {
+        let mut a = Asm::new();
+        a.label("spin");
+        a.j("spin");
+        let prog = a.assemble().unwrap();
+        let mut m = Machine::new(1 << 16, NoCfu);
+        m.load_program(0, &prog).unwrap();
+        let r = m.run(1000).unwrap();
+        assert_eq!(r.reason, ExitReason::MaxInstructions);
+        assert_eq!(r.instret, 1000);
+    }
+}

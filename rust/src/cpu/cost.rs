@@ -1,0 +1,83 @@
+//! Pipeline cycle-cost model, calibrated to a VexRiscv "full" configuration
+//! (5-stage in-order, single-issue, full bypass, iterative M unit) in a
+//! LiteX SoC on Artix-7 — the paper's baseline platform (§IV-A).
+//!
+//! Sources for the constants: the VexRiscv README's stage documentation and
+//! LiteX SDRAM latencies; they are *calibration inputs*, recorded here and
+//! in EXPERIMENTS.md, not measured truths.  What the reproduction relies on
+//! is that the same model prices both the software baseline and the CFU
+//! driver loops, so ratios (the paper's speedups) are apples-to-apples.
+
+/// Cycle costs per instruction class.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostModel {
+    /// Base cycles per issued instruction (IPC = 1 ideal).
+    pub base: u64,
+    /// Extra cycles for a taken branch / jal / jalr (fetch flush).
+    pub taken_branch_penalty: u64,
+    /// Extra cycles for a load that hits D$ (AGU + align stage).
+    pub load_hit_extra: u64,
+    /// Extra cycles on an I$ / D$ miss (line refill from SDRAM).
+    pub icache_miss_penalty: u64,
+    pub dcache_miss_penalty: u64,
+    /// MUL* latency beyond base (VexRiscv MulPlugin, buffered 32x32).
+    pub mul_extra: u64,
+    /// DIV/REM latency beyond base (iterative divider, ~1 bit/cycle).
+    pub div_extra: u64,
+    /// CFU issue overhead beyond base (interface register stage).
+    pub cfu_issue_extra: u64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        Self::vexriscv_litex()
+    }
+}
+
+impl CostModel {
+    /// The calibrated VexRiscv-on-LiteX model used for all headline numbers.
+    pub fn vexriscv_litex() -> Self {
+        Self {
+            base: 1,
+            taken_branch_penalty: 2,
+            load_hit_extra: 1,
+            icache_miss_penalty: 18,
+            dcache_miss_penalty: 22,
+            mul_extra: 3,
+            div_extra: 32,
+            cfu_issue_extra: 0,
+        }
+    }
+
+    /// An idealized core (1 cycle everything, perfect caches) — used by
+    /// ablation benches to separate ISA cost from memory-system cost.
+    pub fn ideal() -> Self {
+        Self {
+            base: 1,
+            taken_branch_penalty: 0,
+            load_hit_extra: 0,
+            icache_miss_penalty: 0,
+            dcache_miss_penalty: 0,
+            mul_extra: 0,
+            div_extra: 0,
+            cfu_issue_extra: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_calibrated_model() {
+        assert_eq!(CostModel::default(), CostModel::vexriscv_litex());
+    }
+
+    #[test]
+    fn ideal_model_is_flat() {
+        let m = CostModel::ideal();
+        assert_eq!(m.base, 1);
+        assert_eq!(m.taken_branch_penalty + m.load_hit_extra + m.dcache_miss_penalty, 0);
+    }
+}

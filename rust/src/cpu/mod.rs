@@ -1,0 +1,47 @@
+//! Cycle-accurate RV32IM instruction-set simulator, calibrated to a
+//! VexRiscv-class in-order core (the paper's CPU, §IV-A).
+//!
+//! The paper's numbers are *cycle counts measured by running layer kernels
+//! on the core* (baseline software v0 and CFU driver loops alike); this
+//! module measures the same quantity: real RV32IM programs execute against
+//! a pipeline cost model with I$/D$ simulation and a blocking CFU port.
+
+pub mod cache;
+pub mod core;
+pub mod cost;
+
+pub use cache::Cache;
+pub use core::{ExitReason, Machine, Memory, RunResult};
+pub use cost::CostModel;
+
+/// The CPU↔CFU handshake (CFU-Playground semantics): the CPU issues a
+/// custom-0 instruction and *stalls* until the CFU responds.  `cycle_now`
+/// lets the CFU model its own pipeline occupancy; the returned
+/// `stall_cycles` are added to the CPU's clock beyond the 1-cycle issue.
+pub trait CfuPort {
+    fn execute(&mut self, funct7: u8, funct3: u8, rs1: u32, rs2: u32, cycle_now: u64)
+        -> CfuResponse;
+}
+
+/// CFU response: result value + extra CPU stall cycles.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CfuResponse {
+    pub value: u32,
+    pub stall_cycles: u64,
+}
+
+impl CfuResponse {
+    pub fn ready(value: u32) -> Self {
+        Self { value, stall_cycles: 0 }
+    }
+}
+
+/// A CFU port that traps: used when a program is expected not to touch the
+/// CFU (pure-software baseline).
+pub struct NoCfu;
+
+impl CfuPort for NoCfu {
+    fn execute(&mut self, funct7: u8, _f3: u8, _rs1: u32, _rs2: u32, _now: u64) -> CfuResponse {
+        panic!("CFU instruction (funct7={funct7:#x}) executed with no CFU attached");
+    }
+}

@@ -1,0 +1,343 @@
+//! Assembler builder API — programs (the software baseline kernels and the
+//! CFU driver loops) are authored as Rust code emitting RV32IM instructions,
+//! with label-based control flow resolved at assembly time.
+//!
+//! ```ignore
+//! let mut a = Asm::new();
+//! a.li(A0, 0);
+//! a.label("loop");
+//! a.addi(A0, A0, 1);
+//! a.blt(A0, A1, "loop");
+//! a.ret();
+//! let prog = a.assemble()?;
+//! ```
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use super::*;
+
+#[derive(Debug, Clone)]
+enum Item {
+    /// A fully-formed instruction.
+    Fixed(Instr),
+    /// Branch to a label (imm patched at assemble()).
+    Branch { op: BranchOp, rs1: Reg, rs2: Reg, label: String },
+    /// Jump-and-link to a label.
+    Jal { rd: Reg, label: String },
+}
+
+/// Program builder.
+#[derive(Debug, Default)]
+pub struct Asm {
+    items: Vec<Item>,
+    labels: HashMap<String, usize>,
+}
+
+impl Asm {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current position in instructions (== index of the next instruction).
+    pub fn here(&self) -> usize {
+        self.items.len()
+    }
+
+    /// Define `name` at the current position.
+    pub fn label(&mut self, name: &str) {
+        let prev = self.labels.insert(name.to_string(), self.items.len());
+        assert!(prev.is_none(), "label '{name}' redefined");
+    }
+
+    pub fn emit(&mut self, i: Instr) {
+        self.items.push(Item::Fixed(i));
+    }
+
+    // --- R-type -----------------------------------------------------------
+    pub fn add(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.emit(Instr::Alu { op: AluOp::Add, rd, rs1, rs2 });
+    }
+    pub fn sub(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.emit(Instr::Alu { op: AluOp::Sub, rd, rs1, rs2 });
+    }
+    pub fn and(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.emit(Instr::Alu { op: AluOp::And, rd, rs1, rs2 });
+    }
+    pub fn or(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.emit(Instr::Alu { op: AluOp::Or, rd, rs1, rs2 });
+    }
+    pub fn xor(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.emit(Instr::Alu { op: AluOp::Xor, rd, rs1, rs2 });
+    }
+    pub fn sll(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.emit(Instr::Alu { op: AluOp::Sll, rd, rs1, rs2 });
+    }
+    pub fn srl(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.emit(Instr::Alu { op: AluOp::Srl, rd, rs1, rs2 });
+    }
+    pub fn sra(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.emit(Instr::Alu { op: AluOp::Sra, rd, rs1, rs2 });
+    }
+    pub fn slt(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.emit(Instr::Alu { op: AluOp::Slt, rd, rs1, rs2 });
+    }
+    pub fn sltu(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.emit(Instr::Alu { op: AluOp::Sltu, rd, rs1, rs2 });
+    }
+    pub fn mul(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.emit(Instr::Alu { op: AluOp::Mul, rd, rs1, rs2 });
+    }
+    pub fn mulh(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.emit(Instr::Alu { op: AluOp::Mulh, rd, rs1, rs2 });
+    }
+    pub fn mulhu(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.emit(Instr::Alu { op: AluOp::Mulhu, rd, rs1, rs2 });
+    }
+    pub fn div(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.emit(Instr::Alu { op: AluOp::Div, rd, rs1, rs2 });
+    }
+    pub fn rem(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.emit(Instr::Alu { op: AluOp::Rem, rd, rs1, rs2 });
+    }
+
+    // --- I-type -----------------------------------------------------------
+    pub fn addi(&mut self, rd: Reg, rs1: Reg, imm: i32) {
+        assert!((-2048..=2047).contains(&imm), "addi imm out of range: {imm}");
+        self.emit(Instr::AluImm { op: AluImmOp::Addi, rd, rs1, imm });
+    }
+    pub fn andi(&mut self, rd: Reg, rs1: Reg, imm: i32) {
+        self.emit(Instr::AluImm { op: AluImmOp::Andi, rd, rs1, imm });
+    }
+    pub fn ori(&mut self, rd: Reg, rs1: Reg, imm: i32) {
+        self.emit(Instr::AluImm { op: AluImmOp::Ori, rd, rs1, imm });
+    }
+    pub fn xori(&mut self, rd: Reg, rs1: Reg, imm: i32) {
+        self.emit(Instr::AluImm { op: AluImmOp::Xori, rd, rs1, imm });
+    }
+    pub fn slli(&mut self, rd: Reg, rs1: Reg, sh: i32) {
+        assert!((0..32).contains(&sh));
+        self.emit(Instr::AluImm { op: AluImmOp::Slli, rd, rs1, imm: sh });
+    }
+    pub fn srli(&mut self, rd: Reg, rs1: Reg, sh: i32) {
+        assert!((0..32).contains(&sh));
+        self.emit(Instr::AluImm { op: AluImmOp::Srli, rd, rs1, imm: sh });
+    }
+    pub fn srai(&mut self, rd: Reg, rs1: Reg, sh: i32) {
+        assert!((0..32).contains(&sh));
+        self.emit(Instr::AluImm { op: AluImmOp::Srai, rd, rs1, imm: sh });
+    }
+    pub fn slti(&mut self, rd: Reg, rs1: Reg, imm: i32) {
+        self.emit(Instr::AluImm { op: AluImmOp::Slti, rd, rs1, imm });
+    }
+
+    // --- Loads/stores -------------------------------------------------------
+    pub fn lb(&mut self, rd: Reg, rs1: Reg, imm: i32) {
+        self.emit(Instr::Load { op: LoadOp::Lb, rd, rs1, imm });
+    }
+    pub fn lbu(&mut self, rd: Reg, rs1: Reg, imm: i32) {
+        self.emit(Instr::Load { op: LoadOp::Lbu, rd, rs1, imm });
+    }
+    pub fn lh(&mut self, rd: Reg, rs1: Reg, imm: i32) {
+        self.emit(Instr::Load { op: LoadOp::Lh, rd, rs1, imm });
+    }
+    pub fn lhu(&mut self, rd: Reg, rs1: Reg, imm: i32) {
+        self.emit(Instr::Load { op: LoadOp::Lhu, rd, rs1, imm });
+    }
+    pub fn lw(&mut self, rd: Reg, rs1: Reg, imm: i32) {
+        self.emit(Instr::Load { op: LoadOp::Lw, rd, rs1, imm });
+    }
+    pub fn sb(&mut self, rs2: Reg, rs1: Reg, imm: i32) {
+        self.emit(Instr::Store { op: StoreOp::Sb, rs1, rs2, imm });
+    }
+    pub fn sh(&mut self, rs2: Reg, rs1: Reg, imm: i32) {
+        self.emit(Instr::Store { op: StoreOp::Sh, rs1, rs2, imm });
+    }
+    pub fn sw(&mut self, rs2: Reg, rs1: Reg, imm: i32) {
+        self.emit(Instr::Store { op: StoreOp::Sw, rs1, rs2, imm });
+    }
+
+    // --- Branches (label-based) --------------------------------------------
+    fn branch(&mut self, op: BranchOp, rs1: Reg, rs2: Reg, label: &str) {
+        self.items.push(Item::Branch { op, rs1, rs2, label: label.to_string() });
+    }
+    pub fn beq(&mut self, rs1: Reg, rs2: Reg, label: &str) {
+        self.branch(BranchOp::Beq, rs1, rs2, label);
+    }
+    pub fn bne(&mut self, rs1: Reg, rs2: Reg, label: &str) {
+        self.branch(BranchOp::Bne, rs1, rs2, label);
+    }
+    pub fn blt(&mut self, rs1: Reg, rs2: Reg, label: &str) {
+        self.branch(BranchOp::Blt, rs1, rs2, label);
+    }
+    pub fn bge(&mut self, rs1: Reg, rs2: Reg, label: &str) {
+        self.branch(BranchOp::Bge, rs1, rs2, label);
+    }
+    pub fn bltu(&mut self, rs1: Reg, rs2: Reg, label: &str) {
+        self.branch(BranchOp::Bltu, rs1, rs2, label);
+    }
+    pub fn bgeu(&mut self, rs1: Reg, rs2: Reg, label: &str) {
+        self.branch(BranchOp::Bgeu, rs1, rs2, label);
+    }
+    pub fn beqz(&mut self, rs1: Reg, label: &str) {
+        self.beq(rs1, ZERO, label);
+    }
+    pub fn bnez(&mut self, rs1: Reg, label: &str) {
+        self.bne(rs1, ZERO, label);
+    }
+
+    // --- Jumps ---------------------------------------------------------------
+    pub fn jal(&mut self, rd: Reg, label: &str) {
+        self.items.push(Item::Jal { rd, label: label.to_string() });
+    }
+    pub fn j(&mut self, label: &str) {
+        self.jal(ZERO, label);
+    }
+    pub fn call(&mut self, label: &str) {
+        self.jal(RA, label);
+    }
+    pub fn jalr(&mut self, rd: Reg, rs1: Reg, imm: i32) {
+        self.emit(Instr::Jalr { rd, rs1, imm });
+    }
+    pub fn ret(&mut self) {
+        self.jalr(ZERO, RA, 0);
+    }
+
+    // --- Pseudo-ops ------------------------------------------------------------
+    pub fn nop(&mut self) {
+        self.addi(ZERO, ZERO, 0);
+    }
+    pub fn mv(&mut self, rd: Reg, rs1: Reg) {
+        self.addi(rd, rs1, 0);
+    }
+    pub fn neg(&mut self, rd: Reg, rs1: Reg) {
+        self.sub(rd, ZERO, rs1);
+    }
+
+    /// Load a 32-bit immediate (1 or 2 instructions).
+    pub fn li(&mut self, rd: Reg, imm: i32) {
+        if (-2048..=2047).contains(&imm) {
+            self.addi(rd, ZERO, imm);
+        } else {
+            // lui hi20 (pre-compensated for sign-extended addi), addi lo12.
+            let lo = (imm << 20) >> 20;
+            let hi = imm.wrapping_sub(lo);
+            self.emit(Instr::Lui { rd, imm: hi });
+            if lo != 0 {
+                self.addi(rd, rd, lo);
+            }
+        }
+    }
+
+    /// CFU call: `rd = cfu(funct7, rs1, rs2)` (custom-0 R-type).
+    pub fn cfu(&mut self, funct7: u8, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.emit(Instr::Cfu { funct7, funct3: 0, rd, rs1, rs2 });
+    }
+
+    pub fn ecall(&mut self) {
+        self.emit(Instr::Ecall);
+    }
+    pub fn ebreak(&mut self) {
+        self.emit(Instr::Ebreak);
+    }
+
+    /// Resolve labels and produce the final instruction sequence.
+    pub fn assemble(&self) -> Result<Vec<Instr>> {
+        let mut out = Vec::with_capacity(self.items.len());
+        for (idx, item) in self.items.iter().enumerate() {
+            let resolve = |label: &str| -> Result<i32> {
+                match self.labels.get(label) {
+                    Some(&target) => Ok(((target as i64 - idx as i64) * 4) as i32),
+                    None => bail!("undefined label '{label}'"),
+                }
+            };
+            let instr = match item {
+                Item::Fixed(i) => *i,
+                Item::Branch { op, rs1, rs2, label } => {
+                    let imm = resolve(label)?;
+                    if !(-4096..=4094).contains(&imm) {
+                        bail!("branch to '{label}' out of range ({imm})");
+                    }
+                    Instr::Branch { op: *op, rs1: *rs1, rs2: *rs2, imm }
+                }
+                Item::Jal { rd, label } => Instr::Jal { rd: *rd, imm: resolve(label)? },
+            };
+            out.push(instr);
+        }
+        Ok(out)
+    }
+
+    /// Assemble to machine-code words (what gets written to sim memory).
+    pub fn assemble_words(&self) -> Result<Vec<u32>> {
+        Ok(self.assemble()?.into_iter().map(super::codec::encode).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_and_backward_labels() {
+        let mut a = Asm::new();
+        a.li(A0, 0); // 0
+        a.label("top");
+        a.addi(A0, A0, 1); // 1
+        a.blt(A0, A1, "top"); // 2: -4 bytes
+        a.j("end"); // 3: +8 bytes
+        a.nop(); // 4
+        a.label("end");
+        a.ret(); // 5
+        let prog = a.assemble().unwrap();
+        assert_eq!(prog[2], Instr::Branch { op: BranchOp::Blt, rs1: A0, rs2: A1, imm: -4 });
+        assert_eq!(prog[3], Instr::Jal { rd: ZERO, imm: 8 });
+    }
+
+    #[test]
+    fn li_small_and_large() {
+        let mut a = Asm::new();
+        a.li(T0, 42);
+        a.li(T1, 0x12345);
+        a.li(T2, -0x12345);
+        a.li(T3, i32::MIN);
+        let prog = a.assemble().unwrap();
+        // simulate the li sequences
+        let mut regs = [0i32; 32];
+        for i in prog {
+            match i {
+                Instr::AluImm { op: AluImmOp::Addi, rd, rs1, imm } => {
+                    regs[rd as usize] = regs[rs1 as usize].wrapping_add(imm);
+                }
+                Instr::Lui { rd, imm } => regs[rd as usize] = imm,
+                _ => unreachable!(),
+            }
+        }
+        assert_eq!(regs[T0 as usize], 42);
+        assert_eq!(regs[T1 as usize], 0x12345);
+        assert_eq!(regs[T2 as usize], -0x12345);
+        assert_eq!(regs[T3 as usize], i32::MIN);
+    }
+
+    #[test]
+    fn undefined_label_errors() {
+        let mut a = Asm::new();
+        a.j("nowhere");
+        assert!(a.assemble().is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "redefined")]
+    fn duplicate_label_panics() {
+        let mut a = Asm::new();
+        a.label("x");
+        a.label("x");
+    }
+
+    #[test]
+    fn assemble_words_encodes() {
+        let mut a = Asm::new();
+        a.addi(1, 0, 42);
+        assert_eq!(a.assemble_words().unwrap(), vec![0x02A0_0093]);
+    }
+}

@@ -1,0 +1,405 @@
+//! RV32IM binary encoder/decoder.
+//!
+//! The simulator executes pre-decoded [`Instr`]s, but real encodings matter:
+//! programs are stored in simulated memory as RV32 machine code (the I-cache
+//! model indexes real addresses), and the encoder/decoder pair is
+//! property-tested for round-tripping, which pins the instruction model to
+//! the actual ISA.
+
+use super::*;
+
+pub const OPC_LOAD: u32 = 0x03;
+pub const OPC_ALU_IMM: u32 = 0x13;
+pub const OPC_AUIPC: u32 = 0x17;
+pub const OPC_STORE: u32 = 0x23;
+pub const OPC_ALU: u32 = 0x33;
+pub const OPC_LUI: u32 = 0x37;
+pub const OPC_BRANCH: u32 = 0x63;
+pub const OPC_JALR: u32 = 0x67;
+pub const OPC_JAL: u32 = 0x6F;
+pub const OPC_SYSTEM: u32 = 0x73;
+/// custom-0 (0x0B) — the CFU-Playground CPU↔CFU opcode.
+pub const OPC_CUSTOM0: u32 = 0x0B;
+
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum DecodeError {
+    #[error("illegal instruction word {0:#010x}")]
+    Illegal(u32),
+}
+
+fn r_type(funct7: u32, rs2: Reg, rs1: Reg, funct3: u32, rd: Reg, opcode: u32) -> u32 {
+    (funct7 << 25)
+        | ((rs2 as u32) << 20)
+        | ((rs1 as u32) << 15)
+        | (funct3 << 12)
+        | ((rd as u32) << 7)
+        | opcode
+}
+
+fn i_type(imm: i32, rs1: Reg, funct3: u32, rd: Reg, opcode: u32) -> u32 {
+    ((imm as u32 & 0xFFF) << 20)
+        | ((rs1 as u32) << 15)
+        | (funct3 << 12)
+        | ((rd as u32) << 7)
+        | opcode
+}
+
+fn s_type(imm: i32, rs2: Reg, rs1: Reg, funct3: u32, opcode: u32) -> u32 {
+    let imm = imm as u32 & 0xFFF;
+    ((imm >> 5) << 25)
+        | ((rs2 as u32) << 20)
+        | ((rs1 as u32) << 15)
+        | (funct3 << 12)
+        | ((imm & 0x1F) << 7)
+        | opcode
+}
+
+fn b_type(imm: i32, rs2: Reg, rs1: Reg, funct3: u32, opcode: u32) -> u32 {
+    let imm = imm as u32 & 0x1FFE; // bit 0 always zero
+    (((imm >> 12) & 1) << 31)
+        | (((imm >> 5) & 0x3F) << 25)
+        | ((rs2 as u32) << 20)
+        | ((rs1 as u32) << 15)
+        | (funct3 << 12)
+        | (((imm >> 1) & 0xF) << 8)
+        | (((imm >> 11) & 1) << 7)
+        | opcode
+}
+
+fn j_type(imm: i32, rd: Reg, opcode: u32) -> u32 {
+    let imm = imm as u32 & 0x1F_FFFE;
+    (((imm >> 20) & 1) << 31)
+        | (((imm >> 1) & 0x3FF) << 21)
+        | (((imm >> 11) & 1) << 20)
+        | (((imm >> 12) & 0xFF) << 12)
+        | ((rd as u32) << 7)
+        | opcode
+}
+
+/// Encode an instruction to its 32-bit RV32 word.
+pub fn encode(instr: Instr) -> u32 {
+    use Instr::*;
+    match instr {
+        Alu { op, rd, rs1, rs2 } => {
+            let (f7, f3) = match op {
+                AluOp::Add => (0x00, 0x0),
+                AluOp::Sub => (0x20, 0x0),
+                AluOp::Sll => (0x00, 0x1),
+                AluOp::Slt => (0x00, 0x2),
+                AluOp::Sltu => (0x00, 0x3),
+                AluOp::Xor => (0x00, 0x4),
+                AluOp::Srl => (0x00, 0x5),
+                AluOp::Sra => (0x20, 0x5),
+                AluOp::Or => (0x00, 0x6),
+                AluOp::And => (0x00, 0x7),
+                AluOp::Mul => (0x01, 0x0),
+                AluOp::Mulh => (0x01, 0x1),
+                AluOp::Mulhsu => (0x01, 0x2),
+                AluOp::Mulhu => (0x01, 0x3),
+                AluOp::Div => (0x01, 0x4),
+                AluOp::Divu => (0x01, 0x5),
+                AluOp::Rem => (0x01, 0x6),
+                AluOp::Remu => (0x01, 0x7),
+            };
+            r_type(f7, rs2, rs1, f3, rd, OPC_ALU)
+        }
+        AluImm { op, rd, rs1, imm } => {
+            let (f3, imm) = match op {
+                AluImmOp::Addi => (0x0, imm),
+                AluImmOp::Slti => (0x2, imm),
+                AluImmOp::Sltiu => (0x3, imm),
+                AluImmOp::Xori => (0x4, imm),
+                AluImmOp::Ori => (0x6, imm),
+                AluImmOp::Andi => (0x7, imm),
+                AluImmOp::Slli => (0x1, imm & 0x1F),
+                AluImmOp::Srli => (0x5, imm & 0x1F),
+                AluImmOp::Srai => (0x5, (imm & 0x1F) | 0x400),
+            };
+            i_type(imm, rs1, f3, rd, OPC_ALU_IMM)
+        }
+        Load { op, rd, rs1, imm } => {
+            let f3 = match op {
+                LoadOp::Lb => 0x0,
+                LoadOp::Lh => 0x1,
+                LoadOp::Lw => 0x2,
+                LoadOp::Lbu => 0x4,
+                LoadOp::Lhu => 0x5,
+            };
+            i_type(imm, rs1, f3, rd, OPC_LOAD)
+        }
+        Store { op, rs1, rs2, imm } => {
+            let f3 = match op {
+                StoreOp::Sb => 0x0,
+                StoreOp::Sh => 0x1,
+                StoreOp::Sw => 0x2,
+            };
+            s_type(imm, rs2, rs1, f3, OPC_STORE)
+        }
+        Branch { op, rs1, rs2, imm } => {
+            let f3 = match op {
+                BranchOp::Beq => 0x0,
+                BranchOp::Bne => 0x1,
+                BranchOp::Blt => 0x4,
+                BranchOp::Bge => 0x5,
+                BranchOp::Bltu => 0x6,
+                BranchOp::Bgeu => 0x7,
+            };
+            b_type(imm, rs2, rs1, f3, OPC_BRANCH)
+        }
+        Lui { rd, imm } => (imm as u32 & 0xFFFF_F000) | ((rd as u32) << 7) | OPC_LUI,
+        Auipc { rd, imm } => (imm as u32 & 0xFFFF_F000) | ((rd as u32) << 7) | OPC_AUIPC,
+        Jal { rd, imm } => j_type(imm, rd, OPC_JAL),
+        Jalr { rd, rs1, imm } => i_type(imm, rs1, 0x0, rd, OPC_JALR),
+        Cfu { funct7, funct3, rd, rs1, rs2 } => {
+            r_type(funct7 as u32, rs2, rs1, funct3 as u32, rd, OPC_CUSTOM0)
+        }
+        Ecall => i_type(0, ZERO, 0, ZERO, OPC_SYSTEM),
+        Ebreak => i_type(1, ZERO, 0, ZERO, OPC_SYSTEM),
+    }
+}
+
+#[inline]
+fn sext(v: u32, bits: u32) -> i32 {
+    let sh = 32 - bits;
+    ((v << sh) as i32) >> sh
+}
+
+/// Decode a 32-bit word back to [`Instr`].
+pub fn decode(word: u32) -> Result<Instr, DecodeError> {
+    let opcode = word & 0x7F;
+    let rd = ((word >> 7) & 0x1F) as Reg;
+    let funct3 = (word >> 12) & 0x7;
+    let rs1 = ((word >> 15) & 0x1F) as Reg;
+    let rs2 = ((word >> 20) & 0x1F) as Reg;
+    let funct7 = (word >> 25) & 0x7F;
+    let imm_i = sext(word >> 20, 12);
+    let imm_s = sext(((word >> 25) << 5) | ((word >> 7) & 0x1F), 12);
+    let imm_b = sext(
+        (((word >> 31) & 1) << 12)
+            | (((word >> 7) & 1) << 11)
+            | (((word >> 25) & 0x3F) << 5)
+            | (((word >> 8) & 0xF) << 1),
+        13,
+    );
+    let imm_j = sext(
+        (((word >> 31) & 1) << 20)
+            | (((word >> 12) & 0xFF) << 12)
+            | (((word >> 20) & 1) << 11)
+            | (((word >> 21) & 0x3FF) << 1),
+        21,
+    );
+
+    let instr = match opcode {
+        OPC_ALU => {
+            let op = match (funct7, funct3) {
+                (0x00, 0x0) => AluOp::Add,
+                (0x20, 0x0) => AluOp::Sub,
+                (0x00, 0x1) => AluOp::Sll,
+                (0x00, 0x2) => AluOp::Slt,
+                (0x00, 0x3) => AluOp::Sltu,
+                (0x00, 0x4) => AluOp::Xor,
+                (0x00, 0x5) => AluOp::Srl,
+                (0x20, 0x5) => AluOp::Sra,
+                (0x00, 0x6) => AluOp::Or,
+                (0x00, 0x7) => AluOp::And,
+                (0x01, 0x0) => AluOp::Mul,
+                (0x01, 0x1) => AluOp::Mulh,
+                (0x01, 0x2) => AluOp::Mulhsu,
+                (0x01, 0x3) => AluOp::Mulhu,
+                (0x01, 0x4) => AluOp::Div,
+                (0x01, 0x5) => AluOp::Divu,
+                (0x01, 0x6) => AluOp::Rem,
+                (0x01, 0x7) => AluOp::Remu,
+                _ => return Err(DecodeError::Illegal(word)),
+            };
+            Instr::Alu { op, rd, rs1, rs2 }
+        }
+        OPC_ALU_IMM => {
+            let (op, imm) = match funct3 {
+                0x0 => (AluImmOp::Addi, imm_i),
+                0x2 => (AluImmOp::Slti, imm_i),
+                0x3 => (AluImmOp::Sltiu, imm_i),
+                0x4 => (AluImmOp::Xori, imm_i),
+                0x6 => (AluImmOp::Ori, imm_i),
+                0x7 => (AluImmOp::Andi, imm_i),
+                0x1 if funct7 == 0x00 => (AluImmOp::Slli, (imm_i & 0x1F)),
+                0x5 if funct7 == 0x00 => (AluImmOp::Srli, (imm_i & 0x1F)),
+                0x5 if funct7 == 0x20 => (AluImmOp::Srai, (imm_i & 0x1F)),
+                _ => return Err(DecodeError::Illegal(word)),
+            };
+            Instr::AluImm { op, rd, rs1, imm }
+        }
+        OPC_LOAD => {
+            let op = match funct3 {
+                0x0 => LoadOp::Lb,
+                0x1 => LoadOp::Lh,
+                0x2 => LoadOp::Lw,
+                0x4 => LoadOp::Lbu,
+                0x5 => LoadOp::Lhu,
+                _ => return Err(DecodeError::Illegal(word)),
+            };
+            Instr::Load { op, rd, rs1, imm: imm_i }
+        }
+        OPC_STORE => {
+            let op = match funct3 {
+                0x0 => StoreOp::Sb,
+                0x1 => StoreOp::Sh,
+                0x2 => StoreOp::Sw,
+                _ => return Err(DecodeError::Illegal(word)),
+            };
+            Instr::Store { op, rs1, rs2, imm: imm_s }
+        }
+        OPC_BRANCH => {
+            let op = match funct3 {
+                0x0 => BranchOp::Beq,
+                0x1 => BranchOp::Bne,
+                0x4 => BranchOp::Blt,
+                0x5 => BranchOp::Bge,
+                0x6 => BranchOp::Bltu,
+                0x7 => BranchOp::Bgeu,
+                _ => return Err(DecodeError::Illegal(word)),
+            };
+            Instr::Branch { op, rs1, rs2, imm: imm_b }
+        }
+        OPC_LUI => Instr::Lui { rd, imm: (word & 0xFFFF_F000) as i32 },
+        OPC_AUIPC => Instr::Auipc { rd, imm: (word & 0xFFFF_F000) as i32 },
+        OPC_JAL => Instr::Jal { rd, imm: imm_j },
+        OPC_JALR if funct3 == 0 => Instr::Jalr { rd, rs1, imm: imm_i },
+        OPC_CUSTOM0 => Instr::Cfu {
+            funct7: funct7 as u8,
+            funct3: funct3 as u8,
+            rd,
+            rs1,
+            rs2,
+        },
+        OPC_SYSTEM if word == encode(Instr::Ecall) => Instr::Ecall,
+        OPC_SYSTEM if word == encode(Instr::Ebreak) => Instr::Ebreak,
+        _ => return Err(DecodeError::Illegal(word)),
+    };
+    Ok(instr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{check, Gen};
+
+    fn arb_reg(g: &mut Gen) -> Reg {
+        g.i32(0, 31) as Reg
+    }
+
+    fn arb_instr(g: &mut Gen) -> Instr {
+        let alu_ops = [
+            AluOp::Add, AluOp::Sub, AluOp::Sll, AluOp::Slt, AluOp::Sltu, AluOp::Xor,
+            AluOp::Srl, AluOp::Sra, AluOp::Or, AluOp::And, AluOp::Mul, AluOp::Mulh,
+            AluOp::Mulhsu, AluOp::Mulhu, AluOp::Div, AluOp::Divu, AluOp::Rem, AluOp::Remu,
+        ];
+        let imm_ops = [
+            AluImmOp::Addi, AluImmOp::Slti, AluImmOp::Sltiu, AluImmOp::Xori,
+            AluImmOp::Ori, AluImmOp::Andi, AluImmOp::Slli, AluImmOp::Srli, AluImmOp::Srai,
+        ];
+        let load_ops = [LoadOp::Lb, LoadOp::Lh, LoadOp::Lw, LoadOp::Lbu, LoadOp::Lhu];
+        let store_ops = [StoreOp::Sb, StoreOp::Sh, StoreOp::Sw];
+        let branch_ops = [
+            BranchOp::Beq, BranchOp::Bne, BranchOp::Blt, BranchOp::Bge,
+            BranchOp::Bltu, BranchOp::Bgeu,
+        ];
+        match g.i32(0, 9) {
+            0 => Instr::Alu { op: *g.pick(&alu_ops), rd: arb_reg(g), rs1: arb_reg(g), rs2: arb_reg(g) },
+            1 => {
+                let op = *g.pick(&imm_ops);
+                let imm = match op {
+                    AluImmOp::Slli | AluImmOp::Srli | AluImmOp::Srai => g.i32(0, 31),
+                    _ => g.i32(-2048, 2047),
+                };
+                Instr::AluImm { op, rd: arb_reg(g), rs1: arb_reg(g), imm }
+            }
+            2 => Instr::Load { op: *g.pick(&load_ops), rd: arb_reg(g), rs1: arb_reg(g), imm: g.i32(-2048, 2047) },
+            3 => Instr::Store { op: *g.pick(&store_ops), rs1: arb_reg(g), rs2: arb_reg(g), imm: g.i32(-2048, 2047) },
+            4 => Instr::Branch { op: *g.pick(&branch_ops), rs1: arb_reg(g), rs2: arb_reg(g), imm: g.i32(-2048, 2047) & !1 },
+            5 => Instr::Lui { rd: arb_reg(g), imm: g.i32(i32::MIN / 4096, i32::MAX / 4096) << 12 },
+            6 => Instr::Jal { rd: arb_reg(g), imm: g.i32(-(1 << 19), (1 << 19) - 1) & !1 },
+            7 => Instr::Jalr { rd: arb_reg(g), rs1: arb_reg(g), imm: g.i32(-2048, 2047) },
+            8 => Instr::Cfu {
+                funct7: g.i32(0, 127) as u8,
+                funct3: g.i32(0, 7) as u8,
+                rd: arb_reg(g),
+                rs1: arb_reg(g),
+                rs2: arb_reg(g),
+            },
+            _ => Instr::Auipc { rd: arb_reg(g), imm: g.i32(i32::MIN / 4096, i32::MAX / 4096) << 12 },
+        }
+    }
+
+    #[test]
+    fn roundtrip_property() {
+        check("encode/decode roundtrip", |g| {
+            let instr = arb_instr(g);
+            let word = encode(instr);
+            let back = decode(word).map_err(|e| e.to_string())?;
+            crate::prop_assert_eq!(instr, back);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn known_encodings() {
+        // Cross-checked against the RISC-V spec / gnu as output.
+        // addi x1, x0, 42  -> 0x02A00093
+        assert_eq!(
+            encode(Instr::AluImm { op: AluImmOp::Addi, rd: 1, rs1: 0, imm: 42 }),
+            0x02A0_0093
+        );
+        // add x3, x1, x2 -> 0x002081B3
+        assert_eq!(
+            encode(Instr::Alu { op: AluOp::Add, rd: 3, rs1: 1, rs2: 2 }),
+            0x0020_81B3
+        );
+        // mul x5, x6, x7 -> 0x027302B3
+        assert_eq!(
+            encode(Instr::Alu { op: AluOp::Mul, rd: 5, rs1: 6, rs2: 7 }),
+            0x0273_02B3
+        );
+        // lw x10, 8(x2) -> 0x00812503
+        assert_eq!(
+            encode(Instr::Load { op: LoadOp::Lw, rd: 10, rs1: 2, imm: 8 }),
+            0x0081_2503
+        );
+        // sw x10, 12(x2) -> 0x00A12623
+        assert_eq!(
+            encode(Instr::Store { op: StoreOp::Sw, rs1: 2, rs2: 10, imm: 12 }),
+            0x00A1_2623
+        );
+        // ecall -> 0x00000073, ebreak -> 0x00100073
+        assert_eq!(encode(Instr::Ecall), 0x0000_0073);
+        assert_eq!(encode(Instr::Ebreak), 0x0010_0073);
+    }
+
+    #[test]
+    fn branch_negative_offset_roundtrip() {
+        let i = Instr::Branch { op: BranchOp::Bne, rs1: 5, rs2: 6, imm: -64 };
+        assert_eq!(decode(encode(i)).unwrap(), i);
+    }
+
+    #[test]
+    fn jal_large_offset_roundtrip() {
+        for imm in [-1048576i32, -2, 0, 2, 1048574] {
+            let i = Instr::Jal { rd: 1, imm };
+            assert_eq!(decode(encode(i)).unwrap(), i, "imm={imm}");
+        }
+    }
+
+    #[test]
+    fn illegal_word_rejected() {
+        assert!(decode(0xFFFF_FFFF).is_err());
+        assert!(decode(0x0000_0000).is_err());
+    }
+
+    #[test]
+    fn cfu_custom0_fields() {
+        let i = Instr::Cfu { funct7: 0x09, funct3: 0, rd: A0, rs1: A1, rs2: A2 };
+        let w = encode(i);
+        assert_eq!(w & 0x7F, OPC_CUSTOM0);
+        assert_eq!(decode(w).unwrap(), i);
+    }
+}

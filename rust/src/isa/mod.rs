@@ -1,0 +1,196 @@
+//! RV32IM instruction set + the custom-0 CFU extension.
+//!
+//! The paper's platform is a VexRiscv RV32IM core extended with a Custom
+//! Function Unit reached through R-type instructions on the `custom-0`
+//! opcode (CFU-Playground convention, paper Fig. 2).  This module defines
+//! the instruction model shared by the assembler ([`asm`]), the
+//! encoder/decoder ([`codec`]) and the cycle-accurate core
+//! ([`crate::cpu`]).
+
+pub mod asm;
+pub mod codec;
+
+/// Register index (x0..x31). ABI aliases provided as consts.
+pub type Reg = u8;
+
+pub const ZERO: Reg = 0;
+pub const RA: Reg = 1;
+pub const SP: Reg = 2;
+pub const GP: Reg = 3;
+pub const TP: Reg = 4;
+pub const T0: Reg = 5;
+pub const T1: Reg = 6;
+pub const T2: Reg = 7;
+pub const S0: Reg = 8;
+pub const S1: Reg = 9;
+pub const A0: Reg = 10;
+pub const A1: Reg = 11;
+pub const A2: Reg = 12;
+pub const A3: Reg = 13;
+pub const A4: Reg = 14;
+pub const A5: Reg = 15;
+pub const A6: Reg = 16;
+pub const A7: Reg = 17;
+pub const S2: Reg = 18;
+pub const S3: Reg = 19;
+pub const S4: Reg = 20;
+pub const S5: Reg = 21;
+pub const S6: Reg = 22;
+pub const S7: Reg = 23;
+pub const S8: Reg = 24;
+pub const S9: Reg = 25;
+pub const S10: Reg = 26;
+pub const S11: Reg = 27;
+pub const T3: Reg = 28;
+pub const T4: Reg = 29;
+pub const T5: Reg = 30;
+pub const T6: Reg = 31;
+
+/// R-type ALU operations (funct7/funct3 selected).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AluOp {
+    Add,
+    Sub,
+    Sll,
+    Slt,
+    Sltu,
+    Xor,
+    Srl,
+    Sra,
+    Or,
+    And,
+    // M extension
+    Mul,
+    Mulh,
+    Mulhsu,
+    Mulhu,
+    Div,
+    Divu,
+    Rem,
+    Remu,
+}
+
+/// I-type ALU operations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AluImmOp {
+    Addi,
+    Slti,
+    Sltiu,
+    Xori,
+    Ori,
+    Andi,
+    Slli,
+    Srli,
+    Srai,
+}
+
+/// Load widths.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoadOp {
+    Lb,
+    Lh,
+    Lw,
+    Lbu,
+    Lhu,
+}
+
+/// Store widths.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StoreOp {
+    Sb,
+    Sh,
+    Sw,
+}
+
+/// Branch conditions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BranchOp {
+    Beq,
+    Bne,
+    Blt,
+    Bge,
+    Bltu,
+    Bgeu,
+}
+
+/// A decoded RV32IM (+custom-0) instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Instr {
+    Alu { op: AluOp, rd: Reg, rs1: Reg, rs2: Reg },
+    AluImm { op: AluImmOp, rd: Reg, rs1: Reg, imm: i32 },
+    Load { op: LoadOp, rd: Reg, rs1: Reg, imm: i32 },
+    Store { op: StoreOp, rs1: Reg, rs2: Reg, imm: i32 },
+    Branch { op: BranchOp, rs1: Reg, rs2: Reg, imm: i32 },
+    Lui { rd: Reg, imm: i32 },
+    Auipc { rd: Reg, imm: i32 },
+    Jal { rd: Reg, imm: i32 },
+    Jalr { rd: Reg, rs1: Reg, imm: i32 },
+    /// custom-0 R-type: the CPU↔CFU interface (paper Fig. 2). `funct7` is
+    /// the CFU opcode, `funct3` a sub-selector; rs1/rs2 are the operands
+    /// and rd receives the response.
+    Cfu { funct7: u8, funct3: u8, rd: Reg, rs1: Reg, rs2: Reg },
+    Ecall,
+    Ebreak,
+}
+
+impl Instr {
+    /// Destination register, if any (x0 writes are architectural no-ops).
+    pub fn writes_rd(&self) -> Option<Reg> {
+        match *self {
+            Instr::Alu { rd, .. }
+            | Instr::AluImm { rd, .. }
+            | Instr::Load { rd, .. }
+            | Instr::Lui { rd, .. }
+            | Instr::Auipc { rd, .. }
+            | Instr::Jal { rd, .. }
+            | Instr::Jalr { rd, .. }
+            | Instr::Cfu { rd, .. } => {
+                if rd == ZERO {
+                    None
+                } else {
+                    Some(rd)
+                }
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Pretty-print (disassembly) — used in traces and failure reports.
+impl std::fmt::Display for Instr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        fn r(x: Reg) -> String {
+            format!("x{x}")
+        }
+        match *self {
+            Instr::Alu { op, rd, rs1, rs2 } => {
+                write!(f, "{:?} {}, {}, {}", op, r(rd), r(rs1), r(rs2))
+            }
+            Instr::AluImm { op, rd, rs1, imm } => {
+                write!(f, "{:?} {}, {}, {}", op, r(rd), r(rs1), imm)
+            }
+            Instr::Load { op, rd, rs1, imm } => {
+                write!(f, "{:?} {}, {}({})", op, r(rd), imm, r(rs1))
+            }
+            Instr::Store { op, rs1, rs2, imm } => {
+                write!(f, "{:?} {}, {}({})", op, r(rs2), imm, r(rs1))
+            }
+            Instr::Branch { op, rs1, rs2, imm } => {
+                write!(f, "{:?} {}, {}, pc{imm:+}", op, r(rs1), r(rs2))
+            }
+            Instr::Lui { rd, imm } => write!(f, "Lui {}, {:#x}", r(rd), imm),
+            Instr::Auipc { rd, imm } => write!(f, "Auipc {}, {:#x}", r(rd), imm),
+            Instr::Jal { rd, imm } => write!(f, "Jal {}, pc{imm:+}", r(rd)),
+            Instr::Jalr { rd, rs1, imm } => write!(f, "Jalr {}, {}({})", r(rd), imm, r(rs1)),
+            Instr::Cfu { funct7, funct3, rd, rs1, rs2 } => write!(
+                f,
+                "cfu.{funct7:#04x}.{funct3} {}, {}, {}",
+                r(rd),
+                r(rs1),
+                r(rs2)
+            ),
+            Instr::Ecall => write!(f, "Ecall"),
+            Instr::Ebreak => write!(f, "Ebreak"),
+        }
+    }
+}

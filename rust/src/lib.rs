@@ -1,0 +1,48 @@
+//! # fused-dsc
+//!
+//! Reproduction of *"RISC-V Based TinyML Accelerator for Depthwise Separable
+//! Convolutions in Edge AI"* (Yildirim & Ozturk, CS.AR 2025) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — a cycle-accurate RV32IM instruction-set simulator
+//!   with the paper's fused-dataflow Custom Function Unit attached via the
+//!   CFU-Playground custom-0 interface, plus the software/CFU-Playground
+//!   baselines, FPGA/ASIC cost models, memory-traffic analytics, the
+//!   inference coordinator, and the report harness that regenerates every
+//!   table and figure of the paper's evaluation.
+//! * **L2** — the quantized MobileNetV2-style model in JAX, AOT-lowered to
+//!   HLO text artifacts executed here through PJRT ([`runtime`]) as the
+//!   bit-exact golden model.
+//! * **L1** — the fused pixel-wise Ex→Dw→Pr Pallas kernel inside that model.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod cli;
+pub mod quant;
+pub mod tensor;
+pub mod util;
+
+pub mod baseline;
+pub mod cfu;
+pub mod coordinator;
+pub mod cost;
+pub mod cpu;
+pub mod driver;
+pub mod isa;
+pub mod memtraffic;
+pub mod model;
+pub mod report;
+pub mod runtime;
+
+/// Crate version (surfaced by the CLI).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}
+
+/// Locate the artifacts directory: `$FUSED_DSC_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("FUSED_DSC_ARTIFACTS")
+        .map(Into::into)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}

@@ -1,0 +1,189 @@
+//! fused-dsc CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   report <table1..table7|fig14|all>   regenerate the paper's evaluation
+//!   run [--backend B] [--layer TAG]     run one block / the whole model
+//!   serve [--requests N] [--batch B]    batched edge-serving demo
+//!   golden [--layer TAG]                cross-check CFU sim vs PJRT HLO
+//!   version
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use fused_dsc::cfu::PipelineVersion;
+use fused_dsc::cli::Args;
+use fused_dsc::coordinator::{Backend, Coordinator, Engine, ServeConfig};
+use fused_dsc::model::blocks::{backbone, evaluated_blocks};
+use fused_dsc::model::weights::{gen_input, make_model_params};
+use fused_dsc::report;
+use fused_dsc::runtime::{artifact_path, Runtime};
+use fused_dsc::tensor::TensorI8;
+use fused_dsc::util::stats::fmt_cycles;
+
+fn parse_backend(s: &str) -> Result<Backend> {
+    Ok(match s {
+        "reference" => Backend::Reference,
+        "v0" | "software" => Backend::SoftwareIss,
+        "cfu-playground" | "pg" => Backend::CfuPlaygroundIss,
+        "v1" => Backend::FusedIss(PipelineVersion::V1),
+        "v2" => Backend::FusedIss(PipelineVersion::V2),
+        "v3" | "fused" => Backend::FusedIss(PipelineVersion::V3),
+        "host-v3" => Backend::FusedHost(PipelineVersion::V3),
+        other => bail!("unknown backend '{other}'"),
+    })
+}
+
+fn model_input(params: &fused_dsc::model::weights::ModelParams, salt: u64) -> TensorI8 {
+    let c = params.blocks[0].cfg;
+    TensorI8::from_vec(
+        &[c.h as usize, c.w as usize, c.cin as usize],
+        gen_input(&format!("cli.x{salt}"), (c.h * c.w * c.cin) as usize, params.blocks[0].zp_in()),
+    )
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let backend = parse_backend(args.opt_or("backend", "v3"))?;
+    let params = make_model_params(None);
+    let engine = Engine::new(params, backend);
+    if let Some(tag) = args.opt("layer") {
+        let (idx, cfg) = evaluated_blocks()
+            .into_iter()
+            .enumerate()
+            .find(|(_, (t, _))| *t == tag)
+            .map(|(i, (_, c))| (i, c))
+            .with_context(|| format!("unknown layer '{tag}' (3rd/5th/8th/15th)"))?;
+        let block_idx = [2usize, 4, 7, 14][idx];
+        let bp = &engine.params.blocks[block_idx];
+        let x = TensorI8::from_vec(
+            &[cfg.h as usize, cfg.w as usize, cfg.cin as usize],
+            gen_input("cli.bx", (cfg.h * cfg.w * cfg.cin) as usize, bp.zp_in()),
+        );
+        let (out, cycles) = engine.run_block(block_idx, &x)?;
+        println!(
+            "layer {tag} on {}: {} cycles ({} @100MHz = {:.2} ms), out {}x{}x{}",
+            engine.backend.name(),
+            cycles,
+            fmt_cycles(cycles),
+            cycles as f64 / 100e6 * 1e3,
+            out.dims[0],
+            out.dims[1],
+            out.dims[2]
+        );
+    } else {
+        let x = model_input(&engine.params, 0);
+        let out = engine.infer(&x)?;
+        println!(
+            "full model on {}: class={} sim_cycles={} ({:.2} ms @100MHz) logits={:?}",
+            engine.backend.name(),
+            out.class,
+            fmt_cycles(out.sim_cycles),
+            out.sim_cycles as f64 / 100e6 * 1e3,
+            out.logits
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let n: usize = args.opt_parse("requests", 64usize).map_err(anyhow::Error::msg)?;
+    let batch: usize = args.opt_parse("batch", 8usize).map_err(anyhow::Error::msg)?;
+    let workers: usize = args.opt_parse("workers", 4usize).map_err(anyhow::Error::msg)?;
+    let backend = parse_backend(args.opt_or("backend", "host-v3"))?;
+    let params = make_model_params(None);
+    let engine = Arc::new(Engine::new(params, backend));
+    let cfg = ServeConfig { max_batch: batch, workers, ..Default::default() };
+    let coord = Coordinator::start(Arc::clone(&engine), cfg);
+    let t0 = std::time::Instant::now();
+    let tickets: Vec<_> = (0..n).map(|i| coord.submit(model_input(&engine.params, i as u64))).collect();
+    for t in tickets {
+        t.wait()?;
+    }
+    let wall = t0.elapsed();
+    let snap = coord.metrics.snapshot();
+    println!(
+        "served {} requests on {} in {:.2}s ({:.1} req/s), batches={} max_batch={}",
+        snap.completed,
+        engine.backend.name(),
+        wall.as_secs_f64(),
+        snap.completed as f64 / wall.as_secs_f64(),
+        snap.batches,
+        snap.max_batch_seen
+    );
+    if let Some(lat) = snap.total_latency {
+        println!(
+            "latency: p50 {:.1} ms, p95 {:.1} ms, p99 {:.1} ms",
+            lat.p50 * 1e3,
+            lat.p95 * 1e3,
+            lat.p99 * 1e3
+        );
+    }
+    println!(
+        "simulated accelerator time: {} cycles total ({:.2} ms @100MHz per request avg)",
+        fmt_cycles(snap.sim_cycles),
+        snap.sim_cycles as f64 / snap.completed.max(1) as f64 / 100e6 * 1e3
+    );
+    Ok(())
+}
+
+fn cmd_golden(args: &Args) -> Result<()> {
+    let params = make_model_params(None);
+    let rt = Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    let tags: Vec<&str> = match args.opt("layer") {
+        Some(t) => vec![t],
+        None => vec!["3rd", "5th", "8th", "15th"],
+    };
+    for tag in tags {
+        let (pos, cfg) = evaluated_blocks()
+            .into_iter()
+            .enumerate()
+            .find(|(_, (t, _))| *t == tag)
+            .map(|(i, (_, c))| (i, c))
+            .with_context(|| format!("unknown layer '{tag}'"))?;
+        let block_num = [3usize, 5, 8, 15][pos];
+        let bp = &params.blocks[block_num - 1];
+        let in_len = (cfg.h * cfg.w * cfg.cin) as usize;
+        let exe = rt.load_hlo(&artifact_path(&format!("block_l{block_num}.hlo.txt"))?, in_len)?;
+        let x = TensorI8::from_vec(
+            &[cfg.h as usize, cfg.w as usize, cfg.cin as usize],
+            gen_input("cli.gx", in_len, bp.zp_in()),
+        );
+        let golden = exe.run_i8(&x.data, &[cfg.h as i64, cfg.w as i64, cfg.cin as i64])?;
+        let mut unit = fused_dsc::cfu::CfuUnit::new(PipelineVersion::V3);
+        let (sim, _) = unit.run_block_host(bp, &x);
+        anyhow::ensure!(sim.data == golden, "layer {tag}: CFU sim != PJRT golden");
+        println!("layer {tag}: CFU simulation bit-exact vs PJRT golden model ({} outputs)", golden.len());
+    }
+    Ok(())
+}
+
+fn usage() {
+    println!("fused-dsc {} — RISC-V TinyML fused-DSC accelerator reproduction", fused_dsc::version());
+    println!("usage: fused-dsc <command> [options]");
+    println!("  report <table1..table7|fig14|all>          regenerate paper evaluation");
+    println!("  run    [--backend v0|pg|v1|v2|v3|reference] [--layer 3rd|5th|8th|15th]");
+    println!("  serve  [--requests N] [--batch B] [--workers W] [--backend host-v3]");
+    println!("  golden [--layer TAG]                        CFU sim vs PJRT cross-check");
+    println!("  version");
+}
+
+fn main() -> Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&raw, &[]).map_err(anyhow::Error::msg)?;
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("report") => {
+            let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+            report::tables::print_report(which)?;
+        }
+        Some("run") => cmd_run(&args)?,
+        Some("serve") => cmd_serve(&args)?,
+        Some("golden") => cmd_golden(&args)?,
+        Some("version") => println!("fused-dsc {}", fused_dsc::version()),
+        _ => {
+            usage();
+            let _ = backbone(); // keep the link
+        }
+    }
+    Ok(())
+}

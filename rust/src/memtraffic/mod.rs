@@ -1,0 +1,103 @@
+//! Memory-traffic analytics: paper Eq. (1)/(2), Table VI, and the §IV-D
+//! 87% data-movement-reduction claim.
+//!
+//! Two sources of truth:
+//! * **analytical** — the paper's formulas evaluated over block geometry;
+//! * **measured** — the region-watch counters of an actual v0 ISS run
+//!   (loads/stores/cycles touching the F1/F2 buffers) and the CFU driver's
+//!   streamed-byte counts for the fused design.
+
+use crate::model::blocks::BlockConfig;
+
+/// Paper Eq. (1): layer-by-layer DRAM traffic — each intermediate map is
+/// written once and read once: `2*(H1*W1*C1) + 2*(H2*W2*C2)` bytes.
+pub fn traffic_dram_bytes(cfg: &BlockConfig) -> u64 {
+    2 * cfg.f1_bytes() + 2 * cfg.f2_bytes()
+}
+
+/// Paper Eq. (2): minimum on-chip buffer for a pipelined (non-fused)
+/// design: the full F1 map.
+pub fn buffer_sram_bytes(cfg: &BlockConfig) -> u64 {
+    cfg.f1_bytes()
+}
+
+/// Bytes the *fused* design moves for one block: IFMAP + the three filter
+/// sets + biases in, output map out.  No F1/F2 traffic at all (paper §IV-D:
+/// "Only the input feature map and three filters are read once, and the
+/// output feature map is written once").
+pub fn fused_traffic_bytes(cfg: &BlockConfig) -> u64 {
+    let input = cfg.h as u64 * cfg.w as u64 * cfg.cin as u64;
+    let weights = (cfg.cin as u64 * cfg.m as u64)
+        + (9 * cfg.m as u64)
+        + (cfg.m as u64 * cfg.cout as u64);
+    let biases = 4 * (2 * cfg.m as u64 + cfg.cout as u64);
+    let output = cfg.h_out() as u64 * cfg.w_out() as u64 * cfg.cout as u64;
+    input + weights + biases + output
+}
+
+/// Baseline traffic *including* the once-through input/weights/output (the
+/// denominator of the paper's ~87% reduction: total data movement).
+pub fn baseline_total_traffic_bytes(cfg: &BlockConfig) -> u64 {
+    fused_traffic_bytes(cfg) + traffic_dram_bytes(cfg)
+}
+
+/// The paper's headline reduction: fraction of total bytes eliminated by
+/// the fused dataflow.
+pub fn reduction_fraction(cfg: &BlockConfig) -> f64 {
+    let base = baseline_total_traffic_bytes(cfg) as f64;
+    let fused = fused_traffic_bytes(cfg) as f64;
+    1.0 - fused / base
+}
+
+/// Aggregate reduction over a set of blocks (the paper reports ~87% across
+/// the evaluated residual blocks).
+pub fn aggregate_reduction(cfgs: &[BlockConfig]) -> f64 {
+    let base: u64 = cfgs.iter().map(baseline_total_traffic_bytes).sum();
+    let fused: u64 = cfgs.iter().map(fused_traffic_bytes).sum();
+    1.0 - fused as f64 / base as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::blocks::evaluated_blocks;
+
+    #[test]
+    fn eq1_matches_paper_examples() {
+        // §III-A: the 5th block (20x20x96 intermediates) needs >153 KB of
+        // off-chip traffic and a 38.4 KB buffer.
+        let b5 = evaluated_blocks()[1].1;
+        assert_eq!(traffic_dram_bytes(&b5), 153_600);
+        assert_eq!(buffer_sram_bytes(&b5), 38_400);
+    }
+
+    #[test]
+    fn table6_data_moved_column() {
+        let expect = [307_200u64, 153_600, 57_600, 33_600];
+        for ((_, cfg), want) in evaluated_blocks().iter().zip(expect) {
+            assert_eq!(traffic_dram_bytes(cfg), want);
+        }
+    }
+
+    #[test]
+    fn reduction_near_87_percent() {
+        let cfgs: Vec<_> = evaluated_blocks().into_iter().map(|(_, c)| c).collect();
+        let r = aggregate_reduction(&cfgs);
+        assert!(r > 0.80 && r < 0.93, "aggregate reduction {r:.3} outside paper ballpark");
+    }
+
+    #[test]
+    fn fused_never_touches_intermediates() {
+        // The fused design's traffic contains *no* F1/F2 term at all: it is
+        // exactly input + weights + biases + output, so the intermediate
+        // traffic eliminated equals the whole of Eq. (1).
+        for (_, cfg) in evaluated_blocks() {
+            let input = (cfg.h * cfg.w * cfg.cin) as u64;
+            let output = (cfg.h_out() * cfg.w_out() * cfg.cout) as u64;
+            let weights = (cfg.cin * cfg.m + 9 * cfg.m + cfg.m * cfg.cout) as u64;
+            let biases = 4 * (2 * cfg.m + cfg.cout) as u64;
+            assert_eq!(fused_traffic_bytes(&cfg), input + weights + biases + output);
+            assert!(reduction_fraction(&cfg) > 0.4, "{cfg:?}");
+        }
+    }
+}

@@ -1,0 +1,156 @@
+//! Block topology — the Rust mirror of `python/compile/blocks.py`.
+//!
+//! The four *evaluated* blocks come from the paper (Table VI fixes
+//! F1 = F2 = 40×40×48 / 20×20×96 / 10×10×144 / 5×5×336; expansion factor 6
+//! recovers the channel counts).  The synthetic backbone chains them with
+//! stride-2 downsampling blocks so the paper's 1-based block indices
+//! (3, 5, 8, 15) land on the paper's shapes.  Any change here must be
+//! mirrored in python; the QMW `model.cfg` tensor is compared against this
+//! table by the integration tests.
+
+/// One inverted-residual block: Expansion 1×1 → Depthwise 3×3 → Projection 1×1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockConfig {
+    pub h: u32,
+    pub w: u32,
+    pub cin: u32,
+    pub m: u32,
+    pub cout: u32,
+    pub stride: u32,
+    pub residual: bool,
+}
+
+impl BlockConfig {
+    pub const fn new(h: u32, w: u32, cin: u32, m: u32, cout: u32, stride: u32, residual: bool) -> Self {
+        Self { h, w, cin, m, cout, stride, residual }
+    }
+
+    pub fn h_out(&self) -> u32 {
+        self.h.div_ceil(self.stride)
+    }
+
+    pub fn w_out(&self) -> u32 {
+        self.w.div_ceil(self.stride)
+    }
+
+    /// F1 intermediate feature-map bytes (expansion output).
+    pub fn f1_bytes(&self) -> u64 {
+        self.h as u64 * self.w as u64 * self.m as u64
+    }
+
+    /// F2 intermediate feature-map bytes (depthwise output).
+    pub fn f2_bytes(&self) -> u64 {
+        self.h_out() as u64 * self.w_out() as u64 * self.m as u64
+    }
+
+    /// Total MAC count (expansion + depthwise + projection).
+    pub fn macs(&self) -> u64 {
+        let ex = self.h as u64 * self.w as u64 * self.cin as u64 * self.m as u64;
+        let hw_out = self.h_out() as u64 * self.w_out() as u64;
+        ex + hw_out * 9 * self.m as u64 + hw_out * self.m as u64 * self.cout as u64
+    }
+
+    pub fn as_ints(&self) -> [i32; 7] {
+        [
+            self.h as i32,
+            self.w as i32,
+            self.cin as i32,
+            self.m as i32,
+            self.cout as i32,
+            self.stride as i32,
+            self.residual as i32,
+        ]
+    }
+
+    pub fn validate(&self) {
+        assert!(self.cin % 8 == 0 && self.m % 8 == 0 && self.cout % 8 == 0);
+        assert!(self.stride == 1 || self.stride == 2);
+        if self.residual {
+            assert!(self.stride == 1 && self.cin == self.cout);
+        }
+    }
+}
+
+/// Classifier head width (multiple of 8), mirroring python's NUM_CLASSES.
+pub const NUM_CLASSES: u32 = 16;
+
+/// The paper's evaluated layers: (1-based backbone index, tag).
+pub const EVALUATED: [(usize, &str); 4] = [(3, "3rd"), (5, "5th"), (8, "8th"), (15, "15th")];
+
+/// The 16-block "mnv2-edge" backbone (python `blocks.backbone()`).
+pub fn backbone() -> Vec<BlockConfig> {
+    let b = BlockConfig::new;
+    vec![
+        b(80, 80, 8, 48, 8, 2, false),    // 1  downsample 80->40
+        b(40, 40, 8, 48, 8, 1, true),     // 2
+        b(40, 40, 8, 48, 8, 1, true),     // 3  <- paper "3rd layer"
+        b(40, 40, 8, 48, 16, 2, false),   // 4  downsample 40->20
+        b(20, 20, 16, 96, 16, 1, true),   // 5  <- paper "5th layer"
+        b(20, 20, 16, 96, 16, 1, true),   // 6
+        b(20, 20, 16, 96, 24, 2, false),  // 7  downsample 20->10
+        b(10, 10, 24, 144, 24, 1, true),  // 8  <- paper "8th layer"
+        b(10, 10, 24, 144, 24, 1, true),  // 9
+        b(10, 10, 24, 144, 32, 2, false), // 10 downsample 10->5
+        b(5, 5, 32, 192, 32, 1, true),    // 11
+        b(5, 5, 32, 192, 40, 1, false),   // 12
+        b(5, 5, 40, 240, 48, 1, false),   // 13
+        b(5, 5, 48, 288, 56, 1, false),   // 14
+        b(5, 5, 56, 336, 56, 1, true),    // 15 <- paper "15th layer"
+        b(5, 5, 56, 336, 56, 1, true),    // 16
+    ]
+}
+
+/// The evaluated blocks keyed by paper tag.
+pub fn evaluated_blocks() -> Vec<(&'static str, BlockConfig)> {
+    let bb = backbone();
+    EVALUATED.iter().map(|&(idx, tag)| (tag, bb[idx - 1])).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backbone_shapes_chain() {
+        let bb = backbone();
+        for (i, pair) in bb.windows(2).enumerate() {
+            assert_eq!(pair[0].h_out(), pair[1].h, "block {i}");
+            assert_eq!(pair[0].w_out(), pair[1].w, "block {i}");
+            assert_eq!(pair[0].cout, pair[1].cin, "block {i}");
+        }
+        for b in &bb {
+            b.validate();
+        }
+    }
+
+    #[test]
+    fn evaluated_blocks_match_paper_table6() {
+        // Table VI "Data Moved" = 2*F1 + 2*F2 bytes.
+        let expect = [
+            ("3rd", 307_200u64),
+            ("5th", 153_600),
+            ("8th", 57_600),
+            ("15th", 33_600),
+        ];
+        for ((tag, cfg), (etag, bytes)) in evaluated_blocks().iter().zip(expect) {
+            assert_eq!(*tag, etag);
+            assert_eq!(2 * cfg.f1_bytes() + 2 * cfg.f2_bytes(), bytes, "{tag}");
+        }
+    }
+
+    #[test]
+    fn evaluated_geometry_from_paper() {
+        let ev = evaluated_blocks();
+        assert_eq!(ev[0].1, BlockConfig::new(40, 40, 8, 48, 8, 1, true));
+        assert_eq!(ev[1].1, BlockConfig::new(20, 20, 16, 96, 16, 1, true));
+        assert_eq!(ev[2].1, BlockConfig::new(10, 10, 24, 144, 24, 1, true));
+        assert_eq!(ev[3].1, BlockConfig::new(5, 5, 56, 336, 56, 1, true));
+    }
+
+    #[test]
+    fn macs_formula() {
+        let b = BlockConfig::new(4, 4, 8, 16, 8, 1, false);
+        // ex 4*4*8*16 = 2048, dw 4*4*9*16 = 2304, pr 4*4*16*8 = 2048
+        assert_eq!(b.macs(), 2048 + 2304 + 2048);
+    }
+}

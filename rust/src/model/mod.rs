@@ -1,0 +1,11 @@
+//! The MobileNetV2-style model: block topology, deterministic synthetic
+//! weights (bit-identical with `python/compile/weights.py`), and a pure-Rust
+//! layer-by-layer reference implementation mirroring
+//! `python/compile/kernels/ref.py`.
+
+pub mod blocks;
+pub mod refimpl;
+pub mod weights;
+
+pub use blocks::{backbone, evaluated_blocks, BlockConfig, EVALUATED, NUM_CLASSES};
+pub use weights::{BlockParams, HeadParams, ModelParams};

@@ -1,0 +1,284 @@
+//! Deterministic synthetic weight & quant-param generation — bit-identical
+//! with `python/compile/weights.py` (same splitmix64 streams, same derived
+//! quantization parameters).  The integration suite re-serializes this
+//! generator's output and compares it byte-for-byte against the
+//! python-written `artifacts/model.qmw`, pinning the two languages together.
+
+use anyhow::{bail, Context, Result};
+
+use crate::quant::{derive_stage_scale, quantize_multiplier, StageQuant};
+use crate::tensor::io::{QmwFile, QmwTensor};
+use crate::util::rng::SplitMix64;
+
+use super::blocks::{backbone, BlockConfig, NUM_CLASSES};
+
+/// INT8 weights uniform in [-127, 127] (mirrors `weights.gen_i8`).
+pub fn gen_i8(name: &str, n: usize) -> Vec<i8> {
+    let mut rng = SplitMix64::for_tensor(name);
+    (0..n).map(|_| (rng.below(255) as i64 - 127) as i8).collect()
+}
+
+/// Biases in [-2048, 2048] (mirrors `weights.gen_bias`).
+pub fn gen_bias(name: &str, n: usize) -> Vec<i32> {
+    let mut rng = SplitMix64::for_tensor(name);
+    (0..n).map(|_| (rng.below(4097) as i64 - 2048) as i32).collect()
+}
+
+/// Zero points in [-8, 8] (mirrors `weights.gen_zp`).
+pub fn gen_zp(name: &str) -> i32 {
+    let mut rng = SplitMix64::for_tensor(name);
+    (rng.below(17) as i64 - 8) as i32
+}
+
+/// Synthetic activation input (mirrors `weights.gen_input`).
+pub fn gen_input(name: &str, n: usize, zp: i32) -> Vec<i8> {
+    let mut rng = SplitMix64::for_tensor(name);
+    (0..n)
+        .map(|_| ((rng.below(200) as i64 - 100 + zp as i64).clamp(-128, 127)) as i8)
+        .collect()
+}
+
+/// All tensors + quant params for one block (mirrors python `BlockParams`).
+#[derive(Debug, Clone)]
+pub struct BlockParams {
+    pub cfg: BlockConfig,
+    pub ex_w: Vec<i8>,  // (Cin, M)
+    pub ex_b: Vec<i32>, // (M,)
+    pub dw_w: Vec<i8>,  // (3, 3, M)
+    pub dw_b: Vec<i32>, // (M,)
+    pub pr_w: Vec<i8>,  // (M, Cout)
+    pub pr_b: Vec<i32>, // (Cout,)
+    pub ex_q: StageQuant,
+    pub dw_q: StageQuant,
+    pub pr_q: StageQuant,
+}
+
+impl BlockParams {
+    pub fn zp_in(&self) -> i32 {
+        self.ex_q.zp_in
+    }
+
+    pub fn zp_out(&self) -> i32 {
+        self.pr_q.zp_out
+    }
+
+    /// The i32[12] `qp` tensor layout shared with python (`qp_words`).
+    pub fn qp_words(&self) -> [i32; 12] {
+        [
+            self.ex_q.multiplier,
+            self.ex_q.shift as i32,
+            self.dw_q.multiplier,
+            self.dw_q.shift as i32,
+            self.pr_q.multiplier,
+            self.pr_q.shift as i32,
+            self.ex_q.zp_in,
+            self.ex_q.zp_out,
+            self.dw_q.zp_out,
+            self.pr_q.zp_out,
+            self.ex_q.relu as i32,
+            self.pr_q.relu as i32,
+        ]
+    }
+}
+
+/// Classifier head parameters.
+#[derive(Debug, Clone)]
+pub struct HeadParams {
+    pub fc_w: Vec<i8>,  // (C, NUM_CLASSES)
+    pub fc_b: Vec<i32>, // (NUM_CLASSES,)
+    pub zp_in: i32,
+}
+
+/// Whole-model parameters.
+#[derive(Debug, Clone)]
+pub struct ModelParams {
+    pub blocks: Vec<BlockParams>,
+    pub head: HeadParams,
+}
+
+/// Mirrors python `make_block_params` (idx is the 1-based block number).
+pub fn make_block_params(idx: usize, cfg: BlockConfig, zp_in: i32) -> BlockParams {
+    let p = format!("b{idx}");
+    let zp_f1 = gen_zp(&format!("{p}.f1.zp"));
+    let zp_f2 = gen_zp(&format!("{p}.f2.zp"));
+    let zp_out = if cfg.residual { zp_in } else { gen_zp(&format!("{p}.out.zp")) };
+
+    let (ex_mult, ex_shift) = quantize_multiplier(derive_stage_scale(cfg.cin));
+    let (dw_mult, dw_shift) = quantize_multiplier(derive_stage_scale(9));
+    let (pr_mult, pr_shift) = quantize_multiplier(derive_stage_scale(cfg.m));
+
+    let (cin, m, cout) = (cfg.cin as usize, cfg.m as usize, cfg.cout as usize);
+    BlockParams {
+        cfg,
+        ex_w: gen_i8(&format!("{p}.ex.w"), cin * m),
+        ex_b: gen_bias(&format!("{p}.ex.b"), m),
+        dw_w: gen_i8(&format!("{p}.dw.w"), 9 * m),
+        dw_b: gen_bias(&format!("{p}.dw.b"), m),
+        pr_w: gen_i8(&format!("{p}.pr.w"), m * cout),
+        pr_b: gen_bias(&format!("{p}.pr.b"), cout),
+        ex_q: StageQuant { multiplier: ex_mult, shift: ex_shift, zp_in, zp_out: zp_f1, relu: true },
+        dw_q: StageQuant { multiplier: dw_mult, shift: dw_shift, zp_in: zp_f1, zp_out: zp_f2, relu: true },
+        pr_q: StageQuant { multiplier: pr_mult, shift: pr_shift, zp_in: zp_f2, zp_out, relu: false },
+    }
+}
+
+/// Mirrors python `make_model_params` (zero points chain across blocks).
+pub fn make_model_params(cfgs: Option<Vec<BlockConfig>>) -> ModelParams {
+    let cfgs = cfgs.unwrap_or_else(backbone);
+    let mut zp = gen_zp("act0.zp");
+    let mut blocks = Vec::with_capacity(cfgs.len());
+    for (i, cfg) in cfgs.iter().enumerate() {
+        let bp = make_block_params(i + 1, *cfg, zp);
+        zp = bp.zp_out();
+        blocks.push(bp);
+    }
+    let cout = cfgs.last().unwrap().cout as usize;
+    let head = HeadParams {
+        fc_w: gen_i8("head.fc.w", cout * NUM_CLASSES as usize),
+        fc_b: gen_bias("head.fc.b", NUM_CLASSES as usize),
+        zp_in: zp,
+    };
+    ModelParams { blocks, head }
+}
+
+/// Serialize to the QMW tensor list in python's emission order (so the byte
+/// streams can be compared exactly).
+pub fn to_qmw_tensors(params: &ModelParams) -> Vec<(String, QmwTensor)> {
+    let mut out: Vec<(String, QmwTensor)> = Vec::new();
+    let mut cfg_words: Vec<i32> = vec![params.blocks.len() as i32];
+    for bp in &params.blocks {
+        cfg_words.extend(bp.cfg.as_ints());
+    }
+    out.push(("model.cfg".into(), QmwTensor::I32 { dims: vec![cfg_words.len()], data: cfg_words }));
+    for (i, bp) in params.blocks.iter().enumerate() {
+        let p = format!("b{}", i + 1);
+        let (cin, m, cout) = (bp.cfg.cin as usize, bp.cfg.m as usize, bp.cfg.cout as usize);
+        out.push((format!("{p}.ex.w"), QmwTensor::I8 { dims: vec![cin, m], data: bp.ex_w.clone() }));
+        out.push((format!("{p}.ex.b"), QmwTensor::I32 { dims: vec![m], data: bp.ex_b.clone() }));
+        out.push((format!("{p}.dw.w"), QmwTensor::I8 { dims: vec![3, 3, m], data: bp.dw_w.clone() }));
+        out.push((format!("{p}.dw.b"), QmwTensor::I32 { dims: vec![m], data: bp.dw_b.clone() }));
+        out.push((format!("{p}.pr.w"), QmwTensor::I8 { dims: vec![m, cout], data: bp.pr_w.clone() }));
+        out.push((format!("{p}.pr.b"), QmwTensor::I32 { dims: vec![cout], data: bp.pr_b.clone() }));
+        out.push((format!("{p}.qp"), QmwTensor::I32 { dims: vec![12], data: bp.qp_words().to_vec() }));
+    }
+    out.push((
+        "head.fc.w".into(),
+        QmwTensor::I8 {
+            dims: vec![params.blocks.last().unwrap().cfg.cout as usize, NUM_CLASSES as usize],
+            data: params.head.fc_w.clone(),
+        },
+    ));
+    out.push((
+        "head.fc.b".into(),
+        QmwTensor::I32 { dims: vec![NUM_CLASSES as usize], data: params.head.fc_b.clone() },
+    ));
+    out.push(("head.qp".into(), QmwTensor::I32 { dims: vec![1], data: vec![params.head.zp_in] }));
+    out
+}
+
+/// Reconstruct [`ModelParams`] from a parsed QMW artifact.
+pub fn from_qmw(qmw: &QmwFile) -> Result<ModelParams> {
+    let cfg = qmw.get("model.cfg").context("missing model.cfg")?.as_i32()?;
+    let n = cfg[0] as usize;
+    if cfg.len() != 1 + 7 * n {
+        bail!("model.cfg length mismatch");
+    }
+    let mut blocks = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = &cfg[1 + 7 * i..8 + 7 * i];
+        let bc = BlockConfig::new(
+            c[0] as u32, c[1] as u32, c[2] as u32, c[3] as u32, c[4] as u32, c[5] as u32,
+            c[6] != 0,
+        );
+        bc.validate();
+        let p = format!("b{}", i + 1);
+        let get_i8 = |suffix: &str| -> Result<Vec<i8>> {
+            Ok(qmw.get(&format!("{p}.{suffix}"))
+                .with_context(|| format!("missing {p}.{suffix}"))?
+                .as_i8()?
+                .to_vec())
+        };
+        let get_i32 = |suffix: &str| -> Result<Vec<i32>> {
+            Ok(qmw.get(&format!("{p}.{suffix}"))
+                .with_context(|| format!("missing {p}.{suffix}"))?
+                .as_i32()?
+                .to_vec())
+        };
+        let qp = get_i32("qp")?;
+        if qp.len() != 12 {
+            bail!("{p}.qp must have 12 words");
+        }
+        blocks.push(BlockParams {
+            cfg: bc,
+            ex_w: get_i8("ex.w")?,
+            ex_b: get_i32("ex.b")?,
+            dw_w: get_i8("dw.w")?,
+            dw_b: get_i32("dw.b")?,
+            pr_w: get_i8("pr.w")?,
+            pr_b: get_i32("pr.b")?,
+            ex_q: StageQuant { multiplier: qp[0], shift: qp[1] as u32, zp_in: qp[6], zp_out: qp[7], relu: qp[10] != 0 },
+            dw_q: StageQuant { multiplier: qp[2], shift: qp[3] as u32, zp_in: qp[7], zp_out: qp[8], relu: qp[10] != 0 },
+            pr_q: StageQuant { multiplier: qp[4], shift: qp[5] as u32, zp_in: qp[8], zp_out: qp[9], relu: qp[11] != 0 },
+        });
+    }
+    let head = HeadParams {
+        fc_w: qmw.get("head.fc.w").context("missing head.fc.w")?.as_i8()?.to_vec(),
+        fc_b: qmw.get("head.fc.b").context("missing head.fc.b")?.as_i32()?.to_vec(),
+        zp_in: qmw.get("head.qp").context("missing head.qp")?.as_i32()?[0],
+    };
+    Ok(ModelParams { blocks, head })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::io::{parse_qmw, serialize_qmw};
+
+    #[test]
+    fn generation_is_deterministic() {
+        assert_eq!(gen_i8("b3.ex.w", 64), gen_i8("b3.ex.w", 64));
+        assert_ne!(gen_i8("b3.ex.w", 64), gen_i8("b4.ex.w", 64));
+    }
+
+    #[test]
+    fn value_ranges() {
+        let w = gen_i8("t", 4096);
+        assert!(w.iter().all(|&v| (-127..=127).contains(&v)));
+        let b = gen_bias("t", 4096);
+        assert!(b.iter().all(|&v| (-2048..=2048).contains(&v)));
+        for n in ["a", "b", "c", "d"] {
+            assert!((-8..=8).contains(&gen_zp(n)));
+        }
+    }
+
+    #[test]
+    fn residual_blocks_share_zero_point_and_chain() {
+        let p = make_model_params(None);
+        for bp in &p.blocks {
+            if bp.cfg.residual {
+                assert_eq!(bp.zp_in(), bp.zp_out());
+            }
+        }
+        for pair in p.blocks.windows(2) {
+            assert_eq!(pair[0].zp_out(), pair[1].zp_in());
+        }
+        assert_eq!(p.head.zp_in, p.blocks.last().unwrap().zp_out());
+    }
+
+    #[test]
+    fn qmw_roundtrip_through_serializer() {
+        let p = make_model_params(None);
+        let tensors = to_qmw_tensors(&p);
+        let blob = serialize_qmw(&tensors);
+        let parsed = parse_qmw(&blob).unwrap();
+        let back = from_qmw(&parsed).unwrap();
+        assert_eq!(back.blocks.len(), p.blocks.len());
+        for (a, b) in p.blocks.iter().zip(&back.blocks) {
+            assert_eq!(a.cfg, b.cfg);
+            assert_eq!(a.ex_w, b.ex_w);
+            assert_eq!(a.qp_words(), b.qp_words());
+        }
+        assert_eq!(p.head.fc_w, back.head.fc_w);
+        assert_eq!(p.head.zp_in, back.head.zp_in);
+    }
+}

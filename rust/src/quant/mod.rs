@@ -1,0 +1,187 @@
+//! TFLite-style INT8 quantization — the Rust half of the bit-exact
+//! cross-language spec (see `python/compile/quantize.py` for the normative
+//! docstring; the two files implement identical arithmetic and are pinned
+//! together by shared test vectors and the PJRT golden cross-check).
+//!
+//! Round-half-up / floor-shift variant of gemmlowp:
+//!   `srdhm(a, m)       = (a as i64 * m as i64 + 2^30) >> 31`
+//!   `rdiv_pot(x, e)    = (x wrapping+ 2^(e-1)) >> e`
+//!   `requantize(acc)   = clamp(rdiv_pot(srdhm(acc, m), shift) + zp_out)`
+
+pub const QMIN: i32 = -128;
+pub const QMAX: i32 = 127;
+
+/// SaturatingRoundingDoublingHighMul, round-half-up floor-shift variant.
+/// `multiplier` is always positive here, so gemmlowp's saturation corner
+/// (a == b == i32::MIN) cannot occur and is omitted from the spec.
+#[inline(always)]
+pub fn srdhm(a: i32, multiplier: i32) -> i32 {
+    (((a as i64) * (multiplier as i64) + (1i64 << 30)) >> 31) as i32
+}
+
+/// Round-half-up arithmetic right shift with *wrapping* add (RV32 `add`
+/// semantics — the spec is total even though requant inputs never approach
+/// i32::MAX).
+#[inline(always)]
+pub fn rounding_rshift(x: i32, exponent: u32) -> i32 {
+    if exponent == 0 {
+        x
+    } else {
+        x.wrapping_add(1 << (exponent - 1)) >> exponent
+    }
+}
+
+/// Encode a real multiplier in (0, 1) as (quantized_multiplier in
+/// [2^30, 2^31), right_shift). Identical algorithm to
+/// `python/compile/quantize.py::quantize_multiplier`.
+pub fn quantize_multiplier(real: f64) -> (i32, u32) {
+    assert!(real > 0.0 && real < 1.0, "real multiplier out of range: {real}");
+    let mut shift = 0u32;
+    let mut m = real;
+    while m < 0.5 {
+        m *= 2.0;
+        shift += 1;
+    }
+    let mut q = (m * (1u64 << 31) as f64).round() as i64;
+    if q == 1i64 << 31 {
+        q /= 2;
+        shift -= 1;
+    }
+    debug_assert!((1i64 << 30) <= q && q < (1i64 << 31));
+    (q as i32, shift)
+}
+
+/// Synthetic per-stage requant scale from the accumulation width — the same
+/// pure function of layer dimensions as
+/// `python/compile/quantize.py::derive_stage_scale`.
+pub fn derive_stage_scale(num_acc_terms: u32) -> f64 {
+    let acc_std = 5418.0 * (num_acc_terms as f64).sqrt();
+    (40.0 / acc_std).clamp(1e-9, 0.999_999)
+}
+
+/// Requantization parameters for one convolution stage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StageQuant {
+    pub multiplier: i32,
+    pub shift: u32,
+    pub zp_in: i32,
+    pub zp_out: i32,
+    pub relu: bool,
+}
+
+impl StageQuant {
+    /// Derive from layer dims, mirroring `weights.py::make_block_params`.
+    pub fn derived(num_acc_terms: u32, zp_in: i32, zp_out: i32, relu: bool) -> Self {
+        let (multiplier, shift) = quantize_multiplier(derive_stage_scale(num_acc_terms));
+        Self { multiplier, shift, zp_in, zp_out, relu }
+    }
+
+    /// int32 accumulator -> int8 output.
+    #[inline(always)]
+    pub fn requantize(&self, acc: i32) -> i8 {
+        let q = rounding_rshift(srdhm(acc, self.multiplier), self.shift) + self.zp_out;
+        let lo = if self.relu { self.zp_out.max(QMIN) } else { QMIN };
+        q.clamp(lo, QMAX) as i8
+    }
+}
+
+/// Quantized residual add (block input/output share scale+zp by
+/// construction): `clamp(proj + x - zp)`.
+#[inline(always)]
+pub fn residual_add(proj_q: i8, input_q: i8, zp: i32) -> i8 {
+    (proj_q as i32 + input_q as i32 - zp).clamp(QMIN, QMAX) as i8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check;
+    use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn requantize_known_vectors() {
+        // Pinned against python/tests/test_quantize.py::test_requantize_known_vectors.
+        let sq = StageQuant { multiplier: 1 << 30, shift: 0, zp_in: 0, zp_out: 0, relu: false };
+        assert_eq!(sq.requantize(200), 100);
+        assert_eq!(sq.requantize(-200), -100);
+        assert_eq!(sq.requantize(3), 2); // 1.5 rounds half-up
+        assert_eq!(sq.requantize(-3), -1); // -1.5 rounds half-up
+        assert_eq!(sq.requantize(1000), 127); // clamp
+
+        let sq2 = StageQuant { multiplier: 0x6000_0000, shift: 2, zp_in: 0, zp_out: 5, relu: true };
+        assert_eq!(sq2.requantize(100), 24);
+        assert_eq!(sq2.requantize(-1000), 5); // relu clamps to zp_out
+    }
+
+    #[test]
+    fn srdhm_matches_wide_reference() {
+        check("srdhm vs i128 reference", |g| {
+            let a = g.i32(i32::MIN, i32::MAX);
+            let m = g.i32(1 << 30, i32::MAX);
+            let want = ((a as i128 * m as i128 + (1 << 30)) >> 31) as i32;
+            crate::prop_assert_eq!(srdhm(a, m), want);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rounding_rshift_matches_reference() {
+        check("rounding_rshift vs wide reference", |g| {
+            let x = g.i32(i32::MIN, i32::MAX);
+            let e = g.i32(0, 24) as u32;
+            let want = if e == 0 {
+                x
+            } else {
+                // wrapping i32 add, then arithmetic shift
+                (x.wrapping_add(1 << (e - 1)) as i64 >> e) as i32
+            };
+            crate::prop_assert_eq!(rounding_rshift(x, e), want);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn quantize_multiplier_roundtrip() {
+        let mut rng = SplitMix64::new(11);
+        for _ in 0..300 {
+            let real = (rng.f64() * 0.998 + 1e-6).clamp(1e-8, 0.999);
+            let (m, s) = quantize_multiplier(real);
+            assert!((1 << 30) <= m as i64 && (m as i64) < (1 << 31));
+            let approx = m as f64 / (1u64 << (31 + s)) as f64;
+            assert!((approx - real).abs() / real < 1e-6, "real={real} approx={approx}");
+        }
+    }
+
+    #[test]
+    fn requantize_respects_relu_floor_and_clamp() {
+        check("requantize bounds", |g| {
+            let sq = StageQuant {
+                multiplier: g.i32(1 << 30, i32::MAX),
+                shift: g.i32(0, 20) as u32,
+                zp_in: 0,
+                zp_out: g.i32(-16, 16),
+                relu: g.bool(),
+            };
+            let out = sq.requantize(g.i32(-1_000_000, 1_000_000)) as i32;
+            crate::prop_assert!(out >= QMIN && out <= QMAX);
+            if sq.relu {
+                crate::prop_assert!(out >= sq.zp_out, "relu floor violated: {out} < {}", sq.zp_out);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn residual_add_clamps() {
+        assert_eq!(residual_add(100, 100, -3), 127);
+        assert_eq!(residual_add(-100, -100, -3), -128);
+        assert_eq!(residual_add(5, -3, -3), 5);
+    }
+
+    #[test]
+    fn derive_stage_scale_matches_python_formula() {
+        // spot values; python side computes the same f64 expression
+        let s = derive_stage_scale(9);
+        assert!((s - 40.0 / (5418.0 * 3.0)).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,116 @@
+//! Shared measurement collection for the report tables: run every evaluated
+//! layer through all execution paths once and reuse the numbers across
+//! tables (v0 runs are tens of millions of simulated cycles, so they are
+//! collected in parallel on the thread pool).
+
+use anyhow::Result;
+
+use crate::baseline::cfu_playground::run_block_cfu_playground;
+use crate::baseline::run_block_v0;
+use crate::cfu::PipelineVersion;
+use crate::cpu::core::RegionWatch;
+use crate::driver::run_block_fused;
+use crate::model::blocks::{evaluated_blocks, BlockConfig};
+use crate::model::weights::{gen_input, make_block_params, BlockParams};
+use crate::tensor::TensorI8;
+use crate::util::pool::ThreadPool;
+
+/// Everything measured for one evaluated layer.
+#[derive(Debug, Clone)]
+pub struct LayerMeasurement {
+    pub tag: &'static str,
+    pub cfg: BlockConfig,
+    pub v0_cycles: u64,
+    pub pg_cycles: u64,
+    pub fused_cycles: [u64; 3], // v1, v2, v3
+    pub f1_watch: RegionWatch,
+    pub f2_watch: RegionWatch,
+}
+
+impl LayerMeasurement {
+    pub fn speedup(&self, version_idx: usize) -> f64 {
+        self.v0_cycles as f64 / self.fused_cycles[version_idx] as f64
+    }
+
+    /// Cycles the baseline spends moving intermediate feature maps
+    /// (Table VI "Intermediate Access Cycles"), measured exactly from the
+    /// region watches on the F1/F2 buffers.
+    pub fn intermediate_access_cycles(&self) -> u64 {
+        self.f1_watch.cycles + self.f2_watch.cycles
+    }
+
+    pub fn intermediate_bytes_moved(&self) -> u64 {
+        self.f1_watch.bytes + self.f2_watch.bytes
+    }
+}
+
+/// All measurements for the report.
+#[derive(Debug, Clone)]
+pub struct MeasuredData {
+    pub layers: Vec<LayerMeasurement>,
+}
+
+fn measure_layer(idx: usize, tag: &'static str, cfg: BlockConfig) -> Result<LayerMeasurement> {
+    let bp: BlockParams = make_block_params(idx, cfg, -3);
+    let x = TensorI8::from_vec(
+        &[cfg.h as usize, cfg.w as usize, cfg.cin as usize],
+        gen_input("report.x", (cfg.h * cfg.w * cfg.cin) as usize, bp.zp_in()),
+    );
+    let v0 = run_block_v0(&bp, &x)?;
+    let pg = run_block_cfu_playground(&bp, &x)?;
+    let mut fused = [0u64; 3];
+    for (i, v) in PipelineVersion::ALL.iter().enumerate() {
+        let r = run_block_fused(&bp, &x, *v)?;
+        // Correctness is asserted on every report run, not assumed.
+        anyhow::ensure!(r.out.data == v0.out.data, "{tag}/{}: output mismatch", v.name());
+        fused[i] = r.cycles;
+    }
+    anyhow::ensure!(pg.out.data == v0.out.data, "{tag}/pg: output mismatch");
+    Ok(LayerMeasurement {
+        tag,
+        cfg,
+        v0_cycles: v0.cycles,
+        pg_cycles: pg.cycles,
+        fused_cycles: fused,
+        f1_watch: v0.f1_watch,
+        f2_watch: v0.f2_watch,
+    })
+}
+
+/// Measure all four evaluated layers (in parallel).
+pub fn collect_measurements() -> Result<MeasuredData> {
+    let pool = ThreadPool::new(4);
+    let jobs: Vec<(usize, &'static str, BlockConfig)> = evaluated_blocks()
+        .into_iter()
+        .map(|(tag, cfg)| {
+            let idx = match tag {
+                "3rd" => 3,
+                "5th" => 5,
+                "8th" => 8,
+                _ => 15,
+            };
+            (idx, tag, cfg)
+        })
+        .collect();
+    let results = pool.map(jobs, |(idx, tag, cfg)| measure_layer(idx, tag, cfg));
+    let layers = results.into_iter().collect::<Result<Vec<_>>>()?;
+    Ok(MeasuredData { layers })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_one_small_layer() {
+        // Full evaluated layers are exercised by the benches; unit-test the
+        // plumbing on a small block.
+        let m = measure_layer(2, "3rd", BlockConfig::new(6, 6, 8, 16, 8, 1, true)).unwrap();
+        assert!(m.v0_cycles > m.pg_cycles);
+        assert!(m.pg_cycles > m.fused_cycles[2]);
+        assert!(m.fused_cycles[0] >= m.fused_cycles[1]);
+        assert!(m.speedup(2) > 1.0);
+        assert!(m.intermediate_access_cycles() > 0);
+        assert!(m.intermediate_bytes_moved() > 0);
+    }
+}

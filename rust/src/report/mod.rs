@@ -1,0 +1,9 @@
+//! The evaluation-report harness: regenerates every table and figure of the
+//! paper's §IV from the simulator + cost models, printing paper-reported
+//! values next to ours (DESIGN.md §4 maps each experiment to its modules).
+
+pub mod data;
+pub mod tables;
+
+pub use data::{collect_measurements, LayerMeasurement, MeasuredData};
+pub use tables::{print_all, print_report};

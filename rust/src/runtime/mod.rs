@@ -1,0 +1,94 @@
+//! PJRT golden-model runtime: load the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them on the XLA CPU client.
+//!
+//! This is the request-path bridge of the three-layer architecture — python
+//! never runs at inference time.  The coordinator uses it both as a serving
+//! backend ("golden" numerics) and to cross-check the CFU simulator
+//! bit-exactly (the `golden_cross_check` integration suite).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A compiled HLO module ready to execute.
+pub struct HloExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Input tensor element count (i32 lanes).
+    pub in_len: usize,
+    pub name: String,
+}
+
+/// Shared PJRT CPU client (compilation context for all artifacts).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text artifact.
+    pub fn load_hlo(&self, path: &Path, in_len: usize) -> Result<HloExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().context("non-utf8 path")?)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(HloExecutable {
+            exe,
+            in_len,
+            name: path.file_stem().unwrap_or_default().to_string_lossy().into_owned(),
+        })
+    }
+}
+
+impl HloExecutable {
+    /// Execute with int8 data carried in i32 lanes (the artifact boundary
+    /// convention; see python/compile/model.py).  `dims` is the input shape.
+    pub fn run_i32(&self, input: &[i32], dims: &[i64]) -> Result<Vec<i32>> {
+        anyhow::ensure!(
+            input.len() == self.in_len,
+            "{}: input length {} != expected {}",
+            self.name,
+            input.len(),
+            self.in_len
+        );
+        let lit = xla::Literal::vec1(input).reshape(dims)?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<i32>()?)
+    }
+
+    /// Convenience: int8 in / int8 out via the i32 boundary.
+    pub fn run_i8(&self, input: &[i8], dims: &[i64]) -> Result<Vec<i8>> {
+        let boxed: Vec<i32> = input.iter().map(|&v| v as i32).collect();
+        let out = self.run_i32(&boxed, dims)?;
+        Ok(out
+            .into_iter()
+            .map(|v| {
+                debug_assert!((-128..=127).contains(&v), "non-i8 value {v} from {}", self.name);
+                v as i8
+            })
+            .collect())
+    }
+}
+
+/// Locate an artifact file, erroring with a actionable message.
+pub fn artifact_path(name: &str) -> Result<std::path::PathBuf> {
+    let path = crate::artifacts_dir().join(name);
+    anyhow::ensure!(
+        path.exists(),
+        "artifact {} not found — run `make artifacts` first",
+        path.display()
+    );
+    Ok(path)
+}

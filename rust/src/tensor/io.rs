@@ -1,0 +1,218 @@
+//! QMW ("Quantized Model Weights") binary format reader/writer.
+//!
+//! The format is defined in `python/compile/weights.py` (the writer on the
+//! compile path).  The Rust side both *reads* the artifact (runtime path)
+//! and can *re-generate* it from the shared deterministic generator
+//! ([`crate::model::weights`]); an integration test asserts the two byte
+//! streams are identical, pinning the languages together.
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic  b"QMW1"
+//! u32    n_tensors
+//! repeat n_tensors:
+//!     u16   name_len | name | u8 dtype (0=i8, 1=i32) | u8 ndim
+//!     u32   dims[ndim] | data (row-major)
+//! ```
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// A parsed QMW entry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum QmwTensor {
+    I8 { dims: Vec<usize>, data: Vec<i8> },
+    I32 { dims: Vec<usize>, data: Vec<i32> },
+}
+
+impl QmwTensor {
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            QmwTensor::I8 { dims, .. } | QmwTensor::I32 { dims, .. } => dims,
+        }
+    }
+
+    pub fn as_i8(&self) -> Result<&[i8]> {
+        match self {
+            QmwTensor::I8 { data, .. } => Ok(data),
+            _ => bail!("expected i8 tensor"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            QmwTensor::I32 { data, .. } => Ok(data),
+            _ => bail!("expected i32 tensor"),
+        }
+    }
+}
+
+/// Ordered tensor map (BTreeMap keeps deterministic iteration for tests).
+pub type QmwFile = BTreeMap<String, QmwTensor>;
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.off + n > self.buf.len() {
+            bail!("QMW truncated at offset {} (need {n} bytes)", self.off);
+        }
+        let s = &self.buf[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+}
+
+/// Parse a QMW byte stream.
+pub fn parse_qmw(buf: &[u8]) -> Result<QmwFile> {
+    let mut c = Cursor { buf, off: 0 };
+    if c.take(4)? != b"QMW1" {
+        bail!("bad QMW magic");
+    }
+    let n = c.u32()? as usize;
+    let mut out = QmwFile::new();
+    for i in 0..n {
+        let name_len = c.u16()? as usize;
+        let name = std::str::from_utf8(c.take(name_len)?)
+            .with_context(|| format!("tensor {i}: non-utf8 name"))?
+            .to_string();
+        let dtype = c.u8()?;
+        let ndim = c.u8()? as usize;
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(c.u32()? as usize);
+        }
+        let count: usize = if ndim == 0 { 1 } else { dims.iter().product() };
+        let t = match dtype {
+            0 => {
+                let raw = c.take(count)?;
+                QmwTensor::I8 { dims, data: raw.iter().map(|&b| b as i8).collect() }
+            }
+            1 => {
+                let raw = c.take(4 * count)?;
+                let data = raw
+                    .chunks_exact(4)
+                    .map(|ch| i32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]))
+                    .collect();
+                QmwTensor::I32 { dims, data }
+            }
+            d => bail!("tensor '{name}': unknown dtype {d}"),
+        };
+        out.insert(name, t);
+    }
+    if c.off != buf.len() {
+        bail!("QMW trailing bytes: {} of {}", c.off, buf.len());
+    }
+    Ok(out)
+}
+
+/// Serialize a QMW file (tensors emitted in the given order).
+pub fn serialize_qmw(tensors: &[(String, QmwTensor)]) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(b"QMW1");
+    out.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+    for (name, t) in tensors {
+        let nb = name.as_bytes();
+        out.extend_from_slice(&(nb.len() as u16).to_le_bytes());
+        out.extend_from_slice(nb);
+        match t {
+            QmwTensor::I8 { dims, data } => {
+                out.push(0);
+                out.push(dims.len() as u8);
+                for d in dims {
+                    out.extend_from_slice(&(*d as u32).to_le_bytes());
+                }
+                out.extend(data.iter().map(|&v| v as u8));
+            }
+            QmwTensor::I32 { dims, data } => {
+                out.push(1);
+                out.push(dims.len() as u8);
+                for d in dims {
+                    out.extend_from_slice(&(*d as u32).to_le_bytes());
+                }
+                for v in data {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Load a QMW file from disk.
+pub fn load_qmw(path: &std::path::Path) -> Result<QmwFile> {
+    let buf = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    parse_qmw(&buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<(String, QmwTensor)> {
+        vec![
+            (
+                "a.w".to_string(),
+                QmwTensor::I8 { dims: vec![2, 3], data: vec![1, -2, 3, -4, 5, -128] },
+            ),
+            ("a.b".to_string(), QmwTensor::I32 { dims: vec![2], data: vec![-2048, 2048] }),
+            ("a.scalar".to_string(), QmwTensor::I32 { dims: vec![], data: vec![42] }),
+        ]
+    }
+
+    #[test]
+    fn roundtrip() {
+        let blob = serialize_qmw(&sample());
+        let parsed = parse_qmw(&blob).unwrap();
+        assert_eq!(parsed.len(), 3);
+        assert_eq!(parsed["a.w"].as_i8().unwrap(), &[1, -2, 3, -4, 5, -128]);
+        assert_eq!(parsed["a.b"].as_i32().unwrap(), &[-2048, 2048]);
+        assert_eq!(parsed["a.scalar"].as_i32().unwrap(), &[42]);
+        assert_eq!(parsed["a.scalar"].dims(), &[] as &[usize]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(parse_qmw(b"NOPE\x00\x00\x00\x00").is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let mut blob = serialize_qmw(&sample());
+        blob.truncate(blob.len() - 3);
+        assert!(parse_qmw(&blob).is_err());
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let mut blob = serialize_qmw(&sample());
+        blob.push(0);
+        assert!(parse_qmw(&blob).is_err());
+    }
+
+    #[test]
+    fn wrong_dtype_access_errors() {
+        let blob = serialize_qmw(&sample());
+        let parsed = parse_qmw(&blob).unwrap();
+        assert!(parsed["a.w"].as_i32().is_err());
+        assert!(parsed["a.b"].as_i8().is_err());
+    }
+}

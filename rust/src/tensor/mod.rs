@@ -1,0 +1,99 @@
+//! Minimal dense tensor container (row-major, NHWC-style indexing) and the
+//! QMW weight-interchange reader.
+
+pub mod io;
+
+/// Row-major dense tensor over `T` (i8 activations/weights, i32 biases).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Tensor<T> {
+    pub dims: Vec<usize>,
+    pub data: Vec<T>,
+}
+
+impl<T: Copy + Default> Tensor<T> {
+    pub fn zeros(dims: &[usize]) -> Self {
+        let n: usize = dims.iter().product();
+        Self { dims: dims.to_vec(), data: vec![T::default(); n] }
+    }
+
+    pub fn from_vec(dims: &[usize], data: Vec<T>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Self { dims: dims.to_vec(), data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Flat index of `(h, w, c)` for a rank-3 tensor.
+    #[inline(always)]
+    pub fn idx3(&self, h: usize, w: usize, c: usize) -> usize {
+        debug_assert_eq!(self.dims.len(), 3);
+        (h * self.dims[1] + w) * self.dims[2] + c
+    }
+
+    #[inline(always)]
+    pub fn at3(&self, h: usize, w: usize, c: usize) -> T {
+        self.data[self.idx3(h, w, c)]
+    }
+
+    #[inline(always)]
+    pub fn set3(&mut self, h: usize, w: usize, c: usize, v: T) {
+        let i = self.idx3(h, w, c);
+        self.data[i] = v;
+    }
+
+    /// Flat index of `(a, b)` for a rank-2 tensor.
+    #[inline(always)]
+    pub fn idx2(&self, a: usize, b: usize) -> usize {
+        debug_assert_eq!(self.dims.len(), 2);
+        a * self.dims[1] + b
+    }
+
+    #[inline(always)]
+    pub fn at2(&self, a: usize, b: usize) -> T {
+        self.data[self.idx2(a, b)]
+    }
+}
+
+pub type TensorI8 = Tensor<i8>;
+pub type TensorI32 = Tensor<i32>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idx3_row_major() {
+        let t = Tensor::<i8>::zeros(&[2, 3, 4]);
+        assert_eq!(t.idx3(0, 0, 0), 0);
+        assert_eq!(t.idx3(0, 0, 3), 3);
+        assert_eq!(t.idx3(0, 1, 0), 4);
+        assert_eq!(t.idx3(1, 0, 0), 12);
+        assert_eq!(t.idx3(1, 2, 3), 23);
+    }
+
+    #[test]
+    fn from_vec_checks_shape() {
+        let t = Tensor::from_vec(&[2, 2], vec![1i32, 2, 3, 4]);
+        assert_eq!(t.at2(1, 0), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn from_vec_rejects_bad_shape() {
+        Tensor::from_vec(&[2, 3], vec![1i32]);
+    }
+
+    #[test]
+    fn set_and_get() {
+        let mut t = Tensor::<i8>::zeros(&[4, 4, 2]);
+        t.set3(3, 2, 1, -5);
+        assert_eq!(t.at3(3, 2, 1), -5);
+        assert_eq!(t.at3(0, 0, 0), 0);
+    }
+}

@@ -1,0 +1,109 @@
+//! Minimal criterion-style benchmark harness (criterion is not in the
+//! offline crate set).  Used by the `cargo bench` targets (`harness = false`
+//! binaries under `rust/benches/`).
+//!
+//! Measures wall time with warmup, reports mean ± std and throughput, and
+//! supports `--quick` (fewer iterations) plus name filtering via argv, so
+//! `cargo bench fig14` behaves like criterion's filter.
+
+use std::time::Instant;
+
+use super::stats::Summary;
+
+pub struct Bencher {
+    filter: Option<String>,
+    quick: bool,
+    results: Vec<(String, Summary)>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::from_args()
+    }
+}
+
+impl Bencher {
+    pub fn from_args() -> Self {
+        let mut filter = None;
+        let mut quick = false;
+        for a in std::env::args().skip(1) {
+            match a.as_str() {
+                "--quick" => quick = true,
+                // cargo bench passes --bench through to the harness binary
+                "--bench" | "--exact" => {}
+                s if !s.starts_with('-') => filter = Some(s.to_string()),
+                _ => {}
+            }
+        }
+        Self { filter, quick, results: Vec::new() }
+    }
+
+    fn runs(&self) -> usize {
+        if self.quick {
+            3
+        } else {
+            10
+        }
+    }
+
+    /// Benchmark `f`, which returns a "work units" count (e.g. simulated
+    /// cycles) for throughput reporting; pass 0 for plain latency benches.
+    pub fn bench<F: FnMut() -> u64>(&mut self, name: &str, mut f: F) {
+        if let Some(filt) = &self.filter {
+            if !name.contains(filt.as_str()) {
+                return;
+            }
+        }
+        // Warmup.
+        let units = f();
+        let mut samples = Vec::with_capacity(self.runs());
+        let mut total_units = 0u64;
+        for _ in 0..self.runs() {
+            let t0 = Instant::now();
+            total_units += f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let s = Summary::of(&samples);
+        let per_run_units = if self.runs() > 0 { total_units / self.runs() as u64 } else { units };
+        let thr = if per_run_units > 0 {
+            format!("  [{:.2} Munits/s]", per_run_units as f64 / s.mean / 1e6)
+        } else {
+            String::new()
+        };
+        println!(
+            "bench {name:<44} {:>9.3} ms ± {:>7.3} ms  (n={}){}",
+            s.mean * 1e3,
+            s.std * 1e3,
+            s.n,
+            thr
+        );
+        self.results.push((name.to_string(), s));
+    }
+
+    /// Print a trailing summary (call at the end of a bench main()).
+    pub fn finish(&self) {
+        if self.results.is_empty() {
+            println!("(no benchmarks matched filter)");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_records() {
+        let mut b = Bencher { filter: None, quick: true, results: Vec::new() };
+        b.bench("noop", || 100);
+        assert_eq!(b.results.len(), 1);
+        assert_eq!(b.results[0].0, "noop");
+    }
+
+    #[test]
+    fn filter_skips_nonmatching() {
+        let mut b = Bencher { filter: Some("xyz".into()), quick: true, results: Vec::new() };
+        b.bench("abc", || 0);
+        assert!(b.results.is_empty());
+    }
+}

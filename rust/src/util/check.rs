@@ -1,0 +1,185 @@
+//! Mini property-testing framework (proptest is not in the offline crate
+//! set).  Deterministic by default (seeded from the property name), with
+//! `FUSED_DSC_CHECK_SEED` / `FUSED_DSC_CHECK_CASES` env overrides, and
+//! greedy input shrinking for failing cases.
+//!
+//! ```ignore
+//! check("addition commutes", |g| {
+//!     let a = g.i64(-100, 100);
+//!     let b = g.i64(-100, 100);
+//!     prop_assert!(a + b == b + a, "a={a} b={b}");
+//!     Ok(())
+//! });
+//! ```
+
+use super::rng::{fnv1a64, SplitMix64};
+
+/// Per-case value generator. Records the scalar choices it makes so failing
+/// cases can be shrunk by re-running with scaled-down choices.
+pub struct Gen {
+    rng: SplitMix64,
+    /// Shrink factor in [0,1]: 1 = full range, 0 = minimal values.
+    scale: f64,
+    log: Vec<i64>,
+}
+
+impl Gen {
+    fn new(seed: u64, scale: f64) -> Self {
+        Self { rng: SplitMix64::new(seed), scale, log: Vec::new() }
+    }
+
+    /// Integer in [lo, hi], range shrunk toward lo as scale drops.
+    pub fn i64(&mut self, lo: i64, hi: i64) -> i64 {
+        let span = ((hi - lo) as f64 * self.scale).round() as i64;
+        let v = self.rng.range_i64(lo, lo + span.max(0));
+        self.log.push(v);
+        v
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.i64(lo as i64, hi as i64) as usize
+    }
+
+    pub fn i32(&mut self, lo: i32, hi: i32) -> i32 {
+        self.i64(lo as i64, hi as i64) as i32
+    }
+
+    pub fn i8(&mut self) -> i8 {
+        self.i64(-127, 127) as i8
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.i64(0, 1) == 1
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize(0, xs.len() - 1)]
+    }
+
+    pub fn vec_i8(&mut self, n: usize) -> Vec<i8> {
+        (0..n).map(|_| self.i8()).collect()
+    }
+
+    pub fn vec_i32(&mut self, n: usize, lo: i32, hi: i32) -> Vec<i32> {
+        (0..n).map(|_| self.i32(lo, hi)).collect()
+    }
+}
+
+/// Property outcome: Err carries the failure message.
+pub type PropResult = Result<(), String>;
+
+/// Assert inside a property.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr) => {
+        if !($cond) {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!("assertion failed: {} [{}]", stringify!($cond), format!($($fmt)+)));
+        }
+    };
+}
+
+/// Assert equality with debug formatting.
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "{} != {}\n  left: {:?}\n right: {:?}",
+                stringify!($a),
+                stringify!($b),
+                a,
+                b
+            ));
+        }
+    }};
+}
+
+fn num_cases() -> u64 {
+    std::env::var("FUSED_DSC_CHECK_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `prop` over `num_cases()` random inputs; on failure, retry with
+/// progressively smaller value ranges to report a (near-)minimal seed, then
+/// panic with a reproducible failure report.
+pub fn check<F>(name: &str, prop: F)
+where
+    F: Fn(&mut Gen) -> PropResult,
+{
+    let base = std::env::var("FUSED_DSC_CHECK_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| fnv1a64(name));
+    let cases = num_cases();
+    for case in 0..cases {
+        let seed = base ^ (case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut g = Gen::new(seed, 1.0);
+        if let Err(msg) = prop(&mut g) {
+            // Shrink: re-run with smaller scales, keep the smallest failure.
+            let mut best: (f64, String) = (1.0, msg);
+            for step in 1..=8 {
+                let scale = 1.0 - step as f64 / 8.0;
+                let mut g = Gen::new(seed, scale);
+                if let Err(m) = prop(&mut g) {
+                    best = (scale, m);
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed:#x}, shrink scale {:.2}):\n{}\n\
+                 reproduce with FUSED_DSC_CHECK_SEED={seed}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add commutes", |g| {
+            let a = g.i64(-1000, 1000);
+            let b = g.i64(-1000, 1000);
+            prop_assert_eq!(a + b, b + a);
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_seed() {
+        check("always fails", |g| {
+            let v = g.i64(0, 10);
+            prop_assert!(v > 100, "v={v}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gen_is_deterministic_per_seed() {
+        let mut a = Gen::new(42, 1.0);
+        let mut b = Gen::new(42, 1.0);
+        for _ in 0..32 {
+            assert_eq!(a.i64(-50, 50), b.i64(-50, 50));
+        }
+    }
+
+    #[test]
+    fn gen_respects_bounds() {
+        let mut g = Gen::new(3, 1.0);
+        for _ in 0..500 {
+            let v = g.i32(-5, 7);
+            assert!((-5..=7).contains(&v));
+        }
+    }
+}

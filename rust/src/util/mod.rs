@@ -1,0 +1,11 @@
+//! Hand-rolled substrate utilities: PRNG, property testing, statistics,
+//! bench harness, JSON writer, thread pool.  These replace `rand`,
+//! `proptest`, `criterion`, `serde_json` and `tokio`, none of which are in
+//! the offline crate set (DESIGN.md §3).
+
+pub mod bench;
+pub mod check;
+pub mod json;
+pub mod pool;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,116 @@
+//! splitmix64 PRNG + FNV-1a hashing — bit-identical to
+//! `python/compile/weights.py` (the cross-language weight generator) and
+//! also the randomness source for the mini property-testing framework
+//! ([`crate::util::check`]); `rand`/`proptest` are not available in the
+//! offline crate set, and a shared deterministic generator is what pins the
+//! Rust and Python artifacts together anyway.
+
+/// Shared seed with `python/compile/weights.py::GLOBAL_SEED`.
+pub const GLOBAL_SEED: u64 = 0x1E_D5C0FFEE;
+
+const GAMMA: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// FNV-1a 64-bit hash (tensor-name -> stream seed).
+pub fn fnv1a64(s: &str) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100_0000_01B3);
+    }
+    h
+}
+
+/// splitmix64 — counter-based, trivially portable.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    /// The stream used for tensor `name` (seed = fnv1a64(name) ^ GLOBAL_SEED).
+    pub fn for_tensor(name: &str) -> Self {
+        Self::new(fnv1a64(name) ^ GLOBAL_SEED)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(GAMMA);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, n)` (modulo method — matches the python generator,
+    /// which uses `% n`; the tiny modulo bias is irrelevant and *identical*
+    /// on both sides, which is what matters).
+    pub fn below(&mut self, n: u64) -> u64 {
+        self.next_u64() % n
+    }
+
+    /// Uniform in `[lo, hi]` inclusive.
+    pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        debug_assert!(lo <= hi);
+        lo + self.below((hi - lo + 1) as u64) as i64
+    }
+
+    /// Uniform in `[0.0, 1.0)`.
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.next_u64() & 1 == 1
+    }
+
+    /// Pick an element of a slice.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len() as u64) as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix64_reference_vectors_seed0() {
+        // Standard splitmix64 test vectors; also pinned in
+        // python/tests/test_weights_io.py.
+        let mut rng = SplitMix64::new(0);
+        assert_eq!(rng.next_u64(), 0xE220_A839_7B1D_CDAF);
+        assert_eq!(rng.next_u64(), 0x6E78_9E6A_A1B9_65F4);
+        assert_eq!(rng.next_u64(), 0x06C4_5D18_8009_454F);
+    }
+
+    #[test]
+    fn fnv1a64_reference_vectors() {
+        assert_eq!(fnv1a64(""), 0xCBF2_9CE4_8422_2325);
+        assert_eq!(fnv1a64("a"), 0xAF63_DC4C_8601_EC8C);
+    }
+
+    #[test]
+    fn below_is_deterministic() {
+        let mut a = SplitMix64::for_tensor("x");
+        let mut b = SplitMix64::for_tensor("x");
+        for _ in 0..64 {
+            assert_eq!(a.below(255), b.below(255));
+        }
+    }
+
+    #[test]
+    fn range_inclusive_bounds() {
+        let mut rng = SplitMix64::new(7);
+        for _ in 0..1000 {
+            let v = rng.range_i64(-8, 8);
+            assert!((-8..=8).contains(&v));
+        }
+    }
+}

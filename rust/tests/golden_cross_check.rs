@@ -1,0 +1,143 @@
+//! The three-layer validation: Rust CFU simulator vs the PJRT-executed AOT
+//! artifacts (JAX/Pallas golden model).  Requires `make artifacts`.
+//!
+//! These tests are skipped (with a loud message) when artifacts are absent
+//! so `cargo test` works on a fresh checkout; CI runs `make test` which
+//! builds artifacts first.
+
+use fused_dsc::cfu::{CfuUnit, PipelineVersion};
+use fused_dsc::coordinator::{infer_golden, Backend, Engine};
+use fused_dsc::driver::run_block_fused;
+use fused_dsc::model::blocks::EVALUATED;
+use fused_dsc::model::weights::{from_qmw, gen_input, make_model_params, to_qmw_tensors};
+use fused_dsc::runtime::Runtime;
+use fused_dsc::tensor::io::{load_qmw, serialize_qmw};
+use fused_dsc::tensor::TensorI8;
+
+fn artifacts_ready() -> bool {
+    let dir = fused_dsc::artifacts_dir();
+    let ok = dir.join("model.qmw").exists() && dir.join("block_l3.hlo.txt").exists();
+    if !ok {
+        eprintln!("SKIP: artifacts not found in {} — run `make artifacts`", dir.display());
+    }
+    ok
+}
+
+/// The python-written QMW artifact is byte-identical to the Rust generator
+/// — the cross-language determinism pin.
+#[test]
+fn qmw_artifact_matches_rust_generator() {
+    if !artifacts_ready() {
+        return;
+    }
+    let disk = std::fs::read(fused_dsc::artifacts_dir().join("model.qmw")).unwrap();
+    let ours = serialize_qmw(&to_qmw_tensors(&make_model_params(None)));
+    assert_eq!(disk.len(), ours.len());
+    assert!(disk == ours, "QMW byte streams differ between python and rust generators");
+}
+
+/// Model parameters reconstructed from the artifact equal the generator's.
+#[test]
+fn qmw_artifact_parses_to_model_params() {
+    if !artifacts_ready() {
+        return;
+    }
+    let qmw = load_qmw(&fused_dsc::artifacts_dir().join("model.qmw")).unwrap();
+    let parsed = from_qmw(&qmw).unwrap();
+    let generated = make_model_params(None);
+    assert_eq!(parsed.blocks.len(), generated.blocks.len());
+    for (a, b) in parsed.blocks.iter().zip(&generated.blocks) {
+        assert_eq!(a.cfg, b.cfg);
+        assert_eq!(a.qp_words(), b.qp_words());
+    }
+    assert_eq!(parsed.head.zp_in, generated.head.zp_in);
+}
+
+/// Every evaluated layer: CFU functional model AND the ISS driver path are
+/// bit-exact against the PJRT-executed fused-Pallas HLO.
+#[test]
+fn evaluated_layers_bit_exact_vs_pjrt() {
+    if !artifacts_ready() {
+        return;
+    }
+    let params = make_model_params(None);
+    let rt = Runtime::cpu().unwrap();
+    for (block_num, tag) in EVALUATED {
+        let bp = &params.blocks[block_num - 1];
+        let cfg = bp.cfg;
+        let n = (cfg.h * cfg.w * cfg.cin) as usize;
+        let path = fused_dsc::artifacts_dir().join(format!("block_l{block_num}.hlo.txt"));
+        let exe = rt.load_hlo(&path, n).unwrap();
+        let x = TensorI8::from_vec(
+            &[cfg.h as usize, cfg.w as usize, cfg.cin as usize],
+            gen_input(&format!("gx.{tag}"), n, bp.zp_in()),
+        );
+        let golden = exe
+            .run_i8(&x.data, &[cfg.h as i64, cfg.w as i64, cfg.cin as i64])
+            .unwrap();
+        // Functional CFU model.
+        let mut unit = CfuUnit::new(PipelineVersion::V3);
+        let (host, _) = unit.run_block_host(bp, &x);
+        assert_eq!(host.data, golden, "{tag}: host CFU vs golden");
+        // Full ISS + RV32IM driver firmware path.
+        let iss = run_block_fused(bp, &x, PipelineVersion::V3).unwrap();
+        assert_eq!(iss.out.data, golden, "{tag}: ISS driver vs golden");
+    }
+}
+
+/// The fused and layer-by-layer HLO artifacts agree with each other (the
+/// in-graph ablation pair).
+#[test]
+fn fused_and_layerwise_artifacts_agree() {
+    if !artifacts_ready() {
+        return;
+    }
+    let params = make_model_params(None);
+    let rt = Runtime::cpu().unwrap();
+    for (block_num, tag) in EVALUATED {
+        let bp = &params.blocks[block_num - 1];
+        let cfg = bp.cfg;
+        let n = (cfg.h * cfg.w * cfg.cin) as usize;
+        let dir = fused_dsc::artifacts_dir();
+        let fused = rt.load_hlo(&dir.join(format!("block_l{block_num}.hlo.txt")), n).unwrap();
+        let lw = rt
+            .load_hlo(&dir.join(format!("block_l{block_num}_layerwise.hlo.txt")), n)
+            .unwrap();
+        let x = TensorI8::from_vec(
+            &[cfg.h as usize, cfg.w as usize, cfg.cin as usize],
+            gen_input(&format!("glw.{tag}"), n, bp.zp_in()),
+        );
+        let dims = [cfg.h as i64, cfg.w as i64, cfg.cin as i64];
+        assert_eq!(
+            fused.run_i8(&x.data, &dims).unwrap(),
+            lw.run_i8(&x.data, &dims).unwrap(),
+            "{tag}: fused vs layerwise HLO"
+        );
+    }
+}
+
+/// Whole-backbone logits: simulator chain vs the single fused backbone HLO.
+#[test]
+fn backbone_logits_bit_exact_vs_pjrt() {
+    if !artifacts_ready() {
+        return;
+    }
+    let dir = fused_dsc::artifacts_dir();
+    if !dir.join("backbone.hlo.txt").exists() {
+        eprintln!("SKIP: backbone.hlo.txt missing (aot --skip-backbone?)");
+        return;
+    }
+    let params = make_model_params(None);
+    let c0 = params.blocks[0].cfg;
+    let n = (c0.h * c0.w * c0.cin) as usize;
+    let x = TensorI8::from_vec(
+        &[c0.h as usize, c0.w as usize, c0.cin as usize],
+        gen_input("gbb.x", n, params.blocks[0].zp_in()),
+    );
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load_hlo(&dir.join("backbone.hlo.txt"), n).unwrap();
+    let golden = infer_golden(&exe, &x).unwrap();
+    let sim = Engine::new(params, Backend::FusedHost(PipelineVersion::V3)).infer(&x).unwrap();
+    assert_eq!(sim.logits, golden.logits);
+    assert_eq!(sim.class, golden.class);
+}

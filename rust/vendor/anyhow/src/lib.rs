@@ -1,0 +1,196 @@
+//! Hand-rolled, API-compatible subset of the `anyhow` crate (which is not in
+//! the offline crate set — DESIGN.md §3 lists the substrate utilities this
+//! repo rolls by hand for the same reason).
+//!
+//! Provides exactly what `fused_dsc` uses:
+//!
+//! * [`Error`] — an opaque, `Send + Sync` error value built from any
+//!   `Display` message or any `std::error::Error`;
+//! * [`Result<T>`] — `Result<T, Error>`;
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`, prepending context to the error message;
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — the formatting macros.
+//!
+//! Context is flattened into a single message string ("context: cause"),
+//! which is what every failure path here ultimately prints anyway.
+
+use std::fmt;
+
+/// An opaque error: a message chain flattened to one string.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display + Send + Sync + 'static>(message: M) -> Self {
+        Self { msg: message.to_string() }
+    }
+
+    /// Prepend a context layer (outermost first, like anyhow's Display).
+    pub fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Self {
+        Self { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`; that is
+// what makes the blanket `From` below coherent (same trick as real anyhow).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        // Include the source chain, flattened.
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg = format!("{msg}: {s}");
+            src = s.source();
+        }
+        Self { msg }
+    }
+}
+
+/// `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to failures (implemented for `Result` and `Option`).
+pub trait Context<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T>;
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context.to_string()))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition does not hold.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!("condition failed: `", stringify!($cond), "`")));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/real/path/xyz")?;
+        Ok(())
+    }
+
+    #[test]
+    fn from_std_error_via_question_mark() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: Result<()> = io_fail().context("loading config");
+        assert!(r.unwrap_err().to_string().starts_with("loading config: "));
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", "thing")).unwrap_err();
+        assert_eq!(e.to_string(), "missing thing");
+        assert_eq!(Some(5u32).context("fine").unwrap(), 5);
+    }
+
+    #[test]
+    fn macros_format() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative input {x}");
+            if x > 100 {
+                bail!("too large: {}", x);
+            }
+            Ok(x * 2)
+        }
+        assert_eq!(f(4).unwrap(), 8);
+        assert_eq!(f(-1).unwrap_err().to_string(), "negative input -1");
+        assert_eq!(f(101).unwrap_err().to_string(), "too large: 101");
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+    }
+
+    #[test]
+    fn ensure_bare_form() {
+        fn g(x: i32) -> Result<()> {
+            ensure!(x == 0);
+            Ok(())
+        }
+        assert!(g(0).is_ok());
+        assert!(g(1).unwrap_err().to_string().contains("condition failed"));
+    }
+
+    #[test]
+    fn error_msg_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Error>();
+    }
+}

@@ -21,11 +21,20 @@ pub const OPC_SYSTEM: u32 = 0x73;
 /// custom-0 (0x0B) — the CFU-Playground CPU↔CFU opcode.
 pub const OPC_CUSTOM0: u32 = 0x0B;
 
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DecodeError {
-    #[error("illegal instruction word {0:#010x}")]
     Illegal(u32),
 }
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DecodeError::Illegal(word) => write!(f, "illegal instruction word {word:#010x}"),
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
 
 fn r_type(funct7: u32, rs2: Reg, rs1: Reg, funct3: u32, rd: Reg, opcode: u32) -> u32 {
     (funct7 << 25)

@@ -60,15 +60,20 @@ fn main() -> anyhow::Result<()> {
         out_v3.class
     );
 
-    // --- Golden cross-check: PJRT backbone artifact. ---
-    let rt = Runtime::cpu()?;
-    let exe = rt.load_hlo(
-        &artifact_path("backbone.hlo.txt")?,
-        (c0.h * c0.w * c0.cin) as usize,
-    )?;
-    let golden = infer_golden(&exe, &x)?;
-    anyhow::ensure!(golden.logits == out_v3.logits, "logits mismatch vs golden model");
-    println!("logits bit-exact vs PJRT backbone golden model ✓ ({:?})", golden.logits);
+    // --- Golden cross-check: PJRT backbone artifact (skipped when the
+    // runtime or the artifacts are unavailable on an offline checkout). ---
+    match Runtime::cpu() {
+        Ok(rt) => {
+            let exe = rt.load_hlo(
+                &artifact_path("backbone.hlo.txt")?,
+                (c0.h * c0.w * c0.cin) as usize,
+            )?;
+            let golden = infer_golden(&exe, &x)?;
+            anyhow::ensure!(golden.logits == out_v3.logits, "logits mismatch vs golden model");
+            println!("logits bit-exact vs PJRT backbone golden model ✓ ({:?})", golden.logits);
+        }
+        Err(e) => println!("PJRT golden cross-check skipped: {e}"),
+    }
 
     // --- Baseline comparison (software-only, whole network). ---
     println!("\nrunning the software baseline over the whole network (~250M simulated cycles)...");

@@ -44,12 +44,17 @@ fn main() -> anyhow::Result<()> {
     assert_eq!(fused.data, reference.data);
     println!("fused CFU        == layer-by-layer reference  ✓ (bit-exact)");
 
-    // 3. PJRT golden model (the AOT-compiled JAX/Pallas kernel).
-    let rt = Runtime::cpu()?;
-    let exe = rt.load_hlo(&artifact_path("block_l3.hlo.txt")?, n)?;
-    let golden = exe.run_i8(&x.data, &[cfg.h as i64, cfg.w as i64, cfg.cin as i64])?;
-    assert_eq!(golden, reference.data);
-    println!("PJRT golden HLO  == layer-by-layer reference  ✓ (bit-exact)");
+    // 3. PJRT golden model (the AOT-compiled JAX/Pallas kernel) — skipped
+    // when the runtime or the artifacts are unavailable (offline checkout).
+    match Runtime::cpu() {
+        Ok(rt) => {
+            let exe = rt.load_hlo(&artifact_path("block_l3.hlo.txt")?, n)?;
+            let golden = exe.run_i8(&x.data, &[cfg.h as i64, cfg.w as i64, cfg.cin as i64])?;
+            assert_eq!(golden, reference.data);
+            println!("PJRT golden HLO  == layer-by-layer reference  ✓ (bit-exact)");
+        }
+        Err(e) => println!("PJRT golden HLO  skipped: {e}"),
+    }
 
     // Cycle-accurate speedup on the simulated VexRiscv core.
     println!("\nmeasuring on the cycle-accurate RV32IM core (this runs ~60M simulated cycles)...");

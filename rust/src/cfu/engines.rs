@@ -73,10 +73,9 @@ pub fn expansion_tile(
         xc.push(c);
     }
 
-    let mut acc = [0i32; 9];
     for (f, t) in tile.iter_mut().enumerate() {
         // Stream filter f chunk by chunk (broadcast to the 9 engines).
-        acc = [ex_bias[f]; 9];
+        let mut acc = [ex_bias[f]; 9];
         for chunk in 0..cin / 8 {
             let wchunk = exw.read_chunk(f, chunk);
             for lane in 0..8 {

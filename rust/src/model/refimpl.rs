@@ -86,7 +86,7 @@ pub fn head_ref(x: &TensorI8, head: &HeadParams) -> Vec<i32> {
             }
         }
         // round-half-away-from-zero integer mean (mirrors ref.py)
-        *p = if s >= 0 { (s + n / 2) / n } else { -((-s + n / 2) / n) } as i32;
+        *p = (if s >= 0 { (s + n / 2) / n } else { -((-s + n / 2) / n) }) as i32;
     }
     let mut logits = head.fc_b.clone();
     for (ch, &p) in pooled.iter().enumerate() {

@@ -172,6 +172,76 @@ mod tests {
     }
 
     #[test]
+    fn srdhm_edge_cases() {
+        // Largest positive multiplier on the largest accumulators: the i64
+        // intermediate must not overflow and the floor-shift must match the
+        // wide reference at the extremes.
+        let wide = |a: i32, m: i32| ((a as i128 * m as i128 + (1 << 30)) >> 31) as i32;
+        for a in [i32::MIN, i32::MIN + 1, -1, 0, 1, i32::MAX - 1, i32::MAX] {
+            for m in [1 << 30, (1 << 30) + 1, i32::MAX - 1, i32::MAX] {
+                assert_eq!(srdhm(a, m), wide(a, m), "a={a} m={m}");
+            }
+        }
+        // Exact-half rounding: with multiplier 2^30 (real scale 0.5), odd
+        // accumulators land on .5 and must round half-UP (toward +inf), the
+        // floor-shift variant — NOT gemmlowp's round-half-away-from-zero.
+        let m = 1 << 30;
+        assert_eq!(srdhm(1, m), 1); // 0.5 -> 1
+        assert_eq!(srdhm(-1, m), 0); // -0.5 -> 0
+        assert_eq!(srdhm(3, m), 2); // 1.5 -> 2
+        assert_eq!(srdhm(-3, m), -1); // -1.5 -> -1
+    }
+
+    #[test]
+    fn rounding_rshift_edge_cases() {
+        // exponent 0 is the identity (no rounding bias added).
+        assert_eq!(rounding_rshift(i32::MAX, 0), i32::MAX);
+        assert_eq!(rounding_rshift(i32::MIN, 0), i32::MIN);
+        // Wrapping add at the positive extreme: i32::MAX + 2^(e-1) wraps
+        // (RV32 `add` semantics) and the arithmetic shift sees the wrapped
+        // bits — the spec is total, matching the generated RV32 code.
+        let e = 4u32;
+        let want = (i32::MAX.wrapping_add(1 << (e - 1))) >> e;
+        assert_eq!(rounding_rshift(i32::MAX, e), want);
+        // Exact halves round half-up after the shift.
+        assert_eq!(rounding_rshift(8, 4), 1); // 0.5 -> 1
+        assert_eq!(rounding_rshift(-8, 4), 0); // -0.5 -> 0
+        assert_eq!(rounding_rshift(24, 4), 2); // 1.5 -> 2
+    }
+
+    #[test]
+    fn requantize_zero_point_extremes() {
+        // zp_out at the quantized-range edges: the +zp_out happens BEFORE
+        // the clamp, so outputs saturate instead of wrapping.
+        let hi = StageQuant { multiplier: 1 << 30, shift: 0, zp_in: 0, zp_out: 127, relu: false };
+        assert_eq!(hi.requantize(0), 127);
+        assert_eq!(hi.requantize(1000), 127); // 500 + 127 clamps
+        assert_eq!(hi.requantize(-300), -23); // -150 + 127
+        assert_eq!(hi.requantize(-100_000), -128); // clamp at QMIN
+        let lo = StageQuant { multiplier: 1 << 30, shift: 0, zp_in: 0, zp_out: -128, relu: false };
+        assert_eq!(lo.requantize(0), -128);
+        assert_eq!(lo.requantize(1000), 127); // 500 - 128 = 372 clamps
+        assert_eq!(lo.requantize(-1000), -128);
+        // relu floor with extreme zero points: floor = max(zp_out, QMIN).
+        let relu_hi = StageQuant { multiplier: 1 << 30, shift: 0, zp_in: 0, zp_out: 127, relu: true };
+        assert_eq!(relu_hi.requantize(-100_000), 127, "relu floor saturates at zp_out");
+        let relu_lo = StageQuant { multiplier: 1 << 30, shift: 0, zp_in: 0, zp_out: -128, relu: true };
+        assert_eq!(relu_lo.requantize(-100_000), -128);
+    }
+
+    #[test]
+    fn requantize_saturates_at_extreme_accumulators() {
+        // The widest real layers feed ~|acc| <= 2^21; the spec nevertheless
+        // stays total and saturating out to the i32 extremes.
+        let sq = StageQuant { multiplier: i32::MAX, shift: 0, zp_in: 0, zp_out: 0, relu: false };
+        assert_eq!(sq.requantize(i32::MAX), 127);
+        assert_eq!(sq.requantize(i32::MIN), -128);
+        let shifted = StageQuant { multiplier: 1 << 30, shift: 20, zp_in: 0, zp_out: 0, relu: false };
+        assert_eq!(shifted.requantize(1), 0); // tiny acc underflows to 0
+        assert_eq!(shifted.requantize(-1), 0);
+    }
+
+    #[test]
     fn residual_add_clamps() {
         assert_eq!(residual_add(100, 100, -3), 127);
         assert_eq!(residual_add(-100, -100, -3), -128);

@@ -39,6 +39,7 @@ pub struct HloExecutable {
 }
 
 /// Shared PJRT CPU client (compilation context for all artifacts).
+#[derive(Debug)]
 pub struct Runtime {
     _private: (),
 }

@@ -18,6 +18,7 @@ use super::rng::{fnv1a64, SplitMix64};
 /// cases can be shrunk by re-running with scaled-down choices.
 pub struct Gen {
     rng: SplitMix64,
+    seed: u64,
     /// Shrink factor in [0,1]: 1 = full range, 0 = minimal values.
     scale: f64,
     log: Vec<i64>,
@@ -25,7 +26,14 @@ pub struct Gen {
 
 impl Gen {
     fn new(seed: u64, scale: f64) -> Self {
-        Self { rng: SplitMix64::new(seed), scale, log: Vec::new() }
+        Self { rng: SplitMix64::new(seed), seed, scale, log: Vec::new() }
+    }
+
+    /// The seed this generator was constructed with — quote it in custom
+    /// failure messages so any property failure is reproducible with
+    /// `FUSED_DSC_CHECK_SEED=<seed>` (the harness panic already includes it).
+    pub fn seed(&self) -> u64 {
+        self.seed
     }
 
     /// Integer in [lo, hi], range shrunk toward lo as scale drops.
@@ -169,9 +177,33 @@ mod tests {
     fn gen_is_deterministic_per_seed() {
         let mut a = Gen::new(42, 1.0);
         let mut b = Gen::new(42, 1.0);
+        assert_eq!(a.seed(), 42);
         for _ in 0..32 {
             assert_eq!(a.i64(-50, 50), b.i64(-50, 50));
         }
+        assert_eq!(a.vec_i8(64), b.vec_i8(64));
+        assert_eq!(a.vec_i32(16, -1000, 1000), b.vec_i32(16, -1000, 1000));
+    }
+
+    #[test]
+    fn failure_message_reports_reproduction_seed() {
+        // The panic payload must carry the FUSED_DSC_CHECK_SEED needed to
+        // replay the failing case — the determinism contract of the harness.
+        let result = std::panic::catch_unwind(|| {
+            check("seed report prop", |g| {
+                let v = g.i64(0, 1 << 20);
+                crate::prop_assert!(v < 0, "v={v}");
+                Ok(())
+            });
+        });
+        let payload = result.unwrap_err();
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+            .expect("panic payload is a string");
+        assert!(msg.contains("FUSED_DSC_CHECK_SEED="), "no seed in: {msg}");
+        assert!(msg.contains("seed report prop"), "no property name in: {msg}");
     }
 
     #[test]

@@ -1,0 +1,94 @@
+"""Use real hypothesis when installed; otherwise a tiny deterministic stand-in.
+
+The offline test environment has jax but not hypothesis, and nothing may be
+pip-installed there.  This shim keeps the property suites runnable: each
+``@given`` test is executed over ``max_examples`` pseudo-random draws from a
+generator seeded by the test name, so failures are reproducible run to run.
+``FUSED_DSC_COMPAT_EXAMPLES`` caps the per-test draw count (default 12) to
+keep the fallback fast; install hypothesis for full shrinking sweeps.
+"""
+
+try:  # pragma: no cover - prefer the real library when present
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import functools
+    import inspect
+    import os
+    import random
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def sample(self, rng):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(values):
+            values = list(values)
+            return _Strategy(lambda r: r.choice(values))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda r: r.random() < 0.5)
+
+        @staticmethod
+        def floats(min_value, max_value, allow_nan=False, allow_infinity=False):
+            return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+        @staticmethod
+        def text(min_size=0, max_size=16, alphabet=None):
+            chars = list(alphabet) if alphabet else list(
+                "abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ0123456789._- éµ"
+            )
+            return _Strategy(
+                lambda r: "".join(
+                    r.choice(chars) for _ in range(r.randint(min_size, max_size))
+                )
+            )
+
+    st = _Strategies()
+
+    def settings(max_examples=32, deadline=None, **_kw):
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        cap = int(os.environ.get("FUSED_DSC_COMPAT_EXAMPLES", "12"))
+
+        def deco(fn):
+            n = min(getattr(fn, "_compat_max_examples", 32), cap)
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                rng = random.Random(f"fused-dsc:{fn.__module__}.{fn.__qualname__}")
+                for case in range(n):
+                    drawn = {k: s.sample(rng) for k, s in strategies.items()}
+                    try:
+                        fn(*args, **drawn, **kwargs)
+                    except Exception as e:  # re-raise with the reproducer
+                        raise AssertionError(
+                            f"property case {case} failed with drawn={drawn!r} "
+                            f"(deterministic fallback; seed=test name): {e}"
+                        ) from e
+
+            # Pytest must not mistake the property arguments for fixtures:
+            # hide the wrapped signature and expose a zero-argument test.
+            wrapper.__dict__.pop("__wrapped__", None)
+            wrapper.__signature__ = inspect.Signature()
+            return wrapper
+
+        return deco

@@ -2,9 +2,9 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from hypothesis_compat import given, settings, st
 
+pytest.importorskip("jax", reason="jax unavailable: compile-path tests skip offline")
 import jax.numpy as jnp
 
 from compile import quantize as q

@@ -1,8 +1,7 @@
 """Weight generation determinism + QMW serialization round-trip."""
 
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from hypothesis_compat import given, settings, st
 
 from compile.blocks import backbone
 from compile.weights import (

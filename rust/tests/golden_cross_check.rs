@@ -3,8 +3,11 @@
 //! build with a working PJRT runtime (`--features pjrt` + an XLA plugin).
 //!
 //! These tests skip loudly-but-green when artifacts or the runtime are
-//! absent so `cargo test` works on a fresh offline checkout; environments
-//! with artifacts + libxla run the full cross-check.
+//! absent so `cargo test` works on a fresh offline checkout.  NOTE: until
+//! the PJRT C-API FFI layer is vendored, `Runtime::cpu()` fails in every
+//! configuration (even with a plugin installed), so the PJRT-executing
+//! tests below currently always skip; the artifact-only tests (QMW pinning)
+//! run whenever `make artifacts` has produced `model.qmw`.
 
 use fused_dsc::cfu::{CfuUnit, PipelineVersion};
 use fused_dsc::coordinator::{infer_golden, Backend, Engine};

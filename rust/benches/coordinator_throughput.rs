@@ -1,5 +1,8 @@
 //! Bench: serving throughput/latency of the batching coordinator across
 //! batch sizes and worker counts (the L3 serving hot path).
+//!
+//! `--json <dir>` emits the `BENCH_coordinator_throughput.json` artifact
+//! tracked per-PR by the CI bench-smoke job (EXPERIMENTS.md §Perf log).
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -12,7 +15,7 @@ use fused_dsc::tensor::TensorI8;
 use fused_dsc::util::bench::Bencher;
 
 fn main() {
-    let mut b = Bencher::from_args();
+    let mut b = Bencher::named("coordinator_throughput");
     // A small backbone keeps the bench fast while exercising real batching.
     let params = make_model_params(Some(vec![
         BlockConfig::new(20, 20, 8, 48, 8, 2, false),

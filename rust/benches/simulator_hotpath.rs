@@ -1,6 +1,9 @@
 //! Bench: the L3 hot paths themselves (host throughput of the simulator) —
 //! the targets of EXPERIMENTS.md §Perf.  Reports simulated-cycles-per-
 //! second for the ISS and pixel throughput for the CFU functional model.
+//!
+//! `--json <dir>` emits the `BENCH_simulator_hotpath.json` artifact tracked
+//! per-PR by the CI bench-smoke job (EXPERIMENTS.md §Perf log).
 
 use fused_dsc::baseline::run_block_v0;
 use fused_dsc::cfu::{CfuUnit, PipelineVersion};
@@ -15,7 +18,7 @@ use fused_dsc::tensor::TensorI8;
 use fused_dsc::util::bench::Bencher;
 
 fn main() {
-    let mut b = Bencher::from_args();
+    let mut b = Bencher::named("simulator_hotpath");
 
     // Raw ISS dispatch rate: a tight ALU loop (icache-resident).
     b.bench("iss/alu-loop (Msim-cycles/s)", || {

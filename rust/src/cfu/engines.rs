@@ -13,9 +13,11 @@
 //!   accumulates one output channel.
 //!
 //! The intermediate F1 tile (3×3×M) and F2 vector (M) live only in the
-//! transient buffers passed between these functions — the Rust analogue of
-//! "a few clock cycles in hardware registers" (paper §III-A).  Nothing is
-//! written back to the IFMAP buffer or simulated RAM.
+//! transient [`FusedScratch`] buffers passed between these functions — the
+//! Rust analogue of "a few clock cycles in hardware registers" (paper
+//! §III-A).  Nothing is written back to the IFMAP buffer or simulated RAM,
+//! and nothing is heap-allocated per pixel: the scratch is sized once per
+//! layer and reused for every pixel (EXPERIMENTS.md §Perf, iteration 3).
 
 use super::config::LayerConfig;
 use super::filters::{
@@ -32,11 +34,82 @@ pub struct EngineStats {
     pub requants: u64,
 }
 
-/// Compute the 3×3×M F1 tile for the output pixel at (`oy`, `ox`).
+/// Reusable flat scratch buffers for the fused pixel pipeline — the host
+/// model of the hardware's transient pipeline registers.
 ///
-/// `tile[pos][ch]` is the F1 value at window position `pos` (row-major 3×3)
-/// and expanded channel `ch` — exactly what the nine engines hold in their
-/// output registers before streaming to the depthwise unit.
+/// Sized once per layer by [`FusedScratch::ensure`]; the steady-state pixel
+/// loop then runs with **zero heap allocations** (guarded by
+/// `tests/alloc_regression.rs`).  Layouts are flat and row-major so the
+/// inner MAC loops walk contiguous memory:
+///
+/// * `tile[f * 9 + pos]` — the F1 tile value for expanded channel `f` at
+///   window position `pos` (what the nine engines hold in their output
+///   registers before streaming to the depthwise unit);
+/// * `xc[ch * 9 + pos]` — the pre-centered (`x - zp_in`) input window for
+///   channel `ch`, fetched once per pixel (Input-Stationary);
+/// * `f2[ch]` — the depthwise output vector;
+/// * `f2c[ch]` — `f2` pre-centered at the projection broadcast port;
+/// * `out[c]` — the pixel's Cout output channels.
+#[derive(Debug, Default)]
+pub struct FusedScratch {
+    tile: Vec<i8>,
+    xc: Vec<i32>,
+    f2: Vec<i8>,
+    f2c: Vec<i32>,
+    out: Vec<i8>,
+}
+
+impl FusedScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A scratch pre-sized for `cfg` (convenience for tests and one-shot use).
+    pub fn for_layer(cfg: &LayerConfig) -> Self {
+        let mut s = Self::new();
+        s.ensure(cfg);
+        s
+    }
+
+    /// (Re)size every buffer for the layer geometry and zero it.  This is
+    /// the only place the scratch allocates; call it at configuration time,
+    /// never inside the pixel loop.
+    pub fn ensure(&mut self, cfg: &LayerConfig) {
+        let m = cfg.m as usize;
+        let cin = cfg.cin as usize;
+        let cout = cfg.cout as usize;
+        self.tile.clear();
+        self.tile.resize(m * 9, 0);
+        self.xc.clear();
+        self.xc.resize(cin * 9, 0);
+        self.f2.clear();
+        self.f2.resize(m, 0);
+        self.f2c.clear();
+        self.f2c.resize(m, 0);
+        self.out.clear();
+        self.out.resize(cout, 0);
+    }
+
+    /// The F1 tile of the most recent [`expansion_tile`] call.
+    pub fn tile(&self) -> &[i8] {
+        &self.tile
+    }
+
+    /// The F2 vector of the most recent [`depthwise_pixel`] call.
+    pub fn f2(&self) -> &[i8] {
+        &self.f2
+    }
+
+    /// The output channels of the most recent [`projection_pixel`] /
+    /// [`fused_pixel`] call.
+    pub fn out(&self) -> &[i8] {
+        &self.out
+    }
+}
+
+/// Compute the 3×3×M F1 tile for the output pixel at (`oy`, `ox`) into
+/// `scratch.tile` (`tile[f * 9 + pos]` — see [`FusedScratch`]).
+#[allow(clippy::too_many_arguments)]
 pub fn expansion_tile(
     cfg: &LayerConfig,
     ifmap: &mut IfmapBuffer,
@@ -45,78 +118,83 @@ pub fn expansion_tile(
     oy: u32,
     ox: u32,
     stats: &mut EngineStats,
-) -> Vec<[i8; 9]> {
+    scratch: &mut FusedScratch,
+) {
     let m = cfg.m as usize;
     let cin = cfg.cin as usize;
     let q = cfg.ex_quant();
     let cy = (oy * cfg.stride) as i64;
     let cx = (ox * cfg.stride) as i64;
+    debug_assert_eq!(scratch.tile.len(), m * 9);
+    debug_assert_eq!(scratch.xc.len(), cin * 9);
 
     // Window validity: positions outside the *input* map contribute the F1
     // zero point downstream — the expansion engines simply skip them (the
     // depthwise stage sees on-the-fly-padded F1, paper §III-E).
-    let mut tile: Vec<[i8; 9]> = vec![[0i8; 9]; m];
-
+    //
     // Input-Stationary (Fig. 6a): the 3x3 window is fetched ONCE per input
     // channel from the banked buffer and held in the engines' window
     // registers for the entire filter sweep — one banked read per channel,
     // not one per (channel, filter).  Pre-centered to i32 once (§Perf log
     // iteration 1: this hoist is both the faithful dataflow and a 3.4x
     // host-speed win on the fused path).
-    let mut xc: Vec<[i32; 9]> = Vec::with_capacity(cin);
     for ch in 0..cin {
         let win = ifmap.read_window(cy, cx, ch, cfg.zp_in as i8);
-        let mut c = [0i32; 9];
+        let c: &mut [i32; 9] = (&mut scratch.xc[ch * 9..ch * 9 + 9]).try_into().unwrap();
         for pos in 0..9 {
             c[pos] = win[pos] as i32 - cfg.zp_in;
         }
-        xc.push(c);
     }
 
-    for (f, t) in tile.iter_mut().enumerate() {
+    let xc = &scratch.xc;
+    let chunks = cin / 8;
+    for f in 0..m {
         // Stream filter f chunk by chunk (broadcast to the 9 engines).
         let mut acc = [ex_bias[f]; 9];
-        for chunk in 0..cin / 8 {
+        for chunk in 0..chunks {
             let wchunk = exw.read_chunk(f, chunk);
             for lane in 0..8 {
                 let ch = chunk * 8 + lane;
                 // One cycle: every engine MACs its pixel's channel `ch`.
                 let w = wchunk[lane] as i32;
-                let x = &xc[ch];
+                let x: &[i32; 9] = xc[ch * 9..ch * 9 + 9].try_into().unwrap();
                 for pos in 0..9 {
                     acc[pos] += x[pos] * w;
                 }
-                stats.ex_macs += 9;
             }
         }
         // Post-processing pipeline (Fig. 6b): bias already folded into the
         // accumulator init; requantize + ReLU per engine.
+        let t: &mut [i8; 9] = (&mut scratch.tile[f * 9..f * 9 + 9]).try_into().unwrap();
         for pos in 0..9 {
             t[pos] = q.requantize(acc[pos]);
-            stats.requants += 1;
         }
     }
-    tile
+    stats.ex_macs += (m * chunks * 8 * 9) as u64;
+    stats.requants += (m * 9) as u64;
 }
 
-/// Depthwise: consume the F1 tile, produce the M-element F2 vector for this
-/// pixel.  The window position mask handles F1's *virtual* padding: tile
-/// positions whose source coordinates fall outside the map are replaced by
-/// the F1 zero point before the MAC (the hardware's address-generation
-/// check, Fig. 13b).
+/// Depthwise: consume the F1 tile (flat, `tile[ch * 9 + pos]`), produce the
+/// M-element F2 vector for this pixel into `f2`.  The window position mask
+/// handles F1's *virtual* padding: tile positions whose source coordinates
+/// fall outside the map are replaced by the F1 zero point before the MAC
+/// (the hardware's address-generation check, Fig. 13b).
+#[allow(clippy::too_many_arguments)]
 pub fn depthwise_pixel(
     cfg: &LayerConfig,
-    tile: &[[i8; 9]],
+    tile: &[i8],
     dww: &mut DwFilterBuffer,
     dw_bias: &[i32],
     oy: u32,
     ox: u32,
     stats: &mut EngineStats,
-) -> Vec<i8> {
+    f2: &mut [i8],
+) {
     let m = cfg.m as usize;
     let q = cfg.dw_quant();
     let cy = (oy * cfg.stride) as i64;
     let cx = (ox * cfg.stride) as i64;
+    debug_assert!(tile.len() >= m * 9 && f2.len() >= m);
     let mut valid = [false; 9];
     for ky in 0..3i64 {
         for kx in 0..3i64 {
@@ -126,40 +204,55 @@ pub fn depthwise_pixel(
                 r >= 0 && c >= 0 && r < cfg.h as i64 && c < cfg.w as i64;
         }
     }
-    let mut f2 = vec![0i8; m];
+    let zp = cfg.zp_f1;
+    let all_valid = valid == [true; 9];
     for ch in 0..m {
         let w = dww.read_filter(ch); // one-cycle 72-bit fetch
+        let t: &[i8; 9] = tile[ch * 9..ch * 9 + 9].try_into().unwrap();
         let mut acc = dw_bias[ch];
-        // Nine-way MAC array: all nine taps in a single cycle.
-        for pos in 0..9 {
-            let x = if valid[pos] { tile[ch][pos] as i32 } else { cfg.zp_f1 };
-            acc += (x - cfg.zp_f1) * (w[pos] as i32);
-            stats.dw_macs += 1;
+        // Nine-way MAC array: all nine taps in a single cycle.  Interior
+        // pixels (the common case) take the branch-free path.
+        if all_valid {
+            for pos in 0..9 {
+                acc += (t[pos] as i32 - zp) * (w[pos] as i32);
+            }
+        } else {
+            for pos in 0..9 {
+                let x = if valid[pos] { t[pos] as i32 } else { zp };
+                acc += (x - zp) * (w[pos] as i32);
+            }
         }
         f2[ch] = q.requantize(acc);
-        stats.requants += 1;
     }
-    f2
+    stats.dw_macs += (m * 9) as u64;
+    stats.requants += m as u64;
 }
 
 /// Projection: broadcast each F2 element to the 56 output-stationary
 /// engines; `passes = ceil(Cout/56)` full accumulation rounds cover wider
-/// layers.  Returns the Cout output channels for this pixel.
+/// layers.  Writes the Cout output channels for this pixel into `out`;
+/// `f2c` is the broadcast-port scratch (pre-centered F2, sized ≥ M).
+#[allow(clippy::too_many_arguments)]
 pub fn projection_pixel(
     cfg: &LayerConfig,
     f2: &[i8],
     prw: &mut ProjectionWeightBuffers,
     pr_bias: &[i32],
     stats: &mut EngineStats,
-) -> Vec<i8> {
+    f2c: &mut [i32],
+    out: &mut [i8],
+) {
     let m = cfg.m as usize;
     let cout = cfg.cout as usize;
     let q = cfg.pr_quant();
     let passes = cout.div_ceil(NUM_PROJ_ENGINES);
-    let mut out = vec![0i8; cout];
+    debug_assert!(f2c.len() >= m && out.len() >= cout);
     // Broadcast values pre-centered once (the hardware subtracts zp_f2 at
     // the broadcast port, not per engine).
-    let xc: Vec<i32> = f2.iter().take(m).map(|&x| x as i32 - cfg.zp_f2).collect();
+    for (c, &x) in f2.iter().take(m).enumerate() {
+        f2c[c] = x as i32 - cfg.zp_f2;
+    }
+    let xc = &f2c[..m];
     for pass in 0..passes {
         let active = (cout - pass * NUM_PROJ_ENGINES).min(NUM_PROJ_ENGINES);
         for e in 0..active {
@@ -167,18 +260,18 @@ pub fn projection_pixel(
             // while the F2 elements are broadcast (§Perf iteration 2).
             let w = prw.engine_slice(e, pass);
             let mut a = pr_bias[pass * NUM_PROJ_ENGINES + e];
-            for (c_in, &x) in xc.iter().enumerate() {
-                a += x * w[c_in] as i32;
+            for (&x, &wv) in xc.iter().zip(w) {
+                a += x * wv as i32;
             }
             stats.pr_macs += m as u64;
             out[pass * NUM_PROJ_ENGINES + e] = q.requantize(a);
             stats.requants += 1;
         }
     }
-    out
 }
 
-/// Full fused pixel: Ex → Dw → Pr, nothing materialized beyond the tile.
+/// Full fused pixel: Ex → Dw → Pr, nothing materialized beyond the scratch
+/// tile.  The result is in `scratch.out()`.
 #[allow(clippy::too_many_arguments)]
 pub fn fused_pixel(
     cfg: &LayerConfig,
@@ -192,10 +285,12 @@ pub fn fused_pixel(
     oy: u32,
     ox: u32,
     stats: &mut EngineStats,
-) -> Vec<i8> {
-    let tile = expansion_tile(cfg, ifmap, exw, ex_bias, oy, ox, stats);
-    let f2 = depthwise_pixel(cfg, &tile, dww, dw_bias, oy, ox, stats);
-    projection_pixel(cfg, &f2, prw, pr_bias, stats)
+    scratch: &mut FusedScratch,
+) {
+    expansion_tile(cfg, ifmap, exw, ex_bias, oy, ox, stats, scratch);
+    let FusedScratch { tile, f2, f2c, out, .. } = scratch;
+    depthwise_pixel(cfg, tile.as_slice(), dww, dw_bias, oy, ox, stats, f2.as_mut_slice());
+    projection_pixel(cfg, f2.as_slice(), prw, pr_bias, stats, f2c.as_mut_slice(), out.as_mut_slice());
 }
 
 #[cfg(test)]
@@ -239,7 +334,8 @@ mod tests {
         }
         let bias = vec![3i32; 8];
         let mut stats = EngineStats::default();
-        let tile = expansion_tile(&cfg, &mut ifmap, &mut exw, &bias, 1, 1, &mut stats);
+        let mut scratch = FusedScratch::for_layer(&cfg);
+        expansion_tile(&cfg, &mut ifmap, &mut exw, &bias, 1, 1, &mut stats, &mut scratch);
         // direct check for position (0,0) of the window = input pixel (0,0)
         let q = StageQuant { multiplier: 1 << 30, shift: 0, zp_in: 0, zp_out: 0, relu: false };
         for f in 0..8 {
@@ -250,29 +346,32 @@ mod tests {
                 let w = (((base * 5) % 17) as i8 - 8) as i32;
                 acc += x * w;
             }
-            assert_eq!(tile[f][0], q.requantize(acc), "filter {f}");
+            assert_eq!(scratch.tile()[f * 9], q.requantize(acc), "filter {f}");
         }
         assert_eq!(stats.ex_macs, 8 * 8 * 9);
+        assert_eq!(stats.requants, 8 * 9);
     }
 
     #[test]
     fn depthwise_padding_mask_applies_zero_point() {
         let mut cfg = tiny_cfg();
         cfg.zp_f1 = 5;
-        let tile = vec![[10i8; 9]; 8];
+        let tile = vec![10i8; 8 * 9];
         let mut dww = DwFilterBuffer::new(8);
         for i in 0..72 {
             dww.write_linear(i, 1);
         }
         let bias = vec![0i32; 8];
         let mut stats = EngineStats::default();
+        let mut f2 = vec![0i8; 8];
         // corner pixel (0,0): only taps 4,5,7,8 are valid
-        let f2 = depthwise_pixel(&cfg, &tile, &mut dww, &bias, 0, 0, &mut stats);
+        depthwise_pixel(&cfg, &tile, &mut dww, &bias, 0, 0, &mut stats, &mut f2);
         // acc = 4 valid * (10-5) * 1 = 20; requant 0.5 -> 10
         assert_eq!(f2, vec![10i8; 8]);
         // center pixel (1,1): all 9 valid -> acc = 9*5=45 -> 23 (round half up)
-        let f2c = depthwise_pixel(&cfg, &tile, &mut dww, &bias, 1, 1, &mut stats);
-        assert_eq!(f2c, vec![23i8; 8]);
+        depthwise_pixel(&cfg, &tile, &mut dww, &bias, 1, 1, &mut stats, &mut f2);
+        assert_eq!(f2, vec![23i8; 8]);
+        assert_eq!(stats.dw_macs, 2 * 8 * 9);
     }
 
     #[test]
@@ -289,7 +388,9 @@ mod tests {
         }
         let bias = vec![0i32; 64];
         let mut stats = EngineStats::default();
-        let out = projection_pixel(&cfg, &f2, &mut prw, &bias, &mut stats);
+        let mut f2c = vec![0i32; 8];
+        let mut out = vec![0i8; 64];
+        projection_pixel(&cfg, &f2, &mut prw, &bias, &mut stats, &mut f2c, &mut out);
         // acc = sum over 8 inputs of 2*±1 = ±16 -> requant 0.5 -> ±8
         for (c, &v) in out.iter().enumerate() {
             assert_eq!(v, if c % 2 == 0 { 8 } else { -8 }, "channel {c}");
@@ -318,10 +419,53 @@ mod tests {
         }
         let b = vec![0i32; 8];
         let mut stats = EngineStats::default();
-        let out = fused_pixel(
+        let mut scratch = FusedScratch::for_layer(&cfg);
+        fused_pixel(
             &cfg, &mut ifmap, &mut exw, &mut dww, &mut prw, &b, &b, &b, 2, 2, &mut stats,
+            &mut scratch,
         );
-        assert_eq!(out.len(), 8);
+        assert_eq!(scratch.out().len(), 8);
         assert!(stats.ex_macs > 0 && stats.dw_macs > 0 && stats.pr_macs > 0);
+    }
+
+    #[test]
+    fn scratch_reuse_across_pixels_is_stateless() {
+        // Running the same pixel twice through one scratch must reproduce the
+        // first result exactly — nothing may leak between pixels.
+        let cfg = tiny_cfg();
+        let mut ifmap = IfmapBuffer::new(4, 4, 8);
+        let mut exw = ExpansionFilterBuffer::new(8, 8);
+        let mut dww = DwFilterBuffer::new(8);
+        let mut prw = ProjectionWeightBuffers::new(8, 8);
+        for i in 0..(4 * 4 * 8) {
+            ifmap.write_linear(i, ((i * 11) % 29) as i8 - 14);
+        }
+        for i in 0..64 {
+            exw.write_linear(i, ((i * 3) % 7) as i8 - 3);
+        }
+        for i in 0..72 {
+            dww.write_linear(i, ((i % 5) as i8) - 2);
+        }
+        for i in 0..64 {
+            prw.write_linear(i, ((i % 3) as i8) - 1);
+        }
+        let b = vec![1i32; 8];
+        let mut stats = EngineStats::default();
+        let mut scratch = FusedScratch::for_layer(&cfg);
+        fused_pixel(
+            &cfg, &mut ifmap, &mut exw, &mut dww, &mut prw, &b, &b, &b, 1, 2, &mut stats,
+            &mut scratch,
+        );
+        let first = scratch.out().to_vec();
+        // Run a different pixel in between to dirty every scratch buffer.
+        fused_pixel(
+            &cfg, &mut ifmap, &mut exw, &mut dww, &mut prw, &b, &b, &b, 0, 0, &mut stats,
+            &mut scratch,
+        );
+        fused_pixel(
+            &cfg, &mut ifmap, &mut exw, &mut dww, &mut prw, &b, &b, &b, 1, 2, &mut stats,
+            &mut scratch,
+        );
+        assert_eq!(scratch.out(), &first[..]);
     }
 }

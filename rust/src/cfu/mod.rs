@@ -27,5 +27,6 @@ pub mod pipeline;
 pub mod unit;
 
 pub use config::{LayerConfig, CFG};
+pub use engines::{EngineStats, FusedScratch};
 pub use pipeline::{PipelineVersion, StageTimes, TimingParams};
 pub use unit::{opcodes, CfuUnit};

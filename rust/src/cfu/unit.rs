@@ -12,7 +12,7 @@ use std::collections::VecDeque;
 use crate::cpu::{CfuPort, CfuResponse};
 
 use super::config::{LayerConfig, CFG};
-use super::engines::{self, EngineStats};
+use super::engines::{self, EngineStats, FusedScratch};
 use super::filters::{DwFilterBuffer, ExpansionFilterBuffer, ProjectionWeightBuffers};
 use super::ifmap::IfmapBuffer;
 use super::pipeline::{PipelineVersion, StageTimes, TimingParams};
@@ -56,10 +56,14 @@ pub struct CfuUnit {
     ex_bias: Vec<i32>,
     dw_bias: Vec<i32>,
     pr_bias: Vec<i32>,
+    /// Per-layer pixel-pipeline scratch (sized by `materialize`); the
+    /// steady-state START/RD_OUT loop is allocation-free.
+    scratch: FusedScratch,
     // Active START batch.
     batch_first: u32,
     batch_count: u32,
-    outputs: Vec<Vec<i8>>,
+    /// Flat batch outputs: pixel `k` occupies `[k * cout, (k + 1) * cout)`.
+    outputs: Vec<i8>,
     /// Next unread pixel (index into the batch) and word within it.
     rd_pixel: u32,
     rd_word: u32,
@@ -94,6 +98,7 @@ impl CfuUnit {
             ex_bias: Vec::new(),
             dw_bias: Vec::new(),
             pr_bias: Vec::new(),
+            scratch: FusedScratch::new(),
             batch_first: 0,
             batch_count: 0,
             outputs: Vec::new(),
@@ -122,6 +127,7 @@ impl CfuUnit {
         self.ex_bias = vec![0; cfg.m as usize];
         self.dw_bias = vec![0; cfg.m as usize];
         self.pr_bias = vec![0; cfg.cout as usize];
+        self.scratch.ensure(&cfg);
         // Reprogramming fully resets batch/readback state (no stale outputs).
         self.outputs.clear();
         self.batch_count = 0;
@@ -162,18 +168,24 @@ impl CfuUnit {
         self.rd_word = 0;
         self.read_done_window.clear();
         self.start_time = now;
+        // The flat output buffer retains its capacity across batches, so
+        // after the first row the whole pixel loop is allocation-free
+        // (guarded by tests/alloc_regression.rs).
         self.outputs.clear();
+        self.outputs.reserve(count as usize * self.cfg.cout as usize);
+        let cfg = self.cfg;
         let (ifmap, exw, dww, prw) = (
             self.ifmap.as_mut().unwrap(),
             self.exw.as_mut().unwrap(),
             self.dww.as_mut().unwrap(),
             self.prw.as_mut().unwrap(),
         );
+        let scratch = &mut self.scratch;
         for k in 0..count {
             let lin = first + k;
             let (oy, ox) = (lin / w_out, lin % w_out);
-            self.outputs.push(engines::fused_pixel(
-                &self.cfg,
+            engines::fused_pixel(
+                &cfg,
                 ifmap,
                 exw,
                 dww,
@@ -184,7 +196,9 @@ impl CfuUnit {
                 oy,
                 ox,
                 &mut self.stats,
-            ));
+                scratch,
+            );
+            self.outputs.extend_from_slice(scratch.out());
         }
         // First pixel completes after dispatch + pipeline fill.
         self.ready_time =
@@ -197,12 +211,12 @@ impl CfuUnit {
         let words_per_pixel = cout.div_ceil(4);
         let stall = self.ready_time.saturating_sub(now);
         self.stall_cycles += stall;
-        let px = &self.outputs[self.rd_pixel as usize];
-        let base = (self.rd_word * 4) as usize;
+        let px_base = self.rd_pixel as usize * cout as usize;
+        let word_base = (self.rd_word * 4) as usize;
         let mut bytes = [0u8; 4];
         for k in 0..4 {
-            if base + k < px.len() {
-                bytes[k] = px[base + k] as u8;
+            if word_base + k < cout as usize {
+                bytes[k] = self.outputs[px_base + word_base + k] as u8;
             }
         }
         let value = u32::from_le_bytes(bytes);

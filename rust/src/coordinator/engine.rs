@@ -161,6 +161,63 @@ mod tests {
     }
 
     #[test]
+    fn sim_cycles_golden_pinned() {
+        // Perf work must change wall time only, never the cycle model:
+        // record `sim_cycles` for the `mini_params` model on every
+        // cycle-reporting backend and pin them bit-exactly against a
+        // committed snapshot.  When the snapshot is missing (first run on a
+        // fresh tree), it is recorded loudly-but-green — the same
+        // convention the golden artifacts use (README.md) — and committed
+        // alongside the change that blessed it.
+        let p = mini_params();
+        let x = input(&p);
+        let backends = [
+            Backend::SoftwareIss,
+            Backend::CfuPlaygroundIss,
+            Backend::FusedIss(PipelineVersion::V1),
+            Backend::FusedIss(PipelineVersion::V2),
+            Backend::FusedIss(PipelineVersion::V3),
+            Backend::FusedHost(PipelineVersion::V1),
+            Backend::FusedHost(PipelineVersion::V2),
+            Backend::FusedHost(PipelineVersion::V3),
+        ];
+        let mut lines = String::new();
+        for backend in backends {
+            let got = Engine::new(p.clone(), backend).infer(&x).unwrap();
+            // In-process determinism: a second inference must reproduce the
+            // count exactly (no hidden state in any backend).
+            let again = Engine::new(p.clone(), backend).infer(&x).unwrap();
+            assert_eq!(
+                got.sim_cycles,
+                again.sim_cycles,
+                "{} cycle count is nondeterministic",
+                backend.name()
+            );
+            lines.push_str(&format!("{} {}\n", backend.name(), got.sim_cycles));
+        }
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("tests/golden/sim_cycles_mini.txt");
+        match std::fs::read_to_string(&path) {
+            Ok(want) => assert_eq!(
+                lines,
+                want,
+                "pinned sim_cycles drifted — the cycle model changed. If \
+                 this is intentional, delete {} and re-run to re-record.",
+                path.display()
+            ),
+            Err(_) => {
+                std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+                std::fs::write(&path, &lines).unwrap();
+                println!(
+                    "RECORDED: sim_cycles golden snapshot at {} — commit it \
+                     to pin the cycle model.",
+                    path.display()
+                );
+            }
+        }
+    }
+
+    #[test]
     fn fused_cycles_below_software_cycles() {
         let p = mini_params();
         let x = input(&p);

@@ -56,6 +56,23 @@ impl Cache {
         }
     }
 
+    /// The line index of `addr` (address >> line bits) — lets callers detect
+    /// same-line access streaks without touching the tag array.
+    #[inline(always)]
+    pub fn line_of(&self, addr: u32) -> u32 {
+        addr >> self.line_bits
+    }
+
+    /// Record a hit that the caller proved without a tag lookup (a repeat
+    /// access to the line it just touched: `access` fills on miss, and a
+    /// direct-mapped lookup has no replacement state, so re-walking the tag
+    /// array would change nothing but the counter).  Keeps `hits`/`misses`
+    /// bit-identical to calling [`Cache::access`].
+    #[inline(always)]
+    pub fn note_hit(&mut self) {
+        self.hits += 1;
+    }
+
     pub fn reset_stats(&mut self) {
         self.hits = 0;
         self.misses = 0;
@@ -102,6 +119,27 @@ mod tests {
         c.access(0x020); // next line, different set
         assert!(c.access(0x000));
         assert!(c.access(0x020));
+    }
+
+    #[test]
+    fn note_hit_matches_access_accounting() {
+        // The straight-line fast path (line_of + note_hit) must produce the
+        // same counters as calling access() for every fetch.
+        let mut fast = Cache::new(4096, 32);
+        let mut slow = Cache::new(4096, 32);
+        let mut last_line = u32::MAX;
+        for k in 0..64u32 {
+            let addr = 0x1F0 + 4 * k; // crosses several line boundaries
+            slow.access(addr);
+            let line = fast.line_of(addr);
+            if line == last_line {
+                fast.note_hit();
+            } else {
+                fast.access(addr);
+                last_line = line;
+            }
+        }
+        assert_eq!((fast.hits, fast.misses), (slow.hits, slow.misses));
     }
 
     #[test]

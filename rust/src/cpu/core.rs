@@ -1,10 +1,19 @@
 //! The instruction-set simulator core: pre-decoded execution with the
 //! VexRiscv cycle model, I$/D$ simulation, ecall markers and a CFU port.
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
 use super::{Cache, CfuPort, CostModel};
 use crate::isa::{codec, AluImmOp, AluOp, BranchOp, Instr, LoadOp, StoreOp};
+
+/// Build the out-of-bounds error off the hot path: `check` inlines down to a
+/// compare-and-branch, and the formatting machinery lives here, in a cold
+/// never-inlined function (EXPERIMENTS.md §Perf, iteration 3).
+#[cold]
+#[inline(never)]
+fn oob_error(addr: u32, len: u32, size: usize) -> anyhow::Error {
+    anyhow::anyhow!("memory access out of bounds: {addr:#x}+{len} (size {size:#x})")
+}
 
 /// Flat little-endian RAM.
 #[derive(Debug, Clone)]
@@ -21,7 +30,7 @@ impl Memory {
     fn check(&self, addr: u32, len: u32) -> Result<usize> {
         let end = addr as u64 + len as u64;
         if end > self.data.len() as u64 {
-            bail!("memory access out of bounds: {addr:#x}+{len} (size {:#x})", self.data.len());
+            return Err(oob_error(addr, len, self.data.len()));
         }
         Ok(addr as usize)
     }
@@ -181,6 +190,11 @@ pub struct Machine<C: CfuPort> {
     pub cfu: C,
     program: Vec<Instr>,
     prog_base: u32,
+    /// I$ line of the previous instruction fetch (`u32::MAX` = none).
+    /// Straight-line fetches within one line skip the tag lookup entirely:
+    /// the line was touched by the previous fetch (which fills on miss), so
+    /// it is resident by construction.  Counters stay bit-identical.
+    last_fetch_line: u32,
 }
 
 impl<C: CfuPort> Machine<C> {
@@ -201,6 +215,7 @@ impl<C: CfuPort> Machine<C> {
             cfu,
             program: Vec::new(),
             prog_base: 0,
+            last_fetch_line: u32::MAX,
         }
     }
 
@@ -235,6 +250,7 @@ impl<C: CfuPort> Machine<C> {
         self.program = prog.to_vec();
         self.prog_base = base;
         self.pc = base;
+        self.last_fetch_line = u32::MAX;
         Ok(())
     }
 
@@ -250,27 +266,54 @@ impl<C: CfuPort> Machine<C> {
         }
     }
 
+    /// Build the bad-pc error off the hot path (see [`oob_error`]).
+    #[cold]
+    #[inline(never)]
+    fn bad_pc_error(&self) -> anyhow::Error {
+        anyhow::anyhow!(
+            "pc {:#x} outside program (base {:#x}, len {})",
+            self.pc,
+            self.prog_base,
+            self.program.len()
+        )
+    }
+
     /// Execute until `ebreak` or `max_instructions`.
+    ///
+    /// This loop is the ISS hot path (EXPERIMENTS.md §Perf): the instruction
+    /// budget is a plain countdown, error construction is banished to cold
+    /// never-inlined helpers, and straight-line fetches reuse the previous
+    /// fetch's I$ line check instead of re-walking the tag array.  None of
+    /// this changes a single simulated cycle — only host wall time.
     pub fn run(&mut self, max_instructions: u64) -> Result<RunResult> {
-        let start_instret = self.instret;
+        let mut remaining = max_instructions;
+        let has_watches = !self.watches.is_empty();
         loop {
-            if self.instret - start_instret >= max_instructions {
+            if remaining == 0 {
                 return Ok(RunResult {
                     reason: ExitReason::MaxInstructions,
                     cycles: self.cycles,
                     instret: self.instret,
                 });
             }
-            let idx = (self.pc.wrapping_sub(self.prog_base) / 4) as usize;
+            remaining -= 1;
+            let idx = (self.pc.wrapping_sub(self.prog_base) >> 2) as usize;
             let Some(&instr) = self.program.get(idx) else {
-                bail!("pc {:#x} outside program (base {:#x}, len {})",
-                      self.pc, self.prog_base, self.program.len());
+                return Err(self.bad_pc_error());
             };
 
-            // Instruction fetch cost.
+            // Instruction fetch cost.  A fetch on the same I$ line as the
+            // previous one is a hit by construction (the previous fetch
+            // filled the line on miss, and nothing else touches the I$).
             let mut cyc = self.cost.base;
-            if !self.icache.access(self.pc) {
-                cyc += self.cost.icache_miss_penalty;
+            let fetch_line = self.icache.line_of(self.pc);
+            if fetch_line == self.last_fetch_line {
+                self.icache.note_hit();
+            } else {
+                if !self.icache.access(self.pc) {
+                    cyc += self.cost.icache_miss_penalty;
+                }
+                self.last_fetch_line = fetch_line;
             }
 
             let mut next_pc = self.pc.wrapping_add(4);
@@ -379,7 +422,7 @@ impl<C: CfuPort> Machine<C> {
                     self.stats.loads += 1;
                     self.stats.load_bytes += bytes;
                     self.stats.mem_cycles += cyc - self.cost.base;
-                    if !self.watches.is_empty() {
+                    if has_watches {
                         self.note_access(addr, bytes, cyc, false);
                     }
                 }
@@ -406,7 +449,7 @@ impl<C: CfuPort> Machine<C> {
                     self.stats.stores += 1;
                     self.stats.store_bytes += bytes;
                     self.stats.mem_cycles += cyc - self.cost.base;
-                    if !self.watches.is_empty() {
+                    if has_watches {
                         self.note_access(addr, bytes, cyc, true);
                     }
                 }

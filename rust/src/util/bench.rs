@@ -3,17 +3,53 @@
 //! binaries under `rust/benches/`).
 //!
 //! Measures wall time with warmup, reports mean ± std and throughput, and
-//! supports `--quick` (fewer iterations) plus name filtering via argv, so
-//! `cargo bench fig14` behaves like criterion's filter.
+//! supports:
+//!
+//! * name filtering via argv, so `cargo bench fig14` behaves like
+//!   criterion's filter;
+//! * `--quick` — fewer iterations (CI smoke runs);
+//! * `--json <path>` — additionally write a machine-readable
+//!   `BENCH_<name>.json` artifact (mean/std/percentiles/throughput per
+//!   bench) so the perf trajectory accumulates per-PR (EXPERIMENTS.md
+//!   §Perf).  `<path>` is a directory unless it ends in `.json`, in which
+//!   case it is the exact output file.
+//!
+//! Unknown flags are rejected (exit code 2) instead of being silently
+//! swallowed — a typoed `--jsno` must not quietly drop the artifact.
 
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
+use super::json::Json;
 use super::stats::Summary;
 
+/// One recorded benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+    /// Work units per run (0 = latency-only bench).
+    pub units_per_run: u64,
+}
+
+impl BenchResult {
+    /// Work units per second (`None` for latency-only benches).
+    pub fn units_per_sec(&self) -> Option<f64> {
+        if self.units_per_run > 0 && self.summary.mean > 0.0 {
+            Some(self.units_per_run as f64 / self.summary.mean)
+        } else {
+            None
+        }
+    }
+}
+
 pub struct Bencher {
+    /// Bench-target name; stamps the `BENCH_<name>.json` artifact.
+    name: String,
     filter: Option<String>,
     quick: bool,
-    results: Vec<(String, Summary)>,
+    json_out: Option<PathBuf>,
+    results: Vec<BenchResult>,
 }
 
 impl Default for Bencher {
@@ -22,20 +58,66 @@ impl Default for Bencher {
     }
 }
 
+/// Strip the `-<16-hex-hash>` suffix cargo appends to bench binary names.
+fn strip_cargo_hash(stem: &str) -> &str {
+    match stem.rsplit_once('-') {
+        Some((base, h))
+            if !base.is_empty() && h.len() == 16 && h.bytes().all(|b| b.is_ascii_hexdigit()) =>
+        {
+            base
+        }
+        _ => stem,
+    }
+}
+
+/// Derive the bench-target name from argv[0].
+fn bin_name() -> String {
+    let stem = std::env::args()
+        .next()
+        .and_then(|p| Path::new(&p).file_stem().map(|s| s.to_string_lossy().into_owned()))
+        .unwrap_or_else(|| "bench".to_string());
+    strip_cargo_hash(&stem).to_string()
+}
+
 impl Bencher {
     pub fn from_args() -> Self {
-        let mut filter = None;
-        let mut quick = false;
-        for a in std::env::args().skip(1) {
-            match a.as_str() {
-                "--quick" => quick = true,
-                // cargo bench passes --bench through to the harness binary
-                "--bench" | "--exact" => {}
-                s if !s.starts_with('-') => filter = Some(s.to_string()),
-                _ => {}
+        Self::named(&bin_name())
+    }
+
+    /// Like [`Bencher::from_args`] with an explicit bench-target name
+    /// (deterministic artifact naming, independent of the binary path).
+    pub fn named(name: &str) -> Self {
+        let args: Vec<String> = std::env::args().skip(1).collect();
+        match Self::parse(name, &args) {
+            Ok(b) => b,
+            Err(msg) => {
+                eprintln!("error: {msg}");
+                eprintln!("usage: {name} [FILTER] [--quick] [--json <path>]");
+                std::process::exit(2);
             }
         }
-        Self { filter, quick, results: Vec::new() }
+    }
+
+    /// Parse harness argv (everything after the binary name).
+    fn parse(name: &str, args: &[String]) -> Result<Self, String> {
+        let mut filter = None;
+        let mut quick = false;
+        let mut json_out = None;
+        let mut it = args.iter();
+        while let Some(a) = it.next() {
+            match a.as_str() {
+                "--quick" => quick = true,
+                "--json" => {
+                    let p = it.next().ok_or("--json requires a path argument")?;
+                    json_out = Some(PathBuf::from(p));
+                }
+                // cargo bench passes --bench through to the harness binary.
+                "--bench" | "--exact" => {}
+                s if s.starts_with('-') => return Err(format!("unknown flag `{s}`")),
+                s => filter = Some(s.to_string()),
+            }
+        }
+        Ok(Self { name: name.to_string(), filter, quick, json_out, results: Vec::new() })
     }
 
     fn runs(&self) -> usize {
@@ -65,26 +147,101 @@ impl Bencher {
         }
         let s = Summary::of(&samples);
         let per_run_units = if self.runs() > 0 { total_units / self.runs() as u64 } else { units };
-        let thr = if per_run_units > 0 {
-            format!("  [{:.2} Munits/s]", per_run_units as f64 / s.mean / 1e6)
-        } else {
-            String::new()
-        };
+        let r = BenchResult { name: name.to_string(), summary: s, units_per_run: per_run_units };
+        let thr = r
+            .units_per_sec()
+            .map(|u| format!("  [{:.2} Munits/s]", u / 1e6))
+            .unwrap_or_default();
         println!(
             "bench {name:<44} {:>9.3} ms ± {:>7.3} ms  (n={}){}",
-            s.mean * 1e3,
-            s.std * 1e3,
-            s.n,
+            r.summary.mean * 1e3,
+            r.summary.std * 1e3,
+            r.summary.n,
             thr
         );
-        self.results.push((name.to_string(), s));
+        self.results.push(r);
     }
 
-    /// Print a trailing summary (call at the end of a bench main()).
+    /// Print the recorded summary table and, when `--json <path>` was given,
+    /// write the `BENCH_<name>.json` artifact (call at the end of a bench
+    /// main()).
     pub fn finish(&self) {
         if self.results.is_empty() {
+            // Still write the (empty) JSON artifact below: a typoed filter
+            // must leave a visible, diffable trace, not a missing file.
             println!("(no benchmarks matched filter)");
+        } else {
+            println!();
+            println!("== {} summary ({} benchmarks) ==", self.name, self.results.len());
+            println!(
+                "{:<46} {:>10} {:>10} {:>10} {:>12}",
+                "name", "mean ms", "std ms", "p50 ms", "Munits/s"
+            );
+            for r in &self.results {
+                let thr =
+                    r.units_per_sec().map_or_else(|| "-".to_string(), |u| format!("{:.2}", u / 1e6));
+                println!(
+                    "{:<46} {:>10.3} {:>10.3} {:>10.3} {:>12}",
+                    r.name,
+                    r.summary.mean * 1e3,
+                    r.summary.std * 1e3,
+                    r.summary.p50 * 1e3,
+                    thr
+                );
+            }
         }
+        if let Some(path) = &self.json_out {
+            match self.write_json(path) {
+                Ok(file) => println!("bench json written: {}", file.display()),
+                Err(e) => {
+                    eprintln!("error: failed to write bench json to {}: {e}", path.display());
+                    std::process::exit(1);
+                }
+            }
+        }
+    }
+
+    /// The machine-readable form of every recorded result.
+    fn to_json(&self) -> Json {
+        let mut arr = Json::arr();
+        for r in &self.results {
+            let mut o = Json::obj()
+                .set("name", r.name.as_str())
+                .set("n", r.summary.n)
+                .set("mean_s", r.summary.mean)
+                .set("std_s", r.summary.std)
+                .set("min_s", r.summary.min)
+                .set("max_s", r.summary.max)
+                .set("p50_s", r.summary.p50)
+                .set("units_per_run", r.units_per_run);
+            o = match r.units_per_sec() {
+                Some(u) => o.set("units_per_sec", u),
+                None => o.set("units_per_sec", Json::Null),
+            };
+            arr = arr.push(o);
+        }
+        Json::obj()
+            .set("bench", self.name.as_str())
+            .set("quick", self.quick)
+            .set("results", arr)
+    }
+
+    /// Resolve the output file (directory → `BENCH_<name>.json` inside it;
+    /// explicit `*.json` path → that file) and write it.
+    fn write_json(&self, path: &Path) -> std::io::Result<PathBuf> {
+        let file = if path.extension().is_some_and(|e| e == "json") {
+            if let Some(dir) = path.parent() {
+                if !dir.as_os_str().is_empty() {
+                    std::fs::create_dir_all(dir)?;
+                }
+            }
+            path.to_path_buf()
+        } else {
+            std::fs::create_dir_all(path)?;
+            path.join(format!("BENCH_{}.json", self.name))
+        };
+        std::fs::write(&file, self.to_json().render())?;
+        Ok(file)
     }
 }
 
@@ -92,18 +249,88 @@ impl Bencher {
 mod tests {
     use super::*;
 
+    fn quick(name: &str, filter: Option<&str>) -> Bencher {
+        Bencher {
+            name: name.to_string(),
+            filter: filter.map(str::to_string),
+            quick: true,
+            json_out: None,
+            results: Vec::new(),
+        }
+    }
+
     #[test]
     fn bench_runs_and_records() {
-        let mut b = Bencher { filter: None, quick: true, results: Vec::new() };
+        let mut b = quick("t", None);
         b.bench("noop", || 100);
         assert_eq!(b.results.len(), 1);
-        assert_eq!(b.results[0].0, "noop");
+        assert_eq!(b.results[0].name, "noop");
+        assert!(b.results[0].units_per_sec().unwrap() > 0.0);
     }
 
     #[test]
     fn filter_skips_nonmatching() {
-        let mut b = Bencher { filter: Some("xyz".into()), quick: true, results: Vec::new() };
+        let mut b = quick("t", Some("xyz"));
         b.bench("abc", || 0);
         assert!(b.results.is_empty());
+    }
+
+    #[test]
+    fn latency_only_bench_has_no_throughput() {
+        let mut b = quick("t", None);
+        b.bench("lat", || 0);
+        assert_eq!(b.results[0].units_per_sec(), None);
+    }
+
+    #[test]
+    fn parse_accepts_known_args() {
+        let args: Vec<String> = ["--quick", "--bench", "fig14", "--json", "out/dir"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let b = Bencher::parse("t", &args).unwrap();
+        assert!(b.quick);
+        assert_eq!(b.filter.as_deref(), Some("fig14"));
+        assert_eq!(b.json_out.as_deref(), Some(Path::new("out/dir")));
+    }
+
+    #[test]
+    fn parse_rejects_unknown_flags_and_dangling_json() {
+        assert!(Bencher::parse("t", &["--jsno".to_string()]).is_err());
+        assert!(Bencher::parse("t", &["--json".to_string()]).is_err());
+    }
+
+    #[test]
+    fn json_artifact_round_trips_through_a_directory() {
+        let dir = std::env::temp_dir().join(format!("fused_dsc_bench_{}", std::process::id()));
+        let mut b = quick("smoke", None);
+        b.bench("unit", || 1000);
+        let file = b.write_json(&dir).unwrap();
+        assert_eq!(file.file_name().unwrap().to_str().unwrap(), "BENCH_smoke.json");
+        let body = std::fs::read_to_string(&file).unwrap();
+        assert!(body.contains("\"bench\":\"smoke\""), "{body}");
+        assert!(body.contains("\"units_per_sec\":"), "{body}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn strip_cargo_hash_rule() {
+        assert_eq!(strip_cargo_hash("simulator_hotpath-0123456789abcdef"), "simulator_hotpath");
+        // Not a 16-hex suffix: left untouched.
+        assert_eq!(strip_cargo_hash("coordinator_throughput"), "coordinator_throughput");
+        assert_eq!(strip_cargo_hash("fig14-pipeline"), "fig14-pipeline");
+        assert_eq!(strip_cargo_hash("-0123456789abcdef"), "-0123456789abcdef");
+    }
+
+    #[test]
+    fn finish_with_no_results_still_writes_json() {
+        let dir = std::env::temp_dir().join(format!("fused_dsc_bench_empty_{}", std::process::id()));
+        let mut b = quick("empty", Some("matches-nothing"));
+        b.json_out = Some(dir.clone());
+        b.bench("abc", || 0);
+        b.finish();
+        let body = std::fs::read_to_string(dir.join("BENCH_empty.json")).unwrap();
+        assert!(body.contains("\"results\":[]"), "{body}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

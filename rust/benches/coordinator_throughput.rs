@@ -1,5 +1,6 @@
-//! Bench: serving throughput/latency of the batching coordinator across
-//! batch sizes and worker counts (the L3 serving hot path).
+//! Bench: serving throughput/latency of the bounded, sharded coordinator
+//! across batch sizes and worker counts (the L3 serving hot path), plus the
+//! loadgen closed-loop driver itself.
 //!
 //! `--json <dir>` emits the `BENCH_coordinator_throughput.json` artifact
 //! tracked per-PR by the CI bench-smoke job (EXPERIMENTS.md §Perf log).
@@ -8,10 +9,10 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use fused_dsc::cfu::PipelineVersion;
+use fused_dsc::coordinator::loadgen::{self, LoadMode, LoadgenConfig};
 use fused_dsc::coordinator::{Backend, Coordinator, Engine, ServeConfig};
 use fused_dsc::model::blocks::BlockConfig;
-use fused_dsc::model::weights::{gen_input, make_model_params};
-use fused_dsc::tensor::TensorI8;
+use fused_dsc::model::weights::make_model_params;
 use fused_dsc::util::bench::Bencher;
 
 fn main() {
@@ -24,6 +25,7 @@ fn main() {
         BlockConfig::new(5, 5, 16, 96, 16, 1, true),
     ]));
     let engine = Arc::new(Engine::new(params, Backend::FusedHost(PipelineVersion::V3)));
+    let input = |i: u64| engine.synthetic_input(&format!("ct.{i}"));
 
     for (batch, workers) in [(1usize, 1usize), (4, 2), (8, 4), (16, 8)] {
         let engine = Arc::clone(&engine);
@@ -32,22 +34,30 @@ fn main() {
                 max_batch: batch,
                 batch_timeout: Duration::from_micros(500),
                 workers,
+                queue_depth: 128,
             };
             let coord = Coordinator::start(Arc::clone(&engine), cfg);
             let tickets: Vec<_> = (0..64)
-                .map(|i| {
-                    let c = engine.params.blocks[0].cfg;
-                    coord.submit(TensorI8::from_vec(
-                        &[c.h as usize, c.w as usize, c.cin as usize],
-                        gen_input(&format!("ct.{i}"), (c.h * c.w * c.cin) as usize, engine.params.blocks[0].zp_in()),
-                    ))
-                })
+                .map(|i| coord.submit(input(i)).expect("queue_depth 128 holds the burst"))
                 .collect();
             for t in tickets {
-                t.wait().unwrap();
+                t.wait().result.expect("inference succeeds");
             }
             64
         });
     }
+
+    // The loadgen driver end to end (closed loop, warm shards reused
+    // across all requests of a run).
+    b.bench("loadgen/closed-4-clients (64 req)", || {
+        let cfg = LoadgenConfig {
+            mode: LoadMode::Closed { clients: 4 },
+            requests: 64,
+            serve: ServeConfig { batch_timeout: Duration::from_micros(500), ..Default::default() },
+        };
+        let report = loadgen::run(Arc::clone(&engine), &cfg, input);
+        assert_eq!(report.metrics.completed, 64);
+        64
+    });
     b.finish();
 }

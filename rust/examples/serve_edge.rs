@@ -1,8 +1,9 @@
 //! Edge-serving scenario: a camera-like stream of inference requests goes
-//! through the batching coordinator backed by the fused accelerator model.
-//! Reports latency percentiles, throughput, and the simulated hardware
-//! time per request — the deployment shape the paper's intro motivates
-//! (always-on TinyML vision at the edge).
+//! through the bounded, sharded coordinator backed by the fused accelerator
+//! model.  Reports latency percentiles (from the bounded histogram),
+//! throughput, shed/failed counts, and the simulated hardware time per
+//! request — the deployment shape the paper's intro motivates (always-on
+//! TinyML vision at the edge).
 //!
 //! Run: `cargo run --release --example serve_edge`
 
@@ -10,8 +11,8 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use fused_dsc::cfu::PipelineVersion;
-use fused_dsc::coordinator::{Backend, Coordinator, Engine, ServeConfig};
-use fused_dsc::model::weights::{gen_input, make_model_params};
+use fused_dsc::coordinator::{Backend, Coordinator, Engine, Rejected, ServeConfig};
+use fused_dsc::model::weights::make_model_params;
 use fused_dsc::tensor::TensorI8;
 use fused_dsc::util::stats::fmt_cycles;
 
@@ -22,53 +23,67 @@ fn main() -> anyhow::Result<()> {
         max_batch: 8,
         batch_timeout: Duration::from_millis(2),
         workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+        // Small on purpose: a camera that falls behind should drop frames
+        // (shed) rather than serve stale ones seconds late.
+        queue_depth: 32,
     };
     println!(
-        "coordinator: max_batch={} workers={} backend={}",
+        "coordinator: max_batch={} workers={} queue_depth={} backend={}",
         cfg.max_batch,
         cfg.workers,
+        cfg.queue_depth,
         engine.backend.name()
     );
     let coord = Coordinator::start(Arc::clone(&engine), cfg);
 
-    // 256 requests arriving in bursts (camera frames + sporadic events).
+    // 256 frames arriving in bursts (camera frames + sporadic events).
     let n = 256;
     let t0 = std::time::Instant::now();
     let mut tickets = Vec::with_capacity(n);
+    let mut dropped_frames = 0u64;
     for i in 0..n {
-        tickets.push(coord.submit(frame(&engine, i as u64)));
+        match coord.submit(frame(&engine, i as u64)) {
+            Ok(t) => tickets.push(t),
+            Err(Rejected::QueueFull { .. }) => dropped_frames += 1, // shed, move on
+            Err(e) => anyhow::bail!("camera feed refused: {e}"),
+        }
         if i % 16 == 15 {
             std::thread::sleep(Duration::from_millis(1)); // burst boundary
         }
     }
     let mut class_histogram = vec![0usize; 16];
+    let mut failed = 0u64;
     for t in tickets {
-        let r = t.wait()?;
-        class_histogram[r.class] += 1;
+        match t.wait().result {
+            Ok(out) => class_histogram[out.class] += 1,
+            Err(_) => failed += 1,
+        }
     }
     let wall = t0.elapsed();
     let snap = coord.metrics.snapshot();
     println!(
-        "\nserved {} requests in {:.2}s -> {:.1} req/s (host wall-clock)",
+        "\nserved {} requests in {:.2}s -> {:.1} req/s (host wall-clock); shed {} failed {}",
         snap.completed,
         wall.as_secs_f64(),
-        snap.completed as f64 / wall.as_secs_f64()
+        snap.completed as f64 / wall.as_secs_f64(),
+        dropped_frames,
+        failed
     );
-    if let (Some(q), Some(tot)) = (snap.queue_latency, snap.total_latency) {
-        println!(
-            "latency  p50/p95/p99: {:.1}/{:.1}/{:.1} ms (queue p95 {:.1} ms)",
-            tot.p50 * 1e3,
-            tot.p95 * 1e3,
-            tot.p99 * 1e3,
-            q.p95 * 1e3
-        );
-    }
+    let (q, tot) = (&snap.queue_latency, &snap.total_latency);
+    println!(
+        "latency  p50/p90/p99/p999: {:.1}/{:.1}/{:.1}/{:.1} ms (queue p90 {:.1} ms)",
+        tot.p50_s * 1e3,
+        tot.p90_s * 1e3,
+        tot.p99_s * 1e3,
+        tot.p999_s * 1e3,
+        q.p90_s * 1e3
+    );
     println!(
         "batches: {} (max batch seen {}); simulated accelerator: {} cycles total, {:.2} ms @100MHz per request",
         snap.batches,
         snap.max_batch_seen,
         fmt_cycles(snap.sim_cycles),
-        snap.sim_cycles as f64 / snap.completed as f64 / 100e6 * 1e3
+        snap.sim_cycles as f64 / snap.completed.max(1) as f64 / 100e6 * 1e3
     );
     println!("class histogram: {class_histogram:?}");
     coord.shutdown();
@@ -76,9 +91,5 @@ fn main() -> anyhow::Result<()> {
 }
 
 fn frame(engine: &Engine, salt: u64) -> TensorI8 {
-    let c = engine.params.blocks[0].cfg;
-    TensorI8::from_vec(
-        &[c.h as usize, c.w as usize, c.cin as usize],
-        gen_input(&format!("serve_edge.{salt}"), (c.h * c.w * c.cin) as usize, engine.params.blocks[0].zp_in()),
-    )
+    engine.synthetic_input(&format!("serve_edge.{salt}"))
 }

@@ -25,10 +25,18 @@ impl Args {
                 } else if known_flags.contains(&body) {
                     out.flags.insert(body.to_string(), true);
                 } else {
-                    let v = it
-                        .next()
-                        .ok_or_else(|| format!("--{body} expects a value"))?;
-                    out.options.insert(body.to_string(), v.clone());
+                    // `--key value` form.  A following token that itself
+                    // starts with `--` is the *next* argument, not a value:
+                    // consuming it would make a typoed/unregistered flag
+                    // (`--quiet --out x` with `quiet` unknown) silently eat
+                    // `--out`.  Values genuinely starting with `--` can
+                    // always be passed as `--key=--value`.
+                    match it.peek() {
+                        Some(v) if !v.starts_with("--") => {
+                            out.options.insert(body.to_string(), it.next().unwrap().clone());
+                        }
+                        _ => return Err(format!("--{body} expects a value")),
+                    }
                 }
             } else {
                 out.positional.push(a.clone());
@@ -84,6 +92,21 @@ mod tests {
     #[test]
     fn missing_value_is_error() {
         assert!(Args::parse(&v(&["--out"]), &[]).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_does_not_eat_a_following_option() {
+        // Regression: `--quiet --out x` with `quiet` unregistered used to
+        // consume `--out` as quiet's value, silently dropping the option.
+        let err = Args::parse(&v(&["--quiet", "--out", "x"]), &[]).unwrap_err();
+        assert!(err.contains("--quiet expects a value"), "{err}");
+        // `--key=--value` remains the escape hatch for literal `--` values.
+        let a = Args::parse(&v(&["--sep=--", "--out", "x"]), &[]).unwrap();
+        assert_eq!(a.opt("sep"), Some("--"));
+        assert_eq!(a.opt("out"), Some("x"));
+        // Single-dash values (e.g. negative numbers) still parse as values.
+        let a = Args::parse(&v(&["--offset", "-3"]), &[]).unwrap();
+        assert_eq!(a.opt("offset"), Some("-3"));
     }
 
     #[test]

@@ -1,6 +1,15 @@
 //! Backend-pluggable model execution.
+//!
+//! [`Engine`] holds the immutable pieces (model parameters + backend
+//! choice) and is shared read-only across threads; [`EngineShard`] is the
+//! per-worker mutable half — it owns the backend state (for the functional
+//! CFU backend, a persistent [`CfuUnit`] whose `FusedScratch` buffers are
+//! reused across requests) so the serving steady state stops re-deriving
+//! per-call state.  One shard per worker thread, no locking.
 
-use anyhow::Result;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
 
 use crate::baseline::{self, cfu_playground};
 use crate::cfu::{CfuUnit, PipelineVersion};
@@ -27,6 +36,7 @@ pub enum Backend {
 }
 
 impl Backend {
+    /// Short human-readable backend tag (used in tables and JSON).
     pub fn name(&self) -> String {
         match self {
             Backend::Reference => "reference".into(),
@@ -41,6 +51,7 @@ impl Backend {
 /// Output of one inference.
 #[derive(Debug, Clone)]
 pub struct InferenceOutput {
+    /// Classifier-head logits (one per class).
     pub logits: Vec<i32>,
     /// Simulated hardware cycles (0 for Reference / golden backends).
     pub sim_cycles: u64,
@@ -54,17 +65,50 @@ pub struct InferenceOutput {
 /// golden model is *not* embedded here — xla handles are not `Send` — use
 /// [`infer_golden`] on the main thread for cross-checks.
 pub struct Engine {
+    /// Quantized model parameters (weights, biases, per-stage quantizers).
     pub params: ModelParams,
+    /// Where every block's computation runs.
     pub backend: Backend,
 }
 
 impl Engine {
+    /// Bind a parameter set to a backend.
     pub fn new(params: ModelParams, backend: Backend) -> Self {
         Self { params, backend }
     }
 
-    /// Run one block on the configured backend.
+    /// Check that `x` is a valid model input (first-block geometry).
+    ///
+    /// The serving path calls this before dispatch so a malformed request
+    /// resolves with an error response instead of panicking a worker.
+    pub fn validate_input(&self, x: &TensorI8) -> Result<()> {
+        let c = self.params.blocks[0].cfg;
+        let want = [c.h as usize, c.w as usize, c.cin as usize];
+        if x.dims != want {
+            bail!(
+                "input shape {:?} does not match model input {}x{}x{}",
+                x.dims,
+                c.h,
+                c.w,
+                c.cin
+            );
+        }
+        Ok(())
+    }
+
+    /// Run one block on the configured backend (transient backend state).
     pub fn run_block(&self, idx: usize, x: &TensorI8) -> Result<(TensorI8, u64)> {
+        self.run_block_with(idx, x, None)
+    }
+
+    /// Run one block, reusing `unit` as the CFU state when the backend is
+    /// [`Backend::FusedHost`] (the shard-local warm path).
+    fn run_block_with(
+        &self,
+        idx: usize,
+        x: &TensorI8,
+        unit: Option<&mut CfuUnit>,
+    ) -> Result<(TensorI8, u64)> {
         let bp = &self.params.blocks[idx];
         Ok(match self.backend {
             Backend::Reference => (refimpl::block_ref(x, bp), 0),
@@ -80,20 +124,20 @@ impl Engine {
                 let r = driver::run_block_fused(bp, x, v)?;
                 (r.out, r.cycles)
             }
-            Backend::FusedHost(v) => {
-                let mut unit = CfuUnit::new(v);
-                let (out, cycles) = unit.run_block_host(bp, x);
-                (out, cycles)
-            }
+            Backend::FusedHost(v) => match unit {
+                Some(u) => u.run_block_host(bp, x),
+                None => CfuUnit::new(v).run_block_host(bp, x),
+            },
         })
     }
 
-    /// Full backbone + head on the configured backend.
-    pub fn infer(&self, x: &TensorI8) -> Result<InferenceOutput> {
+    /// Full backbone + head with an optional persistent CFU unit.
+    fn infer_with(&self, x: &TensorI8, mut unit: Option<&mut CfuUnit>) -> Result<InferenceOutput> {
+        self.validate_input(x)?;
         let mut a = x.clone();
         let mut cycles = 0u64;
         for i in 0..self.params.blocks.len() {
-            let (out, c) = self.run_block(i, &a)?;
+            let (out, c) = self.run_block_with(i, &a, unit.as_deref_mut())?;
             a = out;
             cycles += c;
         }
@@ -102,6 +146,68 @@ impl Engine {
         Ok(InferenceOutput { logits, sim_cycles: cycles, class })
     }
 
+    /// Full backbone + head on the configured backend.
+    ///
+    /// Allocates transient backend state per call; the serving path uses
+    /// [`EngineShard::infer`] instead, which keeps that state warm.
+    pub fn infer(&self, x: &TensorI8) -> Result<InferenceOutput> {
+        self.infer_with(x, None)
+    }
+
+    /// A deterministic synthetic input matching this model's input
+    /// geometry — the one constructor the CLI, examples, benches, and
+    /// load generator all share.  Distinct `salt`s yield distinct
+    /// (reproducible) tensors.
+    pub fn synthetic_input(&self, salt: &str) -> TensorI8 {
+        let c = self.params.blocks[0].cfg;
+        TensorI8::from_vec(
+            &[c.h as usize, c.w as usize, c.cin as usize],
+            crate::model::weights::gen_input(
+                salt,
+                (c.h * c.w * c.cin) as usize,
+                self.params.blocks[0].zp_in(),
+            ),
+        )
+    }
+}
+
+/// Per-worker mutable engine state: the sharded half of [`Engine`].
+///
+/// Each serving worker owns exactly one shard.  For the
+/// [`Backend::FusedHost`] backend the shard keeps a persistent [`CfuUnit`]
+/// whose internal `FusedScratch` / flat output buffers retain their
+/// capacity across requests — the steady-state request loop stops paying
+/// the per-call buffer derivation the transient [`Engine::infer`] path
+/// does.  Other backends are stateless and simply borrow the shared
+/// engine.
+pub struct EngineShard {
+    engine: Arc<Engine>,
+    /// Persistent CFU state (populated for `Backend::FusedHost`).
+    unit: Option<CfuUnit>,
+}
+
+impl EngineShard {
+    /// Create a shard over a shared engine.
+    pub fn new(engine: Arc<Engine>) -> Self {
+        let unit = match engine.backend {
+            Backend::FusedHost(v) => Some(CfuUnit::new(v)),
+            _ => None,
+        };
+        Self { engine, unit }
+    }
+
+    /// The shared immutable engine this shard executes.
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Full-model inference reusing this shard's persistent backend state.
+    ///
+    /// Bit-identical to [`Engine::infer`] (only buffer reuse differs);
+    /// malformed inputs resolve as `Err`, never a panic.
+    pub fn infer(&mut self, x: &TensorI8) -> Result<InferenceOutput> {
+        self.engine.infer_with(x, self.unit.as_mut())
+    }
 }
 
 /// Run the whole model through a PJRT golden executable (main thread only —
@@ -224,6 +330,39 @@ mod tests {
         let sw = Engine::new(p.clone(), Backend::SoftwareIss).infer(&x).unwrap();
         let fu = Engine::new(p.clone(), Backend::FusedIss(PipelineVersion::V3)).infer(&x).unwrap();
         assert!(fu.sim_cycles * 4 < sw.sim_cycles, "fused {} vs sw {}", fu.sim_cycles, sw.sim_cycles);
+    }
+
+    #[test]
+    fn shard_matches_transient_engine_across_requests() {
+        // The warm shard path (persistent CfuUnit + reused scratch) must be
+        // bit-identical to the transient path, request after request.
+        let p = mini_params();
+        let engine = Arc::new(Engine::new(p.clone(), Backend::FusedHost(PipelineVersion::V3)));
+        let mut shard = EngineShard::new(Arc::clone(&engine));
+        for salt in 0..4u64 {
+            let c = p.blocks[0].cfg;
+            let x = TensorI8::from_vec(
+                &[c.h as usize, c.w as usize, c.cin as usize],
+                gen_input(&format!("eng.sh{salt}"), (c.h * c.w * c.cin) as usize, p.blocks[0].zp_in()),
+            );
+            let want = engine.infer(&x).unwrap();
+            let got = shard.infer(&x).unwrap();
+            assert_eq!(got.logits, want.logits, "salt {salt}");
+            assert_eq!(got.sim_cycles, want.sim_cycles, "salt {salt}");
+        }
+    }
+
+    #[test]
+    fn malformed_input_is_an_error_not_a_panic() {
+        let engine = Arc::new(Engine::new(mini_params(), Backend::Reference));
+        let bad = TensorI8::from_vec(&[2, 2, 8], vec![0i8; 2 * 2 * 8]);
+        let err = engine.infer(&bad).unwrap_err();
+        assert!(err.to_string().contains("does not match model input"), "{err}");
+        let mut shard = EngineShard::new(Arc::clone(&engine));
+        assert!(shard.infer(&bad).is_err());
+        // The shard stays usable after a failed request.
+        let x = input(&engine.params);
+        assert!(shard.infer(&x).is_ok());
     }
 
     #[test]

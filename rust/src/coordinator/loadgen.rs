@@ -1,0 +1,313 @@
+//! Load generator for the serving core (`fused-dsc serve loadgen`).
+//!
+//! Drives a [`Coordinator`] in one of the two classic load-testing shapes:
+//!
+//! * **Closed-loop** ([`LoadMode::Closed`]) — `clients` concurrent callers
+//!   each submit, wait for the response, and immediately submit again.
+//!   Offered load adapts to service capacity; measures best-case latency
+//!   at a given concurrency.
+//! * **Open-loop** ([`LoadMode::Open`]) — requests arrive on a fixed
+//!   schedule at `rate_hz` regardless of how the system is doing; the
+//!   realistic "millions of independent users" shape, where an overloaded
+//!   server sheds ([`super::Rejected`]) rather than silently stretching
+//!   the arrival process.
+//!
+//! The run ends with a human-readable throughput/latency table
+//! ([`LoadgenReport::print_table`]) and, via [`LoadgenReport::write_json`],
+//! a machine-readable `BENCH_serve.json` through the same artifact path the
+//! bench harness uses (`util::bench::write_bench_artifact`).
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use crate::tensor::TensorI8;
+use crate::util::bench::write_bench_artifact;
+use crate::util::json::Json;
+use crate::util::stats::fmt_cycles;
+
+use super::metrics::MetricsSnapshot;
+use super::serve::{Coordinator, ServeConfig, Ticket};
+use super::Engine;
+
+/// How offered load is generated.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LoadMode {
+    /// `clients` concurrent submit-wait loops (offered load tracks
+    /// capacity).
+    Closed {
+        /// Number of concurrent clients.
+        clients: usize,
+    },
+    /// Fixed arrival schedule at `rate_hz` requests per second (offered
+    /// load is independent of capacity).
+    Open {
+        /// Target arrival rate in requests per second.
+        rate_hz: f64,
+    },
+}
+
+impl LoadMode {
+    /// Short mode tag used in tables and JSON (`"closed"` / `"open"`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            LoadMode::Closed { .. } => "closed",
+            LoadMode::Open { .. } => "open",
+        }
+    }
+}
+
+/// One load-generation run.
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Closed- or open-loop arrival process.
+    pub mode: LoadMode,
+    /// Total requests to offer (admitted + shed).
+    pub requests: usize,
+    /// The coordinator under test.
+    pub serve: ServeConfig,
+}
+
+/// Results of a [`run`]: wall-clock throughput plus the coordinator's own
+/// metrics snapshot (bounded-histogram latency quantiles included).
+#[derive(Debug, Clone)]
+pub struct LoadgenReport {
+    /// Mode tag (`"closed"` / `"open"`).
+    pub mode: String,
+    /// Clients for closed-loop runs.
+    pub clients: Option<usize>,
+    /// Arrival rate for open-loop runs.
+    pub rate_hz: Option<f64>,
+    /// Backend name the engine ran on.
+    pub backend: String,
+    /// Requests offered (admitted + shed).
+    pub requests: usize,
+    /// Wall-clock duration of the whole run.
+    pub wall_s: f64,
+    /// Successful completions per wall-clock second.
+    pub throughput_rps: f64,
+    /// The coordinator's final metrics snapshot.
+    pub metrics: MetricsSnapshot,
+}
+
+/// Drive `engine` with the configured load; `make_input(i)` builds the
+/// `i`-th request payload.  Blocks until every offered request reached a
+/// terminal outcome (response or shed).
+///
+/// # Panics
+///
+/// On a degenerate config: zero closed-loop clients or a non-positive
+/// open-loop rate (the CLI front-end validates these into clean errors
+/// first).
+pub fn run(
+    engine: Arc<Engine>,
+    cfg: &LoadgenConfig,
+    make_input: impl Fn(u64) -> TensorI8 + Sync,
+) -> LoadgenReport {
+    let backend = engine.backend.name();
+    let coord = Coordinator::start(Arc::clone(&engine), cfg.serve.clone());
+    let t0 = Instant::now();
+    match cfg.mode {
+        LoadMode::Closed { clients } => {
+            assert!(clients > 0, "closed-loop needs at least one client");
+            let next = AtomicUsize::new(0);
+            std::thread::scope(|s| {
+                for _ in 0..clients {
+                    s.spawn(|| loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= cfg.requests {
+                            break;
+                        }
+                        // A shed request is already counted by the metrics
+                        // sink; the client just moves on.
+                        if let Ok(t) = coord.submit(make_input(i as u64)) {
+                            let _ = t.wait();
+                        }
+                    });
+                }
+            });
+        }
+        LoadMode::Open { rate_hz } => {
+            assert!(rate_hz > 0.0, "open-loop needs a positive arrival rate");
+            // A collector thread drains tickets so response waiting never
+            // perturbs the arrival schedule.
+            let (ttx, trx) = mpsc::channel::<Ticket>();
+            std::thread::scope(|s| {
+                s.spawn(move || {
+                    for t in trx {
+                        let _ = t.wait();
+                    }
+                });
+                let start = Instant::now();
+                for i in 0..cfg.requests {
+                    let due = start + Duration::from_secs_f64(i as f64 / rate_hz);
+                    let now = Instant::now();
+                    if due > now {
+                        std::thread::sleep(due - now);
+                    }
+                    if let Ok(t) = coord.submit(make_input(i as u64)) {
+                        ttx.send(t).expect("collector alive");
+                    }
+                }
+                drop(ttx); // collector exits once the last ticket resolves
+            });
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let metrics = coord.metrics.snapshot();
+    coord.shutdown();
+    let (clients, rate_hz) = match cfg.mode {
+        LoadMode::Closed { clients } => (Some(clients), None),
+        LoadMode::Open { rate_hz } => (None, Some(rate_hz)),
+    };
+    LoadgenReport {
+        mode: cfg.mode.name().to_string(),
+        clients,
+        rate_hz,
+        backend,
+        requests: cfg.requests,
+        wall_s,
+        throughput_rps: metrics.completed as f64 / wall_s.max(1e-12),
+        metrics,
+    }
+}
+
+impl LoadgenReport {
+    /// Print the human-readable throughput/latency table.
+    pub fn print_table(&self) {
+        let shape = match (self.clients, self.rate_hz) {
+            (Some(c), _) => format!("{c} clients"),
+            (_, Some(r)) => format!("{r:.0} req/s offered"),
+            _ => String::new(),
+        };
+        let m = &self.metrics;
+        println!("== serve loadgen ({} loop, {shape}, backend {}) ==", self.mode, self.backend);
+        println!(
+            "requests {}  admitted {}  completed {}  failed {}  shed {}",
+            self.requests, m.submitted, m.completed, m.failed, m.rejected
+        );
+        println!(
+            "wall {:.3} s   throughput {:.1} req/s   batches {} (max {})",
+            self.wall_s, self.throughput_rps, m.batches, m.max_batch_seen
+        );
+        println!(
+            "{:<10} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9}",
+            "lat (ms)", "p50", "p90", "p99", "p999", "mean", "max"
+        );
+        for (tag, h) in [("queue", &m.queue_latency), ("total", &m.total_latency)] {
+            println!(
+                "{:<10} {:>9.3} {:>9.3} {:>9.3} {:>9.3} {:>9.3} {:>9.3}",
+                tag,
+                h.p50_s * 1e3,
+                h.p90_s * 1e3,
+                h.p99_s * 1e3,
+                h.p999_s * 1e3,
+                h.mean_s * 1e3,
+                h.max_s * 1e3
+            );
+        }
+        println!(
+            "simulated accelerator: {} cycles total ({:.2} ms @100MHz per completed request)",
+            fmt_cycles(m.sim_cycles),
+            m.sim_cycles as f64 / m.completed.max(1) as f64 / 100e6 * 1e3
+        );
+    }
+
+    /// The `BENCH_serve.json` schema: run shape, wall-clock throughput,
+    /// headline quantiles, and the full embedded metrics snapshot.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj()
+            .set("bench", "serve")
+            .set("mode", self.mode.as_str())
+            .set("backend", self.backend.as_str());
+        o = match self.clients {
+            Some(c) => o.set("clients", c),
+            None => o.set("clients", Json::Null),
+        };
+        o = match self.rate_hz {
+            Some(r) => o.set("rate_hz", r),
+            None => o.set("rate_hz", Json::Null),
+        };
+        o.set("requests", self.requests)
+            .set("wall_s", self.wall_s)
+            .set("throughput_rps", self.throughput_rps)
+            .set("total_p50_s", self.metrics.total_latency.p50_s)
+            .set("total_p99_s", self.metrics.total_latency.p99_s)
+            .set("metrics", self.metrics.to_json())
+    }
+
+    /// Write `BENCH_serve.json` through the shared bench artifact path
+    /// (`path` is a directory unless it ends in `.json`).
+    pub fn write_json(&self, path: &Path) -> std::io::Result<PathBuf> {
+        write_bench_artifact("serve", path, &self.to_json())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Backend;
+    use crate::model::blocks::BlockConfig;
+    use crate::model::weights::make_model_params;
+
+    fn mini_engine() -> Arc<Engine> {
+        let p = make_model_params(Some(vec![BlockConfig::new(6, 6, 8, 16, 8, 1, true)]));
+        Arc::new(Engine::new(p, Backend::Reference))
+    }
+
+    fn make_input(engine: &Engine) -> impl Fn(u64) -> TensorI8 + Sync + '_ {
+        move |i| engine.synthetic_input(&format!("lg.{i}"))
+    }
+
+    #[test]
+    fn closed_loop_completes_every_request() {
+        let engine = mini_engine();
+        let cfg = LoadgenConfig {
+            mode: LoadMode::Closed { clients: 4 },
+            requests: 32,
+            serve: ServeConfig::default(),
+        };
+        let report = run(Arc::clone(&engine), &cfg, make_input(&engine));
+        assert_eq!(report.metrics.completed, 32);
+        assert_eq!(report.metrics.rejected, 0); // queue_depth 128 >> 4 clients
+        assert!(report.throughput_rps > 0.0);
+        assert!(report.metrics.total_latency.p99_s >= report.metrics.total_latency.p50_s);
+    }
+
+    #[test]
+    fn open_loop_resolves_every_offered_request() {
+        let engine = mini_engine();
+        let cfg = LoadgenConfig {
+            mode: LoadMode::Open { rate_hz: 4000.0 },
+            requests: 32,
+            serve: ServeConfig { queue_depth: 8, ..Default::default() },
+        };
+        let report = run(Arc::clone(&engine), &cfg, make_input(&engine));
+        let m = &report.metrics;
+        // Every offered request reached a terminal outcome: completed,
+        // failed, or shed.
+        assert_eq!(m.completed + m.failed + m.rejected, 32);
+        assert_eq!(m.submitted, m.completed + m.failed);
+    }
+
+    #[test]
+    fn report_serializes_and_writes_artifact() {
+        let engine = mini_engine();
+        let cfg = LoadgenConfig {
+            mode: LoadMode::Closed { clients: 2 },
+            requests: 8,
+            serve: ServeConfig::default(),
+        };
+        let report = run(Arc::clone(&engine), &cfg, make_input(&engine));
+        let body = report.to_json().render();
+        assert!(body.contains("\"bench\":\"serve\""), "{body}");
+        assert!(body.contains("\"throughput_rps\":"), "{body}");
+        assert!(body.contains("\"total_p99_s\":"), "{body}");
+        assert!(body.contains("\"queue_latency\":"), "{body}");
+        let dir = std::env::temp_dir().join(format!("fused_dsc_loadgen_{}", std::process::id()));
+        let file = report.write_json(&dir).unwrap();
+        assert_eq!(file.file_name().unwrap().to_str().unwrap(), "BENCH_serve.json");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,71 +1,126 @@
-//! Serving metrics: request counters + latency distribution.
+//! Serving metrics: lock-free counters plus bounded latency histograms.
+//!
+//! Everything here is written on the serving hot path (admission, batching,
+//! worker completion), so the sink is wait-free: plain atomic counters and
+//! two fixed-memory log-scale [`Histogram`]s (queue time and total time).
+//! Memory is O(histogram buckets), **not** O(requests) — sustained load
+//! never grows this structure (proved by the counting-allocator test in
+//! `rust/tests/alloc_regression.rs`).
 
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
-use crate::util::stats::Summary;
+use crate::util::json::Json;
+use crate::util::stats::{Histogram, HistogramSnapshot};
 
-#[derive(Debug, Default)]
-struct Inner {
-    submitted: u64,
-    completed: u64,
-    batches: u64,
-    max_batch_seen: usize,
-    queue_latencies_s: Vec<f64>,
-    total_latencies_s: Vec<f64>,
-    sim_cycles: u64,
-}
-
-/// Thread-safe metrics sink shared by the batcher and workers.
+/// Wait-free metrics sink shared by the admission path, the batcher, and
+/// the worker shards.
+///
+/// All writes are relaxed atomic adds; [`Metrics::snapshot`] produces a
+/// consistent-enough point-in-time copy for reporting (counters may be a
+/// few events apart under concurrent writes, never torn).
 #[derive(Debug, Default)]
 pub struct Metrics {
-    inner: Mutex<Inner>,
+    submitted: AtomicU64,
+    rejected: AtomicU64,
+    completed: AtomicU64,
+    failed: AtomicU64,
+    batches: AtomicU64,
+    max_batch_seen: AtomicU64,
+    sim_cycles: AtomicU64,
+    /// Admission-to-execution-start latency distribution.
+    queue_latency: Histogram,
+    /// Admission-to-response latency distribution.
+    total_latency: Histogram,
 }
 
-/// A point-in-time snapshot.
+/// A point-in-time copy of [`Metrics`], serializable via
+/// [`MetricsSnapshot::to_json`].
 #[derive(Debug, Clone)]
 pub struct MetricsSnapshot {
+    /// Requests admitted by `submit` (excludes rejected ones).
     pub submitted: u64,
+    /// Requests shed at admission (queue full / shutting down).
+    pub rejected: u64,
+    /// Requests that completed with a successful inference.
     pub completed: u64,
+    /// Requests that resolved with an error response.
+    pub failed: u64,
+    /// Batches formed by the batcher.
     pub batches: u64,
+    /// Largest batch the batcher ever formed.
     pub max_batch_seen: usize,
-    pub queue_latency: Option<Summary>,
-    pub total_latency: Option<Summary>,
+    /// Total simulated accelerator cycles across completed requests.
     pub sim_cycles: u64,
+    /// Queue-time distribution (admission to execution start).
+    pub queue_latency: HistogramSnapshot,
+    /// End-to-end latency distribution (admission to response).
+    pub total_latency: HistogramSnapshot,
 }
 
 impl Metrics {
+    /// Count one admitted request.
     pub fn note_submitted(&self) {
-        self.inner.lock().unwrap().submitted += 1;
+        self.submitted.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Count one request shed at admission.
+    pub fn note_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one formed batch of `size` requests.
     pub fn note_batch(&self, size: usize) {
-        let mut g = self.inner.lock().unwrap();
-        g.batches += 1;
-        g.max_batch_seen = g.max_batch_seen.max(size);
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.max_batch_seen.fetch_max(size as u64, Ordering::Relaxed);
     }
 
+    /// Record one successful completion.
     pub fn note_completed(&self, queue: Duration, total: Duration, sim_cycles: u64) {
-        let mut g = self.inner.lock().unwrap();
-        g.completed += 1;
-        g.queue_latencies_s.push(queue.as_secs_f64());
-        g.total_latencies_s.push(total.as_secs_f64());
-        g.sim_cycles += sim_cycles;
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.sim_cycles.fetch_add(sim_cycles, Ordering::Relaxed);
+        self.queue_latency.record(queue);
+        self.total_latency.record(total);
     }
 
+    /// Record one request that resolved with an error response (the
+    /// latency still counts — the client waited for it).
+    pub fn note_failed(&self, queue: Duration, total: Duration) {
+        self.failed.fetch_add(1, Ordering::Relaxed);
+        self.queue_latency.record(queue);
+        self.total_latency.record(total);
+    }
+
+    /// Take a point-in-time copy of every counter and both histograms.
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let g = self.inner.lock().unwrap();
         MetricsSnapshot {
-            submitted: g.submitted,
-            completed: g.completed,
-            batches: g.batches,
-            max_batch_seen: g.max_batch_seen,
-            queue_latency: (!g.queue_latencies_s.is_empty())
-                .then(|| Summary::of(&g.queue_latencies_s)),
-            total_latency: (!g.total_latencies_s.is_empty())
-                .then(|| Summary::of(&g.total_latencies_s)),
-            sim_cycles: g.sim_cycles,
+            submitted: self.submitted.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            max_batch_seen: self.max_batch_seen.load(Ordering::Relaxed) as usize,
+            sim_cycles: self.sim_cycles.load(Ordering::Relaxed),
+            queue_latency: self.queue_latency.snapshot(),
+            total_latency: self.total_latency.snapshot(),
         }
+    }
+}
+
+impl MetricsSnapshot {
+    /// The machine-readable form embedded in `BENCH_serve.json` and
+    /// printable anywhere a metrics dump is wanted.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("submitted", self.submitted)
+            .set("rejected", self.rejected)
+            .set("completed", self.completed)
+            .set("failed", self.failed)
+            .set("batches", self.batches)
+            .set("max_batch_seen", self.max_batch_seen)
+            .set("sim_cycles", self.sim_cycles)
+            .set("queue_latency", self.queue_latency.to_json())
+            .set("total_latency", self.total_latency.to_json())
     }
 }
 
@@ -78,21 +133,69 @@ mod tests {
         let m = Metrics::default();
         m.note_submitted();
         m.note_submitted();
+        m.note_rejected();
         m.note_batch(2);
         m.note_completed(Duration::from_millis(1), Duration::from_millis(5), 100);
         m.note_completed(Duration::from_millis(2), Duration::from_millis(6), 200);
+        m.note_failed(Duration::from_millis(1), Duration::from_millis(3));
         let s = m.snapshot();
         assert_eq!(s.submitted, 2);
+        assert_eq!(s.rejected, 1);
         assert_eq!(s.completed, 2);
+        assert_eq!(s.failed, 1);
         assert_eq!(s.batches, 1);
         assert_eq!(s.max_batch_seen, 2);
         assert_eq!(s.sim_cycles, 300);
-        assert!(s.total_latency.unwrap().mean > s.queue_latency.unwrap().mean);
+        assert_eq!(s.queue_latency.count, 3);
+        assert_eq!(s.total_latency.count, 3);
+        assert!(s.total_latency.mean_s > s.queue_latency.mean_s);
+        assert_eq!(s.completed + s.failed, 3);
     }
 
     #[test]
-    fn empty_snapshot_has_no_latency() {
+    fn empty_snapshot_is_zeroed() {
         let s = Metrics::default().snapshot();
-        assert!(s.queue_latency.is_none());
+        assert_eq!(s.queue_latency.count, 0);
+        assert_eq!(s.queue_latency.p99_s, 0.0);
+        assert_eq!(s.max_batch_seen, 0);
+    }
+
+    #[test]
+    fn snapshot_serializes_to_json() {
+        let m = Metrics::default();
+        m.note_submitted();
+        m.note_completed(Duration::from_micros(50), Duration::from_micros(90), 7);
+        let body = m.snapshot().to_json().render();
+        assert!(body.contains("\"completed\":1"), "{body}");
+        assert!(body.contains("\"queue_latency\":{\"count\":1"), "{body}");
+        assert!(body.contains("\"p999_s\":"), "{body}");
+    }
+
+    #[test]
+    fn metrics_are_shareable_across_threads() {
+        let m = std::sync::Arc::new(Metrics::default());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let m = std::sync::Arc::clone(&m);
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        m.note_submitted();
+                        m.note_completed(
+                            Duration::from_micros(10),
+                            Duration::from_micros(20),
+                            1,
+                        );
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 4000);
+        assert_eq!(s.completed, 4000);
+        assert_eq!(s.sim_cycles, 4000);
+        assert_eq!(s.total_latency.count, 4000);
     }
 }

@@ -1,18 +1,35 @@
 //! The inference coordinator (L3 serving layer): backend-pluggable model
-//! execution, a batching request scheduler on the thread-pool runtime, and
-//! serving metrics.
+//! execution behind per-worker engine shards, a bounded-admission batching
+//! scheduler, wait-free serving metrics, and a load generator.
 //!
-//! The paper's contribution is the accelerator itself, so the coordinator
-//! is the thin-but-real driver the system prompt calls for: it owns the
-//! request loop, routes blocks to execution backends (software baseline /
-//! CFU-Playground comparator / fused CFU v1-v3 on the ISS / fast functional
-//! CFU / PJRT golden model), batches concurrent requests, and reports
-//! latency + simulated-hardware throughput.
+//! The paper's contribution is the accelerator itself; the coordinator is
+//! the production-shaped driver around it.  A request flows
+//!
+//! ```text
+//! submit → bounded admission queue → batcher → least-loaded shard → response
+//! ```
+//!
+//! with three guarantees the module's tests pin down:
+//!
+//! * **Bounded everything** — the admission queue ([`ServeConfig`]
+//!   `queue_depth`), each worker's private queue, and the metrics sink are
+//!   all fixed-size; sustained overload sheds ([`Rejected`]) instead of
+//!   growing memory or latency without bound.
+//! * **Exactly one terminal outcome** — every admitted request resolves
+//!   with one [`Response`] (success or [`ServeError`]); worker inference
+//!   failures propagate as error responses, never hangs.
+//! * **Warm shards** — each worker owns an [`EngineShard`] that reuses its
+//!   backend scratch state across requests instead of re-deriving it per
+//!   call.
+//!
+//! See `ARCHITECTURE.md` for the full request lifecycle and how the
+//! modules map onto the paper's sections.
 
 pub mod engine;
+pub mod loadgen;
 pub mod metrics;
 pub mod serve;
 
-pub use engine::{infer_golden, Backend, Engine, InferenceOutput};
-pub use metrics::Metrics;
-pub use serve::{Coordinator, Request, Response, ServeConfig};
+pub use engine::{infer_golden, Backend, Engine, EngineShard, InferenceOutput};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use serve::{Coordinator, Rejected, Request, Response, ServeConfig, ServeError, Ticket};

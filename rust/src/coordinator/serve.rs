@@ -1,107 +1,290 @@
-//! The batching request scheduler: an edge-serving loop over the
-//! thread-pool runtime.
+//! The serving core: bounded admission, a batching scheduler, and sharded
+//! stateful workers.
 //!
-//! Requests enter a queue; a batcher thread forms batches (up to
-//! `max_batch`, waiting at most `batch_timeout` for stragglers) and
-//! dispatches them to worker threads running [`Engine`] inferences.  Each
-//! request gets exactly one response on its own channel — the scheduler
-//! invariants (no loss, no duplication, bounded batches) are property-
-//! tested in `rust/tests/proptests.rs`.
+//! A request's lifecycle (see `ARCHITECTURE.md` for the full picture):
+//!
+//! 1. **Admission** — [`Coordinator::submit`] pushes onto a *bounded*
+//!    queue (`ServeConfig::queue_depth`).  A full queue sheds the request
+//!    immediately with [`Rejected::QueueFull`] instead of letting latency
+//!    grow without bound.
+//! 2. **Batching** — the batcher thread collects up to
+//!    `ServeConfig::max_batch` requests (waiting at most
+//!    `ServeConfig::batch_timeout` for stragglers), then dispatches each to
+//!    the least-loaded worker shard.
+//! 3. **Execution** — every worker owns an [`EngineShard`] (persistent
+//!    backend state, reused across requests) and a bounded private queue;
+//!    a worker that hits an inference error sends an **error response** —
+//!    clients always observe exactly one terminal outcome, never a hang.
+//! 4. **Response** — [`Ticket::wait`] returns the [`Response`]; even if a
+//!    worker died mid-request the ticket resolves (with
+//!    [`ServeError::WorkerLost`]).
+//!
+//! The scheduler invariants (no loss, no duplication, bounded batches,
+//! rejection accounting) are property-tested in `rust/tests/proptests.rs`.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
-
 use crate::tensor::TensorI8;
+use crate::util::pool::ShardPool;
 
-use super::engine::Engine;
+use super::engine::{Engine, EngineShard, InferenceOutput};
 use super::metrics::Metrics;
 
 /// Coordinator configuration.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
+    /// Largest batch the batcher will form.
     pub max_batch: usize,
+    /// How long the batcher waits for stragglers before dispatching a
+    /// partial batch.
     pub batch_timeout: Duration,
+    /// Number of worker shards (each owns an [`EngineShard`]).
     pub workers: usize,
+    /// Bound on the admission queue; a full queue sheds new submissions
+    /// with [`Rejected::QueueFull`].  Total outstanding work is bounded by
+    /// `queue_depth` admitted + up to `max_batch` held by the batcher +
+    /// `workers * max_batch` in shard queues + one executing per worker.
+    pub queue_depth: usize,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        Self { max_batch: 8, batch_timeout: Duration::from_millis(2), workers: 4 }
+        Self {
+            max_batch: 8,
+            batch_timeout: Duration::from_millis(2),
+            workers: 4,
+            queue_depth: 128,
+        }
     }
 }
 
-/// An in-flight request.
+/// Why a submission was refused at the door.
+///
+/// Both variants hand the unsubmitted `input` back, so a caller that wants
+/// to back off and retry (or reroute) does so without cloning the payload.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Rejected {
+    /// The bounded admission queue is at `queue_depth`; shed the request
+    /// now rather than queueing it into unbounded latency.
+    QueueFull {
+        /// The configured `queue_depth` that was exceeded.
+        depth: usize,
+        /// The input, returned to the caller untouched.
+        input: TensorI8,
+    },
+    /// The coordinator is shutting down and no longer admits work.
+    ShuttingDown {
+        /// The input, returned to the caller untouched.
+        input: TensorI8,
+    },
+}
+
+impl std::fmt::Display for Rejected {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Rejected::QueueFull { depth, .. } => {
+                write!(f, "request shed: admission queue full (depth {depth})")
+            }
+            Rejected::ShuttingDown { .. } => {
+                write!(f, "request refused: coordinator shutting down")
+            }
+        }
+    }
+}
+
+impl std::error::Error for Rejected {}
+
+/// Why an *admitted* request resolved without a successful inference.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// The backend returned an error for this request (e.g. a malformed
+    /// input); the worker is fine and keeps serving.
+    Inference(String),
+    /// The worker disappeared before responding (it panicked, or the
+    /// coordinator was torn down mid-request).
+    WorkerLost,
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Inference(e) => write!(f, "inference failed: {e}"),
+            ServeError::WorkerLost => write!(f, "worker lost before responding"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// An in-flight request (internal to the coordinator pipeline).
 pub struct Request {
+    /// Unique, monotonically increasing request id.
     pub id: u64,
+    /// The model input.
     pub input: TensorI8,
     submitted_at: Instant,
-    respond: Sender<Response>,
+    respond: SyncSender<Response>,
 }
 
-/// A completed inference.
+/// The single terminal outcome of an admitted request.
 #[derive(Debug, Clone)]
 pub struct Response {
+    /// Id assigned at submission (matches [`Ticket::id`]).
     pub id: u64,
-    pub logits: Vec<i32>,
-    pub class: usize,
-    pub sim_cycles: u64,
+    /// Time from admission to execution start (batch formation + shard
+    /// queue wait).
     pub queue_time: Duration,
+    /// Time from admission to this response.
     pub total_time: Duration,
+    /// The inference result: logits/class/cycles, or the serving error
+    /// (worker failures arrive here — they never hang the client).
+    pub result: Result<InferenceOutput, ServeError>,
 }
 
-/// Handle for awaiting a response.
+impl Response {
+    /// Unwrap into the successful [`InferenceOutput`], converting a
+    /// serving error into `anyhow::Error`.
+    pub fn into_output(self) -> anyhow::Result<InferenceOutput> {
+        self.result.map_err(|e| anyhow::Error::msg(e.to_string()))
+    }
+}
+
+/// Handle for awaiting an admitted request's response.
 pub struct Ticket {
+    /// Id assigned at submission.
     pub id: u64,
+    submitted_at: Instant,
     rx: Receiver<Response>,
+    metrics: Arc<Metrics>,
 }
 
 impl Ticket {
-    pub fn wait(self) -> Result<Response> {
-        Ok(self.rx.recv()?)
+    /// Block for the terminal outcome.  Infallible: if the serving side
+    /// vanished (worker panic, teardown), a synthesized
+    /// [`ServeError::WorkerLost`] response is returned — a ticket can
+    /// never hang and never yields more than one outcome.
+    pub fn wait(self) -> Response {
+        match self.rx.recv() {
+            Ok(r) => r,
+            Err(_) => {
+                // The worker never recorded this request (it died before
+                // responding); account the synthesized failure here so
+                // `submitted == completed + failed` stays true once every
+                // ticket has resolved.
+                let total_time = self.submitted_at.elapsed();
+                self.metrics.note_failed(Duration::ZERO, total_time);
+                Response {
+                    id: self.id,
+                    queue_time: Duration::ZERO,
+                    total_time,
+                    result: Err(ServeError::WorkerLost),
+                }
+            }
+        }
     }
 }
 
-/// The batching coordinator.
+/// The batching coordinator over sharded engine workers.
+///
+/// # Example
+///
+/// ```
+/// use std::sync::Arc;
+/// use fused_dsc::coordinator::{Backend, Coordinator, Engine, ServeConfig};
+/// use fused_dsc::model::blocks::BlockConfig;
+/// use fused_dsc::model::weights::make_model_params;
+///
+/// // A one-block model on the pure-Rust reference backend.
+/// let params = make_model_params(Some(vec![BlockConfig::new(4, 4, 8, 16, 8, 1, false)]));
+/// let engine = Arc::new(Engine::new(params, Backend::Reference));
+/// let coord = Coordinator::start(Arc::clone(&engine), ServeConfig::default());
+///
+/// let x = engine.synthetic_input("doc.x");
+/// let ticket = coord.submit(x).expect("queue has room");
+/// let response = ticket.wait(); // exactly one terminal outcome
+/// let out = response.result.expect("reference backend cannot fail");
+/// assert_eq!(out.logits.len(), fused_dsc::model::blocks::NUM_CLASSES as usize);
+/// assert_eq!(coord.metrics.snapshot().completed, 1);
+/// coord.shutdown();
+/// ```
 pub struct Coordinator {
-    tx: Option<Sender<Request>>,
+    tx: Option<SyncSender<Request>>,
     batcher: Option<JoinHandle<()>>,
     next_id: AtomicU64,
+    queue_depth: usize,
+    /// Shared wait-free metrics sink (snapshot anytime).
     pub metrics: Arc<Metrics>,
 }
 
 impl Coordinator {
-    /// Spawn the batcher + worker pool around a shared engine.
+    /// Spawn the batcher and `cfg.workers` engine shards around a shared
+    /// engine.
     pub fn start(engine: Arc<Engine>, cfg: ServeConfig) -> Self {
-        assert!(cfg.max_batch > 0 && cfg.workers > 0);
-        let (tx, rx) = mpsc::channel::<Request>();
+        assert!(cfg.max_batch > 0 && cfg.workers > 0 && cfg.queue_depth > 0);
+        let (tx, rx) = mpsc::sync_channel::<Request>(cfg.queue_depth);
         let metrics = Arc::new(Metrics::default());
         let m2 = Arc::clone(&metrics);
+        let queue_depth = cfg.queue_depth;
         let batcher = std::thread::spawn(move || {
             batcher_loop(rx, engine, cfg, m2);
         });
-        Self { tx: Some(tx), batcher: Some(batcher), next_id: AtomicU64::new(0), metrics }
+        Self {
+            tx: Some(tx),
+            batcher: Some(batcher),
+            next_id: AtomicU64::new(0),
+            queue_depth,
+            metrics,
+        }
     }
 
-    /// Submit an inference request; returns a ticket to wait on.
-    pub fn submit(&self, input: TensorI8) -> Ticket {
+    /// Submit an inference request.
+    ///
+    /// Returns a [`Ticket`] when admitted; sheds with
+    /// [`Rejected::QueueFull`] when the bounded admission queue is at
+    /// capacity (counted in [`Metrics`] as `rejected`), handing the input
+    /// back for a clone-free retry.  Never blocks.
+    pub fn submit(&self, input: TensorI8) -> Result<Ticket, Rejected> {
+        let tx = match self.tx.as_ref() {
+            Some(tx) => tx,
+            None => return Err(Rejected::ShuttingDown { input }),
+        };
         let id = self.next_id.fetch_add(1, Ordering::SeqCst);
-        let (rtx, rrx) = mpsc::channel();
-        self.metrics.note_submitted();
-        self.tx
-            .as_ref()
-            .expect("coordinator stopped")
-            .send(Request { id, input, submitted_at: Instant::now(), respond: rtx })
-            .expect("batcher gone");
-        Ticket { id, rx: rrx }
+        // Depth 1 so the worker's send never blocks; the client may fetch
+        // the response long after (or never — the buffer absorbs it).
+        let (rtx, rrx) = mpsc::sync_channel(1);
+        let submitted_at = Instant::now();
+        match tx.try_send(Request { id, input, submitted_at, respond: rtx }) {
+            Ok(()) => {
+                self.metrics.note_submitted();
+                Ok(Ticket {
+                    id,
+                    submitted_at,
+                    rx: rrx,
+                    metrics: Arc::clone(&self.metrics),
+                })
+            }
+            Err(TrySendError::Full(req)) => {
+                self.metrics.note_rejected();
+                Err(Rejected::QueueFull { depth: self.queue_depth, input: req.input })
+            }
+            Err(TrySendError::Disconnected(req)) => {
+                self.metrics.note_rejected();
+                Err(Rejected::ShuttingDown { input: req.input })
+            }
+        }
     }
 
-    /// Stop accepting requests and drain (joins the batcher).
+    /// Stop accepting requests and drain everything in flight (joins the
+    /// batcher, which joins the worker shards).
     pub fn shutdown(mut self) {
+        self.teardown();
+    }
+
+    fn teardown(&mut self) {
         drop(self.tx.take());
         if let Some(b) = self.batcher.take() {
             let _ = b.join();
@@ -111,15 +294,19 @@ impl Coordinator {
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        drop(self.tx.take());
-        if let Some(b) = self.batcher.take() {
-            let _ = b.join();
-        }
+        self.teardown();
     }
 }
 
+/// Batch formation + least-loaded dispatch onto the worker shards.
 fn batcher_loop(rx: Receiver<Request>, engine: Arc<Engine>, cfg: ServeConfig, metrics: Arc<Metrics>) {
-    let pool = crate::util::pool::ThreadPool::new(cfg.workers);
+    // Each worker owns an EngineShard (persistent backend state) and a
+    // bounded queue of max_batch requests: dispatch blocks when every
+    // worker is saturated, which in turn lets the admission queue fill and
+    // shed — bounded end to end.
+    let shards = ShardPool::new(cfg.workers, cfg.max_batch, |_| {
+        EngineShard::new(Arc::clone(&engine))
+    });
     loop {
         // Block for the first request of a batch.
         let first = match rx.recv() {
@@ -140,27 +327,35 @@ fn batcher_loop(rx: Receiver<Request>, engine: Arc<Engine>, cfg: ServeConfig, me
             }
         }
         metrics.note_batch(batch.len());
-        let started = Instant::now();
         for req in batch {
-            let engine = Arc::clone(&engine);
             let metrics = Arc::clone(&metrics);
-            pool.spawn(move || {
-                let queue_time = started.duration_since(req.submitted_at);
-                let out = engine.infer(&req.input).expect("inference failed");
-                let total = req.submitted_at.elapsed();
-                metrics.note_completed(queue_time, total, out.sim_cycles);
-                let _ = req.respond.send(Response {
-                    id: req.id,
-                    logits: out.logits,
-                    class: out.class,
-                    sim_cycles: out.sim_cycles,
-                    queue_time,
-                    total_time: total,
-                });
+            shards.spawn_least_loaded(move |shard: &mut EngineShard| {
+                serve_one(shard, req, &metrics);
             });
         }
     }
-    // pool drops here, joining workers after queued jobs drain.
+    // `shards` drops here: queues close, workers drain and join.
+}
+
+/// Execute one request on a worker shard and deliver its single terminal
+/// outcome (success or error — never silence).
+fn serve_one(shard: &mut EngineShard, req: Request, metrics: &Metrics) {
+    // Stamped at execution start, so time spent in the shard's bounded
+    // queue (behind up to max_batch earlier requests) is attributed to
+    // queueing, not silently folded into service time.
+    let queue_time = Instant::now().saturating_duration_since(req.submitted_at);
+    let result = shard.infer(&req.input);
+    let total_time = req.submitted_at.elapsed();
+    match &result {
+        Ok(out) => metrics.note_completed(queue_time, total_time, out.sim_cycles),
+        Err(_) => metrics.note_failed(queue_time, total_time),
+    }
+    let _ = req.respond.send(Response {
+        id: req.id,
+        queue_time,
+        total_time,
+        result: result.map_err(|e| ServeError::Inference(e.to_string())),
+    });
 }
 
 #[cfg(test)]
@@ -168,7 +363,7 @@ mod tests {
     use super::*;
     use crate::coordinator::engine::Backend;
     use crate::model::blocks::BlockConfig;
-    use crate::model::weights::{gen_input, make_model_params};
+    use crate::model::weights::make_model_params;
 
     fn mini_engine() -> Arc<Engine> {
         let p = make_model_params(Some(vec![
@@ -179,29 +374,32 @@ mod tests {
     }
 
     fn input(engine: &Engine, salt: u64) -> TensorI8 {
-        let c = engine.params.blocks[0].cfg;
-        TensorI8::from_vec(
-            &[c.h as usize, c.w as usize, c.cin as usize],
-            gen_input(&format!("serve.x{salt}"), (c.h * c.w * c.cin) as usize, engine.params.blocks[0].zp_in()),
-        )
+        engine.synthetic_input(&format!("serve.x{salt}"))
     }
 
     #[test]
     fn serves_all_requests_exactly_once() {
         let engine = mini_engine();
         let coord = Coordinator::start(Arc::clone(&engine), ServeConfig::default());
-        let tickets: Vec<Ticket> = (0..32).map(|i| coord.submit(input(&engine, i))).collect();
-        let mut ids: Vec<u64> = tickets.into_iter().map(|t| {
-            let id = t.id;
-            let r = t.wait().unwrap();
-            assert_eq!(r.id, id);
-            id
-        }).collect();
+        let tickets: Vec<Ticket> =
+            (0..32).map(|i| coord.submit(input(&engine, i)).unwrap()).collect();
+        let mut ids: Vec<u64> = tickets
+            .into_iter()
+            .map(|t| {
+                let id = t.id;
+                let r = t.wait();
+                assert_eq!(r.id, id);
+                assert!(r.result.is_ok());
+                id
+            })
+            .collect();
         ids.sort_unstable();
         assert_eq!(ids, (0..32).collect::<Vec<u64>>());
         let snap = coord.metrics.snapshot();
         assert_eq!(snap.completed, 32);
+        assert_eq!(snap.rejected, 0);
         assert!(snap.max_batch_seen <= ServeConfig::default().max_batch);
+        assert_eq!(snap.total_latency.count, 32);
         coord.shutdown();
     }
 
@@ -211,7 +409,7 @@ mod tests {
         let coord = Coordinator::start(Arc::clone(&engine), ServeConfig::default());
         let x = input(&engine, 7);
         let want = engine.infer(&x).unwrap();
-        let got = coord.submit(x).wait().unwrap();
+        let got = coord.submit(x).unwrap().wait().into_output().unwrap();
         assert_eq!(got.logits, want.logits);
         assert_eq!(got.class, want.class);
     }
@@ -219,15 +417,114 @@ mod tests {
     #[test]
     fn batching_respects_max_batch_under_load() {
         let engine = mini_engine();
-        let cfg = ServeConfig { max_batch: 4, batch_timeout: Duration::from_millis(20), workers: 2 };
+        let cfg = ServeConfig {
+            max_batch: 4,
+            batch_timeout: Duration::from_millis(20),
+            workers: 2,
+            ..Default::default()
+        };
         let coord = Coordinator::start(Arc::clone(&engine), cfg);
-        let tickets: Vec<Ticket> = (0..17).map(|i| coord.submit(input(&engine, i))).collect();
+        let tickets: Vec<Ticket> =
+            (0..17).map(|i| coord.submit(input(&engine, i)).unwrap()).collect();
         for t in tickets {
-            t.wait().unwrap();
+            assert!(t.wait().result.is_ok());
         }
         let snap = coord.metrics.snapshot();
         assert_eq!(snap.completed, 17);
         assert!(snap.max_batch_seen <= 4);
         assert!(snap.batches >= 5); // 17 requests / max 4 per batch
+    }
+
+    #[test]
+    fn failing_request_resolves_with_error_not_hang() {
+        // A malformed input must come back as an error response; the
+        // worker survives and keeps serving valid requests.
+        let engine = mini_engine();
+        let coord = Coordinator::start(Arc::clone(&engine), ServeConfig::default());
+        let bad = TensorI8::from_vec(&[2, 2, 8], vec![0i8; 2 * 2 * 8]);
+        let t = coord.submit(bad).unwrap();
+        let r = t.wait(); // must not hang
+        match r.result {
+            Err(ServeError::Inference(msg)) => {
+                assert!(msg.contains("does not match model input"), "{msg}")
+            }
+            other => panic!("expected inference error, got {other:?}"),
+        }
+        // The pipeline is still healthy.
+        let ok = coord.submit(input(&engine, 1)).unwrap().wait();
+        assert!(ok.result.is_ok());
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.failed, 1);
+        assert_eq!(snap.completed, 1);
+        assert_eq!(snap.total_latency.count, 2); // failures count toward latency
+    }
+
+    #[test]
+    fn queue_full_sheds_instead_of_queueing() {
+        // Saturate a deliberately tiny pipeline: queue_depth 1, one
+        // worker with a depth-1 shard queue.  Submitting a burst far
+        // larger than total capacity must shed at least one request, and
+        // accounting must balance: submitted + rejected == attempts,
+        // resolved == submitted.
+        let engine = mini_engine();
+        let cfg = ServeConfig {
+            max_batch: 1,
+            batch_timeout: Duration::ZERO,
+            workers: 1,
+            queue_depth: 1,
+        };
+        let coord = Coordinator::start(Arc::clone(&engine), cfg);
+        let attempts = 64;
+        let mut tickets = Vec::new();
+        let mut rejected = 0u64;
+        for i in 0..attempts {
+            let x = input(&engine, i);
+            match coord.submit(x.clone()) {
+                Ok(t) => tickets.push(t),
+                Err(Rejected::QueueFull { depth, input }) => {
+                    assert_eq!(depth, 1);
+                    assert_eq!(input, x, "shed request must hand the input back");
+                    rejected += 1;
+                }
+                Err(e) => panic!("unexpected rejection {e}"),
+            }
+        }
+        assert!(rejected > 0, "burst of {attempts} into capacity ~3 never shed");
+        let admitted = tickets.len() as u64;
+        for t in tickets {
+            assert!(t.wait().result.is_ok()); // every admitted request resolves
+        }
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.submitted, admitted);
+        assert_eq!(snap.rejected, rejected);
+        assert_eq!(snap.completed, admitted);
+        assert_eq!(snap.submitted + snap.rejected, attempts);
+    }
+
+    #[test]
+    fn ticket_resolves_even_if_coordinator_is_torn_down() {
+        // Dropping the coordinator while a ticket is outstanding must
+        // still produce a terminal outcome for that ticket.
+        let engine = mini_engine();
+        let coord = Coordinator::start(Arc::clone(&engine), ServeConfig::default());
+        let t = coord.submit(input(&engine, 0)).unwrap();
+        coord.shutdown(); // drains in-flight work before returning
+        let r = t.wait();
+        assert!(r.result.is_ok(), "drained request should have completed");
+    }
+
+    #[test]
+    fn sustained_load_on_several_shards_loses_nothing() {
+        // Smoke for the least-loaded dispatch path: a 64-request burst on
+        // four shards resolves every request exactly once.
+        let engine = mini_engine();
+        let cfg = ServeConfig { workers: 4, max_batch: 8, ..Default::default() };
+        let coord = Coordinator::start(Arc::clone(&engine), cfg);
+        let tickets: Vec<Ticket> =
+            (0..64).map(|i| coord.submit(input(&engine, i)).unwrap()).collect();
+        for t in tickets {
+            assert!(t.wait().result.is_ok());
+        }
+        assert_eq!(coord.metrics.snapshot().completed, 64);
     }
 }

@@ -15,6 +15,31 @@
 //!   bit-exact golden model.
 //! * **L1** — the fused pixel-wise Ex→Dw→Pr Pallas kernel inside that model.
 //!
+//! # Module map
+//!
+//! | Module | Role |
+//! |---|---|
+//! | [`cpu`] | Cycle-accurate RV32IM core, I$/D$ model, cost model |
+//! | [`isa`] | RV32IM + custom-0 encode/decode and the mini assembler |
+//! | [`cfu`] | The fused-DSC accelerator: buffers, engines, pipeline model |
+//! | [`driver`] | RV32IM firmware that programs the CFU from inside the ISS |
+//! | [`baseline`] | Software kernels + CFU-Playground 1×1 SIMD comparator |
+//! | [`model`] | Quantized MobileNetV2-style blocks, weights, reference impl |
+//! | [`quant`] | Fixed-point requantization primitives (SRDHM, rounding) |
+//! | [`coordinator`] | Serving core: sharded engines, bounded admission, metrics, loadgen |
+//! | [`cost`] | FPGA/ASIC resource, power, and area models |
+//! | [`memtraffic`] | Memory-traffic analytics (paper Table VI) |
+//! | [`report`] | Regenerates the paper's tables and figures |
+//! | [`runtime`] | PJRT golden-model execution (behind the `pjrt` feature) |
+//! | [`util`] | Hand-rolled substrate: RNG, proptest, stats, bench, JSON, pools |
+//!
+//! # Serving quick start
+//!
+//! The serving core ([`coordinator`]) wraps any backend in a bounded,
+//! sharded request pipeline — see [`coordinator::Coordinator`] for a
+//! runnable example, and `ARCHITECTURE.md` at the repo root for the
+//! request lifecycle and the paper-section-to-module map.
+//!
 //! See `DESIGN.md` for the system inventory and the per-experiment index,
 //! and `EXPERIMENTS.md` for paper-vs-measured results.
 

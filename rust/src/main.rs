@@ -1,11 +1,15 @@
 //! fused-dsc CLI — the L3 leader entrypoint.
 //!
 //! Subcommands:
-//!   report <table1..table7|fig14|all>   regenerate the paper's evaluation
-//!   run [--backend B] [--layer TAG]     run one block / the whole model
-//!   serve [--requests N] [--batch B]    batched edge-serving demo
-//!   golden [--layer TAG]                cross-check CFU sim vs PJRT HLO
-//!   version
+//!
+//! ```text
+//! report <table1..table7|fig14|all>   regenerate the paper's evaluation
+//! run [--backend B] [--layer TAG]     run one block / the whole model
+//! serve [--requests N] [--batch B]    batched edge-serving demo
+//! serve loadgen [--mode closed|open]  load-generate against the serving core
+//! golden [--layer TAG]                cross-check CFU sim vs PJRT HLO
+//! version
+//! ```
 
 use std::sync::Arc;
 
@@ -13,7 +17,8 @@ use anyhow::{bail, Context, Result};
 
 use fused_dsc::cfu::PipelineVersion;
 use fused_dsc::cli::Args;
-use fused_dsc::coordinator::{Backend, Coordinator, Engine, ServeConfig};
+use fused_dsc::coordinator::loadgen::{self, LoadMode, LoadgenConfig};
+use fused_dsc::coordinator::{Backend, Coordinator, Engine, Rejected, ServeConfig};
 use fused_dsc::model::blocks::{backbone, evaluated_blocks};
 use fused_dsc::model::weights::{gen_input, make_model_params};
 use fused_dsc::report;
@@ -34,12 +39,8 @@ fn parse_backend(s: &str) -> Result<Backend> {
     })
 }
 
-fn model_input(params: &fused_dsc::model::weights::ModelParams, salt: u64) -> TensorI8 {
-    let c = params.blocks[0].cfg;
-    TensorI8::from_vec(
-        &[c.h as usize, c.w as usize, c.cin as usize],
-        gen_input(&format!("cli.x{salt}"), (c.h * c.w * c.cin) as usize, params.blocks[0].zp_in()),
-    )
+fn model_input(engine: &Engine, salt: u64) -> TensorI8 {
+    engine.synthetic_input(&format!("cli.x{salt}"))
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
@@ -71,7 +72,7 @@ fn cmd_run(args: &Args) -> Result<()> {
             out.dims[2]
         );
     } else {
-        let x = model_input(&engine.params, 0);
+        let x = model_input(&engine, 0);
         let out = engine.infer(&x)?;
         println!(
             "full model on {}: class={} sim_cycles={} ({:.2} ms @100MHz) logits={:?}",
@@ -85,44 +86,105 @@ fn cmd_run(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn serve_config(args: &Args) -> Result<ServeConfig> {
+    let d = ServeConfig::default();
+    Ok(ServeConfig {
+        max_batch: args.opt_parse("batch", d.max_batch).map_err(anyhow::Error::msg)?,
+        workers: args.opt_parse("workers", d.workers).map_err(anyhow::Error::msg)?,
+        queue_depth: args.opt_parse("queue-depth", d.queue_depth).map_err(anyhow::Error::msg)?,
+        ..d
+    })
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
+    if args.positional.get(1).map(|s| s.as_str()) == Some("loadgen") {
+        return cmd_loadgen(args);
+    }
     let n: usize = args.opt_parse("requests", 64usize).map_err(anyhow::Error::msg)?;
-    let batch: usize = args.opt_parse("batch", 8usize).map_err(anyhow::Error::msg)?;
-    let workers: usize = args.opt_parse("workers", 4usize).map_err(anyhow::Error::msg)?;
     let backend = parse_backend(args.opt_or("backend", "host-v3"))?;
     let params = make_model_params(None);
     let engine = Arc::new(Engine::new(params, backend));
-    let cfg = ServeConfig { max_batch: batch, workers, ..Default::default() };
-    let coord = Coordinator::start(Arc::clone(&engine), cfg);
+    let coord = Coordinator::start(Arc::clone(&engine), serve_config(args)?);
     let t0 = std::time::Instant::now();
-    let tickets: Vec<_> = (0..n).map(|i| coord.submit(model_input(&engine.params, i as u64))).collect();
+    let mut tickets = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut x = model_input(&engine, i as u64);
+        let ticket = loop {
+            match coord.submit(x) {
+                Ok(t) => break t,
+                Err(Rejected::QueueFull { input, .. }) => {
+                    // Demo client: back off briefly and retry with the
+                    // returned input — no clone (the loadgen mode instead
+                    // *counts* shed requests).
+                    x = input;
+                    std::thread::sleep(std::time::Duration::from_micros(200));
+                }
+                Err(e) => bail!("submit refused: {e}"),
+            }
+        };
+        tickets.push(ticket);
+    }
+    let mut failed = 0u64;
     for t in tickets {
-        t.wait()?;
+        if t.wait().result.is_err() {
+            failed += 1;
+        }
     }
     let wall = t0.elapsed();
     let snap = coord.metrics.snapshot();
     println!(
-        "served {} requests on {} in {:.2}s ({:.1} req/s), batches={} max_batch={}",
+        "served {} requests on {} in {:.2}s ({:.1} req/s), batches={} max_batch={} failed={} shed-retries={}",
         snap.completed,
         engine.backend.name(),
         wall.as_secs_f64(),
         snap.completed as f64 / wall.as_secs_f64(),
         snap.batches,
-        snap.max_batch_seen
+        snap.max_batch_seen,
+        failed,
+        snap.rejected
     );
-    if let Some(lat) = snap.total_latency {
-        println!(
-            "latency: p50 {:.1} ms, p95 {:.1} ms, p99 {:.1} ms",
-            lat.p50 * 1e3,
-            lat.p95 * 1e3,
-            lat.p99 * 1e3
-        );
-    }
+    let lat = &snap.total_latency;
+    println!(
+        "latency: p50 {:.1} ms, p90 {:.1} ms, p99 {:.1} ms, p999 {:.1} ms",
+        lat.p50_s * 1e3,
+        lat.p90_s * 1e3,
+        lat.p99_s * 1e3,
+        lat.p999_s * 1e3
+    );
     println!(
         "simulated accelerator time: {} cycles total ({:.2} ms @100MHz per request avg)",
         fmt_cycles(snap.sim_cycles),
         snap.sim_cycles as f64 / snap.completed.max(1) as f64 / 100e6 * 1e3
     );
+    Ok(())
+}
+
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    let requests: usize = args.opt_parse("requests", 128usize).map_err(anyhow::Error::msg)?;
+    let mode = match args.opt_or("mode", "closed") {
+        "closed" => {
+            let clients = args.opt_parse("clients", 4usize).map_err(anyhow::Error::msg)?;
+            if clients == 0 {
+                bail!("--clients must be at least 1");
+            }
+            LoadMode::Closed { clients }
+        }
+        "open" => {
+            let rate_hz = args.opt_parse("rate", 200.0f64).map_err(anyhow::Error::msg)?;
+            if !(rate_hz > 0.0) {
+                bail!("--rate must be a positive arrival rate (req/s)");
+            }
+            LoadMode::Open { rate_hz }
+        }
+        other => bail!("unknown loadgen mode '{other}' (expected closed|open)"),
+    };
+    let backend = parse_backend(args.opt_or("backend", "reference"))?;
+    let engine = Arc::new(Engine::new(make_model_params(None), backend));
+    let cfg = LoadgenConfig { mode, requests, serve: serve_config(args)? };
+    let report = loadgen::run(Arc::clone(&engine), &cfg, |i| model_input(&engine, i));
+    report.print_table();
+    let file = report.write_json(std::path::Path::new(args.opt_or("json", ".")))?;
+    println!("bench json written: {}", file.display());
     Ok(())
 }
 
@@ -163,7 +225,10 @@ fn usage() {
     println!("usage: fused-dsc <command> [options]");
     println!("  report <table1..table7|fig14|all>          regenerate paper evaluation");
     println!("  run    [--backend v0|pg|v1|v2|v3|reference] [--layer 3rd|5th|8th|15th]");
-    println!("  serve  [--requests N] [--batch B] [--workers W] [--backend host-v3]");
+    println!("  serve  [--requests N] [--batch B] [--workers W] [--queue-depth D] [--backend host-v3]");
+    println!("  serve loadgen [--mode closed|open] [--clients N] [--rate R] [--requests N]");
+    println!("                [--batch B] [--workers W] [--queue-depth D] [--backend reference]");
+    println!("                [--json PATH]                load-generate; writes BENCH_serve.json");
     println!("  golden [--layer TAG]                        CFU sim vs PJRT cross-check");
     println!("  version");
 }

@@ -229,20 +229,30 @@ impl Bencher {
     /// Resolve the output file (directory → `BENCH_<name>.json` inside it;
     /// explicit `*.json` path → that file) and write it.
     fn write_json(&self, path: &Path) -> std::io::Result<PathBuf> {
-        let file = if path.extension().is_some_and(|e| e == "json") {
-            if let Some(dir) = path.parent() {
-                if !dir.as_os_str().is_empty() {
-                    std::fs::create_dir_all(dir)?;
-                }
-            }
-            path.to_path_buf()
-        } else {
-            std::fs::create_dir_all(path)?;
-            path.join(format!("BENCH_{}.json", self.name))
-        };
-        std::fs::write(&file, self.to_json().render())?;
-        Ok(file)
+        write_bench_artifact(&self.name, path, &self.to_json())
     }
+}
+
+/// Write a machine-readable `BENCH_<name>.json` artifact.
+///
+/// `path` follows the `--json` convention shared by every perf emitter
+/// (bench harness, `serve loadgen`): a path ending in `.json` names the
+/// output file exactly; anything else is treated as a directory that
+/// receives `BENCH_<name>.json`.  Parent directories are created.
+pub fn write_bench_artifact(name: &str, path: &Path, body: &Json) -> std::io::Result<PathBuf> {
+    let file = if path.extension().is_some_and(|e| e == "json") {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        path.to_path_buf()
+    } else {
+        std::fs::create_dir_all(path)?;
+        path.join(format!("BENCH_{name}.json"))
+    };
+    std::fs::write(&file, body.render())?;
+    Ok(file)
 }
 
 #[cfg(test)]

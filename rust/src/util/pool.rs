@@ -1,7 +1,18 @@
 //! Thread-pool + channel mini-runtime (tokio is not in the offline crate
 //! set; the coordinator's concurrency needs are classic worker-pool shaped
 //! anyway — CPU-bound simulation jobs, no async I/O).
+//!
+//! Two pools live here:
+//!
+//! * [`ThreadPool`] — stateless workers pulling boxed closures off one
+//!   shared queue (fork/join `map` workloads, e.g. the report harness).
+//! * [`ShardPool`] — workers that each **own a mutable state shard** and a
+//!   bounded private queue, with least-loaded dispatch.  This is the
+//!   serving substrate: an engine shard keeps its scratch buffers warm
+//!   across requests, and the bounded queues give the dispatcher real
+//!   backpressure instead of an unbounded pile-up.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -81,6 +92,176 @@ impl Drop for ThreadPool {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Sharded stateful worker pool
+// ---------------------------------------------------------------------------
+
+type ShardJob<S> = Box<dyn FnOnce(&mut S) + Send + 'static>;
+
+struct Shard<S> {
+    tx: Option<mpsc::SyncSender<ShardJob<S>>>,
+    /// Jobs queued or executing on this shard (dispatch heuristic input).
+    in_flight: Arc<AtomicUsize>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// A pool of workers that each own a private state value `S` and a
+/// **bounded** job queue.
+///
+/// Jobs are `FnOnce(&mut S)`: the worker hands its shard state to every job
+/// it runs, so expensive per-worker resources (simulator scratch, reusable
+/// buffers) persist across jobs without any locking — the state is owned by
+/// exactly one thread.  [`ShardPool::spawn_least_loaded`] routes work to
+/// the shard with the fewest queued-plus-executing jobs (ties broken
+/// round-robin), falling through non-blockingly past full queues; only
+/// when **every** shard's queue is full does the send block, which is the
+/// backpressure signal callers rely on.
+///
+/// Dropping the pool closes all queues and joins the workers after their
+/// queues drain.
+pub struct ShardPool<S> {
+    shards: Vec<Shard<S>>,
+    rr: AtomicUsize,
+}
+
+impl<S: Send + 'static> ShardPool<S> {
+    /// Spawn `n` workers; shard `i` owns the state built by `init(i)`.
+    /// Each shard's queue holds at most `queue_depth` (≥ 1) pending jobs.
+    pub fn new(n: usize, queue_depth: usize, mut init: impl FnMut(usize) -> S) -> Self {
+        assert!(n > 0, "ShardPool needs at least one shard");
+        assert!(queue_depth > 0, "shard queue depth must be >= 1");
+        let shards = (0..n)
+            .map(|i| {
+                let (tx, rx) = mpsc::sync_channel::<ShardJob<S>>(queue_depth);
+                let in_flight = Arc::new(AtomicUsize::new(0));
+                let inflight2 = Arc::clone(&in_flight);
+                let mut state = init(i);
+                let handle = std::thread::spawn(move || {
+                    while let Ok(job) = rx.recv() {
+                        job(&mut state);
+                        inflight2.fetch_sub(1, Ordering::Release);
+                    }
+                });
+                Shard { tx: Some(tx), in_flight, handle: Some(handle) }
+            })
+            .collect();
+        Self { shards, rr: AtomicUsize::new(0) }
+    }
+
+    /// Number of shards.
+    pub fn len(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// True only for a hypothetical zero-shard pool (kept for API hygiene;
+    /// the constructor rejects `n == 0`).
+    pub fn is_empty(&self) -> bool {
+        self.shards.is_empty()
+    }
+
+    /// Jobs queued or executing on shard `i`.
+    pub fn in_flight(&self, i: usize) -> usize {
+        self.shards[i].in_flight.load(Ordering::Acquire)
+    }
+
+    /// Jobs queued or executing across all shards.
+    pub fn total_in_flight(&self) -> usize {
+        self.shards.iter().map(|s| s.in_flight.load(Ordering::Acquire)).sum()
+    }
+
+    /// Run `job` on shard `i`, blocking while that shard's queue is full.
+    pub fn spawn_on(&self, i: usize, job: impl FnOnce(&mut S) + Send + 'static) {
+        self.spawn_boxed(i, Box::new(job));
+    }
+
+    fn spawn_boxed(&self, i: usize, job: ShardJob<S>) {
+        let tx = self.shards[i].tx.as_ref().expect("pool shut down");
+        self.shards[i].in_flight.fetch_add(1, Ordering::AcqRel);
+        if tx.send(job).is_err() {
+            self.shards[i].in_flight.fetch_sub(1, Ordering::AcqRel);
+            panic!("shard {i} worker is gone");
+        }
+    }
+
+    /// Non-blocking variant of [`ShardPool::spawn_on`]: hands the job back
+    /// when shard `i`'s queue is full.
+    fn try_spawn_boxed(&self, i: usize, job: ShardJob<S>) -> Result<(), ShardJob<S>> {
+        let tx = self.shards[i].tx.as_ref().expect("pool shut down");
+        self.shards[i].in_flight.fetch_add(1, Ordering::AcqRel);
+        match tx.try_send(job) {
+            Ok(()) => Ok(()),
+            Err(mpsc::TrySendError::Full(j)) => {
+                self.shards[i].in_flight.fetch_sub(1, Ordering::AcqRel);
+                Err(j)
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => {
+                self.shards[i].in_flight.fetch_sub(1, Ordering::AcqRel);
+                panic!("shard {i} worker is gone");
+            }
+        }
+    }
+
+    /// Run `job` on the least-loaded shard (ties broken round-robin) and
+    /// return the chosen shard index.
+    ///
+    /// Allocation-free dispatch (one linear scan; the job box is the only
+    /// heap use): the least-loaded shard gets a non-blocking handoff
+    /// first, a full queue falls through to the remaining shards in
+    /// rotation order, and only when **every** queue is full does the
+    /// send block — the caller-visible backpressure point.
+    pub fn spawn_least_loaded(&self, job: impl FnOnce(&mut S) + Send + 'static) -> usize {
+        let n = self.shards.len();
+        let start = self.rr.fetch_add(1, Ordering::Relaxed) % n;
+        // Scan for the least-loaded shard, rotation breaking ties.
+        let mut best = start;
+        let mut best_load = usize::MAX;
+        for k in 0..n {
+            let i = (start + k) % n;
+            let load = self.shards[i].in_flight.load(Ordering::Acquire);
+            if load < best_load {
+                best = i;
+                best_load = load;
+                if load == 0 {
+                    break;
+                }
+            }
+        }
+        let mut job: ShardJob<S> = Box::new(job);
+        match self.try_spawn_boxed(best, job) {
+            Ok(()) => return best,
+            Err(j) => job = j,
+        }
+        // The least-loaded queue was full; fall through the others in
+        // rotation order rather than stalling the dispatcher.
+        for k in 0..n {
+            let i = (start + k) % n;
+            if i == best {
+                continue;
+            }
+            match self.try_spawn_boxed(i, job) {
+                Ok(()) => return i,
+                Err(j) => job = j,
+            }
+        }
+        // Every queue is full: block on the least-loaded (backpressure).
+        self.spawn_boxed(best, job);
+        best
+    }
+}
+
+impl<S> Drop for ShardPool<S> {
+    fn drop(&mut self) {
+        for s in &mut self.shards {
+            drop(s.tx.take()); // close the queue; the worker drains and exits
+        }
+        for s in &mut self.shards {
+            if let Some(h) = s.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -113,5 +294,75 @@ mod tests {
         let out = pool.map(vec![1u64, 2, 3, 4], |x| (0..x * 1000).sum::<u64>());
         assert_eq!(out.len(), 4);
         assert!(out[3] > out[0]);
+    }
+
+    #[test]
+    fn shard_pool_state_persists_across_jobs() {
+        // Each shard owns a counter; jobs mutate it without locks.  After
+        // the pool drains, the per-shard counts must sum to the job count.
+        let totals: Vec<Arc<AtomicUsize>> =
+            (0..3).map(|_| Arc::new(AtomicUsize::new(0))).collect();
+        {
+            let t2 = totals.clone();
+            let pool = ShardPool::new(3, 4, move |i| (Arc::clone(&t2[i]), 0usize));
+            for _ in 0..90 {
+                pool.spawn_least_loaded(|(total, local): &mut (Arc<AtomicUsize>, usize)| {
+                    *local += 1; // owned mutable state, no synchronization
+                    total.store(*local, Ordering::SeqCst);
+                });
+            }
+        } // drop joins workers
+        let sum: usize = totals.iter().map(|t| t.load(Ordering::SeqCst)).sum();
+        assert_eq!(sum, 90);
+        // Least-loaded dispatch keeps every shard busy, not just shard 0.
+        for t in &totals {
+            assert!(t.load(Ordering::SeqCst) > 0, "a shard never ran a job");
+        }
+    }
+
+    #[test]
+    fn shard_pool_spawn_on_targets_one_shard() {
+        let hits: Vec<Arc<AtomicUsize>> =
+            (0..2).map(|_| Arc::new(AtomicUsize::new(0))).collect();
+        {
+            let h2 = hits.clone();
+            let pool = ShardPool::new(2, 2, move |i| Arc::clone(&h2[i]));
+            for _ in 0..10 {
+                pool.spawn_on(1, |h: &mut Arc<AtomicUsize>| {
+                    h.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        }
+        assert_eq!(hits[0].load(Ordering::SeqCst), 0);
+        assert_eq!(hits[1].load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn shard_pool_bounded_queue_applies_backpressure() {
+        // One shard, queue depth 1, worker blocked on a gate: one job
+        // executing + one queued is the whole capacity, and in_flight
+        // reflects both until the gate opens.
+        use std::sync::mpsc::channel;
+        let (gate_tx, gate_rx) = channel::<()>();
+        let gate_rx = Arc::new(Mutex::new(gate_rx));
+        let done = Arc::new(AtomicUsize::new(0));
+        let pool = {
+            let gate = Arc::clone(&gate_rx);
+            ShardPool::new(1, 1, move |_| Arc::clone(&gate))
+        };
+        let d = Arc::clone(&done);
+        pool.spawn_on(0, move |gate: &mut Arc<Mutex<mpsc::Receiver<()>>>| {
+            gate.lock().unwrap().recv().unwrap(); // block the worker
+            d.fetch_add(1, Ordering::SeqCst);
+        });
+        let d = Arc::clone(&done);
+        pool.spawn_on(0, move |_| {
+            d.fetch_add(1, Ordering::SeqCst);
+        }); // fills the depth-1 queue
+        assert!(pool.in_flight(0) >= 2);
+        // Unblock; everything drains on drop.
+        gate_tx.send(()).unwrap();
+        drop(pool);
+        assert_eq!(done.load(Ordering::SeqCst), 2);
     }
 }

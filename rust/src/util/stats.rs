@@ -1,19 +1,41 @@
 //! Small statistics helpers for the bench harness and the serving metrics.
+//!
+//! Two complementary tools live here:
+//!
+//! * [`Summary`] — exact statistics over a retained sample (`Vec<f64>`),
+//!   used by the bench harness where sample counts are small and bounded.
+//! * [`Histogram`] — a lock-free, fixed-memory log-scale latency histogram
+//!   for the serving metrics, where sample counts are unbounded (millions
+//!   of requests) and retaining every measurement is not an option.
+//!   Memory is O(buckets) regardless of how many values are recorded, and
+//!   recording is a handful of relaxed atomic adds.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
 
 /// Summary statistics over a sample of f64 measurements.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Summary {
+    /// Sample size.
     pub n: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Population standard deviation.
     pub std: f64,
+    /// Smallest sample.
     pub min: f64,
+    /// Largest sample.
     pub max: f64,
+    /// Median (nearest rank).
     pub p50: f64,
+    /// 95th percentile (nearest rank).
     pub p95: f64,
+    /// 99th percentile (nearest rank).
     pub p99: f64,
 }
 
 impl Summary {
+    /// Compute every statistic over a non-empty sample (panics on empty).
     pub fn of(samples: &[f64]) -> Self {
         assert!(!samples.is_empty(), "empty sample");
         let n = samples.len();
@@ -66,6 +88,227 @@ pub fn fmt_bytes(b: u64) -> String {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Lock-free log-scale latency histogram
+// ---------------------------------------------------------------------------
+
+/// Sub-bucket resolution: each power-of-two range of nanoseconds is split
+/// into `2^SUB_BITS` linear sub-buckets, bounding the relative quantile
+/// error at `2^-SUB_BITS` (12.5%) per bucket, half that for the midpoint
+/// representative a quantile query reports.
+const SUB_BITS: usize = 3;
+const SUB_MASK: u64 = (1 << SUB_BITS) - 1;
+
+/// Latencies above this are clamped into the top bucket (~18.3 minutes —
+/// far beyond any sane serving latency).
+const MAX_TRACKED_NANOS: u64 = 1 << 40;
+
+/// Bucket index for a nanosecond value (log-scale with linear sub-buckets).
+fn bucket_of(nanos: u64) -> usize {
+    let v = nanos.clamp(1, MAX_TRACKED_NANOS);
+    let msb = 63 - v.leading_zeros() as usize;
+    if msb < SUB_BITS {
+        v as usize
+    } else {
+        let sub = ((v >> (msb - SUB_BITS)) & SUB_MASK) as usize;
+        ((msb - SUB_BITS + 1) << SUB_BITS) + sub
+    }
+}
+
+/// Inclusive lower bound (nanoseconds) of bucket `idx`.
+fn bucket_lo(idx: usize) -> u64 {
+    if idx < (1 << SUB_BITS) {
+        idx as u64
+    } else {
+        let octave = idx >> SUB_BITS; // >= 1
+        let sub = (idx & SUB_MASK as usize) as u64;
+        let msb = octave + SUB_BITS - 1;
+        (1u64 << msb) + (sub << (msb - SUB_BITS))
+    }
+}
+
+/// Midpoint representative (nanoseconds) of bucket `idx`, used by quantile
+/// queries.  Halving the bucket width this way bounds the relative error of
+/// any reported quantile at `2^-(SUB_BITS+1)` (~6.25%).
+fn bucket_mid(idx: usize) -> f64 {
+    let lo = bucket_lo(idx);
+    if idx + 1 >= Histogram::BUCKETS {
+        lo as f64
+    } else {
+        (lo + bucket_lo(idx + 1)) as f64 / 2.0
+    }
+}
+
+/// A bounded, lock-free latency histogram with log-scale buckets.
+///
+/// Built for the serving hot path: [`Histogram::record`] is a few relaxed
+/// atomic adds (no locks, no allocation), and memory is **O(buckets)** —
+/// a fixed [`Histogram::BUCKETS`]-slot table — no matter how many values
+/// are recorded.  Quantile queries ([`Histogram::quantile`], or the
+/// p50/p90/p99/p999 bundle in [`Histogram::snapshot`]) walk the table and
+/// report the midpoint of the bucket containing the nearest-rank sample,
+/// accurate to ~6% relative error (exact `min`/`max`/`mean` are tracked
+/// separately as atomics).
+///
+/// Values are durations; anything above ~18 minutes clamps into the top
+/// bucket.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_nanos: AtomicU64,
+    min_nanos: AtomicU64,
+    max_nanos: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    /// Fixed bucket-table size (the whole memory story of the histogram).
+    pub const BUCKETS: usize = ((40 - SUB_BITS + 1) << SUB_BITS) + 1;
+
+    /// An empty histogram.
+    pub fn new() -> Self {
+        Self {
+            buckets: (0..Self::BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_nanos: AtomicU64::new(0),
+            min_nanos: AtomicU64::new(u64::MAX),
+            max_nanos: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one duration (lock-free, allocation-free).
+    pub fn record(&self, d: Duration) {
+        self.record_nanos(d.as_nanos().min(u128::from(u64::MAX)) as u64);
+    }
+
+    /// Record one duration given in (non-negative) seconds.
+    pub fn record_secs(&self, secs: f64) {
+        self.record_nanos((secs.max(0.0) * 1e9) as u64);
+    }
+
+    /// Record one duration given in nanoseconds.
+    pub fn record_nanos(&self, nanos: u64) {
+        self.buckets[bucket_of(nanos)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_nanos.fetch_add(nanos, Ordering::Relaxed);
+        self.min_nanos.fetch_min(nanos, Ordering::Relaxed);
+        self.max_nanos.fetch_max(nanos, Ordering::Relaxed);
+    }
+
+    /// Number of recorded values.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// The exactly-tracked `[min, max]` range in seconds, for clamping
+    /// bucketized quantiles so a snapshot never reports an impossible
+    /// distribution (e.g. `p999 > max` from a bucket midpoint).
+    fn bounds_s(&self) -> (f64, f64) {
+        let min = self.min_nanos.load(Ordering::Relaxed);
+        if min == u64::MAX {
+            return (0.0, 0.0);
+        }
+        let min_s = min as f64 * 1e-9;
+        let max_s = self.max_nanos.load(Ordering::Relaxed) as f64 * 1e-9;
+        // A record racing the two loads could briefly leave min > max;
+        // normalize rather than panic in f64::clamp.
+        (min_s.min(max_s), max_s.max(min_s))
+    }
+
+    /// Nearest-rank quantile in seconds (`q` in `[0, 1]`); 0.0 when empty.
+    /// Bucketized, then clamped into the exact `[min, max]`.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let counts: Vec<u64> =
+            self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let (lo, hi) = self.bounds_s();
+        quantile_of(&counts, q).clamp(lo, hi)
+    }
+
+    /// A consistent point-in-time copy of the distribution.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let counts: Vec<u64> =
+            self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let count: u64 = counts.iter().sum();
+        let (min_s, max_s) = self.bounds_s();
+        HistogramSnapshot {
+            count,
+            mean_s: if count == 0 {
+                0.0
+            } else {
+                self.sum_nanos.load(Ordering::Relaxed) as f64 / count as f64 * 1e-9
+            },
+            min_s,
+            max_s,
+            p50_s: quantile_of(&counts, 0.50).clamp(min_s, max_s),
+            p90_s: quantile_of(&counts, 0.90).clamp(min_s, max_s),
+            p99_s: quantile_of(&counts, 0.99).clamp(min_s, max_s),
+            p999_s: quantile_of(&counts, 0.999).clamp(min_s, max_s),
+        }
+    }
+}
+
+/// Nearest-rank quantile over a bucket-count table, in seconds.
+fn quantile_of(counts: &[u64], q: f64) -> f64 {
+    assert!((0.0..=1.0).contains(&q), "quantile out of range");
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let target = ((total as f64 * q).ceil() as u64).clamp(1, total);
+    let mut cum = 0u64;
+    for (idx, &c) in counts.iter().enumerate() {
+        cum += c;
+        if cum >= target {
+            return bucket_mid(idx) * 1e-9;
+        }
+    }
+    bucket_mid(counts.len() - 1) * 1e-9
+}
+
+/// A point-in-time copy of a [`Histogram`]: counters plus the standard
+/// serving quantiles, all in seconds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistogramSnapshot {
+    /// Number of recorded values.
+    pub count: u64,
+    /// Exact arithmetic mean (from the atomic running sum).
+    pub mean_s: f64,
+    /// Exact minimum recorded value.
+    pub min_s: f64,
+    /// Exact maximum recorded value.
+    pub max_s: f64,
+    /// Median (bucketized, ~6% relative error).
+    pub p50_s: f64,
+    /// 90th percentile (bucketized).
+    pub p90_s: f64,
+    /// 99th percentile (bucketized).
+    pub p99_s: f64,
+    /// 99.9th percentile (bucketized).
+    pub p999_s: f64,
+}
+
+impl HistogramSnapshot {
+    /// Serialize through the [`crate::util::json`] writer (the shape
+    /// embedded in metrics snapshots and `BENCH_serve.json`).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        crate::util::json::Json::obj()
+            .set("count", self.count)
+            .set("mean_s", self.mean_s)
+            .set("min_s", self.min_s)
+            .set("max_s", self.max_s)
+            .set("p50_s", self.p50_s)
+            .set("p90_s", self.p90_s)
+            .set("p99_s", self.p99_s)
+            .set("p999_s", self.p999_s)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -102,5 +345,107 @@ mod tests {
     #[should_panic]
     fn summary_rejects_empty() {
         Summary::of(&[]);
+    }
+
+    #[test]
+    fn bucket_mapping_is_consistent() {
+        // Every value lands in a bucket whose [lo, next_lo) range contains it.
+        for v in (0..60).map(|e| 1u64 << e).chain([3, 7, 9, 100, 12345, 999_999_937]) {
+            let idx = bucket_of(v);
+            assert!(idx < Histogram::BUCKETS, "idx {idx} out of table for {v}");
+            let clamped = v.clamp(1, MAX_TRACKED_NANOS);
+            assert!(bucket_lo(idx) <= clamped, "lo({idx}) > {clamped}");
+            if idx + 1 < Histogram::BUCKETS {
+                assert!(clamped < bucket_lo(idx + 1), "{clamped} >= next lo of {idx}");
+            }
+        }
+        // The clamp ceiling maps exactly to the last bucket.
+        assert_eq!(bucket_of(MAX_TRACKED_NANOS), Histogram::BUCKETS - 1);
+        assert_eq!(bucket_of(u64::MAX), Histogram::BUCKETS - 1);
+    }
+
+    #[test]
+    fn histogram_exact_fields_are_exact() {
+        let h = Histogram::new();
+        h.record_nanos(1_000);
+        h.record_nanos(3_000);
+        h.record_nanos(2_000);
+        let s = h.snapshot();
+        assert_eq!(s.count, 3);
+        assert_eq!(s.min_s, 1e-6);
+        assert_eq!(s.max_s, 3e-6);
+        assert!((s.mean_s - 2e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_histogram_snapshot_is_zeroed() {
+        let s = Histogram::new().snapshot();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.p50_s, 0.0);
+        assert_eq!(s.min_s, 0.0);
+        assert_eq!(s.mean_s, 0.0);
+    }
+
+    #[test]
+    fn histogram_quantiles_match_exact_summary() {
+        // The accuracy contract: bucketized quantiles sit within the
+        // documented ~6% relative error of the exact nearest-rank
+        // percentiles computed over the retained sample.
+        let mut rng = crate::util::rng::SplitMix64::new(0x5EED_1A7E);
+        let h = Histogram::new();
+        let mut exact = Vec::with_capacity(10_000);
+        for _ in 0..10_000 {
+            // Log-uniform latencies between 1 µs and 100 ms.
+            let s = 1e-6 * (10f64).powf(rng.f64() * 5.0);
+            exact.push(s);
+            h.record_secs(s);
+        }
+        let want = Summary::of(&exact);
+        let snap = h.snapshot();
+        let close = |got: f64, want: f64, what: &str| {
+            assert!(
+                (got - want).abs() / want < 0.07,
+                "{what}: histogram {got} vs exact {want}"
+            );
+        };
+        close(snap.p50_s, want.p50, "p50");
+        close(h.quantile(0.95), want.p95, "p95");
+        close(snap.p99_s, want.p99, "p99");
+        close(h.quantile(0.999), percentile(&{
+            let mut s = exact.clone();
+            s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            s
+        }, 0.999), "p999");
+        // Exact fields agree to float precision.
+        close(snap.mean_s, want.mean, "mean");
+        assert_eq!(snap.count, 10_000);
+    }
+
+    #[test]
+    fn quantiles_never_escape_the_exact_min_max_range() {
+        // A bucket midpoint can exceed the largest recorded value (1025 ns
+        // lands in [1024, 1152), midpoint 1088); the snapshot must clamp
+        // so the reported distribution stays possible.
+        let h = Histogram::new();
+        h.record_nanos(1025);
+        let s = h.snapshot();
+        assert_eq!(s.min_s, s.max_s);
+        assert_eq!(s.p50_s, s.max_s);
+        assert_eq!(s.p999_s, s.max_s);
+        assert_eq!(h.quantile(0.5), s.max_s);
+        // And with a spread of values the ordering invariants hold.
+        h.record_nanos(10);
+        h.record_nanos(2_000_000);
+        let s = h.snapshot();
+        assert!(s.min_s <= s.p50_s && s.p50_s <= s.p999_s && s.p999_s <= s.max_s);
+    }
+
+    #[test]
+    fn histogram_snapshot_serializes() {
+        let h = Histogram::new();
+        h.record_nanos(5_000_000);
+        let body = h.snapshot().to_json().render();
+        assert!(body.contains("\"count\":1"), "{body}");
+        assert!(body.contains("\"p99_s\":"), "{body}");
     }
 }

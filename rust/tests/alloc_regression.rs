@@ -13,6 +13,7 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
 
 use fused_dsc::cfu::{opcodes, CfuUnit, PipelineVersion, CFG};
+use fused_dsc::coordinator::Metrics;
 use fused_dsc::cpu::CfuPort;
 
 thread_local! {
@@ -120,6 +121,47 @@ fn steady_state_fused_pixel_loop_allocates_nothing() {
          buffer regressed)",
         after - before
     );
+}
+
+#[test]
+fn metrics_recording_is_o_buckets_not_o_requests() {
+    // The serving metrics sink must not grow with request count: recording
+    // into the atomic counters and the fixed-bucket histograms performs
+    // zero heap allocations, so sustained load (millions of requests)
+    // keeps memory at the O(buckets) footprint allocated at construction.
+    use std::time::Duration;
+    let m = Metrics::default();
+    // Warm-up: construction already allocated the bucket tables; one
+    // record proves the path is touched before we start counting.
+    m.note_submitted();
+    m.note_completed(Duration::from_micros(3), Duration::from_micros(9), 42);
+
+    let before = alloc_events_now();
+    for i in 0..100_000u64 {
+        m.note_submitted();
+        m.note_batch((i % 8 + 1) as usize);
+        m.note_completed(
+            Duration::from_nanos(100 + i * 37 % 5_000_000),
+            Duration::from_nanos(500 + i * 91 % 9_000_000),
+            i,
+        );
+        if i % 16 == 0 {
+            m.note_rejected();
+            m.note_failed(Duration::from_nanos(50), Duration::from_nanos(60));
+        }
+    }
+    let after = alloc_events_now();
+    assert_eq!(
+        after - before,
+        0,
+        "recording 100k requests allocated {} times — the metrics sink \
+         regressed from O(buckets) back toward O(requests)",
+        after - before
+    );
+    // The data actually landed (not optimized away).
+    let snap = m.snapshot();
+    assert_eq!(snap.submitted, 100_001);
+    assert_eq!(snap.total_latency.count as u64, snap.completed + snap.failed);
 }
 
 #[test]

@@ -107,14 +107,16 @@ fn coordinator_end_to_end_consistency() {
         .map(|i| block_input(&engine.params.blocks[0].cfg, engine.params.blocks[0].zp_in(), &format!("int.c{i}")))
         .collect();
     let wants: Vec<Vec<i32>> = inputs.iter().map(|x| engine.infer(x).unwrap().logits).collect();
-    let tickets: Vec<_> = inputs.iter().map(|x| coord.submit(x.clone())).collect();
+    let tickets: Vec<_> = inputs.iter().map(|x| coord.submit(x.clone()).unwrap()).collect();
     for (t, want) in tickets.into_iter().zip(wants) {
-        let r = t.wait().unwrap();
-        assert_eq!(r.logits, want);
+        let out = t.wait().into_output().unwrap();
+        assert_eq!(out.logits, want);
     }
     let snap = coord.metrics.snapshot();
     assert_eq!(snap.completed, 24);
+    assert_eq!(snap.rejected, 0);
     assert!(snap.sim_cycles > 0);
+    assert_eq!(snap.total_latency.count, 24);
 }
 
 /// Backbone geometry invariants used throughout the system.

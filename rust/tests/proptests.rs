@@ -114,8 +114,11 @@ fn cfu_reprogramming_is_clean() {
     });
 }
 
-/// Coordinator scheduling invariants under random load: every request is
-/// answered exactly once, responses are bit-exact, batch bound holds.
+/// Coordinator scheduling invariants under random load: every *admitted*
+/// request is answered exactly once and bit-exact, every submission gets
+/// exactly one of {ticket, rejection}, accounting balances (no loss, no
+/// duplication — including across the shed path), and the batch bound
+/// holds.
 #[test]
 fn coordinator_scheduling_invariants() {
     let params = fused_dsc::model::weights::make_model_params(Some(vec![
@@ -126,12 +129,16 @@ fn coordinator_scheduling_invariants() {
         let max_batch = g.usize(1, 6);
         let workers = g.usize(1, 4);
         let n = g.usize(1, 20);
+        // Sometimes deep enough to admit everything, sometimes tiny so the
+        // shed path is exercised under the same invariants.
+        let queue_depth = g.usize(1, 24);
         let coord = Coordinator::start(
             Arc::clone(&engine),
             ServeConfig {
                 max_batch,
                 batch_timeout: std::time::Duration::from_micros(g.i64(0, 2000) as u64),
                 workers,
+                queue_depth,
             },
         );
         let c = engine.params.blocks[0].cfg;
@@ -143,19 +150,37 @@ fn coordinator_scheduling_invariants() {
                 )
             })
             .collect();
-        let tickets: Vec<_> = inputs.iter().map(|x| coord.submit(x.clone())).collect();
+        let mut tickets = Vec::new();
+        let mut rejected = 0usize;
+        for x in &inputs {
+            match coord.submit(x.clone()) {
+                Ok(t) => tickets.push((t, x)),
+                Err(fused_dsc::coordinator::Rejected::QueueFull { depth, input }) => {
+                    prop_assert_eq!(depth, queue_depth);
+                    prop_assert_eq!(&input, x); // shed hands the input back intact
+                    rejected += 1;
+                }
+                Err(e) => return Err(format!("unexpected rejection: {e}")),
+            }
+        }
+        let admitted = tickets.len();
+        prop_assert_eq!(admitted + rejected, n); // exactly one admission outcome each
         let mut ids = Vec::new();
-        for (t, x) in tickets.into_iter().zip(&inputs) {
+        for (t, x) in tickets {
             let want = engine.infer(x).map_err(|e| e.to_string())?;
-            let r = t.wait().map_err(|e| e.to_string())?;
-            prop_assert_eq!(&r.logits, &want.logits);
+            let r = t.wait(); // must never hang
+            let out = r.result.map_err(|e| e.to_string())?;
+            prop_assert_eq!(&out.logits, &want.logits);
             ids.push(r.id);
         }
         ids.sort_unstable();
         ids.dedup();
-        prop_assert_eq!(ids.len(), n); // exactly-once
+        prop_assert_eq!(ids.len(), admitted); // exactly-once for every admitted id
         let snap = coord.metrics.snapshot();
-        prop_assert_eq!(snap.completed as usize, n);
+        prop_assert_eq!(snap.completed as usize, admitted);
+        prop_assert_eq!(snap.rejected as usize, rejected);
+        prop_assert_eq!(snap.failed, 0);
+        prop_assert_eq!(snap.total_latency.count as usize, admitted);
         prop_assert!(snap.max_batch_seen <= max_batch, "batch bound violated");
         Ok(())
     });

@@ -10,7 +10,7 @@ use std::time::Duration;
 
 use fused_dsc::cfu::PipelineVersion;
 use fused_dsc::coordinator::loadgen::{self, LoadMode, LoadgenConfig};
-use fused_dsc::coordinator::{Backend, Coordinator, Engine, ServeConfig};
+use fused_dsc::coordinator::{Backend, Coordinator, Engine, EngineShard, ServeConfig};
 use fused_dsc::model::blocks::BlockConfig;
 use fused_dsc::model::weights::make_model_params;
 use fused_dsc::util::bench::Bencher;
@@ -44,6 +44,19 @@ fn main() {
                 t.wait().result.expect("inference succeeds");
             }
             64
+        });
+    }
+
+    // One warm shard driven directly (no scheduler): the zero-allocation
+    // arena + per-block executors amortized across a whole batch — the
+    // floor the serving pipeline above is overhead-relative to.
+    {
+        let mut shard = EngineShard::new(Arc::clone(&engine));
+        let xs: Vec<_> = (0..8).map(|i| engine.synthetic_input(&format!("ct.b{i}"))).collect();
+        b.bench("shard/infer_batch-8 (direct, warm)", || {
+            let outs = shard.infer_batch(&xs).expect("inference succeeds");
+            assert_eq!(outs.len(), 8);
+            8
         });
     }
 

@@ -18,7 +18,8 @@ fn main() -> anyhow::Result<()> {
         "shape (Cin->M->Cout)", "II v1", "II v2", "II v3"
     );
     let p = TimingParams::default();
-    for (cin, m, cout) in [(8u32, 48u32, 8u32), (16, 96, 16), (24, 144, 24), (56, 336, 56), (8, 48, 64)] {
+    let shapes = [(8u32, 48u32, 8u32), (16, 96, 16), (24, 144, 24), (56, 336, 56), (8, 48, 64)];
+    for (cin, m, cout) in shapes {
         let cfg = fused_dsc::cfu::LayerConfig {
             h: 16, w: 16, cin, m, cout, stride: 1, ..Default::default()
         };
@@ -74,7 +75,15 @@ fn main() -> anyhow::Result<()> {
     }
 
     println!("\n== sensitivity: stage overhead vs pipelining gain (layer-3 shape) ==");
-    let cfg = fused_dsc::cfu::LayerConfig { h: 40, w: 40, cin: 8, m: 48, cout: 8, stride: 1, ..Default::default() };
+    let cfg = fused_dsc::cfu::LayerConfig {
+        h: 40,
+        w: 40,
+        cin: 8,
+        m: 48,
+        cout: 8,
+        stride: 1,
+        ..Default::default()
+    };
     let t = StageTimes::for_layer(&cfg);
     println!("{:>14} {:>8} {:>8} {:>8}", "stage_overhead", "II v1", "II v2", "II v3");
     for ovh in [0u64, 4, 16, 64, 256] {

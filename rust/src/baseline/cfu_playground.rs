@@ -158,7 +158,9 @@ pub fn run_block_cfu_playground(bp: &BlockParams, x: &TensorI8) -> Result<PgResu
     super::sw_kernels::emit_dwconv3x3(
         &mut a, "dw", l.f1, l.f2, l.dw_w, l.dw_b, cfg.h, cfg.w, cfg.m, cfg.stride, &bp.dw_q,
     );
-    emit_conv1x1_cfu(&mut a, "pr", l.f2, l.out, l.pr_w, l.pr_b, n_out_px, cfg.m, cfg.cout, &bp.pr_q);
+    emit_conv1x1_cfu(
+        &mut a, "pr", l.f2, l.out, l.pr_w, l.pr_b, n_out_px, cfg.m, cfg.cout, &bp.pr_q,
+    );
     if cfg.residual {
         super::sw_kernels::emit_residual(
             &mut a, "r", l.out, l.x, n_out_px * cfg.cout, bp.zp_in(),

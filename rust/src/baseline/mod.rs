@@ -10,6 +10,10 @@
 //!   1×1-convolution-only 4-way SIMD MAC CFU; the depthwise stage and all
 //!   inter-layer data movement stay on the CPU (paper §IV-B: "the
 //!   CFU-Playground accelerator only targets 1x1 convolutions").
+//!
+//! Whole-model execution reaches these through the [`crate::exec`] layer
+//! ([`crate::exec::executor_for`] wraps [`run_block_v0`] and
+//! [`cfu_playground::run_block_cfu_playground`] as block executors).
 
 pub mod cfu_playground;
 pub mod layout;

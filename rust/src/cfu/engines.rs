@@ -290,7 +290,15 @@ pub fn fused_pixel(
     expansion_tile(cfg, ifmap, exw, ex_bias, oy, ox, stats, scratch);
     let FusedScratch { tile, f2, f2c, out, .. } = scratch;
     depthwise_pixel(cfg, tile.as_slice(), dww, dw_bias, oy, ox, stats, f2.as_mut_slice());
-    projection_pixel(cfg, f2.as_slice(), prw, pr_bias, stats, f2c.as_mut_slice(), out.as_mut_slice());
+    projection_pixel(
+        cfg,
+        f2.as_slice(),
+        prw,
+        pr_bias,
+        stats,
+        f2c.as_mut_slice(),
+        out.as_mut_slice(),
+    );
 }
 
 #[cfg(test)]

@@ -48,6 +48,13 @@ impl ExpansionFilterBuffer {
     pub fn capacity_bytes(&self) -> usize {
         self.data.len()
     }
+
+    /// Zero the access counters (same-geometry buffer reuse must look
+    /// exactly like a freshly allocated buffer to `RD_CYCLES`).
+    pub fn reset_stats(&mut self) {
+        self.writes = 0;
+        self.chunk_reads = 0;
+    }
 }
 
 /// Depthwise filter store: bank k holds kernel position k of every filter.
@@ -89,6 +96,13 @@ impl DwFilterBuffer {
 
     pub fn capacity_bytes(&self) -> usize {
         self.banks.iter().map(|b| b.len()).sum()
+    }
+
+    /// Zero the access counters (see
+    /// [`ExpansionFilterBuffer::reset_stats`]).
+    pub fn reset_stats(&mut self) {
+        self.writes = 0;
+        self.filter_reads = 0;
     }
 }
 
@@ -150,6 +164,13 @@ impl ProjectionWeightBuffers {
 
     pub fn capacity_bytes(&self) -> usize {
         self.engines.iter().map(|e| e.len()).sum()
+    }
+
+    /// Zero the access counters (see
+    /// [`ExpansionFilterBuffer::reset_stats`]).
+    pub fn reset_stats(&mut self) {
+        self.writes = 0;
+        self.reads = 0;
     }
 }
 

@@ -43,6 +43,13 @@ impl IfmapBuffer {
         }
     }
 
+    /// Zero the access counters (same-geometry buffer reuse must look
+    /// exactly like a freshly allocated buffer to `RD_CYCLES`).
+    pub fn reset_stats(&mut self) {
+        self.writes = 0;
+        self.window_reads = 0;
+    }
+
     #[inline(always)]
     fn slot(&self, row: usize, col: usize, ch: usize) -> usize {
         ((row / 3) * self.w_groups + col / 3) * self.c + ch

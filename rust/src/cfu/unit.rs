@@ -59,6 +59,9 @@ pub struct CfuUnit {
     /// Per-layer pixel-pipeline scratch (sized by `materialize`); the
     /// steady-state START/RD_OUT loop is allocation-free.
     scratch: FusedScratch,
+    /// Host-path scratch for the filter-major expansion-weight repack
+    /// (capacity-retaining, see `run_block_host_into`).
+    exw_scratch: Vec<i8>,
     // Active START batch.
     batch_first: u32,
     batch_count: u32,
@@ -99,6 +102,7 @@ impl CfuUnit {
             dw_bias: Vec::new(),
             pr_bias: Vec::new(),
             scratch: FusedScratch::new(),
+            exw_scratch: Vec::new(),
             batch_first: 0,
             batch_count: 0,
             outputs: Vec::new(),
@@ -114,19 +118,39 @@ impl CfuUnit {
         }
     }
 
-    /// (Re)allocate buffers for the configured geometry.
+    /// (Re)allocate buffers for the configured geometry.  Reprogramming the
+    /// *same* geometry (the warm serving path runs one unit per model block,
+    /// so every reconfiguration it sees is same-shaped) keeps every
+    /// allocation and only resets contents/counters — the steady state is
+    /// allocation-free end to end, not just inside the pixel loop.
     fn materialize(&mut self) {
         let cfg = LayerConfig::from_words(&self.cfg_words);
         cfg.validate().expect("invalid CFU layer configuration");
+        let same_geometry = self.ifmap.is_some()
+            && (cfg.h, cfg.w, cfg.cin, cfg.m, cfg.cout)
+                == (self.cfg.h, self.cfg.w, self.cfg.cin, self.cfg.m, self.cfg.cout);
         self.cfg = cfg;
         self.times = StageTimes::for_layer(&cfg);
-        self.ifmap = Some(IfmapBuffer::new(cfg.h as usize, cfg.w as usize, cfg.cin as usize));
-        self.exw = Some(ExpansionFilterBuffer::new(cfg.cin as usize, cfg.m as usize));
-        self.dww = Some(DwFilterBuffer::new(cfg.m as usize));
-        self.prw = Some(ProjectionWeightBuffers::new(cfg.m as usize, cfg.cout as usize));
-        self.ex_bias = vec![0; cfg.m as usize];
-        self.dw_bias = vec![0; cfg.m as usize];
-        self.pr_bias = vec![0; cfg.cout as usize];
+        if same_geometry {
+            // Every buffer byte the pipeline can read is rewritten by the
+            // WR_* stream that follows CFG, so only the access counters
+            // need to match a fresh buffer.
+            self.ifmap.as_mut().unwrap().reset_stats();
+            self.exw.as_mut().unwrap().reset_stats();
+            self.dww.as_mut().unwrap().reset_stats();
+            self.prw.as_mut().unwrap().reset_stats();
+            self.ex_bias.fill(0);
+            self.dw_bias.fill(0);
+            self.pr_bias.fill(0);
+        } else {
+            self.ifmap = Some(IfmapBuffer::new(cfg.h as usize, cfg.w as usize, cfg.cin as usize));
+            self.exw = Some(ExpansionFilterBuffer::new(cfg.cin as usize, cfg.m as usize));
+            self.dww = Some(DwFilterBuffer::new(cfg.m as usize));
+            self.prw = Some(ProjectionWeightBuffers::new(cfg.m as usize, cfg.cout as usize));
+            self.ex_bias = vec![0; cfg.m as usize];
+            self.dw_bias = vec![0; cfg.m as usize];
+            self.pr_bias = vec![0; cfg.cout as usize];
+        }
         self.scratch.ensure(&cfg);
         // Reprogramming fully resets batch/readback state (no stale outputs).
         self.outputs.clear();
@@ -143,7 +167,9 @@ impl CfuUnit {
         for (k, &b) in bytes.iter().enumerate() {
             let lin = addr as usize * 4 + k;
             match op {
-                opcodes::WR_IFMAP => self.ifmap.as_mut().expect("CFG first").write_linear(lin, b as i8),
+                opcodes::WR_IFMAP => {
+                    self.ifmap.as_mut().expect("CFG first").write_linear(lin, b as i8)
+                }
                 opcodes::WR_EXW => self.exw.as_mut().expect("CFG first").write_linear(lin, b as i8),
                 opcodes::WR_DWW => self.dww.as_mut().expect("CFG first").write_linear(lin, b as i8),
                 opcodes::WR_PRW => self.prw.as_mut().expect("CFG first").write_linear(lin, b as i8),
@@ -265,9 +291,28 @@ impl CfuUnit {
         bp: &crate::model::weights::BlockParams,
         x: &crate::tensor::TensorI8,
     ) -> (crate::tensor::TensorI8, u64) {
+        let mut out = crate::tensor::TensorI8::default();
+        let cycles = self.run_block_host_into(bp, x, &mut out);
+        (out, cycles)
+    }
+
+    /// [`run_block_host`](Self::run_block_host) writing into a caller-owned
+    /// output buffer (reshaped in place, allocation retained).
+    ///
+    /// With a warm unit — same geometry as the previous call, buffers and
+    /// scratch already sized, `out` already at capacity — this performs
+    /// zero heap allocations (`tests/alloc_regression.rs`); it is the
+    /// backend behind `exec::FusedHostExecutor` and the coordinator's warm
+    /// shard path.
+    pub fn run_block_host_into(
+        &mut self,
+        bp: &crate::model::weights::BlockParams,
+        x: &crate::tensor::TensorI8,
+        out: &mut crate::tensor::TensorI8,
+    ) -> u64 {
         use crate::quant::residual_add;
         let cfg = &bp.cfg;
-        assert_eq!(x.dims, vec![cfg.h as usize, cfg.w as usize, cfg.cin as usize]);
+        assert_eq!(x.dims, [cfg.h as usize, cfg.w as usize, cfg.cin as usize]);
         let mut now = 0u64;
         let op = |u: &mut Self, f7: u8, rs1: u32, rs2: u32, now: &mut u64| -> u32 {
             let r = u.execute(f7, 0, rs1, rs2, *now);
@@ -312,9 +357,13 @@ impl CfuUnit {
         }
         // The expansion filter buffer stores filters *sequentially* (filter-
         // major, Fig. 11); QMW holds (Cin, M) channel-major — the loader
-        // transposes, exactly as the real driver firmware would.
+        // transposes, exactly as the real driver firmware would.  The
+        // repack scratch is taken out of `self` (so the borrow checker
+        // allows `op(self, ..)` below) and put back, capacity intact.
         let (cin, m) = (cfg.cin as usize, cfg.m as usize);
-        let mut exw_fm = vec![0i8; cin * m];
+        let mut exw_fm = std::mem::take(&mut self.exw_scratch);
+        exw_fm.clear();
+        exw_fm.resize(cin * m, 0);
         for ci in 0..cin {
             for f in 0..m {
                 exw_fm[f * cin + ci] = bp.ex_w[ci * m + f];
@@ -323,6 +372,7 @@ impl CfuUnit {
         for (a, chunk) in exw_fm.chunks(4).enumerate() {
             op(self, opcodes::WR_EXW, a as u32, pack(chunk), &mut now);
         }
+        self.exw_scratch = exw_fm;
         for (a, chunk) in bp.dw_w.chunks(4).enumerate() {
             op(self, opcodes::WR_DWW, a as u32, pack(chunk), &mut now);
         }
@@ -337,7 +387,7 @@ impl CfuUnit {
         let (ho, wo, cout) = (cfg.h_out() as usize, cfg.w_out() as usize, cfg.cout as usize);
         let n_px = (ho * wo) as u32;
         op(self, opcodes::START, 0, n_px, &mut now);
-        let mut out = crate::tensor::TensorI8::zeros(&[ho, wo, cout]);
+        out.resize_to(&[ho, wo, cout]);
         let words = cout.div_ceil(4);
         for px in 0..(ho * wo) {
             for w in 0..words {
@@ -356,7 +406,7 @@ impl CfuUnit {
                 out.data[i] = residual_add(out.data[i], x.data[i], bp.zp_in());
             }
         }
-        (out, now)
+        now
     }
 }
 
@@ -596,6 +646,33 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn same_geometry_reprogram_matches_fresh_unit() {
+        // The warm path reprograms one unit per model block with the same
+        // geometry every request; the buffer-reuse fast path in
+        // `materialize` must be indistinguishable — outputs AND cycle
+        // counts — from a freshly allocated unit.
+        use crate::model::blocks::BlockConfig;
+        use crate::model::weights::{gen_input, make_block_params};
+        let cfg = BlockConfig::new(5, 4, 8, 16, 8, 1, true);
+        let mut warm = CfuUnit::new(PipelineVersion::V3);
+        for round in 0..3usize {
+            let bp = make_block_params(round + 1, cfg, -3);
+            let x = crate::tensor::TensorI8::from_vec(
+                &[5, 4, 8],
+                gen_input(
+                    &format!("unit.sg{round}"),
+                    (cfg.h * cfg.w * cfg.cin) as usize,
+                    bp.zp_in(),
+                ),
+            );
+            let (want, want_cycles) = CfuUnit::new(PipelineVersion::V3).run_block_host(&bp, &x);
+            let (got, got_cycles) = warm.run_block_host(&bp, &x);
+            assert_eq!(got.data, want.data, "round {round}");
+            assert_eq!(got_cycles, want_cycles, "round {round}");
+        }
     }
 
     #[test]

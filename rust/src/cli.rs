@@ -77,7 +77,8 @@ mod tests {
 
     #[test]
     fn parses_subcommand_and_options() {
-        let a = Args::parse(&v(&["report", "fig14", "--out", "x.json", "--quiet"]), &["quiet"]).unwrap();
+        let a = Args::parse(&v(&["report", "fig14", "--out", "x.json", "--quiet"]), &["quiet"])
+            .unwrap();
         assert_eq!(a.positional, vec!["report", "fig14"]);
         assert_eq!(a.opt("out"), Some("x.json"));
         assert!(a.flag("quiet"));

@@ -1,65 +1,43 @@
-//! Backend-pluggable model execution.
+//! Backend-pluggable model execution over the [`crate::exec`] layer.
 //!
-//! [`Engine`] holds the immutable pieces (model parameters + backend
-//! choice) and is shared read-only across threads; [`EngineShard`] is the
-//! per-worker mutable half — it owns the backend state (for the functional
-//! CFU backend, a persistent [`CfuUnit`] whose `FusedScratch` buffers are
-//! reused across requests) so the serving steady state stops re-deriving
-//! per-call state.  One shard per worker thread, no locking.
+//! [`Engine`] holds the immutable pieces — model parameters plus an
+//! [`ExecutionPlan`] (per-block geometry, peak activation footprint, and
+//! backend placement, all computed once at construction) — and is shared
+//! read-only across threads.  [`EngineShard`] is the per-worker mutable
+//! half: one [`crate::exec::BlockExecutor`] per block (each owning its warm
+//! backend state, e.g. the persistent [`crate::cfu::CfuUnit`] of the fused
+//! host path) and an [`ActivationArena`] of two capacity-retaining
+//! ping-pong buffers.  After warm-up, whole-model inference on a shard
+//! ([`EngineShard::infer_into`] with a reused output) performs zero heap
+//! allocations (`tests/alloc_regression.rs`) — the
+//! serving-scale analogue of the paper's §III-A zero-buffer dataflow.  One
+//! shard per worker thread, no locking.
 
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use crate::baseline::{self, cfu_playground};
-use crate::cfu::{CfuUnit, PipelineVersion};
-use crate::driver;
+use crate::exec::{executor_for, ActivationArena, BlockExecutor, ExecutionPlan};
 use crate::model::refimpl;
 use crate::model::weights::ModelParams;
 use crate::runtime::HloExecutable;
 use crate::tensor::TensorI8;
 
-/// Where a block's computation runs.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Backend {
-    /// Pure-Rust layer-by-layer reference (no simulation, no cycles).
-    Reference,
-    /// v0: software kernels on the cycle-accurate RV32IM core.
-    SoftwareIss,
-    /// Prakash et al. 1×1-only SIMD-MAC CFU on the ISS.
-    CfuPlaygroundIss,
-    /// The fused CFU driven by RV32IM firmware on the ISS (paper's system).
-    FusedIss(PipelineVersion),
-    /// The fused CFU programmed directly from the host (fast functional
-    /// path; CFU-side cycle model only, no CPU cycles).
-    FusedHost(PipelineVersion),
-}
-
-impl Backend {
-    /// Short human-readable backend tag (used in tables and JSON).
-    pub fn name(&self) -> String {
-        match self {
-            Backend::Reference => "reference".into(),
-            Backend::SoftwareIss => "v0-software".into(),
-            Backend::CfuPlaygroundIss => "cfu-playground".into(),
-            Backend::FusedIss(v) => format!("fused-{}", v.name()),
-            Backend::FusedHost(v) => format!("fused-host-{}", v.name()),
-        }
-    }
-}
+pub use crate::exec::Backend;
 
 /// Output of one inference.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct InferenceOutput {
     /// Classifier-head logits (one per class).
     pub logits: Vec<i32>,
     /// Simulated hardware cycles (0 for Reference / golden backends).
     pub sim_cycles: u64,
-    /// argmax class.
+    /// argmax class; ties resolve to the lowest index, and empty logits
+    /// resolve to class 0 (pinned, deterministic, error-free).
     pub class: usize,
 }
 
-/// The model engine: parameters + backend.
+/// The model engine: parameters + execution plan.
 ///
 /// Deliberately `Send + Sync` (shared across worker threads): the PJRT
 /// golden model is *not* embedded here — xla handles are not `Send` — use
@@ -67,14 +45,33 @@ pub struct InferenceOutput {
 pub struct Engine {
     /// Quantized model parameters (weights, biases, per-stage quantizers).
     pub params: ModelParams,
-    /// Where every block's computation runs.
+    /// The plan's default placement (for heterogeneous plans: the first
+    /// block's backend; consult [`Engine::plan`] for the full table).
     pub backend: Backend,
+    /// The whole-model execution plan, computed once here instead of per
+    /// request.
+    pub plan: ExecutionPlan,
 }
 
 impl Engine {
-    /// Bind a parameter set to a backend.
+    /// Bind a parameter set to a backend (a uniform plan: every block on
+    /// `backend`).
     pub fn new(params: ModelParams, backend: Backend) -> Self {
-        Self { params, backend }
+        let plan = ExecutionPlan::uniform(&params, backend);
+        Self { params, backend, plan }
+    }
+
+    /// Bind a parameter set to an explicit (possibly heterogeneous) plan —
+    /// e.g. the fused CFU for DSC-shaped blocks and the reference path for
+    /// anything else.
+    ///
+    /// # Panics
+    ///
+    /// If the plan's step count does not match the model's block count.
+    pub fn with_plan(params: ModelParams, plan: ExecutionPlan) -> Self {
+        assert_eq!(plan.len(), params.blocks.len(), "plan/model block count mismatch");
+        let backend = plan.step(0).backend;
+        Self { params, backend, plan }
     }
 
     /// Check that `x` is a valid model input (first-block geometry).
@@ -96,62 +93,50 @@ impl Engine {
         Ok(())
     }
 
-    /// Run one block on the configured backend (transient backend state).
+    /// Run one block on its planned backend (transient executor state).
     pub fn run_block(&self, idx: usize, x: &TensorI8) -> Result<(TensorI8, u64)> {
-        self.run_block_with(idx, x, None)
+        let mut executor = executor_for(self.plan.step(idx).backend);
+        let mut out = TensorI8::default();
+        let cycles = executor.run_block_into(&self.params.blocks[idx], x, &mut out)?;
+        Ok((out, cycles))
     }
 
-    /// Run one block, reusing `unit` as the CFU state when the backend is
-    /// [`Backend::FusedHost`] (the shard-local warm path).
-    fn run_block_with(
+    /// Full backbone + head through caller-owned executors and arena — the
+    /// one inference loop both the transient path ([`Engine::infer`]) and
+    /// the warm shard path ([`EngineShard::infer`]) run.
+    fn infer_with(
         &self,
-        idx: usize,
+        executors: &mut [Box<dyn BlockExecutor>],
+        arena: &mut ActivationArena,
         x: &TensorI8,
-        unit: Option<&mut CfuUnit>,
-    ) -> Result<(TensorI8, u64)> {
-        let bp = &self.params.blocks[idx];
-        Ok(match self.backend {
-            Backend::Reference => (refimpl::block_ref(x, bp), 0),
-            Backend::SoftwareIss => {
-                let r = baseline::run_block_v0(bp, x)?;
-                (r.out, r.cycles)
-            }
-            Backend::CfuPlaygroundIss => {
-                let r = cfu_playground::run_block_cfu_playground(bp, x)?;
-                (r.out, r.cycles)
-            }
-            Backend::FusedIss(v) => {
-                let r = driver::run_block_fused(bp, x, v)?;
-                (r.out, r.cycles)
-            }
-            Backend::FusedHost(v) => match unit {
-                Some(u) => u.run_block_host(bp, x),
-                None => CfuUnit::new(v).run_block_host(bp, x),
-            },
-        })
-    }
-
-    /// Full backbone + head with an optional persistent CFU unit.
-    fn infer_with(&self, x: &TensorI8, mut unit: Option<&mut CfuUnit>) -> Result<InferenceOutput> {
+        out: &mut InferenceOutput,
+    ) -> Result<()> {
+        debug_assert_eq!(executors.len(), self.plan.len());
         self.validate_input(x)?;
-        let mut a = x.clone();
+        arena.load_input(x);
         let mut cycles = 0u64;
-        for i in 0..self.params.blocks.len() {
-            let (out, c) = self.run_block_with(i, &a, unit.as_deref_mut())?;
-            a = out;
-            cycles += c;
+        for (bp, executor) in self.params.blocks.iter().zip(executors.iter_mut()) {
+            let (cur, next) = arena.pair();
+            cycles += executor.run_block_into(bp, cur, next)?;
+            arena.swap();
         }
-        let logits = refimpl::head_ref(&a, &self.params.head);
-        let class = argmax(&logits);
-        Ok(InferenceOutput { logits, sim_cycles: cycles, class })
+        let (acts, pooled) = arena.head_io();
+        refimpl::head_ref_into(acts, &self.params.head, pooled, &mut out.logits);
+        out.sim_cycles = cycles;
+        out.class = argmax(&out.logits);
+        Ok(())
     }
 
-    /// Full backbone + head on the configured backend.
+    /// Full backbone + head on the planned backends.
     ///
-    /// Allocates transient backend state per call; the serving path uses
-    /// [`EngineShard::infer`] instead, which keeps that state warm.
+    /// Builds transient executors + arena per call; the serving path uses
+    /// [`EngineShard::infer`] instead, which keeps both warm.
     pub fn infer(&self, x: &TensorI8) -> Result<InferenceOutput> {
-        self.infer_with(x, None)
+        let mut executors = self.plan.make_executors();
+        let mut arena = ActivationArena::new();
+        let mut out = InferenceOutput::default();
+        self.infer_with(&mut executors, &mut arena, x, &mut out)?;
+        Ok(out)
     }
 
     /// A deterministic synthetic input matching this model's input
@@ -173,27 +158,26 @@ impl Engine {
 
 /// Per-worker mutable engine state: the sharded half of [`Engine`].
 ///
-/// Each serving worker owns exactly one shard.  For the
-/// [`Backend::FusedHost`] backend the shard keeps a persistent [`CfuUnit`]
-/// whose internal `FusedScratch` / flat output buffers retain their
-/// capacity across requests — the steady-state request loop stops paying
-/// the per-call buffer derivation the transient [`Engine::infer`] path
-/// does.  Other backends are stateless and simply borrow the shared
-/// engine.
+/// Each serving worker owns exactly one shard: one executor per plan step
+/// (stateful backends keep their warm state — `CfuUnit` buffers, repack
+/// scratch — inside their executor) plus the shard's [`ActivationArena`],
+/// pre-reserved to the plan's peak activation footprint.  The steady-state
+/// request loop is allocation-free end to end on the fused host backend
+/// (use [`EngineShard::infer_into`] to also reuse the output's logits
+/// buffer); results are bit-identical to the transient [`Engine::infer`]
+/// path — only allocation behavior differs.
 pub struct EngineShard {
     engine: Arc<Engine>,
-    /// Persistent CFU state (populated for `Backend::FusedHost`).
-    unit: Option<CfuUnit>,
+    executors: Vec<Box<dyn BlockExecutor>>,
+    arena: ActivationArena,
 }
 
 impl EngineShard {
     /// Create a shard over a shared engine.
     pub fn new(engine: Arc<Engine>) -> Self {
-        let unit = match engine.backend {
-            Backend::FusedHost(v) => Some(CfuUnit::new(v)),
-            _ => None,
-        };
-        Self { engine, unit }
+        let executors = engine.plan.make_executors();
+        let arena = ActivationArena::for_plan(&engine.plan);
+        Self { engine, executors, arena }
     }
 
     /// The shared immutable engine this shard executes.
@@ -206,7 +190,34 @@ impl EngineShard {
     /// Bit-identical to [`Engine::infer`] (only buffer reuse differs);
     /// malformed inputs resolve as `Err`, never a panic.
     pub fn infer(&mut self, x: &TensorI8) -> Result<InferenceOutput> {
-        self.engine.infer_with(x, self.unit.as_mut())
+        let mut out = InferenceOutput::default();
+        self.infer_into(x, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`infer`](Self::infer) writing into a caller-owned output (the
+    /// logits buffer is cleared and refilled, capacity retained) — with a
+    /// warm shard and a reused `out`, the whole call performs zero heap
+    /// allocations.
+    pub fn infer_into(&mut self, x: &TensorI8, out: &mut InferenceOutput) -> Result<()> {
+        self.engine.infer_with(&mut self.executors, &mut self.arena, x, out)
+    }
+
+    /// Run a whole batch through this shard, amortizing its arena and warm
+    /// executors across every request of a coordinator batch.
+    ///
+    /// Outputs are in input order and bit-identical to calling
+    /// [`infer`](Self::infer) per element; the first failing input aborts
+    /// the batch (callers that need per-request fault isolation submit
+    /// individually, as the coordinator's dispatch loop does).
+    pub fn infer_batch(&mut self, xs: &[TensorI8]) -> Result<Vec<InferenceOutput>> {
+        let mut outs = Vec::with_capacity(xs.len());
+        for x in xs {
+            let mut out = InferenceOutput::default();
+            self.infer_into(x, &mut out)?;
+            outs.push(out);
+        }
+        Ok(outs)
     }
 }
 
@@ -220,13 +231,25 @@ pub fn infer_golden(exe: &HloExecutable, x: &TensorI8) -> Result<InferenceOutput
     Ok(InferenceOutput { logits, sim_cycles: 0, class })
 }
 
+/// Deterministic argmax: the **first** maximum wins on ties, and empty
+/// input yields class 0 (error-free — the serving path must never panic on
+/// a degenerate head).
 fn argmax(xs: &[i32]) -> usize {
-    xs.iter().enumerate().max_by_key(|(_, &v)| v).map(|(i, _)| i).unwrap_or(0)
+    let mut best = 0usize;
+    let mut best_v = i32::MIN;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cfu::PipelineVersion;
     use crate::model::blocks::BlockConfig;
     use crate::model::weights::{gen_input, make_model_params};
 
@@ -329,13 +352,18 @@ mod tests {
         let x = input(&p);
         let sw = Engine::new(p.clone(), Backend::SoftwareIss).infer(&x).unwrap();
         let fu = Engine::new(p.clone(), Backend::FusedIss(PipelineVersion::V3)).infer(&x).unwrap();
-        assert!(fu.sim_cycles * 4 < sw.sim_cycles, "fused {} vs sw {}", fu.sim_cycles, sw.sim_cycles);
+        assert!(
+            fu.sim_cycles * 4 < sw.sim_cycles,
+            "fused {} vs sw {}",
+            fu.sim_cycles,
+            sw.sim_cycles
+        );
     }
 
     #[test]
     fn shard_matches_transient_engine_across_requests() {
-        // The warm shard path (persistent CfuUnit + reused scratch) must be
-        // bit-identical to the transient path, request after request.
+        // The warm shard path (persistent per-block executors + arena) must
+        // be bit-identical to the transient path, request after request.
         let p = mini_params();
         let engine = Arc::new(Engine::new(p.clone(), Backend::FusedHost(PipelineVersion::V3)));
         let mut shard = EngineShard::new(Arc::clone(&engine));
@@ -343,13 +371,66 @@ mod tests {
             let c = p.blocks[0].cfg;
             let x = TensorI8::from_vec(
                 &[c.h as usize, c.w as usize, c.cin as usize],
-                gen_input(&format!("eng.sh{salt}"), (c.h * c.w * c.cin) as usize, p.blocks[0].zp_in()),
+                gen_input(
+                    &format!("eng.sh{salt}"),
+                    (c.h * c.w * c.cin) as usize,
+                    p.blocks[0].zp_in(),
+                ),
             );
             let want = engine.infer(&x).unwrap();
             let got = shard.infer(&x).unwrap();
             assert_eq!(got.logits, want.logits, "salt {salt}");
             assert_eq!(got.sim_cycles, want.sim_cycles, "salt {salt}");
         }
+    }
+
+    #[test]
+    fn infer_batch_matches_per_request_inference() {
+        let p = mini_params();
+        let engine = Arc::new(Engine::new(p, Backend::FusedHost(PipelineVersion::V2)));
+        let xs: Vec<TensorI8> =
+            (0..5).map(|i| engine.synthetic_input(&format!("eng.b{i}"))).collect();
+        let mut shard = EngineShard::new(Arc::clone(&engine));
+        let batch = shard.infer_batch(&xs).unwrap();
+        assert_eq!(batch.len(), xs.len());
+        for (x, got) in xs.iter().zip(&batch) {
+            let want = engine.infer(x).unwrap();
+            assert_eq!(got.logits, want.logits);
+            assert_eq!(got.sim_cycles, want.sim_cycles);
+            assert_eq!(got.class, want.class);
+        }
+        // A batch with a malformed input aborts with an error, not a panic.
+        let bad = vec![TensorI8::from_vec(&[1, 1, 8], vec![0i8; 8])];
+        assert!(shard.infer_batch(&bad).is_err());
+    }
+
+    #[test]
+    fn heterogeneous_plan_matches_uniform_logits() {
+        // The placement table makes mixed plans expressible: block 0 on the
+        // fused host CFU, block 1 on the pure reference.  Logits match any
+        // uniform plan; cycles are exactly the fused block's share.
+        let p = mini_params();
+        let plan = ExecutionPlan::with_placement(&p, |i, _| {
+            if i == 0 {
+                Backend::FusedHost(PipelineVersion::V3)
+            } else {
+                Backend::Reference
+            }
+        });
+        let engine = Engine::with_plan(p.clone(), plan);
+        assert_eq!(engine.backend, Backend::FusedHost(PipelineVersion::V3));
+        let x = input(&p);
+        let want = Engine::new(p.clone(), Backend::Reference).infer(&x).unwrap();
+        let got = engine.infer(&x).unwrap();
+        assert_eq!(got.logits, want.logits);
+        assert!(got.sim_cycles > 0, "fused block must contribute cycles");
+        let all_fused = Engine::new(p, Backend::FusedHost(PipelineVersion::V3)).infer(&x).unwrap();
+        assert!(got.sim_cycles < all_fused.sim_cycles, "reference block contributes none");
+        // The warm shard runs mixed plans too.
+        let mut shard = EngineShard::new(Arc::new(engine));
+        let shard_got = shard.infer(&x).unwrap();
+        assert_eq!(shard_got.logits, want.logits);
+        assert_eq!(shard_got.sim_cycles, got.sim_cycles);
     }
 
     #[test]
@@ -372,5 +453,19 @@ mod tests {
         let out = Engine::new(p, Backend::Reference).infer(&x).unwrap();
         let best = out.logits.iter().copied().max().unwrap();
         assert_eq!(out.logits[out.class], best);
+    }
+
+    #[test]
+    fn argmax_ties_break_to_first_and_empty_is_zero() {
+        // Pinned tie-breaking: the FIRST maximum wins (the previous
+        // `max_by_key` implementation silently returned the last), and an
+        // empty logits slice resolves to class 0 instead of erroring.
+        assert_eq!(argmax(&[]), 0);
+        assert_eq!(argmax(&[5]), 0);
+        assert_eq!(argmax(&[1, 3, 3, 2]), 1);
+        assert_eq!(argmax(&[7, 7, 7]), 0);
+        assert_eq!(argmax(&[-9, -3, -3]), 1);
+        assert_eq!(argmax(&[i32::MIN, i32::MIN]), 0);
+        assert_eq!(argmax(&[0, i32::MAX, i32::MAX]), 1);
     }
 }

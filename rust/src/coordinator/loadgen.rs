@@ -105,7 +105,7 @@ pub fn run(
     cfg: &LoadgenConfig,
     make_input: impl Fn(u64) -> TensorI8 + Sync,
 ) -> LoadgenReport {
-    let backend = engine.backend.name();
+    let backend = engine.backend.name().to_string();
     let coord = Coordinator::start(Arc::clone(&engine), cfg.serve.clone());
     let t0 = Instant::now();
     match cfg.mode {

@@ -18,9 +18,13 @@
 //! * **Exactly one terminal outcome** — every admitted request resolves
 //!   with one [`Response`] (success or [`ServeError`]); worker inference
 //!   failures propagate as error responses, never hangs.
-//! * **Warm shards** — each worker owns an [`EngineShard`] that reuses its
-//!   backend scratch state across requests instead of re-deriving it per
-//!   call.
+//! * **Warm shards** — each worker owns an [`EngineShard`] carrying one
+//!   warm executor per block of the engine's [`crate::exec::ExecutionPlan`]
+//!   plus a ping-pong [`crate::exec::ActivationArena`]; steady-state
+//!   whole-model inference reuses every buffer instead of re-deriving
+//!   state per call (on the fused host backend, zero allocations beyond
+//!   the response's owned logits — `EngineShard::infer_into` with a reused
+//!   output drops even that).
 //!
 //! See `ARCHITECTURE.md` for the full request lifecycle and how the
 //! modules map onto the paper's sections.

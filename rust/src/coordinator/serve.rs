@@ -11,10 +11,13 @@
 //!    `ServeConfig::max_batch` requests (waiting at most
 //!    `ServeConfig::batch_timeout` for stragglers), then dispatches each to
 //!    the least-loaded worker shard.
-//! 3. **Execution** — every worker owns an [`EngineShard`] (persistent
-//!    backend state, reused across requests) and a bounded private queue;
-//!    a worker that hits an inference error sends an **error response** —
-//!    clients always observe exactly one terminal outcome, never a hang.
+//! 3. **Execution** — every worker owns an [`EngineShard`] (one warm
+//!    [`crate::exec::BlockExecutor`] per plan step plus a capacity-retaining
+//!    [`crate::exec::ActivationArena`]; steady-state inference allocates
+//!    nothing beyond each response's owned logits vector) and a bounded
+//!    private queue; a worker that hits an inference error sends an
+//!    **error response** — clients always observe exactly one terminal
+//!    outcome, never a hang.
 //! 4. **Response** — [`Ticket::wait`] returns the [`Response`]; even if a
 //!    worker died mid-request the ticket resolves (with
 //!    [`ServeError::WorkerLost`]).
@@ -299,7 +302,12 @@ impl Drop for Coordinator {
 }
 
 /// Batch formation + least-loaded dispatch onto the worker shards.
-fn batcher_loop(rx: Receiver<Request>, engine: Arc<Engine>, cfg: ServeConfig, metrics: Arc<Metrics>) {
+fn batcher_loop(
+    rx: Receiver<Request>,
+    engine: Arc<Engine>,
+    cfg: ServeConfig,
+    metrics: Arc<Metrics>,
+) {
     // Each worker owns an EngineShard (persistent backend state) and a
     // bounded queue of max_batch requests: dispatch blocks when every
     // worker is saturated, which in turn lets the admission queue fill and

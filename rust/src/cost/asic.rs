@@ -83,9 +83,18 @@ pub fn logic_ge(p: &ArchParams) -> Vec<(&'static str, u64)> {
     vec![
         ("expansion engines", 9 * (8 * ge::MUL8 + 8 * ge::ADD32 + 2 * ge::REG32)),
         ("expansion post-proc", 9 * (ge::MUL32 + ge::REQUANT_DP + 3 * ge::REG32)),
-        ("depthwise engine", 9 * ge::MUL8 + 9 * ge::ADD32 + ge::MUL32 + ge::REQUANT_DP + 4 * ge::REG32),
-        ("projection engines", proj * (ge::MUL8 + ge::ADD32 + ge::REG32) + ge::MUL32 + ge::REQUANT_DP),
-        ("pipeline registers (F1 tile + stages)", (9 * p.max_m as u64 / 4) * ge::REG32 / 8 + 5 * 2 * ge::REG32),
+        (
+            "depthwise engine",
+            9 * ge::MUL8 + 9 * ge::ADD32 + ge::MUL32 + ge::REQUANT_DP + 4 * ge::REG32,
+        ),
+        (
+            "projection engines",
+            proj * (ge::MUL8 + ge::ADD32 + ge::REG32) + ge::MUL32 + ge::REQUANT_DP,
+        ),
+        (
+            "pipeline registers (F1 tile + stages)",
+            (9 * p.max_m as u64 / 4) * ge::REG32 / 8 + 5 * 2 * ge::REG32,
+        ),
         ("memory bank control + padding", 20 * ge::BANK_CTRL),
         ("instruction controller", ge::IC),
     ]

@@ -14,5 +14,7 @@ pub mod fpga;
 pub mod power;
 
 pub use asic::{asic_summary, AsicNode, AsicSummary};
-pub use fpga::{cfu_resources, ArchParams, FpgaResources, ARTIX7_XC7A100T, BASE_SOC, CFU_PLAYGROUND_REF};
+pub use fpga::{
+    cfu_resources, ArchParams, FpgaResources, ARTIX7_XC7A100T, BASE_SOC, CFU_PLAYGROUND_REF,
+};
 pub use power::{fpga_power_w, PowerBreakdown};

@@ -8,6 +8,9 @@
 //!
 //! The measured cycle count therefore *includes the CPU↔CFU control
 //! overhead*, which the paper stresses is part of its reported numbers.
+//!
+//! Whole-model execution reaches [`run_block_fused`] through the
+//! [`crate::exec`] layer (the `FusedIss` block executor wraps it).
 
 use anyhow::Result;
 

@@ -1,0 +1,106 @@
+//! [`ActivationArena`] — two capacity-retaining ping-pong activation
+//! buffers plus the classifier head's scratch, threaded through whole-model
+//! inference.
+//!
+//! This is the host-scale analogue of the paper's §III-A zero-buffer
+//! dataflow: just as the CFU never materializes the F1/F2 intermediate
+//! maps, the engine never allocates a per-block activation tensor —
+//! block `i` reads the current buffer and writes the other, then the two
+//! swap (a pointer swap, not a copy).  After the first request has sized
+//! everything, steady-state full-model inference performs **zero** heap
+//! allocations on the warm shard path (`tests/alloc_regression.rs`).
+
+use crate::tensor::TensorI8;
+
+use super::ExecutionPlan;
+
+/// Ping-pong activation buffers + head scratch for one inference stream.
+#[derive(Debug, Default)]
+pub struct ActivationArena {
+    /// The *current* activation (block input / final backbone output).
+    cur: TensorI8,
+    /// The *next* activation (block output), swapped with `cur` after
+    /// every block.
+    next: TensorI8,
+    /// Global-average-pool scratch for the classifier head.
+    pooled: Vec<i32>,
+}
+
+impl ActivationArena {
+    /// An empty arena; buffers are sized lazily by the first inference.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// An arena with both buffers pre-reserved to the plan's peak
+    /// activation footprint, so even the first request only grows the
+    /// small bookkeeping vectors.
+    pub fn for_plan(plan: &ExecutionPlan) -> Self {
+        let mut a = Self::default();
+        a.cur.data.reserve(plan.max_activation_elems());
+        a.next.data.reserve(plan.max_activation_elems());
+        a
+    }
+
+    /// Load the model input into the current buffer (copy; the caller keeps
+    /// ownership of the request payload).
+    pub fn load_input(&mut self, x: &TensorI8) {
+        self.cur.resize_to(&x.dims);
+        self.cur.data.copy_from_slice(&x.data);
+    }
+
+    /// Borrow `(current, next)` for one block execution: the executor reads
+    /// `current` and writes `next`.
+    pub fn pair(&mut self) -> (&TensorI8, &mut TensorI8) {
+        (&self.cur, &mut self.next)
+    }
+
+    /// Make the freshly written buffer current (pointer swap, no copy).
+    pub fn swap(&mut self) {
+        std::mem::swap(&mut self.cur, &mut self.next);
+    }
+
+    /// The current activation (after the last block: the backbone output).
+    pub fn current(&self) -> &TensorI8 {
+        &self.cur
+    }
+
+    /// Borrow `(backbone output, pooled scratch)` for the classifier head.
+    pub fn head_io(&mut self) -> (&TensorI8, &mut Vec<i32>) {
+        (&self.cur, &mut self.pooled)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ping_pong_swaps_without_copying() {
+        let mut a = ActivationArena::new();
+        let x = TensorI8::from_vec(&[2, 2, 1], vec![1, 2, 3, 4]);
+        a.load_input(&x);
+        assert_eq!(a.current().data, vec![1, 2, 3, 4]);
+        {
+            let (cur, next) = a.pair();
+            assert_eq!(cur.data, vec![1, 2, 3, 4]);
+            next.resize_to(&[1, 1, 2]);
+            next.data.copy_from_slice(&[9, 8]);
+        }
+        a.swap();
+        assert_eq!(a.current().dims, vec![1, 1, 2]);
+        assert_eq!(a.current().data, vec![9, 8]);
+    }
+
+    #[test]
+    fn load_input_reuses_capacity() {
+        let mut a = ActivationArena::new();
+        let big = TensorI8::from_vec(&[4, 4, 2], vec![7; 32]);
+        a.load_input(&big);
+        let cap = a.cur.data.capacity();
+        let small = TensorI8::from_vec(&[2, 2, 2], vec![1; 8]);
+        a.load_input(&small);
+        assert_eq!(a.current().data.len(), 8);
+        assert_eq!(a.cur.data.capacity(), cap, "shrinking must not reallocate");
+    }
+}

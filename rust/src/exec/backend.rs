@@ -1,0 +1,180 @@
+//! The [`Backend`] identifier — the single source of truth for *where a
+//! block's computation runs* and for every backend's spelling.
+//!
+//! All parsing (CLI `--backend` flags) and printing (tables, JSON, log
+//! lines) goes through [`FromStr`]/[`fmt::Display`] here; nothing else in
+//! the crate hardcodes a backend name.
+
+use std::fmt;
+use std::str::FromStr;
+
+use crate::cfu::PipelineVersion;
+
+/// Where a block's computation runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Pure-Rust layer-by-layer reference (no simulation, no cycles).
+    Reference,
+    /// v0: software kernels on the cycle-accurate RV32IM core.
+    SoftwareIss,
+    /// Prakash et al. 1×1-only SIMD-MAC CFU on the ISS.
+    CfuPlaygroundIss,
+    /// The fused CFU driven by RV32IM firmware on the ISS (paper's system).
+    FusedIss(PipelineVersion),
+    /// The fused CFU programmed directly from the host (fast functional
+    /// path; CFU-side cycle model only, no CPU cycles).
+    FusedHost(PipelineVersion),
+}
+
+impl Backend {
+    /// Every backend, in the order tables and `--backend list` print them.
+    pub const ALL: [Backend; 9] = [
+        Backend::Reference,
+        Backend::SoftwareIss,
+        Backend::CfuPlaygroundIss,
+        Backend::FusedIss(PipelineVersion::V1),
+        Backend::FusedIss(PipelineVersion::V2),
+        Backend::FusedIss(PipelineVersion::V3),
+        Backend::FusedHost(PipelineVersion::V1),
+        Backend::FusedHost(PipelineVersion::V2),
+        Backend::FusedHost(PipelineVersion::V3),
+    ];
+
+    /// Canonical backend tag (used in tables and JSON).  Static — the
+    /// table/JSON hot paths never allocate for a name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Reference => "reference",
+            Backend::SoftwareIss => "v0-software",
+            Backend::CfuPlaygroundIss => "cfu-playground",
+            Backend::FusedIss(PipelineVersion::V1) => "fused-v1",
+            Backend::FusedIss(PipelineVersion::V2) => "fused-v2",
+            Backend::FusedIss(PipelineVersion::V3) => "fused-v3",
+            Backend::FusedHost(PipelineVersion::V1) => "fused-host-v1",
+            Backend::FusedHost(PipelineVersion::V2) => "fused-host-v2",
+            Backend::FusedHost(PipelineVersion::V3) => "fused-host-v3",
+        }
+    }
+
+    /// Accepted CLI shorthands (the canonical [`name`](Self::name) always
+    /// parses too).
+    pub fn aliases(&self) -> &'static [&'static str] {
+        match self {
+            Backend::Reference => &["ref"],
+            Backend::SoftwareIss => &["v0", "software"],
+            Backend::CfuPlaygroundIss => &["pg"],
+            Backend::FusedIss(PipelineVersion::V1) => &["v1"],
+            Backend::FusedIss(PipelineVersion::V2) => &["v2"],
+            Backend::FusedIss(PipelineVersion::V3) => &["v3", "fused"],
+            Backend::FusedHost(PipelineVersion::V1) => &["host-v1"],
+            Backend::FusedHost(PipelineVersion::V2) => &["host-v2"],
+            Backend::FusedHost(PipelineVersion::V3) => &["host-v3", "host"],
+        }
+    }
+
+    /// One-line description for `--backend list`.
+    pub fn describe(&self) -> &'static str {
+        match self {
+            Backend::Reference => "pure-Rust layer-by-layer reference (no cycle model)",
+            Backend::SoftwareIss => "software INT8 kernels on the cycle-accurate RV32IM ISS",
+            Backend::CfuPlaygroundIss => "Prakash et al. 1x1-only SIMD-MAC CFU on the ISS",
+            Backend::FusedIss(_) => "fused CFU driven by RV32IM firmware on the ISS",
+            Backend::FusedHost(_) => "fused CFU programmed from the host (CFU cycle model only)",
+        }
+    }
+
+    /// The multi-line listing behind `--backend list`.
+    pub fn list() -> String {
+        let mut out = String::from("known backends:\n");
+        for b in Backend::ALL {
+            let aliases = b.aliases().join(", ");
+            out.push_str(&format!("  {:<14} {:<20} {}\n", b.name(), aliases, b.describe()));
+        }
+        out
+    }
+
+    fn known_names() -> String {
+        Backend::ALL.map(|b| b.name()).join(", ")
+    }
+}
+
+impl fmt::Display for Backend {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl FromStr for Backend {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        for b in Backend::ALL {
+            if s == b.name() || b.aliases().contains(&s) {
+                return Ok(b);
+            }
+        }
+        Err(format!(
+            "unknown backend '{s}' (known: {}; try `--backend list`)",
+            Backend::known_names()
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_matches_name_and_round_trips() {
+        for b in Backend::ALL {
+            assert_eq!(format!("{b}"), b.name());
+            assert_eq!(b.name().parse::<Backend>().unwrap(), b, "{}", b.name());
+            for alias in b.aliases() {
+                assert_eq!(alias.parse::<Backend>().unwrap(), b, "alias {alias}");
+            }
+        }
+    }
+
+    #[test]
+    fn names_are_unique() {
+        let mut seen: Vec<&str> = Vec::new();
+        for b in Backend::ALL {
+            seen.push(b.name());
+            seen.extend(b.aliases());
+        }
+        let n = seen.len();
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), n, "duplicate backend spelling");
+    }
+
+    #[test]
+    fn host_v1_and_v2_parse() {
+        // Regression: the old CLI parser rejected every FusedHost version
+        // except host-v3.
+        assert_eq!(
+            "host-v1".parse::<Backend>().unwrap(),
+            Backend::FusedHost(PipelineVersion::V1)
+        );
+        assert_eq!(
+            "host-v2".parse::<Backend>().unwrap(),
+            Backend::FusedHost(PipelineVersion::V2)
+        );
+    }
+
+    #[test]
+    fn unknown_backend_error_lists_choices() {
+        let err = "warp-drive".parse::<Backend>().unwrap_err();
+        assert!(err.contains("warp-drive"), "{err}");
+        assert!(err.contains("fused-v3"), "{err}");
+        assert!(err.contains("--backend list"), "{err}");
+    }
+
+    #[test]
+    fn list_mentions_every_backend() {
+        let l = Backend::list();
+        for b in Backend::ALL {
+            assert!(l.contains(b.name()), "{l}");
+        }
+    }
+}

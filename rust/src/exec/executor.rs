@@ -1,0 +1,224 @@
+//! [`BlockExecutor`] — the one dispatch seam between the model and the
+//! backends.
+//!
+//! Each executor wraps one backend's free function behind a common
+//! *write-into* contract: `run_block_into(bp, x, out)` reshapes the
+//! caller-owned `out` tensor (retaining its allocation) and fills every
+//! element.  Stateful backends keep their warm state *inside* the executor
+//! — [`FusedHostExecutor`] owns a persistent [`CfuUnit`] whose buffers
+//! survive across requests, which is what makes the warm shard path
+//! allocation-free (`tests/alloc_regression.rs`).
+
+use anyhow::Result;
+
+use crate::baseline::{self, cfu_playground};
+use crate::cfu::{CfuUnit, PipelineVersion};
+use crate::driver;
+use crate::model::refimpl;
+use crate::model::weights::BlockParams;
+use crate::tensor::TensorI8;
+
+use super::Backend;
+
+/// Run one block, writing the output feature map into a caller-owned
+/// buffer.
+///
+/// Implementations must (a) reshape `out` to the block's output geometry
+/// (reusing its allocation — see `TensorI8::resize_to`), (b) overwrite
+/// every element, and (c) return the simulated hardware cycles (0 for
+/// backends without a cycle model).  `Send` is a supertrait so executors
+/// can live inside worker shards.
+pub trait BlockExecutor: Send {
+    /// Execute `bp` on input `x`, writing the output into `out`.
+    fn run_block_into(
+        &mut self,
+        bp: &BlockParams,
+        x: &TensorI8,
+        out: &mut TensorI8,
+    ) -> Result<u64>;
+
+    /// The backend this executor runs on.
+    fn backend(&self) -> Backend;
+}
+
+/// Build the executor for a backend (the factory behind
+/// [`super::ExecutionPlan::make_executors`]).
+pub fn executor_for(backend: Backend) -> Box<dyn BlockExecutor> {
+    match backend {
+        Backend::Reference => Box::new(ReferenceExecutor),
+        Backend::SoftwareIss => Box::new(SoftwareIssExecutor),
+        Backend::CfuPlaygroundIss => Box::new(CfuPlaygroundExecutor),
+        Backend::FusedIss(v) => Box::new(FusedIssExecutor { version: v }),
+        Backend::FusedHost(v) => Box::new(FusedHostExecutor::new(v)),
+    }
+}
+
+/// Copy an owned backend result into the caller's buffer, keeping the
+/// caller's allocation (the transient ISS/reference paths allocate their
+/// result internally anyway; the arena's capacity must survive them).
+fn copy_into(out: &mut TensorI8, src: &TensorI8) {
+    out.resize_to(&src.dims);
+    out.data.copy_from_slice(&src.data);
+}
+
+/// [`Backend::Reference`]: wraps [`refimpl::block_ref`] (no cycle model).
+pub struct ReferenceExecutor;
+
+impl BlockExecutor for ReferenceExecutor {
+    fn run_block_into(
+        &mut self,
+        bp: &BlockParams,
+        x: &TensorI8,
+        out: &mut TensorI8,
+    ) -> Result<u64> {
+        copy_into(out, &refimpl::block_ref(x, bp));
+        Ok(0)
+    }
+
+    fn backend(&self) -> Backend {
+        Backend::Reference
+    }
+}
+
+/// [`Backend::SoftwareIss`]: wraps [`baseline::run_block_v0`].
+pub struct SoftwareIssExecutor;
+
+impl BlockExecutor for SoftwareIssExecutor {
+    fn run_block_into(
+        &mut self,
+        bp: &BlockParams,
+        x: &TensorI8,
+        out: &mut TensorI8,
+    ) -> Result<u64> {
+        let r = baseline::run_block_v0(bp, x)?;
+        copy_into(out, &r.out);
+        Ok(r.cycles)
+    }
+
+    fn backend(&self) -> Backend {
+        Backend::SoftwareIss
+    }
+}
+
+/// [`Backend::CfuPlaygroundIss`]: wraps
+/// [`cfu_playground::run_block_cfu_playground`].
+pub struct CfuPlaygroundExecutor;
+
+impl BlockExecutor for CfuPlaygroundExecutor {
+    fn run_block_into(
+        &mut self,
+        bp: &BlockParams,
+        x: &TensorI8,
+        out: &mut TensorI8,
+    ) -> Result<u64> {
+        let r = cfu_playground::run_block_cfu_playground(bp, x)?;
+        copy_into(out, &r.out);
+        Ok(r.cycles)
+    }
+
+    fn backend(&self) -> Backend {
+        Backend::CfuPlaygroundIss
+    }
+}
+
+/// [`Backend::FusedIss`]: wraps [`driver::run_block_fused`] (a fresh ISS
+/// machine per block, as the paper's measurement methodology requires).
+pub struct FusedIssExecutor {
+    version: PipelineVersion,
+}
+
+impl BlockExecutor for FusedIssExecutor {
+    fn run_block_into(
+        &mut self,
+        bp: &BlockParams,
+        x: &TensorI8,
+        out: &mut TensorI8,
+    ) -> Result<u64> {
+        let r = driver::run_block_fused(bp, x, self.version)?;
+        copy_into(out, &r.out);
+        Ok(r.cycles)
+    }
+
+    fn backend(&self) -> Backend {
+        Backend::FusedIss(self.version)
+    }
+}
+
+/// [`Backend::FusedHost`]: a persistent [`CfuUnit`] programmed from the
+/// host.  The unit's IFMAP/filter/bias/scratch buffers are sized on the
+/// first request and reused verbatim afterwards (same-geometry
+/// reconfiguration is allocation-free), so one executor per block keeps the
+/// whole warm path free of steady-state allocations.
+pub struct FusedHostExecutor {
+    unit: CfuUnit,
+}
+
+impl FusedHostExecutor {
+    pub fn new(version: PipelineVersion) -> Self {
+        Self { unit: CfuUnit::new(version) }
+    }
+}
+
+impl BlockExecutor for FusedHostExecutor {
+    fn run_block_into(
+        &mut self,
+        bp: &BlockParams,
+        x: &TensorI8,
+        out: &mut TensorI8,
+    ) -> Result<u64> {
+        Ok(self.unit.run_block_host_into(bp, x, out))
+    }
+
+    fn backend(&self) -> Backend {
+        Backend::FusedHost(self.unit.version)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::blocks::BlockConfig;
+    use crate::model::refimpl::block_ref;
+    use crate::model::weights::{gen_input, make_block_params};
+
+    fn block() -> (BlockParams, TensorI8) {
+        let cfg = BlockConfig::new(6, 5, 8, 16, 8, 1, true);
+        let bp = make_block_params(3, cfg, -3);
+        let x = TensorI8::from_vec(
+            &[6, 5, 8],
+            gen_input("exec.x", (cfg.h * cfg.w * cfg.cin) as usize, bp.zp_in()),
+        );
+        (bp, x)
+    }
+
+    #[test]
+    fn every_executor_matches_reference_and_reports_its_backend() {
+        let (bp, x) = block();
+        let want = block_ref(&x, &bp);
+        for backend in Backend::ALL {
+            let mut ex = executor_for(backend);
+            assert_eq!(ex.backend(), backend);
+            let mut out = TensorI8::default();
+            let cycles = ex.run_block_into(&bp, &x, &mut out).unwrap();
+            assert_eq!(out.dims, want.dims, "{backend}");
+            assert_eq!(out.data, want.data, "{backend}");
+            if backend == Backend::Reference {
+                assert_eq!(cycles, 0);
+            } else {
+                assert!(cycles > 0, "{backend} should report cycles");
+            }
+        }
+    }
+
+    #[test]
+    fn executor_reuses_the_output_buffer() {
+        // Writing into an oversized buffer must reshape it, not append.
+        let (bp, x) = block();
+        let mut out = TensorI8::zeros(&[10, 10, 16]);
+        let want = block_ref(&x, &bp);
+        let mut ex = executor_for(Backend::FusedHost(PipelineVersion::V3));
+        ex.run_block_into(&bp, &x, &mut out).unwrap();
+        assert_eq!(out.dims, want.dims);
+        assert_eq!(out.data, want.data);
+    }
+}

@@ -1,0 +1,32 @@
+//! The execution layer: the single seam between *what* to compute (the
+//! model) and *where/how* it runs (the backends).
+//!
+//! Three pieces, each decided exactly once instead of per request:
+//!
+//! * [`Backend`] — the backend identifier, including the one true
+//!   spelling of every backend name (`FromStr`/`Display`).
+//! * [`ExecutionPlan`] — built at engine construction: per-block
+//!   input/output geometry, the peak activation footprint, and a per-block
+//!   backend placement table (heterogeneous plans — fused CFU for
+//!   DSC-shaped blocks, reference for anything else — are first-class).
+//! * [`BlockExecutor`] / [`ActivationArena`] — per-worker mutable state:
+//!   one executor per block (owning any warm backend state, e.g. the
+//!   persistent `CfuUnit` of the fused host path) writing into the arena's
+//!   two capacity-retaining ping-pong buffers.
+//!
+//! Together they make steady-state whole-model inference on the warm shard
+//! path allocation-free — the host-scale analogue of the paper's §III-A
+//! zero-buffer dataflow, where intermediates live only in pipeline
+//! registers.  Dispatch structure and allocation behavior are the *only*
+//! things this layer owns: logits and `sim_cycles` are bit-identical to
+//! running each backend's free function directly.
+
+pub mod arena;
+pub mod backend;
+pub mod executor;
+pub mod plan;
+
+pub use arena::ActivationArena;
+pub use backend::Backend;
+pub use executor::{executor_for, BlockExecutor};
+pub use plan::{ExecutionPlan, PlanStep};

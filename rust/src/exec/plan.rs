@@ -1,0 +1,175 @@
+//! [`ExecutionPlan`] — everything about a whole-model run that can be
+//! decided once, at engine construction, instead of per request: per-block
+//! input/output geometry, the peak activation footprint (what the arena
+//! must hold), and a per-block backend placement table.
+//!
+//! Heterogeneous placements — e.g. the fused CFU for DSC-shaped blocks and
+//! the reference path for anything else — are expressed by
+//! [`ExecutionPlan::with_placement`]; the common case is
+//! [`ExecutionPlan::uniform`].
+
+use crate::model::blocks::BlockConfig;
+use crate::model::weights::ModelParams;
+
+use super::{executor_for, Backend, BlockExecutor};
+
+/// One block's slot in the plan: where it runs and what it consumes and
+/// produces ([H, W, C] geometry).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlanStep {
+    /// Backend this block is placed on.
+    pub backend: Backend,
+    /// Input feature-map dims.
+    pub in_dims: [usize; 3],
+    /// Output feature-map dims.
+    pub out_dims: [usize; 3],
+}
+
+impl PlanStep {
+    /// Elements in the output feature map.
+    pub fn out_len(&self) -> usize {
+        self.out_dims.iter().product()
+    }
+}
+
+/// The whole-model execution plan, computed once at `Engine::new` time.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ExecutionPlan {
+    steps: Vec<PlanStep>,
+    max_activation_elems: usize,
+}
+
+impl ExecutionPlan {
+    /// Plan with every block on the same backend (the classic engine
+    /// configuration).
+    pub fn uniform(params: &ModelParams, backend: Backend) -> Self {
+        Self::with_placement(params, |_, _| backend)
+    }
+
+    /// Plan with a per-block placement decided by `place(idx, cfg)`.
+    ///
+    /// # Panics
+    ///
+    /// If the model's blocks do not chain (block `i+1`'s input geometry
+    /// must equal block `i`'s output geometry) — a malformed `ModelParams`
+    /// is a programming error, caught here once instead of mid-inference.
+    pub fn with_placement(
+        params: &ModelParams,
+        place: impl Fn(usize, &BlockConfig) -> Backend,
+    ) -> Self {
+        assert!(!params.blocks.is_empty(), "plan over an empty model");
+        let mut steps = Vec::with_capacity(params.blocks.len());
+        let mut max_activation_elems = 0usize;
+        let mut prev_out: Option<[usize; 3]> = None;
+        for (i, bp) in params.blocks.iter().enumerate() {
+            let c = bp.cfg;
+            let in_dims = [c.h as usize, c.w as usize, c.cin as usize];
+            if let Some(prev) = prev_out {
+                assert_eq!(
+                    prev, in_dims,
+                    "block {i} input geometry does not chain from block {}",
+                    i - 1
+                );
+            }
+            let out_dims = [c.h_out() as usize, c.w_out() as usize, c.cout as usize];
+            let step = PlanStep { backend: place(i, &c), in_dims, out_dims };
+            max_activation_elems = max_activation_elems
+                .max(in_dims.iter().product())
+                .max(step.out_len());
+            prev_out = Some(out_dims);
+            steps.push(step);
+        }
+        Self { steps, max_activation_elems }
+    }
+
+    /// Per-block steps in execution order.
+    pub fn steps(&self) -> &[PlanStep] {
+        &self.steps
+    }
+
+    /// The `idx`-th block's step.
+    pub fn step(&self, idx: usize) -> &PlanStep {
+        &self.steps[idx]
+    }
+
+    /// Number of blocks.
+    pub fn len(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// True when the plan has no steps (never constructed; plans require at
+    /// least one block).
+    pub fn is_empty(&self) -> bool {
+        self.steps.is_empty()
+    }
+
+    /// Largest activation tensor (elements) any step consumes or produces —
+    /// what each arena buffer must be able to hold.
+    pub fn max_activation_elems(&self) -> usize {
+        self.max_activation_elems
+    }
+
+    /// True when every step runs on the same backend.
+    pub fn is_uniform(&self) -> bool {
+        self.steps.iter().all(|s| s.backend == self.steps[0].backend)
+    }
+
+    /// Instantiate one executor per step (each owning its warm state).
+    pub fn make_executors(&self) -> Vec<Box<dyn BlockExecutor>> {
+        self.steps.iter().map(|s| executor_for(s.backend)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfu::PipelineVersion;
+    use crate::model::weights::make_model_params;
+
+    fn params() -> ModelParams {
+        make_model_params(Some(vec![
+            BlockConfig::new(8, 8, 8, 16, 8, 2, false),
+            BlockConfig::new(4, 4, 8, 16, 16, 1, false),
+        ]))
+    }
+
+    #[test]
+    fn uniform_plan_geometry_and_footprint() {
+        let p = params();
+        let plan = ExecutionPlan::uniform(&p, Backend::Reference);
+        assert_eq!(plan.len(), 2);
+        assert!(!plan.is_empty());
+        assert!(plan.is_uniform());
+        assert_eq!(plan.step(0).in_dims, [8, 8, 8]);
+        assert_eq!(plan.step(0).out_dims, [4, 4, 8]);
+        assert_eq!(plan.step(1).out_dims, [4, 4, 16]);
+        // Peak = the 8x8x8 input (512), larger than any output (256).
+        assert_eq!(plan.max_activation_elems(), 512);
+    }
+
+    #[test]
+    fn heterogeneous_placement_is_expressible() {
+        let p = params();
+        let plan = ExecutionPlan::with_placement(&p, |i, _| {
+            if i == 0 {
+                Backend::FusedHost(PipelineVersion::V3)
+            } else {
+                Backend::Reference
+            }
+        });
+        assert!(!plan.is_uniform());
+        assert_eq!(plan.step(0).backend, Backend::FusedHost(PipelineVersion::V3));
+        assert_eq!(plan.step(1).backend, Backend::Reference);
+        assert_eq!(plan.make_executors().len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not chain")]
+    fn unchained_blocks_are_rejected_at_plan_time() {
+        let p = make_model_params(Some(vec![
+            BlockConfig::new(8, 8, 8, 16, 8, 1, false),
+            BlockConfig::new(4, 4, 8, 16, 8, 1, false), // wrong: expects 8x8x8
+        ]));
+        let _ = ExecutionPlan::uniform(&p, Backend::Reference);
+    }
+}

@@ -314,7 +314,12 @@ mod tests {
             BranchOp::Bltu, BranchOp::Bgeu,
         ];
         match g.i32(0, 9) {
-            0 => Instr::Alu { op: *g.pick(&alu_ops), rd: arb_reg(g), rs1: arb_reg(g), rs2: arb_reg(g) },
+            0 => Instr::Alu {
+                op: *g.pick(&alu_ops),
+                rd: arb_reg(g),
+                rs1: arb_reg(g),
+                rs2: arb_reg(g),
+            },
             1 => {
                 let op = *g.pick(&imm_ops);
                 let imm = match op {
@@ -323,9 +328,24 @@ mod tests {
                 };
                 Instr::AluImm { op, rd: arb_reg(g), rs1: arb_reg(g), imm }
             }
-            2 => Instr::Load { op: *g.pick(&load_ops), rd: arb_reg(g), rs1: arb_reg(g), imm: g.i32(-2048, 2047) },
-            3 => Instr::Store { op: *g.pick(&store_ops), rs1: arb_reg(g), rs2: arb_reg(g), imm: g.i32(-2048, 2047) },
-            4 => Instr::Branch { op: *g.pick(&branch_ops), rs1: arb_reg(g), rs2: arb_reg(g), imm: g.i32(-2048, 2047) & !1 },
+            2 => Instr::Load {
+                op: *g.pick(&load_ops),
+                rd: arb_reg(g),
+                rs1: arb_reg(g),
+                imm: g.i32(-2048, 2047),
+            },
+            3 => Instr::Store {
+                op: *g.pick(&store_ops),
+                rs1: arb_reg(g),
+                rs2: arb_reg(g),
+                imm: g.i32(-2048, 2047),
+            },
+            4 => Instr::Branch {
+                op: *g.pick(&branch_ops),
+                rs1: arb_reg(g),
+                rs2: arb_reg(g),
+                imm: g.i32(-2048, 2047) & !1,
+            },
             5 => Instr::Lui { rd: arb_reg(g), imm: g.i32(i32::MIN / 4096, i32::MAX / 4096) << 12 },
             6 => Instr::Jal { rd: arb_reg(g), imm: g.i32(-(1 << 19), (1 << 19) - 1) & !1 },
             7 => Instr::Jalr { rd: arb_reg(g), rs1: arb_reg(g), imm: g.i32(-2048, 2047) },
@@ -336,7 +356,10 @@ mod tests {
                 rs1: arb_reg(g),
                 rs2: arb_reg(g),
             },
-            _ => Instr::Auipc { rd: arb_reg(g), imm: g.i32(i32::MIN / 4096, i32::MAX / 4096) << 12 },
+            _ => Instr::Auipc {
+                rd: arb_reg(g),
+                imm: g.i32(i32::MIN / 4096, i32::MAX / 4096) << 12,
+            },
         }
     }
 

@@ -26,6 +26,7 @@
 //! | [`baseline`] | Software kernels + CFU-Playground 1×1 SIMD comparator |
 //! | [`model`] | Quantized MobileNetV2-style blocks, weights, reference impl |
 //! | [`quant`] | Fixed-point requantization primitives (SRDHM, rounding) |
+//! | [`exec`] | Execution layer: backend ids, executors, whole-model plans, activation arena |
 //! | [`coordinator`] | Serving core: sharded engines, bounded admission, metrics, loadgen |
 //! | [`cost`] | FPGA/ASIC resource, power, and area models |
 //! | [`memtraffic`] | Memory-traffic analytics (paper Table VI) |
@@ -54,6 +55,7 @@ pub mod coordinator;
 pub mod cost;
 pub mod cpu;
 pub mod driver;
+pub mod exec;
 pub mod isa;
 pub mod memtraffic;
 pub mod model;

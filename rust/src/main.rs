@@ -26,17 +26,15 @@ use fused_dsc::runtime::{artifact_path, Runtime};
 use fused_dsc::tensor::TensorI8;
 use fused_dsc::util::stats::fmt_cycles;
 
+/// Resolve `--backend` through the one parser in [`fused_dsc::exec`]
+/// (canonical names and shorthands — `host-v1`/`host-v2` included).
+/// `--backend list` prints the catalog and exits.
 fn parse_backend(s: &str) -> Result<Backend> {
-    Ok(match s {
-        "reference" => Backend::Reference,
-        "v0" | "software" => Backend::SoftwareIss,
-        "cfu-playground" | "pg" => Backend::CfuPlaygroundIss,
-        "v1" => Backend::FusedIss(PipelineVersion::V1),
-        "v2" => Backend::FusedIss(PipelineVersion::V2),
-        "v3" | "fused" => Backend::FusedIss(PipelineVersion::V3),
-        "host-v3" => Backend::FusedHost(PipelineVersion::V3),
-        other => bail!("unknown backend '{other}'"),
-    })
+    if s == "list" || s == "help" {
+        print!("{}", Backend::list());
+        std::process::exit(0);
+    }
+    s.parse().map_err(anyhow::Error::msg)
 }
 
 fn model_input(engine: &Engine, salt: u64) -> TensorI8 {
@@ -215,22 +213,29 @@ fn cmd_golden(args: &Args) -> Result<()> {
         let mut unit = fused_dsc::cfu::CfuUnit::new(PipelineVersion::V3);
         let (sim, _) = unit.run_block_host(bp, &x);
         anyhow::ensure!(sim.data == golden, "layer {tag}: CFU sim != PJRT golden");
-        println!("layer {tag}: CFU simulation bit-exact vs PJRT golden model ({} outputs)", golden.len());
+        println!(
+            "layer {tag}: CFU simulation bit-exact vs PJRT golden model ({} outputs)",
+            golden.len()
+        );
     }
     Ok(())
 }
 
 fn usage() {
-    println!("fused-dsc {} — RISC-V TinyML fused-DSC accelerator reproduction", fused_dsc::version());
+    println!(
+        "fused-dsc {} — RISC-V TinyML fused-DSC accelerator reproduction",
+        fused_dsc::version()
+    );
     println!("usage: fused-dsc <command> [options]");
     println!("  report <table1..table7|fig14|all>          regenerate paper evaluation");
-    println!("  run    [--backend v0|pg|v1|v2|v3|reference] [--layer 3rd|5th|8th|15th]");
+    println!("  run    [--backend NAME|list] [--layer 3rd|5th|8th|15th]");
     println!("  serve  [--requests N] [--batch B] [--workers W] [--queue-depth D] [--backend host-v3]");
     println!("  serve loadgen [--mode closed|open] [--clients N] [--rate R] [--requests N]");
     println!("                [--batch B] [--workers W] [--queue-depth D] [--backend reference]");
     println!("                [--json PATH]                load-generate; writes BENCH_serve.json");
     println!("  golden [--layer TAG]                        CFU sim vs PJRT cross-check");
     println!("  version");
+    println!("backends: `--backend list` prints every name, shorthand, and description");
 }
 
 fn main() -> Result<()> {

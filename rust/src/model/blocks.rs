@@ -21,7 +21,15 @@ pub struct BlockConfig {
 }
 
 impl BlockConfig {
-    pub const fn new(h: u32, w: u32, cin: u32, m: u32, cout: u32, stride: u32, residual: bool) -> Self {
+    pub const fn new(
+        h: u32,
+        w: u32,
+        cin: u32,
+        m: u32,
+        cout: u32,
+        stride: u32,
+        residual: bool,
+    ) -> Self {
         Self { h, w, cin, m, cout, stride, residual }
     }
 

@@ -74,10 +74,27 @@ pub fn block_ref(x: &TensorI8, bp: &BlockParams) -> TensorI8 {
 
 /// Classifier head: rounding global average pool + int8 FC -> i32 logits.
 pub fn head_ref(x: &TensorI8, head: &HeadParams) -> Vec<i32> {
+    let mut pooled = Vec::new();
+    let mut logits = Vec::new();
+    head_ref_into(x, head, &mut pooled, &mut logits);
+    logits
+}
+
+/// [`head_ref`] writing into caller-owned buffers: `pooled` is the
+/// global-average-pool scratch, `logits` the output.  Both are cleared and
+/// refilled in place (capacity retained) — the allocation-free head of the
+/// arena-based inference path.
+pub fn head_ref_into(
+    x: &TensorI8,
+    head: &HeadParams,
+    pooled: &mut Vec<i32>,
+    logits: &mut Vec<i32>,
+) {
     let (h, w, c) = (x.dims[0], x.dims[1], x.dims[2]);
     let n = (h * w) as i64;
     let classes = head.fc_b.len();
-    let mut pooled = vec![0i32; c];
+    pooled.clear();
+    pooled.resize(c, 0);
     for (ch, p) in pooled.iter_mut().enumerate() {
         let mut s = 0i64;
         for yy in 0..h {
@@ -88,14 +105,14 @@ pub fn head_ref(x: &TensorI8, head: &HeadParams) -> Vec<i32> {
         // round-half-away-from-zero integer mean (mirrors ref.py)
         *p = (if s >= 0 { (s + n / 2) / n } else { -((-s + n / 2) / n) }) as i32;
     }
-    let mut logits = head.fc_b.clone();
+    logits.clear();
+    logits.extend_from_slice(&head.fc_b);
     for (ch, &p) in pooled.iter().enumerate() {
         let pc = p - head.zp_in;
         for (cl, l) in logits.iter_mut().enumerate().take(classes) {
             *l += pc * head.fc_w[ch * classes + cl] as i32;
         }
     }
-    logits
 }
 
 /// Whole backbone + head.
@@ -172,6 +189,12 @@ mod tests {
         let l2 = head_ref(&out, &hp);
         assert_eq!(l1, l2);
         assert_eq!(l1.len(), 4);
+        // The write-into variant refills stale caller buffers bit-exactly.
+        let mut pooled = vec![99i32; 3];
+        let mut logits = vec![-7i32; 9];
+        head_ref_into(&out, &hp, &mut pooled, &mut logits);
+        assert_eq!(logits, l1);
+        assert_eq!(pooled.len(), out.dims[2]);
         let _ = head;
     }
 }

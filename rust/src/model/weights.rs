@@ -117,8 +117,20 @@ pub fn make_block_params(idx: usize, cfg: BlockConfig, zp_in: i32) -> BlockParam
         pr_w: gen_i8(&format!("{p}.pr.w"), m * cout),
         pr_b: gen_bias(&format!("{p}.pr.b"), cout),
         ex_q: StageQuant { multiplier: ex_mult, shift: ex_shift, zp_in, zp_out: zp_f1, relu: true },
-        dw_q: StageQuant { multiplier: dw_mult, shift: dw_shift, zp_in: zp_f1, zp_out: zp_f2, relu: true },
-        pr_q: StageQuant { multiplier: pr_mult, shift: pr_shift, zp_in: zp_f2, zp_out, relu: false },
+        dw_q: StageQuant {
+            multiplier: dw_mult,
+            shift: dw_shift,
+            zp_in: zp_f1,
+            zp_out: zp_f2,
+            relu: true,
+        },
+        pr_q: StageQuant {
+            multiplier: pr_mult,
+            shift: pr_shift,
+            zp_in: zp_f2,
+            zp_out,
+            relu: false,
+        },
     }
 }
 
@@ -153,13 +165,25 @@ pub fn to_qmw_tensors(params: &ModelParams) -> Vec<(String, QmwTensor)> {
     for (i, bp) in params.blocks.iter().enumerate() {
         let p = format!("b{}", i + 1);
         let (cin, m, cout) = (bp.cfg.cin as usize, bp.cfg.m as usize, bp.cfg.cout as usize);
-        out.push((format!("{p}.ex.w"), QmwTensor::I8 { dims: vec![cin, m], data: bp.ex_w.clone() }));
+        out.push((
+            format!("{p}.ex.w"),
+            QmwTensor::I8 { dims: vec![cin, m], data: bp.ex_w.clone() },
+        ));
         out.push((format!("{p}.ex.b"), QmwTensor::I32 { dims: vec![m], data: bp.ex_b.clone() }));
-        out.push((format!("{p}.dw.w"), QmwTensor::I8 { dims: vec![3, 3, m], data: bp.dw_w.clone() }));
+        out.push((
+            format!("{p}.dw.w"),
+            QmwTensor::I8 { dims: vec![3, 3, m], data: bp.dw_w.clone() },
+        ));
         out.push((format!("{p}.dw.b"), QmwTensor::I32 { dims: vec![m], data: bp.dw_b.clone() }));
-        out.push((format!("{p}.pr.w"), QmwTensor::I8 { dims: vec![m, cout], data: bp.pr_w.clone() }));
+        out.push((
+            format!("{p}.pr.w"),
+            QmwTensor::I8 { dims: vec![m, cout], data: bp.pr_w.clone() },
+        ));
         out.push((format!("{p}.pr.b"), QmwTensor::I32 { dims: vec![cout], data: bp.pr_b.clone() }));
-        out.push((format!("{p}.qp"), QmwTensor::I32 { dims: vec![12], data: bp.qp_words().to_vec() }));
+        out.push((
+            format!("{p}.qp"),
+            QmwTensor::I32 { dims: vec![12], data: bp.qp_words().to_vec() },
+        ));
     }
     out.push((
         "head.fc.w".into(),
@@ -216,9 +240,27 @@ pub fn from_qmw(qmw: &QmwFile) -> Result<ModelParams> {
             dw_b: get_i32("dw.b")?,
             pr_w: get_i8("pr.w")?,
             pr_b: get_i32("pr.b")?,
-            ex_q: StageQuant { multiplier: qp[0], shift: qp[1] as u32, zp_in: qp[6], zp_out: qp[7], relu: qp[10] != 0 },
-            dw_q: StageQuant { multiplier: qp[2], shift: qp[3] as u32, zp_in: qp[7], zp_out: qp[8], relu: qp[10] != 0 },
-            pr_q: StageQuant { multiplier: qp[4], shift: qp[5] as u32, zp_in: qp[8], zp_out: qp[9], relu: qp[11] != 0 },
+            ex_q: StageQuant {
+                multiplier: qp[0],
+                shift: qp[1] as u32,
+                zp_in: qp[6],
+                zp_out: qp[7],
+                relu: qp[10] != 0,
+            },
+            dw_q: StageQuant {
+                multiplier: qp[2],
+                shift: qp[3] as u32,
+                zp_in: qp[7],
+                zp_out: qp[8],
+                relu: qp[10] != 0,
+            },
+            pr_q: StageQuant {
+                multiplier: qp[4],
+                shift: qp[5] as u32,
+                zp_in: qp[8],
+                zp_out: qp[9],
+                relu: qp[11] != 0,
+            },
         });
     }
     let head = HeadParams {

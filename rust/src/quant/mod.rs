@@ -223,9 +223,11 @@ mod tests {
         assert_eq!(lo.requantize(1000), 127); // 500 - 128 = 372 clamps
         assert_eq!(lo.requantize(-1000), -128);
         // relu floor with extreme zero points: floor = max(zp_out, QMIN).
-        let relu_hi = StageQuant { multiplier: 1 << 30, shift: 0, zp_in: 0, zp_out: 127, relu: true };
+        let relu_hi =
+            StageQuant { multiplier: 1 << 30, shift: 0, zp_in: 0, zp_out: 127, relu: true };
         assert_eq!(relu_hi.requantize(-100_000), 127, "relu floor saturates at zp_out");
-        let relu_lo = StageQuant { multiplier: 1 << 30, shift: 0, zp_in: 0, zp_out: -128, relu: true };
+        let relu_lo =
+            StageQuant { multiplier: 1 << 30, shift: 0, zp_in: 0, zp_out: -128, relu: true };
         assert_eq!(relu_lo.requantize(-100_000), -128);
     }
 
@@ -236,7 +238,8 @@ mod tests {
         let sq = StageQuant { multiplier: i32::MAX, shift: 0, zp_in: 0, zp_out: 0, relu: false };
         assert_eq!(sq.requantize(i32::MAX), 127);
         assert_eq!(sq.requantize(i32::MIN), -128);
-        let shifted = StageQuant { multiplier: 1 << 30, shift: 20, zp_in: 0, zp_out: 0, relu: false };
+        let shifted =
+            StageQuant { multiplier: 1 << 30, shift: 20, zp_in: 0, zp_out: 0, relu: false };
         assert_eq!(shifted.requantize(1), 0); // tiny acc underflows to 0
         assert_eq!(shifted.requantize(-1), 0);
     }

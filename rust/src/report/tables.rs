@@ -4,6 +4,7 @@
 
 use crate::cfu::PipelineVersion;
 use crate::cost::asic::{asic_summary, AsicNode, DEFAULT_ACTIVITY};
+use crate::exec::Backend;
 use crate::cost::fpga::{
     cfu_breakdown, cfu_resources, system_resources, ArchParams, ARTIX7_XC7A100T, BASE_SOC,
     CFU_PLAYGROUND_REF,
@@ -107,7 +108,14 @@ pub fn print_fig14(d: &MeasuredData) {
 pub fn print_table3(d: &MeasuredData) {
     println!("== Table III: performance & resources vs CFU-Playground ==");
     println!("  (A) cycles @100 MHz");
-    println!("  {:<6} {:>12} {:>14} {:>12}", "layer", "baseline", "cfu-playground", "fused v3");
+    // Column tags come from the one backend-name source of truth (exec).
+    println!(
+        "  {:<6} {:>12} {:>14} {:>12}",
+        "layer",
+        Backend::SoftwareIss.name(),
+        Backend::CfuPlaygroundIss.name(),
+        Backend::FusedIss(PipelineVersion::V3).name()
+    );
     for (m, (tag, p_v0, p_pg, p_v3)) in d.layers.iter().zip(PAPER_TABLE3A) {
         println!(
             "  {:<6} {:>12} {:>14} {:>12}   (paper: {} / {} / {})",
@@ -128,7 +136,10 @@ pub fn print_table3(d: &MeasuredData) {
     );
     println!(
         "  cfu-pg [23]: {}/{}/{}/{} (published)",
-        CFU_PLAYGROUND_REF.lut, CFU_PLAYGROUND_REF.ff, CFU_PLAYGROUND_REF.bram36.0, CFU_PLAYGROUND_REF.dsp
+        CFU_PLAYGROUND_REF.lut,
+        CFU_PLAYGROUND_REF.ff,
+        CFU_PLAYGROUND_REF.bram36.0,
+        CFU_PLAYGROUND_REF.dsp
     );
     println!(
         "  fused v3   : {}/{}/{:.0}/{} (paper 20922/17752/97/178)",

@@ -4,7 +4,10 @@
 pub mod io;
 
 /// Row-major dense tensor over `T` (i8 activations/weights, i32 biases).
-#[derive(Debug, Clone, PartialEq, Eq)]
+///
+/// `Default` is the empty (rank-0, zero-element) tensor — the natural seed
+/// for [`resize_to`](Self::resize_to)-style buffer reuse.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct Tensor<T> {
     pub dims: Vec<usize>,
     pub data: Vec<T>,
@@ -19,6 +22,17 @@ impl<T: Copy + Default> Tensor<T> {
     pub fn from_vec(dims: &[usize], data: Vec<T>) -> Self {
         assert_eq!(dims.iter().product::<usize>(), data.len(), "shape/data mismatch");
         Self { dims: dims.to_vec(), data }
+    }
+
+    /// Re-shape in place, reusing the existing allocation whenever capacity
+    /// suffices (the activation arena's capacity-retaining primitive).
+    /// Newly grown elements are `T::default()`; the caller is expected to
+    /// overwrite every element it reads.
+    pub fn resize_to(&mut self, dims: &[usize]) {
+        let n: usize = dims.iter().product();
+        self.dims.clear();
+        self.dims.extend_from_slice(dims);
+        self.data.resize(n, T::default());
     }
 
     pub fn len(&self) -> usize {
@@ -87,6 +101,21 @@ mod tests {
     #[should_panic(expected = "shape/data mismatch")]
     fn from_vec_rejects_bad_shape() {
         Tensor::from_vec(&[2, 3], vec![1i32]);
+    }
+
+    #[test]
+    fn resize_to_retains_capacity() {
+        let mut t = Tensor::<i8>::zeros(&[4, 4, 2]);
+        let cap = t.data.capacity();
+        t.resize_to(&[2, 2, 2]);
+        assert_eq!(t.dims, vec![2, 2, 2]);
+        assert_eq!(t.len(), 8);
+        assert_eq!(t.data.capacity(), cap, "shrink must keep the allocation");
+        t.resize_to(&[4, 4, 2]);
+        assert_eq!(t.len(), 32);
+        assert_eq!(t.data.capacity(), cap, "regrow within capacity must not reallocate");
+        let empty = Tensor::<i8>::default();
+        assert!(empty.is_empty());
     }
 
     #[test]

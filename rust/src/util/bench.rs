@@ -178,8 +178,9 @@ impl Bencher {
                 "name", "mean ms", "std ms", "p50 ms", "Munits/s"
             );
             for r in &self.results {
-                let thr =
-                    r.units_per_sec().map_or_else(|| "-".to_string(), |u| format!("{:.2}", u / 1e6));
+                let thr = r
+                    .units_per_sec()
+                    .map_or_else(|| "-".to_string(), |u| format!("{:.2}", u / 1e6));
                 println!(
                     "{:<46} {:>10.3} {:>10.3} {:>10.3} {:>12}",
                     r.name,
@@ -334,7 +335,8 @@ mod tests {
 
     #[test]
     fn finish_with_no_results_still_writes_json() {
-        let dir = std::env::temp_dir().join(format!("fused_dsc_bench_empty_{}", std::process::id()));
+        let dir =
+            std::env::temp_dir().join(format!("fused_dsc_bench_empty_{}", std::process::id()));
         let mut b = quick("empty", Some("matches-nothing"));
         b.json_out = Some(dir.clone());
         b.bench("abc", || 0);

@@ -11,10 +11,14 @@
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
+use std::sync::Arc;
 
 use fused_dsc::cfu::{opcodes, CfuUnit, PipelineVersion, CFG};
-use fused_dsc::coordinator::Metrics;
+use fused_dsc::coordinator::{Backend, Engine, EngineShard, InferenceOutput, Metrics};
 use fused_dsc::cpu::CfuPort;
+use fused_dsc::model::blocks::BlockConfig;
+use fused_dsc::model::weights::make_model_params;
+use fused_dsc::tensor::TensorI8;
 
 thread_local! {
     static ALLOC_EVENTS: Cell<u64> = const { Cell::new(0) };
@@ -121,6 +125,52 @@ fn steady_state_fused_pixel_loop_allocates_nothing() {
          buffer regressed)",
         after - before
     );
+}
+
+#[test]
+fn steady_state_whole_model_warm_shard_inference_allocates_nothing() {
+    // The PR-4 tentpole guarantee: not just the per-pixel loop but *full
+    // model* inference — input load, every block through its warm executor
+    // and the ping-pong arena, classifier head, argmax — performs zero
+    // heap allocations on the warm shard path.  The first request sizes
+    // the arena, each block's CfuUnit buffers, and the output's logits
+    // vector; every request after that reuses all of it.
+    let params = make_model_params(Some(vec![
+        BlockConfig::new(8, 8, 8, 16, 8, 2, false),
+        BlockConfig::new(4, 4, 8, 16, 16, 1, false),
+        BlockConfig::new(4, 4, 16, 32, 16, 1, true),
+    ]));
+    let engine = Arc::new(Engine::new(params, Backend::FusedHost(PipelineVersion::V3)));
+    let mut shard = EngineShard::new(Arc::clone(&engine));
+    // Inputs are generated before the counting window (payload construction
+    // is the client's allocation, not the shard's).
+    let inputs: Vec<TensorI8> =
+        (0..5).map(|i| engine.synthetic_input(&format!("alloc.m{i}"))).collect();
+    let mut out = InferenceOutput::default();
+
+    // Warm-up request.
+    shard.infer_into(&inputs[0], &mut out).unwrap();
+    let warm_logits = out.logits.clone();
+
+    let before = alloc_events_now();
+    for x in &inputs[1..] {
+        shard.infer_into(x, &mut out).unwrap();
+    }
+    let after = alloc_events_now();
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state whole-model warm-shard inference performed {} heap \
+         allocations (expected zero after warm-up — the ExecutionPlan / \
+         ActivationArena / warm-executor path regressed)",
+        after - before
+    );
+    // The inferences actually computed (distinct inputs, live outputs).
+    assert!(!out.logits.is_empty());
+    assert_ne!(out.logits, warm_logits, "distinct inputs should move the logits");
+    let want = engine.infer(&inputs[4]).unwrap();
+    assert_eq!(out.logits, want.logits, "warm path must stay bit-identical");
+    assert_eq!(out.sim_cycles, want.sim_cycles);
 }
 
 #[test]

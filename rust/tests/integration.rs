@@ -104,7 +104,13 @@ fn coordinator_end_to_end_consistency() {
     let engine = Arc::new(Engine::new(params, Backend::FusedHost(PipelineVersion::V2)));
     let coord = Coordinator::start(Arc::clone(&engine), ServeConfig::default());
     let inputs: Vec<TensorI8> = (0..24)
-        .map(|i| block_input(&engine.params.blocks[0].cfg, engine.params.blocks[0].zp_in(), &format!("int.c{i}")))
+        .map(|i| {
+            block_input(
+                &engine.params.blocks[0].cfg,
+                engine.params.blocks[0].zp_in(),
+                &format!("int.c{i}"),
+            )
+        })
         .collect();
     let wants: Vec<Vec<i32>> = inputs.iter().map(|x| engine.infer(x).unwrap().logits).collect();
     let tickets: Vec<_> = inputs.iter().map(|x| coord.submit(x.clone()).unwrap()).collect();

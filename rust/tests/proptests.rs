@@ -4,7 +4,7 @@
 
 use fused_dsc::baseline::run_block_v0;
 use fused_dsc::cfu::{CfuUnit, PipelineVersion, StageTimes, TimingParams};
-use fused_dsc::coordinator::{Backend, Coordinator, Engine, ServeConfig};
+use fused_dsc::coordinator::{Backend, Coordinator, Engine, EngineShard, ServeConfig};
 use fused_dsc::driver::run_block_fused;
 use fused_dsc::model::blocks::BlockConfig;
 use fused_dsc::model::refimpl::block_ref;
@@ -114,6 +114,68 @@ fn cfu_reprogramming_is_clean() {
     });
 }
 
+/// The arena-based execution spine is bit-identical to transient
+/// inference: warm-shard [`EngineShard::infer`] and
+/// [`EngineShard::infer_batch`] reproduce [`Engine::infer`]'s logits AND
+/// `sim_cycles` exactly, across randomized chained block geometries and
+/// every backend (the fast host-path backends run on every case; one
+/// ISS-simulated backend is sampled per case to keep wall time sane while
+/// covering all five over the run).
+#[test]
+fn warm_shard_and_batch_match_transient_inference() {
+    check("arena infer == transient infer", |g| {
+        // A chained 1–2 block model with tiny geometry (the ISS backends
+        // execute real firmware per block).
+        let nblocks = g.usize(1, 2);
+        let (mut h, mut w, mut cin) = (g.i32(3, 5) as u32, g.i32(3, 5) as u32, 8u32);
+        let mut cfgs = Vec::new();
+        for _ in 0..nblocks {
+            let m = 8 * g.i32(1, 2) as u32;
+            let cout = 8u32;
+            let stride = *g.pick(&[1u32, 2]);
+            let residual = stride == 1 && cin == cout && g.bool();
+            let cfg = BlockConfig::new(h, w, cin, m, cout, stride, residual);
+            (h, w, cin) = (cfg.h_out(), cfg.w_out(), cout);
+            cfgs.push(cfg);
+        }
+        let params = fused_dsc::model::weights::make_model_params(Some(cfgs));
+        let iss = *g.pick(&[
+            Backend::SoftwareIss,
+            Backend::CfuPlaygroundIss,
+            Backend::FusedIss(PipelineVersion::V1),
+            Backend::FusedIss(PipelineVersion::V2),
+            Backend::FusedIss(PipelineVersion::V3),
+        ]);
+        for backend in [
+            Backend::Reference,
+            Backend::FusedHost(PipelineVersion::V1),
+            Backend::FusedHost(PipelineVersion::V2),
+            Backend::FusedHost(PipelineVersion::V3),
+            iss,
+        ] {
+            let engine = Arc::new(Engine::new(params.clone(), backend));
+            let xs: Vec<TensorI8> =
+                (0..2).map(|i| engine.synthetic_input(&format!("pt.ar{i}"))).collect();
+            let mut shard = EngineShard::new(Arc::clone(&engine));
+            let batch = shard.infer_batch(&xs).map_err(|e| e.to_string())?;
+            for (i, x) in xs.iter().enumerate() {
+                let want = engine.infer(x).map_err(|e| e.to_string())?;
+                let got = shard.infer(x).map_err(|e| e.to_string())?;
+                prop_assert!(
+                    got.logits == want.logits && got.sim_cycles == want.sim_cycles,
+                    "warm shard diverged on {backend} input {i}"
+                );
+                prop_assert!(
+                    batch[i].logits == want.logits && batch[i].sim_cycles == want.sim_cycles,
+                    "infer_batch diverged on {backend} input {i}"
+                );
+                prop_assert_eq!(got.class, want.class);
+            }
+        }
+        Ok(())
+    });
+}
+
 /// Coordinator scheduling invariants under random load: every *admitted*
 /// request is answered exactly once and bit-exact, every submission gets
 /// exactly one of {ticket, rejection}, accounting balances (no loss, no
@@ -146,7 +208,11 @@ fn coordinator_scheduling_invariants() {
             .map(|i| {
                 TensorI8::from_vec(
                     &[c.h as usize, c.w as usize, c.cin as usize],
-                    gen_input(&format!("pt.co{i}"), (c.h * c.w * c.cin) as usize, engine.params.blocks[0].zp_in()),
+                    gen_input(
+                        &format!("pt.co{i}"),
+                        (c.h * c.w * c.cin) as usize,
+                        engine.params.blocks[0].zp_in(),
+                    ),
                 )
             })
             .collect();

@@ -35,6 +35,7 @@ fn main() {
                 batch_timeout: Duration::from_micros(500),
                 workers,
                 queue_depth: 128,
+                plan: None,
             };
             let coord = Coordinator::start(Arc::clone(&engine), cfg);
             let tickets: Vec<_> = (0..64)

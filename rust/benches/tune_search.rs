@@ -1,0 +1,40 @@
+//! Bench: the plan autotuner on the full backbone — profiling every
+//! `(block, backend)` pair over the default allowlist, plus the
+//! search-only phase on a prebuilt cost table (what a plan-cache hit
+//! skips versus what it still pays).
+
+use fused_dsc::model::weights::make_model_params;
+use fused_dsc::tune::{self, CostTable, Objective};
+use fused_dsc::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::from_args();
+    let params = make_model_params(None);
+
+    b.bench("tune/profile+search (backbone, 4 backends)", || {
+        let result = tune::tune(&params, &tune::DEFAULT_ALLOWLIST).unwrap();
+        (result.table.len() * result.table.backends.len()) as u64
+    });
+
+    let table = CostTable::profile(&params, &tune::DEFAULT_ALLOWLIST).unwrap();
+    b.bench("tune/search-only (4 objectives + frontier)", || {
+        let mut cells = 0u64;
+        for objective in Objective::ALL {
+            cells += tune::optimize(&table, objective).unwrap().placement.len() as u64;
+        }
+        cells + tune::pareto_frontier(&table).unwrap().len() as u64
+    });
+
+    let result = tune::tune(&params, &tune::DEFAULT_ALLOWLIST).unwrap();
+    b.bench("tune/serialize+parse round trip", || {
+        let text = result.to_json().render();
+        let back = fused_dsc::tune::TuneResult::from_json(
+            &fused_dsc::util::json::Json::parse(&text).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back.table.len(), result.table.len());
+        text.len() as u64
+    });
+
+    b.finish();
+}

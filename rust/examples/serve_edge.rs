@@ -26,6 +26,7 @@ fn main() -> anyhow::Result<()> {
         // Small on purpose: a camera that falls behind should drop frames
         // (shed) rather than serve stale ones seconds late.
         queue_depth: 32,
+        plan: None,
     };
     println!(
         "coordinator: max_batch={} workers={} queue_depth={} backend={}",

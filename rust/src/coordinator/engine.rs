@@ -17,7 +17,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use crate::exec::{executor_for, ActivationArena, BlockExecutor, ExecutionPlan};
+use crate::exec::{executor_for, ActivationArena, BlockExecutor, ExecutionPlan, PlanError};
 use crate::model::refimpl;
 use crate::model::weights::ModelParams;
 use crate::runtime::HloExecutable;
@@ -68,10 +68,29 @@ impl Engine {
     /// # Panics
     ///
     /// If the plan's step count does not match the model's block count.
+    /// Code handling *computed* plans (the tuner, config loaders) uses
+    /// [`Engine::try_with_plan`] instead.
     pub fn with_plan(params: ModelParams, plan: ExecutionPlan) -> Self {
-        assert_eq!(plan.len(), params.blocks.len(), "plan/model block count mismatch");
+        match Self::try_with_plan(params, plan) {
+            Ok(engine) => engine,
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    /// Fallible form of [`Engine::with_plan`]: an empty or mis-sized plan
+    /// resolves as a typed [`PlanError`] instead of a panic.
+    pub fn try_with_plan(params: ModelParams, plan: ExecutionPlan) -> Result<Self, PlanError> {
+        if plan.is_empty() {
+            return Err(PlanError::EmptyModel);
+        }
+        if plan.len() != params.blocks.len() {
+            return Err(PlanError::StepCountMismatch {
+                plan: plan.len(),
+                model: params.blocks.len(),
+            });
+        }
         let backend = plan.step(0).backend;
-        Self { params, backend, plan }
+        Ok(Self { params, backend, plan })
     }
 
     /// Check that `x` is a valid model input (first-block geometry).
@@ -431,6 +450,16 @@ mod tests {
         let shard_got = shard.infer(&x).unwrap();
         assert_eq!(shard_got.logits, want.logits);
         assert_eq!(shard_got.sim_cycles, got.sim_cycles);
+    }
+
+    #[test]
+    fn mis_sized_plan_is_a_typed_error_on_the_fallible_path() {
+        let p = mini_params();
+        let one_block = make_model_params(Some(vec![BlockConfig::new(8, 8, 8, 16, 8, 2, false)]));
+        let short_plan = ExecutionPlan::uniform(&one_block, Backend::Reference);
+        let err = Engine::try_with_plan(p, short_plan).unwrap_err();
+        assert_eq!(err, crate::exec::PlanError::StepCountMismatch { plan: 1, model: 2 });
+        assert!(err.to_string().contains("1 steps"), "{err}");
     }
 
     #[test]

@@ -31,6 +31,7 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::exec::ExecutionPlan;
 use crate::tensor::TensorI8;
 use crate::util::pool::ShardPool;
 
@@ -52,6 +53,13 @@ pub struct ServeConfig {
     /// `queue_depth` admitted + up to `max_batch` held by the batcher +
     /// `workers * max_batch` in shard queues + one executing per worker.
     pub queue_depth: usize,
+    /// Optional per-block placement override: when set,
+    /// [`Coordinator::start`] serves from an engine rebuilt around this
+    /// (possibly heterogeneous) [`ExecutionPlan`] instead of the engine's
+    /// own.  This is the seam the plan autotuner's QoS lanes use
+    /// ([`crate::tune::QosRouter`]): one shared parameter set, one
+    /// coordinator per tuned placement.
+    pub plan: Option<ExecutionPlan>,
 }
 
 impl Default for ServeConfig {
@@ -61,6 +69,7 @@ impl Default for ServeConfig {
             batch_timeout: Duration::from_millis(2),
             workers: 4,
             queue_depth: 128,
+            plan: None,
         }
     }
 }
@@ -226,8 +235,22 @@ pub struct Coordinator {
 impl Coordinator {
     /// Spawn the batcher and `cfg.workers` engine shards around a shared
     /// engine.
-    pub fn start(engine: Arc<Engine>, cfg: ServeConfig) -> Self {
+    ///
+    /// When `cfg.plan` is set, the workers serve from an engine rebuilt
+    /// around that placement (same parameters, different per-block
+    /// backends) — logits are bit-identical to the original engine, only
+    /// where each block runs changes.
+    ///
+    /// # Panics
+    ///
+    /// On a degenerate config (zero batch/workers/queue depth) or a
+    /// `cfg.plan` whose step count does not match the engine's model.
+    pub fn start(engine: Arc<Engine>, mut cfg: ServeConfig) -> Self {
         assert!(cfg.max_batch > 0 && cfg.workers > 0 && cfg.queue_depth > 0);
+        let engine = match cfg.plan.take() {
+            Some(plan) => Arc::new(Engine::with_plan(engine.params.clone(), plan)),
+            None => engine,
+        };
         let (tx, rx) = mpsc::sync_channel::<Request>(cfg.queue_depth);
         let metrics = Arc::new(Metrics::default());
         let m2 = Arc::clone(&metrics);
@@ -480,6 +503,7 @@ mod tests {
             batch_timeout: Duration::ZERO,
             workers: 1,
             queue_depth: 1,
+            plan: None,
         };
         let coord = Coordinator::start(Arc::clone(&engine), cfg);
         let attempts = 64;
@@ -507,6 +531,31 @@ mod tests {
         assert_eq!(snap.rejected, rejected);
         assert_eq!(snap.completed, admitted);
         assert_eq!(snap.submitted + snap.rejected, attempts);
+    }
+
+    #[test]
+    fn plan_override_serves_bit_identically() {
+        // A heterogeneous ServeConfig.plan (block 0 on the fused host CFU,
+        // block 1 on the reference path) must serve the exact logits of
+        // the engine's own uniform plan — only placement changes.
+        use crate::cfu::PipelineVersion;
+        use crate::exec::ExecutionPlan;
+        let engine = mini_engine();
+        let x = input(&engine, 3);
+        let want = engine.infer(&x).unwrap();
+        let plan = ExecutionPlan::with_placement(&engine.params, |i, _| {
+            if i == 0 {
+                Backend::FusedHost(PipelineVersion::V3)
+            } else {
+                Backend::Reference
+            }
+        });
+        let cfg = ServeConfig { plan: Some(plan), ..Default::default() };
+        let coord = Coordinator::start(Arc::clone(&engine), cfg);
+        let got = coord.submit(x).unwrap().wait().into_output().unwrap();
+        assert_eq!(got.logits, want.logits);
+        assert!(got.sim_cycles > 0, "the fused block contributes cycles");
+        coord.shutdown();
     }
 
     #[test]

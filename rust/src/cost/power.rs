@@ -11,7 +11,7 @@
 
 use crate::cfu::PipelineVersion;
 
-use super::fpga::{cfu_resources, ArchParams};
+use super::fpga::{cfu_resources, ArchParams, FpgaResources};
 
 /// Per-resource dynamic power at 100 MHz, mW per unit at activity 1.0
 /// (calibrated against Table II; same order as Xilinx XPE coefficients).
@@ -59,19 +59,27 @@ pub fn base_power_w() -> f64 {
     k::STATIC_W + k::BASE_DYN_W
 }
 
-/// Full-system power for a given accelerator version at 100 MHz.
-pub fn fpga_power_w(p: &ArchParams, version: PipelineVersion) -> PowerBreakdown {
-    let r = cfu_resources(p);
-    let a = activity(version);
-    let cfu_dyn_mw = a
+/// Dynamic power (W) of an arbitrary resource inventory toggling at
+/// activity `activity` — the per-resource XPE-style coefficients behind
+/// [`fpga_power_w`], exposed so other accelerators (e.g. the
+/// CFU-Playground comparator in the tuner's energy model,
+/// `tune::cost`) are priced with the same constants.
+pub fn resources_dyn_w(r: &FpgaResources, activity: f64) -> f64 {
+    activity
         * (r.dsp as f64 * k::MW_PER_DSP
             + r.lut as f64 / 1000.0 * k::MW_PER_KLUT
             + r.ff as f64 / 1000.0 * k::MW_PER_KFF
-            + r.bram36.0 * k::MW_PER_BRAM);
+            + r.bram36.0 * k::MW_PER_BRAM)
+        / 1000.0
+}
+
+/// Full-system power for a given accelerator version at 100 MHz.
+pub fn fpga_power_w(p: &ArchParams, version: PipelineVersion) -> PowerBreakdown {
+    let r = cfu_resources(p);
     PowerBreakdown {
         static_w: k::STATIC_W,
         base_dynamic_w: k::BASE_DYN_W,
-        cfu_dynamic_w: cfu_dyn_mw / 1000.0,
+        cfu_dynamic_w: resources_dyn_w(&r, activity(version)),
     }
 }
 
@@ -110,6 +118,20 @@ mod tests {
         let p3 = fpga_power_w(&p, PipelineVersion::V3).total_w();
         assert!(p3 < p1 && p3 < p2, "v3 {p3} vs v1 {p1} / v2 {p2}");
         assert!(p2 > p1, "paper: v2 slightly above v1");
+    }
+
+    #[test]
+    fn resource_inventory_pricing_is_consistent() {
+        use super::super::fpga::CFU_PLAYGROUND_REF;
+        // The comparator's small datapath prices well below the fused CFU
+        // under the same coefficients, and scales linearly with activity.
+        let half = resources_dyn_w(&CFU_PLAYGROUND_REF, 0.5);
+        assert!((0.05..0.3).contains(&half), "{half}");
+        let full = resources_dyn_w(&CFU_PLAYGROUND_REF, 1.0);
+        assert!((full - 2.0 * half).abs() < 1e-12);
+        let p = ArchParams::for_backbone();
+        let fused = fpga_power_w(&p, PipelineVersion::V3).cfu_dynamic_w;
+        assert!(fused > resources_dyn_w(&CFU_PLAYGROUND_REF, activity(PipelineVersion::V3)));
     }
 
     #[test]

@@ -29,4 +29,4 @@ pub mod plan;
 pub use arena::ActivationArena;
 pub use backend::Backend;
 pub use executor::{executor_for, BlockExecutor};
-pub use plan::{ExecutionPlan, PlanStep};
+pub use plan::{ExecutionPlan, PlanError, PlanStep};

@@ -8,10 +8,57 @@
 //! [`ExecutionPlan::with_placement`]; the common case is
 //! [`ExecutionPlan::uniform`].
 
+use std::fmt;
+
 use crate::model::blocks::BlockConfig;
 use crate::model::weights::ModelParams;
 
 use super::{executor_for, Backend, BlockExecutor};
+
+/// Why a plan could not be built over a model — the typed form of what
+/// used to be assertion panics, so planners (the `tune` subsystem, config
+/// loaders) can surface degenerate geometries as recoverable errors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanError {
+    /// The model has no blocks; plans require at least one step.
+    EmptyModel,
+    /// Block `block`'s input geometry does not equal block `block - 1`'s
+    /// output geometry.
+    Unchained {
+        /// Index of the block whose input failed to chain.
+        block: usize,
+        /// The previous block's output dims (what the input had to be).
+        expected: [usize; 3],
+        /// The offending block's actual input dims.
+        got: [usize; 3],
+    },
+    /// A placement table's length does not match the model's block count.
+    StepCountMismatch {
+        /// Steps in the plan / placement.
+        plan: usize,
+        /// Blocks in the model.
+        model: usize,
+    },
+}
+
+impl fmt::Display for PlanError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PlanError::EmptyModel => write!(f, "plan over an empty model"),
+            PlanError::Unchained { block, expected, got } => write!(
+                f,
+                "block {block} input geometry {got:?} does not chain from block {} \
+                 (expected {expected:?})",
+                block - 1
+            ),
+            PlanError::StepCountMismatch { plan, model } => {
+                write!(f, "plan has {plan} steps but the model has {model} blocks")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PlanError {}
 
 /// One block's slot in the plan: where it runs and what it consumes and
 /// produces ([H, W, C] geometry).
@@ -46,18 +93,41 @@ impl ExecutionPlan {
         Self::with_placement(params, |_, _| backend)
     }
 
+    /// Fallible form of [`ExecutionPlan::uniform`].
+    pub fn try_uniform(params: &ModelParams, backend: Backend) -> Result<Self, PlanError> {
+        Self::try_with_placement(params, |_, _| backend)
+    }
+
     /// Plan with a per-block placement decided by `place(idx, cfg)`.
     ///
     /// # Panics
     ///
-    /// If the model's blocks do not chain (block `i+1`'s input geometry
-    /// must equal block `i`'s output geometry) — a malformed `ModelParams`
-    /// is a programming error, caught here once instead of mid-inference.
+    /// If the model is empty or its blocks do not chain (block `i+1`'s
+    /// input geometry must equal block `i`'s output geometry) — a
+    /// malformed hard-coded `ModelParams` is a programming error.  Code
+    /// handling *computed* models (the tuner, config loaders) uses
+    /// [`ExecutionPlan::try_with_placement`] instead.
     pub fn with_placement(
         params: &ModelParams,
         place: impl Fn(usize, &BlockConfig) -> Backend,
     ) -> Self {
-        assert!(!params.blocks.is_empty(), "plan over an empty model");
+        match Self::try_with_placement(params, place) {
+            Ok(plan) => plan,
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    /// Plan with a per-block placement decided by `place(idx, cfg)`,
+    /// reporting degenerate geometry (an empty model, blocks that do not
+    /// chain) as a typed [`PlanError`] instead of panicking.  Single-block
+    /// models are valid plans.
+    pub fn try_with_placement(
+        params: &ModelParams,
+        place: impl Fn(usize, &BlockConfig) -> Backend,
+    ) -> Result<Self, PlanError> {
+        if params.blocks.is_empty() {
+            return Err(PlanError::EmptyModel);
+        }
         let mut steps = Vec::with_capacity(params.blocks.len());
         let mut max_activation_elems = 0usize;
         let mut prev_out: Option<[usize; 3]> = None;
@@ -65,11 +135,9 @@ impl ExecutionPlan {
             let c = bp.cfg;
             let in_dims = [c.h as usize, c.w as usize, c.cin as usize];
             if let Some(prev) = prev_out {
-                assert_eq!(
-                    prev, in_dims,
-                    "block {i} input geometry does not chain from block {}",
-                    i - 1
-                );
+                if prev != in_dims {
+                    return Err(PlanError::Unchained { block: i, expected: prev, got: in_dims });
+                }
             }
             let out_dims = [c.h_out() as usize, c.w_out() as usize, c.cout as usize];
             let step = PlanStep { backend: place(i, &c), in_dims, out_dims };
@@ -79,7 +147,7 @@ impl ExecutionPlan {
             prev_out = Some(out_dims);
             steps.push(step);
         }
-        Self { steps, max_activation_elems }
+        Ok(Self { steps, max_activation_elems })
     }
 
     /// Per-block steps in execution order.
@@ -171,5 +239,37 @@ mod tests {
             BlockConfig::new(4, 4, 8, 16, 8, 1, false), // wrong: expects 8x8x8
         ]));
         let _ = ExecutionPlan::uniform(&p, Backend::Reference);
+    }
+
+    #[test]
+    fn unchained_blocks_are_a_typed_error_on_the_fallible_path() {
+        let p = make_model_params(Some(vec![
+            BlockConfig::new(8, 8, 8, 16, 8, 1, false),
+            BlockConfig::new(4, 4, 8, 16, 8, 1, false), // wrong: expects 8x8x8
+        ]));
+        let err = ExecutionPlan::try_uniform(&p, Backend::Reference).unwrap_err();
+        assert_eq!(err, PlanError::Unchained { block: 1, expected: [8, 8, 8], got: [4, 4, 8] });
+        assert!(err.to_string().contains("does not chain"), "{err}");
+    }
+
+    #[test]
+    fn empty_model_is_a_typed_error_not_a_panic() {
+        // An empty `ModelParams` cannot come out of `make_model_params`,
+        // but computed model descriptions can degenerate; the fallible
+        // constructor reports it instead of asserting.
+        let donor = make_model_params(Some(vec![BlockConfig::new(4, 4, 8, 16, 8, 1, false)]));
+        let empty = ModelParams { blocks: Vec::new(), head: donor.head };
+        let err = ExecutionPlan::try_uniform(&empty, Backend::Reference).unwrap_err();
+        assert_eq!(err, PlanError::EmptyModel);
+        assert_eq!(err.to_string(), "plan over an empty model");
+    }
+
+    #[test]
+    fn single_block_models_plan_fine() {
+        let p = make_model_params(Some(vec![BlockConfig::new(6, 5, 8, 16, 8, 2, false)]));
+        let plan = ExecutionPlan::try_uniform(&p, Backend::Reference).unwrap();
+        assert_eq!(plan.len(), 1);
+        assert!(!plan.is_empty());
+        assert_eq!(plan.step(0).out_dims, [3, 3, 8]);
     }
 }

@@ -30,6 +30,7 @@
 //! | [`coordinator`] | Serving core: sharded engines, bounded admission, metrics, loadgen |
 //! | [`cost`] | FPGA/ASIC resource, power, and area models |
 //! | [`memtraffic`] | Memory-traffic analytics (paper Table VI) |
+//! | [`tune`] | Plan autotuner: (block, backend) cost profiling, per-objective + Pareto plan search, plan cache, QoS serving lanes |
 //! | [`report`] | Regenerates the paper's tables and figures |
 //! | [`runtime`] | PJRT golden-model execution (behind the `pjrt` feature) |
 //! | [`util`] | Hand-rolled substrate: RNG, proptest, stats, bench, JSON, pools |
@@ -61,6 +62,7 @@ pub mod memtraffic;
 pub mod model;
 pub mod report;
 pub mod runtime;
+pub mod tune;
 
 /// Crate version (surfaced by the CLI).
 pub fn version() -> &'static str {

@@ -3,9 +3,11 @@
 //! Subcommands:
 //!
 //! ```text
-//! report <table1..table7|fig14|all>   regenerate the paper's evaluation
+//! report <table1..table7|fig14|tune|all>  regenerate the paper's evaluation
 //! run [--backend B] [--layer TAG]     run one block / the whole model
+//! tune [--model M] [--backends LIST]  cost-profile + search execution plans
 //! serve [--requests N] [--batch B]    batched edge-serving demo
+//! serve --qos CLASS                   QoS-class serving from tuned plans
 //! serve loadgen [--mode closed|open]  load-generate against the serving core
 //! golden [--layer TAG]                cross-check CFU sim vs PJRT HLO
 //! version
@@ -19,11 +21,13 @@ use fused_dsc::cfu::PipelineVersion;
 use fused_dsc::cli::Args;
 use fused_dsc::coordinator::loadgen::{self, LoadMode, LoadgenConfig};
 use fused_dsc::coordinator::{Backend, Coordinator, Engine, Rejected, ServeConfig};
-use fused_dsc::model::blocks::{backbone, evaluated_blocks};
-use fused_dsc::model::weights::{gen_input, make_model_params};
+use fused_dsc::model::blocks::{backbone, evaluated_blocks, BlockConfig};
+use fused_dsc::model::weights::{gen_input, make_model_params, ModelParams};
 use fused_dsc::report;
 use fused_dsc::runtime::{artifact_path, Runtime};
 use fused_dsc::tensor::TensorI8;
+use fused_dsc::tune::{self, PlanCache, QosClass, QosRouter};
+use fused_dsc::util::bench::write_bench_artifact;
 use fused_dsc::util::stats::fmt_cycles;
 
 /// Resolve `--backend` through the one parser in [`fused_dsc::exec`]
@@ -84,6 +88,60 @@ fn cmd_run(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse a comma-separated backend allowlist (`all` = every backend,
+/// including the slow-to-profile ISS-simulated ones).
+fn parse_backend_list(s: &str) -> Result<Vec<Backend>> {
+    if s == "all" {
+        return Ok(Backend::ALL.to_vec());
+    }
+    s.split(',').map(|t| parse_backend(t.trim())).collect()
+}
+
+/// The model a `tune` invocation targets: the full backbone (default) or
+/// a tiny three-block geometry for smoke runs.
+fn tune_params(args: &Args) -> Result<ModelParams> {
+    match args.opt_or("model", "backbone") {
+        "backbone" => Ok(make_model_params(None)),
+        "tiny" => Ok(make_model_params(Some(vec![
+            BlockConfig::new(8, 8, 8, 16, 8, 2, false),
+            BlockConfig::new(4, 4, 8, 16, 16, 1, false),
+            BlockConfig::new(4, 4, 16, 24, 16, 1, false),
+        ]))),
+        other => bail!("unknown --model '{other}' (expected backbone|tiny)"),
+    }
+}
+
+fn tune_allowlist(args: &Args) -> Result<Vec<Backend>> {
+    match args.opt("backends") {
+        Some(s) => parse_backend_list(s),
+        None => Ok(tune::DEFAULT_ALLOWLIST.to_vec()),
+    }
+}
+
+fn tune_cache(args: &Args) -> Option<PlanCache> {
+    if args.flag("no-cache") {
+        None
+    } else {
+        Some(PlanCache::new(args.opt_or("cache", "tune-cache")))
+    }
+}
+
+fn cmd_tune(args: &Args) -> Result<()> {
+    let params = tune_params(args)?;
+    let allowlist = tune_allowlist(args)?;
+    let cache = tune_cache(args);
+    let (result, hit) = tune::tune_cached(&params, &allowlist, cache.as_ref())?;
+    if hit {
+        let path = cache.as_ref().unwrap().path_for(&params, &allowlist);
+        println!("(plan cache hit: {})", path.display());
+    }
+    result.print();
+    let out = std::path::Path::new(args.opt_or("json", "."));
+    let file = write_bench_artifact("tune", out, &result.to_json())?;
+    println!("bench json written: {}", file.display());
+    Ok(())
+}
+
 fn serve_config(args: &Args) -> Result<ServeConfig> {
     let d = ServeConfig::default();
     Ok(ServeConfig {
@@ -94,9 +152,76 @@ fn serve_config(args: &Args) -> Result<ServeConfig> {
     })
 }
 
+/// `serve --qos CLASS`: tune the default model, then serve through the
+/// [`QosRouter`] — one coordinator lane per class, each on its class's
+/// tuned plan.  `CLASS` is `latency|energy|balanced`, or `mixed` to
+/// round-robin all three.
+fn cmd_serve_qos(args: &Args, class_arg: &str) -> Result<()> {
+    let n: usize = args.opt_parse("requests", 48usize).map_err(anyhow::Error::msg)?;
+    let params = tune_params(args)?;
+    let allowlist = tune_allowlist(args)?;
+    let (tuned, _) = tune::tune_cached(&params, &allowlist, tune_cache(args).as_ref())?;
+    let engine = Arc::new(Engine::new(params, Backend::Reference));
+    let classes: Vec<QosClass> = if class_arg == "mixed" {
+        QosClass::ALL.to_vec()
+    } else {
+        vec![class_arg.parse().map_err(anyhow::Error::msg)?]
+    };
+    let router = QosRouter::start_classes(&engine, &tuned, &serve_config(args)?, &classes)?;
+    let t0 = std::time::Instant::now();
+    let mut tickets = Vec::with_capacity(n);
+    for i in 0..n {
+        let class = classes[i % classes.len()];
+        let mut x = model_input(&engine, i as u64);
+        let ticket = loop {
+            match router.submit(class, x) {
+                Ok(t) => break t,
+                Err(Rejected::QueueFull { input, .. }) => {
+                    // Demo client: back off briefly and retry with the
+                    // returned input — same shedding etiquette as `serve`.
+                    x = input;
+                    std::thread::sleep(std::time::Duration::from_micros(200));
+                }
+                Err(e) => bail!("submit refused: {e}"),
+            }
+        };
+        tickets.push(ticket);
+    }
+    let mut failed = 0u64;
+    for t in tickets {
+        if t.wait().result.is_err() {
+            failed += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "served {n} requests across {} QoS class(es) in {wall:.2}s ({:.1} req/s), failed={failed}",
+        classes.len(),
+        n as f64 / wall.max(1e-12)
+    );
+    for class in &classes {
+        let snap = router.coordinator(*class).metrics.snapshot();
+        let plan = tuned.plan_for(class.objective());
+        println!(
+            "  {:<9} [{}]  completed={} p99={:.2} ms  modeled/inference: {:.3} ms, {:.3} mJ",
+            class.name(),
+            plan.placement_summary(),
+            snap.completed,
+            snap.total_latency.p99_s * 1e3,
+            plan.latency_s * 1e3,
+            plan.energy_j * 1e3
+        );
+    }
+    router.shutdown();
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     if args.positional.get(1).map(|s| s.as_str()) == Some("loadgen") {
         return cmd_loadgen(args);
+    }
+    if let Some(class) = args.opt("qos") {
+        return cmd_serve_qos(args, class);
     }
     let n: usize = args.opt_parse("requests", 64usize).map_err(anyhow::Error::msg)?;
     let backend = parse_backend(args.opt_or("backend", "host-v3"))?;
@@ -227,9 +352,14 @@ fn usage() {
         fused_dsc::version()
     );
     println!("usage: fused-dsc <command> [options]");
-    println!("  report <table1..table7|fig14|all>          regenerate paper evaluation");
+    println!("  report <table1..table7|fig14|tune|all>     regenerate paper evaluation");
     println!("  run    [--backend NAME|list] [--layer 3rd|5th|8th|15th]");
+    println!("  tune   [--model backbone|tiny] [--backends LIST|all] [--cache DIR] [--no-cache]");
+    println!("         [--json PATH]                       profile (block, backend) costs, search");
+    println!("                                             per-objective + Pareto plans; writes");
+    println!("                                             BENCH_tune.json");
     println!("  serve  [--requests N] [--batch B] [--workers W] [--queue-depth D] [--backend host-v3]");
+    println!("  serve  --qos latency|energy|balanced|mixed serve QoS classes from tuned plans");
     println!("  serve loadgen [--mode closed|open] [--clients N] [--rate R] [--requests N]");
     println!("                [--batch B] [--workers W] [--queue-depth D] [--backend reference]");
     println!("                [--json PATH]                load-generate; writes BENCH_serve.json");
@@ -240,13 +370,14 @@ fn usage() {
 
 fn main() -> Result<()> {
     let raw: Vec<String> = std::env::args().skip(1).collect();
-    let args = Args::parse(&raw, &[]).map_err(anyhow::Error::msg)?;
+    let args = Args::parse(&raw, &["no-cache"]).map_err(anyhow::Error::msg)?;
     match args.positional.first().map(|s| s.as_str()) {
         Some("report") => {
             let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
             report::tables::print_report(which)?;
         }
         Some("run") => cmd_run(&args)?,
+        Some("tune") => cmd_tune(&args)?,
         Some("serve") => cmd_serve(&args)?,
         Some("golden") => cmd_golden(&args)?,
         Some("version") => println!("fused-dsc {}", fused_dsc::version()),

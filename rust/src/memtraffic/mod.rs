@@ -41,6 +41,20 @@ pub fn baseline_total_traffic_bytes(cfg: &BlockConfig) -> u64 {
     fused_traffic_bytes(cfg) + traffic_dram_bytes(cfg)
 }
 
+/// Bytes one block moves under a given execution strategy — the single
+/// dispatch point the plan autotuner's cost model uses
+/// (`tune::cost`): the fused dataflow streams everything once
+/// ([`fused_traffic_bytes`]); any layer-by-layer schedule (the software
+/// baselines, the host reference) additionally spills the F1/F2
+/// intermediates per Eq. (1) ([`baseline_total_traffic_bytes`]).
+pub fn block_traffic_bytes(cfg: &BlockConfig, fused_dataflow: bool) -> u64 {
+    if fused_dataflow {
+        fused_traffic_bytes(cfg)
+    } else {
+        baseline_total_traffic_bytes(cfg)
+    }
+}
+
 /// The paper's headline reduction: fraction of total bytes eliminated by
 /// the fused dataflow.
 pub fn reduction_fraction(cfg: &BlockConfig) -> f64 {
@@ -84,6 +98,15 @@ mod tests {
         let cfgs: Vec<_> = evaluated_blocks().into_iter().map(|(_, c)| c).collect();
         let r = aggregate_reduction(&cfgs);
         assert!(r > 0.80 && r < 0.93, "aggregate reduction {r:.3} outside paper ballpark");
+    }
+
+    #[test]
+    fn per_strategy_traffic_dispatch() {
+        for (_, cfg) in evaluated_blocks() {
+            assert_eq!(block_traffic_bytes(&cfg, true), fused_traffic_bytes(&cfg));
+            assert_eq!(block_traffic_bytes(&cfg, false), baseline_total_traffic_bytes(&cfg));
+            assert!(block_traffic_bytes(&cfg, true) < block_traffic_bytes(&cfg, false));
+        }
     }
 
     #[test]

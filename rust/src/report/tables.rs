@@ -251,7 +251,18 @@ pub fn print_table7() {
     println!("  Jixuan Li [32]    : VC709, MNV2 INT8, double-layer MAC (Dw+Pr), SRAM after PW1, 65k/60k/308, 41.34%");
 }
 
-/// Print one named report (table1..table7, fig14, all).
+/// `fused-dsc report tune` — the autotuner's cost table, per-objective
+/// plans, and Pareto frontier on the default backbone over the default
+/// allowlist (see `fused-dsc tune` for geometry/allowlist/cache options).
+/// Not part of `all`: it is this repo's extension, not a paper table.
+pub fn print_tune() -> anyhow::Result<()> {
+    let params = crate::model::weights::make_model_params(None);
+    let result = crate::tune::tune(&params, &crate::tune::DEFAULT_ALLOWLIST)?;
+    result.print();
+    Ok(())
+}
+
+/// Print one named report (table1..table7, fig14, tune, all).
 pub fn print_report(which: &str) -> anyhow::Result<()> {
     let needs_data = matches!(which, "fig14" | "table3" | "table4" | "table6" | "all");
     let data = if needs_data { Some(super::collect_measurements()?) } else { None };
@@ -265,8 +276,9 @@ pub fn print_report(which: &str) -> anyhow::Result<()> {
         "table6" => print_table6(d.unwrap()),
         "table7" => print_table7(),
         "fig14" => print_fig14(d.unwrap()),
+        "tune" => print_tune()?,
         "all" => print_all(d.unwrap()),
-        other => anyhow::bail!("unknown report '{other}' (try: table1..table7, fig14, all)"),
+        other => anyhow::bail!("unknown report '{other}' (try: table1..table7, fig14, tune, all)"),
     }
     Ok(())
 }

@@ -1,0 +1,165 @@
+//! Persistent plan cache: tune once per geometry, reload forever.
+//!
+//! Entries are keyed by `(model geometry, backend allowlist)` — a
+//! [`super::cost::model_key`] plus an [`allowlist_key`] — and hold the
+//! complete [`TuneResult`] (cost table, per-objective plans, Pareto
+//! frontier), so a plan lookup for *any* objective
+//! ([`PlanCache::lookup_plan`] completes the `(model, objective,
+//! allowlist)` key triple) is one file read.  Serialization goes through
+//! [`crate::util::json`] and is deterministic: the same geometry and
+//! allowlist always produce byte-identical cache files (pinned by the
+//! round-trip proptest in `rust/tests/proptests.rs`).
+//!
+//! Corrupt, stale, or foreign files are treated as cache misses — the
+//! next [`PlanCache::store`] overwrites them — so the cache can never
+//! wedge a tuning run.
+
+use std::io;
+use std::path::{Path, PathBuf};
+
+use crate::exec::Backend;
+use crate::model::weights::ModelParams;
+use crate::util::json::Json;
+use crate::util::rng::fnv1a64;
+
+use super::cost::model_key;
+use super::search::{Objective, TunedPlan};
+use super::TuneResult;
+
+/// Deterministic key for a backend allowlist.  Order-sensitive on
+/// purpose: allowlist order is the search's tie-break order, so two
+/// orderings can legitimately tune to different plans.
+pub fn allowlist_key(backends: &[Backend]) -> String {
+    let names: Vec<&str> = backends.iter().map(|b| b.name()).collect();
+    format!("{:016x}", fnv1a64(&names.join(",")))
+}
+
+/// A directory of tune-result files.
+#[derive(Debug, Clone)]
+pub struct PlanCache {
+    dir: PathBuf,
+}
+
+impl PlanCache {
+    /// A cache rooted at `dir` (created lazily on the first store).
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        Self { dir: dir.into() }
+    }
+
+    /// The cache directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// The one place the entry filename format lives — `load` (through
+    /// [`PlanCache::path_for`]) and `store` must never disagree on it.
+    fn entry_path(&self, model_key: &str, allow_key: &str) -> PathBuf {
+        self.dir.join(format!("tune-{model_key}-{allow_key}.json"))
+    }
+
+    /// The file an entry for `(params, allowlist)` lives in.
+    pub fn path_for(&self, params: &ModelParams, allowlist: &[Backend]) -> PathBuf {
+        self.entry_path(&model_key(params), &allowlist_key(allowlist))
+    }
+
+    /// Load the cached result for `(params, allowlist)`.  `None` on a
+    /// miss *or* on any unreadable / corrupt / mismatched entry.
+    pub fn load(&self, params: &ModelParams, allowlist: &[Backend]) -> Option<TuneResult> {
+        let text = std::fs::read_to_string(self.path_for(params, allowlist)).ok()?;
+        let parsed = Json::parse(&text).ok()?;
+        let result = TuneResult::from_json(&parsed).ok()?;
+        // Guard against hash collisions and hand-edited files: the entry
+        // must actually describe this geometry and allowlist.
+        if result.table.model_key != model_key(params)
+            || result.table.backends.as_slice() != allowlist
+        {
+            return None;
+        }
+        Some(result)
+    }
+
+    /// The full `(model, objective, allowlist)` key triple: the cached
+    /// plan for one objective.
+    pub fn lookup_plan(
+        &self,
+        params: &ModelParams,
+        objective: Objective,
+        allowlist: &[Backend],
+    ) -> Option<TunedPlan> {
+        self.load(params, allowlist).map(|r| r.plan_for(objective).clone())
+    }
+
+    /// Write `result` under its own keys, creating the cache directory if
+    /// needed.  Returns the entry's path.
+    pub fn store(&self, result: &TuneResult) -> io::Result<PathBuf> {
+        std::fs::create_dir_all(&self.dir)?;
+        let file =
+            self.entry_path(&result.table.model_key, &allowlist_key(&result.table.backends));
+        std::fs::write(&file, result.to_json().render())?;
+        Ok(file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::blocks::BlockConfig;
+    use crate::model::weights::make_model_params;
+
+    fn mini() -> ModelParams {
+        make_model_params(Some(vec![
+            BlockConfig::new(8, 8, 8, 16, 8, 2, false),
+            BlockConfig::new(4, 4, 8, 16, 8, 1, true),
+        ]))
+    }
+
+    fn temp_cache(tag: &str) -> PlanCache {
+        PlanCache::new(
+            std::env::temp_dir().join(format!("fused_dsc_tune_{tag}_{}", std::process::id())),
+        )
+    }
+
+    #[test]
+    fn store_then_load_round_trips() {
+        let p = mini();
+        let allow = super::super::DEFAULT_ALLOWLIST;
+        let result = super::super::tune(&p, &allow).unwrap();
+        let cache = temp_cache("rt");
+        assert!(cache.load(&p, &allow).is_none(), "cold cache must miss");
+        let file = cache.store(&result).unwrap();
+        assert_eq!(file, cache.path_for(&p, &allow));
+        let back = cache.load(&p, &allow).expect("warm cache must hit");
+        assert_eq!(back, result);
+        let plan = cache.lookup_plan(&p, Objective::Energy, &allow).unwrap();
+        assert_eq!(&plan, result.plan_for(Objective::Energy));
+        std::fs::remove_dir_all(cache.dir()).ok();
+    }
+
+    #[test]
+    fn different_allowlists_are_different_entries() {
+        let p = mini();
+        let full = super::super::DEFAULT_ALLOWLIST.to_vec();
+        let narrow = vec![Backend::Reference];
+        assert_ne!(allowlist_key(&full), allowlist_key(&narrow));
+        let cache = temp_cache("keys");
+        let result = super::super::tune(&p, &full).unwrap();
+        cache.store(&result).unwrap();
+        assert!(cache.load(&p, &narrow).is_none(), "narrow allowlist must miss");
+        assert!(cache.load(&p, &full).is_some());
+        std::fs::remove_dir_all(cache.dir()).ok();
+    }
+
+    #[test]
+    fn corrupt_entries_are_misses_not_errors() {
+        let p = mini();
+        let allow = super::super::DEFAULT_ALLOWLIST;
+        let cache = temp_cache("corrupt");
+        std::fs::create_dir_all(cache.dir()).unwrap();
+        std::fs::write(cache.path_for(&p, &allow), "{not json").unwrap();
+        assert!(cache.load(&p, &allow).is_none());
+        // Valid JSON but the wrong document shape: still a miss.
+        std::fs::write(cache.path_for(&p, &allow), "{\"bench\":\"serve\"}").unwrap();
+        assert!(cache.load(&p, &allow).is_none());
+        std::fs::remove_dir_all(cache.dir()).ok();
+    }
+}

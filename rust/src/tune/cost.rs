@@ -1,0 +1,375 @@
+//! Per-`(block, backend)` cost profiling into a [`CostTable`].
+//!
+//! Each cell is a [`CostVector`] — latency, simulated cycles, bytes moved,
+//! energy — measured or modeled from the crate's existing sources of
+//! truth rather than re-derived here:
+//!
+//! * **cycles** — one real run of the block through the backend's
+//!   [`crate::exec::BlockExecutor`] (the same cycle models the report
+//!   harness trusts); deterministic, so profiling is reproducible.
+//! * **bytes** — [`crate::memtraffic::block_traffic_bytes`]: the fused
+//!   dataflow streams everything once, any layer-by-layer schedule spills
+//!   the F1/F2 intermediates per paper Eq. (1).
+//! * **power** — [`crate::cost::power`]: the Table II model for the fused
+//!   CFU versions, the base-SoC row for the software baseline, the shared
+//!   per-resource coefficients for the CFU-Playground comparator.
+//!
+//! The [`Backend::Reference`] column is priced as the *edge host
+//! application core* — the deployment alternative to the 100 MHz
+//! accelerator SoC.  It has no cycle model, so its latency/energy are
+//! modeled from the block's MAC count and the calibration constants
+//! below; whether it beats the CFU depends on block shape (the CFU's
+//! 9-engine × 8-lane expansion array is fully fed only when `Cin` is
+//! small relative to `M`), which is exactly the per-layer heterogeneity
+//! Daghero et al. and Zhang et al. report for software DSC kernels.
+
+use anyhow::{bail, Result};
+
+use crate::cost::fpga::{ArchParams, CFU_PLAYGROUND_REF};
+use crate::cost::power::{base_power_w, fpga_power_w, resources_dyn_w};
+use crate::exec::{executor_for, Backend};
+use crate::memtraffic;
+use crate::model::weights::{gen_input, ModelParams};
+use crate::tensor::TensorI8;
+use crate::util::json::Json;
+use crate::util::rng::fnv1a64;
+
+/// Clock the accelerator cycle models are calibrated at (paper: 100 MHz).
+pub const ACCEL_CLOCK_HZ: f64 = 100e6;
+
+/// Modeled INT8 MAC throughput of the edge host application core backing
+/// [`Backend::Reference`]: a ~1.2 GHz in-order core issuing a 2-wide INT8
+/// multiply-accumulate per cycle (documented in EXPERIMENTS.md
+/// §Calibration).  Sits inside the CFU's per-block effective-throughput
+/// range (~1.4–4.5 GMAC/s on the backbone), which is what makes the
+/// host-vs-accelerator placement decision shape-dependent.
+pub const HOST_MACS_PER_SEC: f64 = 2.4e9;
+
+/// Modeled active power (W) of that host core while running a block —
+/// well above the accelerator SoC's ~1.1 W, so latency-optimal host
+/// offload costs energy.
+pub const HOST_ACTIVE_POWER_W: f64 = 2.5;
+
+/// Activity factor for the CFU-Playground comparator's small datapath
+/// (its 1×1-only SIMD MAC idles through depthwise work).
+const PLAYGROUND_ACTIVITY: f64 = 0.5;
+
+/// One `(block, backend)` cell: the three objective metrics plus the raw
+/// cycle count they were derived from.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostVector {
+    /// Modeled execution latency in seconds (cycle-modeled backends:
+    /// `sim_cycles / ACCEL_CLOCK_HZ`; the host reference: modeled from
+    /// MACs).
+    pub latency_s: f64,
+    /// Simulated hardware cycles (0 for the host reference, which has no
+    /// cycle model).
+    pub sim_cycles: u64,
+    /// Bytes moved to/from memory for the block on this backend's
+    /// dataflow.
+    pub bytes: u64,
+    /// Energy in joules: the backend's modeled power × latency.
+    pub energy_j: f64,
+}
+
+impl CostVector {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("latency_s", self.latency_s)
+            .set("sim_cycles", self.sim_cycles)
+            .set("bytes", self.bytes)
+            .set("energy_j", self.energy_j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<CostVector, String> {
+        let num = |key: &str| -> Result<f64, String> {
+            j.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("cost vector missing numeric '{key}'"))
+        };
+        let int = |key: &str| -> Result<u64, String> {
+            j.get(key)
+                .and_then(Json::as_u64)
+                .ok_or_else(|| format!("cost vector missing integer '{key}'"))
+        };
+        Ok(CostVector {
+            latency_s: num("latency_s")?,
+            sim_cycles: int("sim_cycles")?,
+            bytes: int("bytes")?,
+            energy_j: num("energy_j")?,
+        })
+    }
+}
+
+/// Modeled power draw (W) while a block runs on `backend`, from the
+/// crate's cost models (see the module docs for the mapping).
+pub fn backend_power_w(backend: Backend) -> f64 {
+    match backend {
+        Backend::Reference => HOST_ACTIVE_POWER_W,
+        Backend::SoftwareIss => base_power_w(),
+        Backend::CfuPlaygroundIss => {
+            base_power_w() + resources_dyn_w(&CFU_PLAYGROUND_REF, PLAYGROUND_ACTIVITY)
+        }
+        Backend::FusedIss(v) | Backend::FusedHost(v) => {
+            fpga_power_w(&ArchParams::for_backbone(), v).total_w()
+        }
+    }
+}
+
+/// Whether a backend executes the paper's fused zero-buffer dataflow
+/// (determines which traffic formula prices its memory movement).
+pub fn uses_fused_dataflow(backend: Backend) -> bool {
+    matches!(backend, Backend::FusedIss(_) | Backend::FusedHost(_))
+}
+
+/// Deterministic fingerprint of a model's *geometry* (block configs +
+/// head width) — the model half of every plan-cache key.  Weights are
+/// deliberately excluded: costs depend only on shape.
+pub fn model_key(params: &ModelParams) -> String {
+    let mut s = String::new();
+    for bp in &params.blocks {
+        let c = bp.cfg;
+        s.push_str(&format!(
+            "{}x{}x{}m{}c{}s{}r{};",
+            c.h, c.w, c.cin, c.m, c.cout, c.stride, c.residual as u32
+        ));
+    }
+    s.push_str(&format!("head{}", params.head.fc_b.len()));
+    format!("{:016x}", fnv1a64(&s))
+}
+
+/// The profiled cost table: `rows[block][i]` is the cost of running
+/// `block` on `backends[i]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CostTable {
+    /// [`model_key`] of the profiled geometry.
+    pub model_key: String,
+    /// The backend allowlist, in the caller's order (column order).
+    pub backends: Vec<Backend>,
+    /// Human-readable shape tag per block (for tables and the JSON
+    /// artifact).
+    pub shapes: Vec<String>,
+    /// Per-block, per-backend cost vectors.
+    pub rows: Vec<Vec<CostVector>>,
+}
+
+impl CostTable {
+    /// Profile every `(block, backend)` pair of `params` over
+    /// `allowlist`.
+    ///
+    /// Deterministic: cycle models are data-independent of wall clock and
+    /// the probe inputs are seeded, so the same geometry + allowlist
+    /// always produces the same table (the property the plan cache and
+    /// the serialization proptests rely on).  ISS-simulated backends are
+    /// orders of magnitude slower to profile than the host-side ones —
+    /// the default allowlist ([`super::DEFAULT_ALLOWLIST`]) sticks to the
+    /// latter.
+    pub fn profile(params: &ModelParams, allowlist: &[Backend]) -> Result<CostTable> {
+        if allowlist.is_empty() {
+            bail!("cost profile needs a non-empty backend allowlist");
+        }
+        let mut rows = Vec::with_capacity(params.blocks.len());
+        let mut shapes = Vec::with_capacity(params.blocks.len());
+        let mut out = TensorI8::default();
+        for (i, bp) in params.blocks.iter().enumerate() {
+            let c = bp.cfg;
+            shapes.push(format!("{}x{}x{}->M{}->{} s{}", c.h, c.w, c.cin, c.m, c.cout, c.stride));
+            let x = TensorI8::from_vec(
+                &[c.h as usize, c.w as usize, c.cin as usize],
+                gen_input(&format!("tune.b{i}"), (c.h * c.w * c.cin) as usize, bp.zp_in()),
+            );
+            let mut row = Vec::with_capacity(allowlist.len());
+            for &backend in allowlist {
+                let fused = uses_fused_dataflow(backend);
+                let bytes = memtraffic::block_traffic_bytes(&c, fused);
+                let (latency_s, sim_cycles) = match backend {
+                    Backend::Reference => (c.macs() as f64 / HOST_MACS_PER_SEC, 0u64),
+                    _ => {
+                        let mut executor = executor_for(backend);
+                        let cycles = executor.run_block_into(bp, &x, &mut out)?;
+                        (cycles as f64 / ACCEL_CLOCK_HZ, cycles)
+                    }
+                };
+                row.push(CostVector {
+                    latency_s,
+                    sim_cycles,
+                    bytes,
+                    energy_j: backend_power_w(backend) * latency_s,
+                });
+            }
+            rows.push(row);
+        }
+        Ok(CostTable { model_key: model_key(params), backends: allowlist.to_vec(), shapes, rows })
+    }
+
+    /// Number of profiled blocks.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True when no blocks were profiled (an empty model).
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// The cost of running block `block` on `self.backends[backend_idx]`.
+    pub fn cost(&self, block: usize, backend_idx: usize) -> &CostVector {
+        &self.rows[block][backend_idx]
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut backends = Json::arr();
+        for b in &self.backends {
+            backends = backends.push(b.name());
+        }
+        let mut shapes = Json::arr();
+        for s in &self.shapes {
+            shapes = shapes.push(s.as_str());
+        }
+        let mut rows = Json::arr();
+        for row in &self.rows {
+            let mut r = Json::arr();
+            for cv in row {
+                r = r.push(cv.to_json());
+            }
+            rows = rows.push(r);
+        }
+        Json::obj()
+            .set("model_key", self.model_key.as_str())
+            .set("backends", backends)
+            .set("shapes", shapes)
+            .set("rows", rows)
+    }
+
+    pub fn from_json(j: &Json) -> Result<CostTable, String> {
+        let model_key = j.get("model_key").and_then(Json::as_str);
+        let model_key = model_key.ok_or("cost table missing 'model_key'")?.to_string();
+        let mut backends = Vec::new();
+        for b in j.get("backends").and_then(Json::as_array).ok_or("missing 'backends'")? {
+            backends.push(b.as_str().ok_or("backend name not a string")?.parse::<Backend>()?);
+        }
+        if backends.is_empty() {
+            return Err("cost table has an empty backend list".to_string());
+        }
+        let mut shapes = Vec::new();
+        for s in j.get("shapes").and_then(Json::as_array).ok_or("missing 'shapes'")? {
+            shapes.push(s.as_str().ok_or("shape tag not a string")?.to_string());
+        }
+        let mut rows = Vec::new();
+        for row in j.get("rows").and_then(Json::as_array).ok_or("missing 'rows'")? {
+            let cells = row.as_array().ok_or("cost row not an array")?;
+            if cells.len() != backends.len() {
+                return Err(format!(
+                    "cost row has {} cells for {} backends",
+                    cells.len(),
+                    backends.len()
+                ));
+            }
+            rows.push(cells.iter().map(CostVector::from_json).collect::<Result<Vec<_>, _>>()?);
+        }
+        if rows.len() != shapes.len() {
+            return Err(format!("{} rows for {} shapes", rows.len(), shapes.len()));
+        }
+        Ok(CostTable { model_key, backends, shapes, rows })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfu::PipelineVersion;
+    use crate::model::blocks::BlockConfig;
+    use crate::model::weights::make_model_params;
+
+    fn mini() -> ModelParams {
+        make_model_params(Some(vec![
+            BlockConfig::new(8, 8, 8, 16, 8, 2, false),
+            BlockConfig::new(4, 4, 8, 16, 8, 1, true),
+        ]))
+    }
+
+    #[test]
+    fn profile_fills_every_cell_deterministically() {
+        let p = mini();
+        let allow = super::super::DEFAULT_ALLOWLIST;
+        let t1 = CostTable::profile(&p, &allow).unwrap();
+        assert_eq!(t1.len(), 2);
+        assert!(!t1.is_empty());
+        assert_eq!(t1.backends.len(), 4);
+        for row in &t1.rows {
+            assert_eq!(row.len(), 4);
+            for cv in row {
+                assert!(cv.latency_s > 0.0);
+                assert!(cv.energy_j > 0.0);
+                assert!(cv.bytes > 0);
+            }
+        }
+        let t2 = CostTable::profile(&p, &allow).unwrap();
+        assert_eq!(t1, t2, "profiling must be deterministic");
+    }
+
+    #[test]
+    fn reference_column_is_modeled_and_fused_columns_are_measured() {
+        let p = mini();
+        let t = CostTable::profile(&p, &super::super::DEFAULT_ALLOWLIST).unwrap();
+        // Column 0 is the host reference: no cycles, layer-by-layer bytes.
+        for (bi, row) in t.rows.iter().enumerate() {
+            let c = p.blocks[bi].cfg;
+            assert_eq!(row[0].sim_cycles, 0);
+            assert_eq!(row[0].bytes, memtraffic::block_traffic_bytes(&c, false));
+            let want = c.macs() as f64 / HOST_MACS_PER_SEC;
+            assert!((row[0].latency_s - want).abs() < 1e-15);
+            // Fused columns report real cycles and fused traffic.
+            for cv in &row[1..] {
+                assert!(cv.sim_cycles > 0);
+                assert_eq!(cv.bytes, memtraffic::block_traffic_bytes(&c, true));
+                assert!(cv.bytes < row[0].bytes);
+            }
+        }
+    }
+
+    #[test]
+    fn backend_power_ordering_matches_the_cost_models() {
+        // Host > fused SoC > playground SoC > base SoC, and v3 draws the
+        // least of the fused versions (paper Table II).
+        let v3 = backend_power_w(Backend::FusedHost(PipelineVersion::V3));
+        let v1 = backend_power_w(Backend::FusedHost(PipelineVersion::V1));
+        let pg = backend_power_w(Backend::CfuPlaygroundIss);
+        let sw = backend_power_w(Backend::SoftwareIss);
+        let host = backend_power_w(Backend::Reference);
+        assert!(host > v1 && v1 > v3, "host {host} v1 {v1} v3 {v3}");
+        assert!(v3 > pg && pg > sw, "v3 {v3} pg {pg} sw {sw}");
+        // ISS and host drive of the same CFU version draw the same power.
+        assert_eq!(
+            backend_power_w(Backend::FusedIss(PipelineVersion::V2)),
+            backend_power_w(Backend::FusedHost(PipelineVersion::V2))
+        );
+    }
+
+    #[test]
+    fn model_key_tracks_geometry_not_weights() {
+        let a = mini();
+        let b = mini();
+        assert_eq!(model_key(&a), model_key(&b));
+        let c = make_model_params(Some(vec![
+            BlockConfig::new(8, 8, 8, 16, 8, 2, false),
+            BlockConfig::new(4, 4, 8, 24, 8, 1, true), // different M
+        ]));
+        assert_ne!(model_key(&a), model_key(&c));
+    }
+
+    #[test]
+    fn cost_table_json_round_trips() {
+        let p = mini();
+        let t = CostTable::profile(&p, &super::super::DEFAULT_ALLOWLIST).unwrap();
+        let text = t.to_json().render();
+        let back = CostTable::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, t);
+        assert_eq!(back.to_json().render(), text);
+    }
+
+    #[test]
+    fn empty_allowlist_is_rejected() {
+        assert!(CostTable::profile(&mini(), &[]).is_err());
+    }
+}

@@ -1,0 +1,300 @@
+//! The plan autotuner: cost-driven heterogeneous backend placement.
+//!
+//! Closes the loop the earlier layers left open — the cost models
+//! ([`crate::cost`], [`crate::memtraffic`]) were report-only, and
+//! [`crate::exec::ExecutionPlan::with_placement`] could *express*
+//! per-block heterogeneous plans but nothing ever *chose* one.  The paper
+//! makes the per-stage argument in hardware (§III: the right execution
+//! strategy per DSC stage beats one-size-fits-all); Daghero et al. and
+//! Zhang et al. make it in software (the optimal kernel differs per layer
+//! shape); this module makes it at the serving layer:
+//!
+//! 1. **Profile** ([`cost`]) — measure or model every `(block, backend)`
+//!    pair's (latency, cycles, bytes, energy) into a [`CostTable`].
+//! 2. **Search** ([`search`]) — per-block separability gives exact
+//!    per-objective optima; a deterministic simplex sweep gives the
+//!    weighted-sum Pareto frontier over (latency, energy, bytes).
+//! 3. **Cache** ([`cache`]) — results keyed by `(geometry, objective,
+//!    allowlist)`, deterministically serialized, so tuning runs once per
+//!    geometry.
+//! 4. **Serve** ([`qos`]) — one coordinator lane per QoS class
+//!    (`latency` / `energy` / `balanced`), each on its class's tuned
+//!    placement via the `ServeConfig::plan` seam.
+//!
+//! Entry points: [`tune`] / [`tune_cached`] in code, `fused-dsc tune` on
+//! the CLI.  Every tuned plan is bit-identical in logits to the uniform
+//! reference plan (pinned by proptest) — tuning only moves *where*
+//! blocks run.
+
+pub mod cache;
+pub mod cost;
+pub mod qos;
+pub mod search;
+
+use anyhow::Result;
+
+use crate::cfu::PipelineVersion;
+use crate::exec::{Backend, PlanError};
+use crate::model::weights::ModelParams;
+use crate::util::json::Json;
+
+pub use cache::{allowlist_key, PlanCache};
+pub use cost::{
+    backend_power_w, model_key, CostTable, CostVector, ACCEL_CLOCK_HZ, HOST_ACTIVE_POWER_W,
+    HOST_MACS_PER_SEC,
+};
+pub use qos::{QosClass, QosRouter};
+pub use search::{optimize, pareto_frontier, uniform_plan, Objective, TunedPlan};
+
+/// The default backend allowlist: the host application core plus the
+/// three host-programmed CFU versions.  These profile at host speed
+/// (one functional block run each); the ISS-simulated backends are
+/// admissible via an explicit allowlist but orders of magnitude slower
+/// to profile.
+pub const DEFAULT_ALLOWLIST: [Backend; 4] = [
+    Backend::Reference,
+    Backend::FusedHost(PipelineVersion::V1),
+    Backend::FusedHost(PipelineVersion::V2),
+    Backend::FusedHost(PipelineVersion::V3),
+];
+
+/// Everything one tuning run produces: the profiled table, the exact
+/// optimum per [`Objective`], and the Pareto frontier.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TuneResult {
+    /// The profiled `(block, backend)` cost table.
+    pub table: CostTable,
+    /// Per-objective optimal plans, parallel to [`Objective::ALL`].
+    pub plans: Vec<TunedPlan>,
+    /// The weighted-sum supported Pareto frontier, ascending latency.
+    pub pareto: Vec<TunedPlan>,
+}
+
+impl TuneResult {
+    /// The optimal plan for one objective.
+    pub fn plan_for(&self, objective: Objective) -> &TunedPlan {
+        let idx = Objective::ALL.iter().position(|o| *o == objective).expect("known objective");
+        &self.plans[idx]
+    }
+
+    /// The uniform (single-backend) plan totals for every allowlisted
+    /// backend — the baselines tuned plans are judged against.
+    pub fn uniform_plans(&self) -> Vec<TunedPlan> {
+        (0..self.table.backends.len()).map(|j| uniform_plan(&self.table, j)).collect()
+    }
+
+    /// Deterministic serialization of the whole result (cache file and
+    /// `BENCH_tune.json` body share this schema).
+    pub fn to_json(&self) -> Json {
+        let mut plans = Json::arr();
+        for p in &self.plans {
+            plans = plans.push(p.to_json());
+        }
+        let mut pareto = Json::arr();
+        for p in &self.pareto {
+            pareto = pareto.push(p.to_json());
+        }
+        let mut uniform = Json::arr();
+        for p in self.uniform_plans() {
+            uniform = uniform.push(p.to_json());
+        }
+        Json::obj()
+            .set("bench", "tune")
+            .set("table", self.table.to_json())
+            .set("plans", plans)
+            .set("pareto", pareto)
+            .set("uniform", uniform)
+    }
+
+    pub fn from_json(j: &Json) -> Result<TuneResult, String> {
+        let table = CostTable::from_json(j.get("table").ok_or("tune result missing 'table'")?)?;
+        let parse_plans = |key: &str| -> Result<Vec<TunedPlan>, String> {
+            j.get(key)
+                .and_then(Json::as_array)
+                .ok_or_else(|| format!("tune result missing '{key}'"))?
+                .iter()
+                .map(TunedPlan::from_json)
+                .collect()
+        };
+        let plans = parse_plans("plans")?;
+        if plans.len() != Objective::ALL.len() {
+            return Err(format!("expected {} plans, got {}", Objective::ALL.len(), plans.len()));
+        }
+        let pareto = parse_plans("pareto")?;
+        Ok(TuneResult { table, plans, pareto })
+    }
+
+    /// Print the cost table, the tuned and uniform plans, and the Pareto
+    /// frontier (the `fused-dsc tune` output).
+    pub fn print(&self) {
+        let names: Vec<&str> = self.table.backends.iter().map(|b| b.name()).collect();
+        println!(
+            "== tune: cost table (model {}, backends {}) ==",
+            self.table.model_key,
+            names.join(", ")
+        );
+        println!(
+            "{:>5}  {:<22} {:<16} {:>12} {:>12} {:>10}",
+            "block", "shape", "backend", "latency(us)", "energy(uJ)", "bytes"
+        );
+        for (bi, row) in self.table.rows.iter().enumerate() {
+            for (j, cv) in row.iter().enumerate() {
+                println!(
+                    "{:>5}  {:<22} {:<16} {:>12.1} {:>12.1} {:>10}",
+                    bi,
+                    self.table.shapes[bi],
+                    names[j],
+                    cv.latency_s * 1e6,
+                    cv.energy_j * 1e6,
+                    cv.bytes
+                );
+            }
+        }
+        println!("\n== tuned plans (exact per-objective optima) ==");
+        print_plan_header();
+        for plan in &self.plans {
+            print_plan_row(plan);
+        }
+        println!("\n== uniform plans (baselines) ==");
+        print_plan_header();
+        for plan in self.uniform_plans() {
+            print_plan_row(&plan);
+        }
+        println!("\n== Pareto frontier over (latency, energy, bytes) ==");
+        print_plan_header();
+        for plan in &self.pareto {
+            print_plan_row(plan);
+        }
+    }
+}
+
+fn print_plan_header() {
+    println!(
+        "{:<16} {:>12} {:>11} {:>10}  {}",
+        "objective", "latency(ms)", "energy(mJ)", "KB moved", "placement"
+    );
+}
+
+fn print_plan_row(plan: &TunedPlan) {
+    println!(
+        "{:<16} {:>12.3} {:>11.3} {:>10.1}  {}",
+        plan.objective,
+        plan.latency_s * 1e3,
+        plan.energy_j * 1e3,
+        plan.bytes as f64 / 1e3,
+        plan.placement_summary()
+    );
+}
+
+/// Profile `params` over `allowlist` and search every objective plus the
+/// Pareto frontier.  Degenerate geometry (an empty model) resolves as a
+/// typed [`PlanError`] under the hood, surfaced as an error here.
+pub fn tune(params: &ModelParams, allowlist: &[Backend]) -> Result<TuneResult> {
+    if params.blocks.is_empty() {
+        return Err(PlanError::EmptyModel.into());
+    }
+    let table = CostTable::profile(params, allowlist)?;
+    let mut plans = Vec::with_capacity(Objective::ALL.len());
+    for objective in Objective::ALL {
+        plans.push(optimize(&table, objective)?);
+    }
+    let pareto = pareto_frontier(&table)?;
+    Ok(TuneResult { table, plans, pareto })
+}
+
+/// [`tune`] through a [`PlanCache`]: returns `(result, cache_hit)`.  A
+/// miss tunes and stores; a hit skips profiling entirely.
+pub fn tune_cached(
+    params: &ModelParams,
+    allowlist: &[Backend],
+    cache: Option<&PlanCache>,
+) -> Result<(TuneResult, bool)> {
+    if let Some(cache) = cache {
+        if let Some(hit) = cache.load(params, allowlist) {
+            return Ok((hit, true));
+        }
+    }
+    let result = tune(params, allowlist)?;
+    if let Some(cache) = cache {
+        use anyhow::Context as _;
+        cache.store(&result).context("writing the plan cache")?;
+    }
+    Ok((result, false))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::blocks::BlockConfig;
+    use crate::model::weights::make_model_params;
+
+    fn mini() -> ModelParams {
+        make_model_params(Some(vec![
+            BlockConfig::new(8, 8, 8, 16, 8, 2, false),
+            BlockConfig::new(4, 4, 8, 16, 8, 1, true),
+        ]))
+    }
+
+    #[test]
+    fn tune_produces_a_plan_per_objective_and_a_frontier() {
+        let p = mini();
+        let result = tune(&p, &DEFAULT_ALLOWLIST).unwrap();
+        assert_eq!(result.plans.len(), Objective::ALL.len());
+        for (plan, objective) in result.plans.iter().zip(Objective::ALL) {
+            assert_eq!(plan.objective, objective.name());
+            assert_eq!(plan.placement.len(), 2);
+            assert_eq!(result.plan_for(objective), plan);
+        }
+        assert!(!result.pareto.is_empty());
+        assert_eq!(result.uniform_plans().len(), DEFAULT_ALLOWLIST.len());
+        // Printing must not panic (smoke for the CLI path).
+        result.print();
+    }
+
+    #[test]
+    fn empty_model_is_an_error_not_a_panic() {
+        let head = mini().head;
+        let empty = ModelParams { blocks: Vec::new(), head };
+        let err = tune(&empty, &DEFAULT_ALLOWLIST).unwrap_err();
+        assert!(err.to_string().contains("empty model"), "{err}");
+    }
+
+    #[test]
+    fn single_block_model_tunes_fine() {
+        let p = make_model_params(Some(vec![BlockConfig::new(6, 6, 8, 16, 8, 1, true)]));
+        let result = tune(&p, &DEFAULT_ALLOWLIST).unwrap();
+        for plan in &result.plans {
+            assert_eq!(plan.placement.len(), 1);
+            assert!(plan.is_uniform());
+        }
+    }
+
+    #[test]
+    fn tune_result_json_round_trips() {
+        let p = mini();
+        let result = tune(&p, &DEFAULT_ALLOWLIST).unwrap();
+        let text = result.to_json().render();
+        let back = TuneResult::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, result);
+        assert_eq!(back.to_json().render(), text);
+    }
+
+    #[test]
+    fn tune_cached_hits_after_a_store() {
+        let p = mini();
+        let cache = PlanCache::new(
+            std::env::temp_dir().join(format!("fused_dsc_tune_mod_{}", std::process::id())),
+        );
+        std::fs::remove_dir_all(cache.dir()).ok();
+        let (cold, hit0) = tune_cached(&p, &DEFAULT_ALLOWLIST, Some(&cache)).unwrap();
+        assert!(!hit0);
+        let (warm, hit1) = tune_cached(&p, &DEFAULT_ALLOWLIST, Some(&cache)).unwrap();
+        assert!(hit1);
+        assert_eq!(warm, cold);
+        // And without a cache nothing is written anywhere.
+        let (nocache, hit2) = tune_cached(&p, &DEFAULT_ALLOWLIST, None).unwrap();
+        assert!(!hit2);
+        assert_eq!(nocache, cold);
+        std::fs::remove_dir_all(cache.dir()).ok();
+    }
+}

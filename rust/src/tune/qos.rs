@@ -1,0 +1,191 @@
+//! QoS-class serving from tuned plans: one coordinator lane per class,
+//! each serving the same parameters from a *differently placed*
+//! [`crate::exec::ExecutionPlan`].
+//!
+//! The deployment story the tuner enables: a `latency` request runs on
+//! the latency-optimal placement (host core where the CFU's dataflow is a
+//! poor fit for the block shape), an `energy` request stays on the
+//! accelerator, `balanced` splits the difference.  All three lanes
+//! produce bit-identical logits — placement only moves *where* blocks
+//! run — so class choice is purely a cost/SLA decision.
+
+use std::str::FromStr;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::{Coordinator, Engine, Rejected, ServeConfig, Ticket};
+use crate::tensor::TensorI8;
+
+use super::search::Objective;
+use super::TuneResult;
+
+/// The serving classes a [`QosRouter`] exposes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QosClass {
+    /// Serve from the latency-optimal plan.
+    Latency,
+    /// Serve from the energy-optimal plan.
+    Energy,
+    /// Serve from the balanced plan.
+    Balanced,
+}
+
+impl QosClass {
+    pub const ALL: [QosClass; 3] = [QosClass::Latency, QosClass::Energy, QosClass::Balanced];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            QosClass::Latency => "latency",
+            QosClass::Energy => "energy",
+            QosClass::Balanced => "balanced",
+        }
+    }
+
+    /// The tuning objective this class serves from.
+    pub fn objective(&self) -> Objective {
+        match self {
+            QosClass::Latency => Objective::Latency,
+            QosClass::Energy => Objective::Energy,
+            QosClass::Balanced => Objective::Balanced,
+        }
+    }
+}
+
+impl std::fmt::Display for QosClass {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl FromStr for QosClass {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "latency" | "lat" => Ok(QosClass::Latency),
+            "energy" | "en" => Ok(QosClass::Energy),
+            "balanced" | "bal" => Ok(QosClass::Balanced),
+            other => Err(format!("unknown QoS class '{other}' (latency|energy|balanced)")),
+        }
+    }
+}
+
+/// One bounded, sharded [`Coordinator`] per QoS class, each configured
+/// with its class's tuned plan through the `ServeConfig::plan` seam.
+pub struct QosRouter {
+    lanes: Vec<(QosClass, Coordinator)>,
+}
+
+impl QosRouter {
+    /// Spin up all three lanes around a shared engine's parameters.
+    ///
+    /// `base` supplies the per-lane serving shape (workers, batching,
+    /// queue depth); its `plan` field is replaced per lane with the
+    /// class's tuned placement.
+    pub fn start(engine: &Arc<Engine>, tuned: &TuneResult, base: &ServeConfig) -> Result<Self> {
+        Self::start_classes(engine, tuned, base, &QosClass::ALL)
+    }
+
+    /// [`QosRouter::start`] for a subset of classes — a deployment that
+    /// serves one class should not pay for three warm worker pools.
+    pub fn start_classes(
+        engine: &Arc<Engine>,
+        tuned: &TuneResult,
+        base: &ServeConfig,
+        classes: &[QosClass],
+    ) -> Result<Self> {
+        let mut lanes = Vec::with_capacity(classes.len());
+        for &class in classes {
+            if lanes.iter().any(|(c, _)| *c == class) {
+                continue;
+            }
+            let plan = tuned.plan_for(class.objective()).to_execution_plan(&engine.params)?;
+            let cfg = ServeConfig { plan: Some(plan), ..base.clone() };
+            lanes.push((class, Coordinator::start(Arc::clone(engine), cfg)));
+        }
+        Ok(Self { lanes })
+    }
+
+    /// Submit to a class's lane (same admission contract as
+    /// [`Coordinator::submit`]: non-blocking, sheds when that lane's
+    /// queue is full).
+    ///
+    /// # Panics
+    ///
+    /// If the router was started without a lane for `class`.
+    pub fn submit(&self, class: QosClass, input: TensorI8) -> Result<Ticket, Rejected> {
+        self.coordinator(class).submit(input)
+    }
+
+    /// The lane serving `class` (metrics live on its coordinator).
+    ///
+    /// # Panics
+    ///
+    /// If the router was started without a lane for `class`.
+    pub fn coordinator(&self, class: QosClass) -> &Coordinator {
+        &self.lanes.iter().find(|(c, _)| *c == class).expect("no lane for this class").1
+    }
+
+    /// Drain and join every lane.
+    pub fn shutdown(self) {
+        for (_, coordinator) in self.lanes {
+            coordinator.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Backend;
+    use crate::model::blocks::BlockConfig;
+    use crate::model::weights::make_model_params;
+
+    #[test]
+    fn every_class_serves_bit_identical_logits() {
+        let params = make_model_params(Some(vec![
+            BlockConfig::new(8, 8, 8, 16, 8, 2, false),
+            BlockConfig::new(4, 4, 8, 16, 8, 1, true),
+        ]));
+        let tuned = super::super::tune(&params, &super::super::DEFAULT_ALLOWLIST).unwrap();
+        let engine = Arc::new(Engine::new(params, Backend::Reference));
+        let router = QosRouter::start(&engine, &tuned, &ServeConfig::default()).unwrap();
+        let x = engine.synthetic_input("qos.x");
+        let want = engine.infer(&x).unwrap();
+        for class in QosClass::ALL {
+            let got = router.submit(class, x.clone()).unwrap().wait().into_output().unwrap();
+            assert_eq!(got.logits, want.logits, "{class}");
+            assert_eq!(got.class, want.class, "{class}");
+            assert_eq!(router.coordinator(class).metrics.snapshot().completed, 1, "{class}");
+        }
+        router.shutdown();
+    }
+
+    #[test]
+    fn single_class_router_starts_one_lane_and_still_serves() {
+        let params = make_model_params(Some(vec![BlockConfig::new(6, 6, 8, 16, 8, 1, true)]));
+        let tuned = super::super::tune(&params, &super::super::DEFAULT_ALLOWLIST).unwrap();
+        let engine = Arc::new(Engine::new(params, Backend::Reference));
+        let base = ServeConfig::default();
+        let classes = [QosClass::Energy, QosClass::Energy]; // duplicates collapse
+        let router = QosRouter::start_classes(&engine, &tuned, &base, &classes).unwrap();
+        assert_eq!(router.lanes.len(), 1);
+        let x = engine.synthetic_input("qos.one");
+        let want = engine.infer(&x).unwrap();
+        let got = router.submit(QosClass::Energy, x).unwrap().wait().into_output().unwrap();
+        assert_eq!(got.logits, want.logits);
+        router.shutdown();
+    }
+
+    #[test]
+    fn class_names_parse_and_map_to_objectives() {
+        for class in QosClass::ALL {
+            assert_eq!(class.name().parse::<QosClass>().unwrap(), class);
+        }
+        assert_eq!(QosClass::Latency.objective(), Objective::Latency);
+        assert_eq!(QosClass::Energy.objective(), Objective::Energy);
+        assert_eq!(QosClass::Balanced.objective(), Objective::Balanced);
+        assert!("best".parse::<QosClass>().is_err());
+    }
+}

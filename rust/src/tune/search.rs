@@ -1,0 +1,408 @@
+//! Plan search over a [`CostTable`]: exact per-objective optima plus a
+//! Pareto frontier over (latency, energy, bytes).
+//!
+//! Whole-model cost is **separable**: every metric is a sum of
+//! independent per-block costs (blocks execute sequentially, and the
+//! executor seam makes per-block backend switches free at plan time), so
+//! the global optimum for any non-negative weighted combination of the
+//! metrics is the per-block argmin of that weighted cost — no
+//! combinatorial search.  The Pareto frontier is the *weighted-sum
+//! supported* frontier: a deterministic sweep of weight vectors over the
+//! objective simplex, each solved exactly, deduplicated, and filtered to
+//! the non-dominated set.  (Plans in a non-convex dent of the true
+//! frontier are not enumerated — for a separable sum over ≥ 16 blocks
+//! the supported set is what a deployment picks from anyway.)
+
+use std::fmt;
+use std::str::FromStr;
+
+use crate::exec::{Backend, ExecutionPlan, PlanError};
+use crate::model::weights::ModelParams;
+use crate::util::json::Json;
+
+use super::cost::CostTable;
+
+/// What a tuned plan minimizes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    /// End-to-end model latency (seconds).
+    Latency,
+    /// Energy per inference (joules).
+    Energy,
+    /// Bytes moved per inference.
+    Bytes,
+    /// Equal weights on the three metrics, each normalized per block.
+    Balanced,
+}
+
+impl Objective {
+    pub const ALL: [Objective; 4] =
+        [Objective::Latency, Objective::Energy, Objective::Bytes, Objective::Balanced];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Objective::Latency => "latency",
+            Objective::Energy => "energy",
+            Objective::Bytes => "bytes",
+            Objective::Balanced => "balanced",
+        }
+    }
+
+    /// The simplex weights this objective scalarizes to
+    /// (latency, energy, bytes).
+    fn weights(&self) -> [f64; 3] {
+        match self {
+            Objective::Latency => [1.0, 0.0, 0.0],
+            Objective::Energy => [0.0, 1.0, 0.0],
+            Objective::Bytes => [0.0, 0.0, 1.0],
+            Objective::Balanced => [1.0 / 3.0, 1.0 / 3.0, 1.0 / 3.0],
+        }
+    }
+}
+
+impl fmt::Display for Objective {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl FromStr for Objective {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "latency" | "lat" => Ok(Objective::Latency),
+            "energy" | "en" => Ok(Objective::Energy),
+            "bytes" | "traffic" => Ok(Objective::Bytes),
+            "balanced" | "bal" => Ok(Objective::Balanced),
+            other => Err(format!("unknown objective '{other}' (latency|energy|bytes|balanced)")),
+        }
+    }
+}
+
+/// A searched plan: the placement plus its whole-model totals.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TunedPlan {
+    /// What this plan optimizes: an [`Objective`] name, a Pareto-sweep
+    /// weight tag (`"w0.25+0.50+0.25"`), or `"uniform-<backend>"`.
+    pub objective: String,
+    /// The per-block backend choice.
+    pub placement: Vec<Backend>,
+    /// Total model latency (sum of per-block latencies), seconds.
+    pub latency_s: f64,
+    /// Total energy per inference, joules.
+    pub energy_j: f64,
+    /// Total bytes moved per inference.
+    pub bytes: u64,
+}
+
+impl TunedPlan {
+    /// True when every block landed on the same backend.
+    pub fn is_uniform(&self) -> bool {
+        self.placement.windows(2).all(|w| w[0] == w[1])
+    }
+
+    /// Materialize as an [`ExecutionPlan`] over `params` (the
+    /// until-now-unused heterogeneous `with_placement` path).
+    pub fn to_execution_plan(&self, params: &ModelParams) -> Result<ExecutionPlan, PlanError> {
+        if self.placement.len() != params.blocks.len() {
+            return Err(PlanError::StepCountMismatch {
+                plan: self.placement.len(),
+                model: params.blocks.len(),
+            });
+        }
+        ExecutionPlan::try_with_placement(params, |i, _| self.placement[i])
+    }
+
+    /// Compact placement description: `"reference x12 + fused-host-v3 x4"`
+    /// (in first-appearance order).
+    pub fn placement_summary(&self) -> String {
+        let mut counts: Vec<(&'static str, usize)> = Vec::new();
+        for b in &self.placement {
+            match counts.iter().position(|(name, _)| *name == b.name()) {
+                Some(i) => counts[i].1 += 1,
+                None => counts.push((b.name(), 1)),
+            }
+        }
+        counts.iter().map(|(name, n)| format!("{name} x{n}")).collect::<Vec<_>>().join(" + ")
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut placement = Json::arr();
+        for b in &self.placement {
+            placement = placement.push(b.name());
+        }
+        Json::obj()
+            .set("objective", self.objective.as_str())
+            .set("placement", placement)
+            .set("uniform", self.is_uniform())
+            .set("latency_s", self.latency_s)
+            .set("energy_j", self.energy_j)
+            .set("bytes", self.bytes)
+    }
+
+    pub fn from_json(j: &Json) -> Result<TunedPlan, String> {
+        let num = |key: &str| -> Result<f64, String> {
+            j.get(key).and_then(Json::as_f64).ok_or_else(|| format!("plan missing '{key}'"))
+        };
+        let objective = j.get("objective").and_then(Json::as_str);
+        let objective = objective.ok_or("plan missing 'objective'")?.to_string();
+        let mut placement = Vec::new();
+        for b in j.get("placement").and_then(Json::as_array).ok_or("plan missing 'placement'")? {
+            placement.push(b.as_str().ok_or("placement entry not a string")?.parse::<Backend>()?);
+        }
+        Ok(TunedPlan {
+            objective,
+            placement,
+            latency_s: num("latency_s")?,
+            energy_j: num("energy_j")?,
+            bytes: j.get("bytes").and_then(Json::as_u64).ok_or("plan missing 'bytes'")?,
+        })
+    }
+}
+
+/// Build a [`TunedPlan`] from per-block column choices, totalling the
+/// chosen cells.
+fn plan_from_choice(table: &CostTable, objective: String, choice: &[usize]) -> TunedPlan {
+    let mut latency_s = 0.0;
+    let mut energy_j = 0.0;
+    let mut bytes = 0u64;
+    let mut placement = Vec::with_capacity(choice.len());
+    for (row, &j) in table.rows.iter().zip(choice) {
+        let cv = &row[j];
+        latency_s += cv.latency_s;
+        energy_j += cv.energy_j;
+        bytes += cv.bytes;
+        placement.push(table.backends[j]);
+    }
+    TunedPlan { objective, placement, latency_s, energy_j, bytes }
+}
+
+/// Per-block argmin of the weighted, per-block-normalized cost.
+///
+/// Normalization divides each metric by its per-block minimum so the
+/// three metrics are commensurable; for single-metric weights this
+/// reduces to the plain per-block argmin of that metric.  Ties break to
+/// the lower latency, then to the earlier allowlist position — fully
+/// deterministic.
+fn weighted_choice(table: &CostTable, w: [f64; 3]) -> Result<Vec<usize>, PlanError> {
+    if table.is_empty() {
+        return Err(PlanError::EmptyModel);
+    }
+    let nz = |v: f64| if v > 0.0 { v } else { 1.0 };
+    let mut choice = Vec::with_capacity(table.rows.len());
+    for row in &table.rows {
+        let min_lat = nz(row.iter().map(|c| c.latency_s).fold(f64::INFINITY, f64::min));
+        let min_en = nz(row.iter().map(|c| c.energy_j).fold(f64::INFINITY, f64::min));
+        let min_by = nz(row.iter().map(|c| c.bytes as f64).fold(f64::INFINITY, f64::min));
+        let mut best: Option<(f64, f64, usize)> = None;
+        for (j, c) in row.iter().enumerate() {
+            let score = w[0] * c.latency_s / min_lat
+                + w[1] * c.energy_j / min_en
+                + w[2] * c.bytes as f64 / min_by;
+            let better = match best {
+                None => true,
+                Some((bs, bl, _)) => score < bs || (score == bs && c.latency_s < bl),
+            };
+            if better {
+                best = Some((score, c.latency_s, j));
+            }
+        }
+        // The row is non-empty (CostTable construction guarantees it).
+        choice.push(best.expect("non-empty cost row").2);
+    }
+    Ok(choice)
+}
+
+/// The exact optimum for one objective — per-block separability makes the
+/// per-block argmin globally optimal (see the module docs).
+pub fn optimize(table: &CostTable, objective: Objective) -> Result<TunedPlan, PlanError> {
+    let choice = weighted_choice(table, objective.weights())?;
+    Ok(plan_from_choice(table, objective.name().to_string(), &choice))
+}
+
+/// The all-blocks-on-one-backend plan for column `backend_idx` (the
+/// baseline every tuned plan is compared against).
+pub fn uniform_plan(table: &CostTable, backend_idx: usize) -> TunedPlan {
+    let choice = vec![backend_idx; table.len()];
+    let name = format!("uniform-{}", table.backends[backend_idx].name());
+    plan_from_choice(table, name, &choice)
+}
+
+/// True when `b` is at least as good as `a` on every metric and strictly
+/// better on at least one.
+fn dominates(b: &TunedPlan, a: &TunedPlan) -> bool {
+    b.latency_s <= a.latency_s
+        && b.energy_j <= a.energy_j
+        && b.bytes <= a.bytes
+        && (b.latency_s < a.latency_s || b.energy_j < a.energy_j || b.bytes < a.bytes)
+}
+
+/// The weighted-sum supported Pareto frontier over
+/// (latency, energy, bytes): a simplex sweep in steps of 1/4 (15 weight
+/// vectors), each solved exactly, deduplicated by placement, filtered to
+/// non-dominated plans, sorted by ascending latency.
+pub fn pareto_frontier(table: &CostTable) -> Result<Vec<TunedPlan>, PlanError> {
+    const STEPS: usize = 4;
+    let mut plans: Vec<TunedPlan> = Vec::new();
+    for i in 0..=STEPS {
+        for j in 0..=(STEPS - i) {
+            let k = STEPS - i - j;
+            let w = [i as f64 / STEPS as f64, j as f64 / STEPS as f64, k as f64 / STEPS as f64];
+            let choice = weighted_choice(table, w)?;
+            let name = format!("w{:.2}+{:.2}+{:.2}", w[0], w[1], w[2]);
+            let plan = plan_from_choice(table, name, &choice);
+            if !plans.iter().any(|p| p.placement == plan.placement) {
+                plans.push(plan);
+            }
+        }
+    }
+    let mut front: Vec<TunedPlan> = Vec::new();
+    for plan in &plans {
+        if !plans.iter().any(|other| dominates(other, plan)) {
+            front.push(plan.clone());
+        }
+    }
+    front.sort_by(|a, b| {
+        a.latency_s
+            .total_cmp(&b.latency_s)
+            .then(a.energy_j.total_cmp(&b.energy_j))
+            .then(a.bytes.cmp(&b.bytes))
+    });
+    Ok(front)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::blocks::BlockConfig;
+    use crate::model::weights::make_model_params;
+
+    fn table() -> CostTable {
+        let p = make_model_params(Some(vec![
+            BlockConfig::new(8, 8, 8, 16, 8, 2, false),
+            BlockConfig::new(4, 4, 8, 16, 8, 1, true),
+            BlockConfig::new(4, 4, 8, 24, 16, 1, false),
+        ]));
+        CostTable::profile(&p, &super::super::DEFAULT_ALLOWLIST).unwrap()
+    }
+
+    #[test]
+    fn per_objective_optimum_is_the_per_block_argmin() {
+        let t = table();
+        let plan = optimize(&t, Objective::Latency).unwrap();
+        assert_eq!(plan.objective, "latency");
+        for (bi, row) in t.rows.iter().enumerate() {
+            let chosen = t.backends.iter().position(|b| *b == plan.placement[bi]).unwrap();
+            for cv in row {
+                assert!(row[chosen].latency_s <= cv.latency_s, "block {bi} not latency-minimal");
+            }
+        }
+        // And the totals are exactly the sums of the chosen cells.
+        let mut sum = 0.0;
+        for (row, b) in t.rows.iter().zip(&plan.placement) {
+            let j = t.backends.iter().position(|x| x == b).unwrap();
+            sum += row[j].latency_s;
+        }
+        assert!((plan.latency_s - sum).abs() < 1e-15);
+    }
+
+    #[test]
+    fn every_objective_beats_or_ties_every_uniform_plan_on_its_metric() {
+        let t = table();
+        for (oi, objective) in Objective::ALL.iter().enumerate() {
+            if *objective == Objective::Balanced {
+                continue;
+            }
+            let plan = optimize(&t, *objective).unwrap();
+            for j in 0..t.backends.len() {
+                let uni = uniform_plan(&t, j);
+                let (tuned, base) = match oi {
+                    0 => (plan.latency_s, uni.latency_s),
+                    1 => (plan.energy_j, uni.energy_j),
+                    _ => (plan.bytes as f64, uni.bytes as f64),
+                };
+                assert!(tuned <= base, "{objective} worse than uniform {}", uni.objective);
+            }
+        }
+    }
+
+    #[test]
+    fn pareto_frontier_is_mutually_non_dominated() {
+        let t = table();
+        let front = pareto_frontier(&t).unwrap();
+        assert!(!front.is_empty());
+        for a in &front {
+            for b in &front {
+                assert!(!dominates(a, b), "{} dominates {}", a.objective, b.objective);
+            }
+        }
+        // Sorted by latency; the latency corner leads the frontier.
+        let lat = optimize(&t, Objective::Latency).unwrap();
+        assert!(front.windows(2).all(|w| w[0].latency_s <= w[1].latency_s));
+        assert!((front[0].latency_s - lat.latency_s).abs() < 1e-15);
+    }
+
+    #[test]
+    fn empty_table_is_a_typed_error() {
+        let t = CostTable {
+            model_key: "0".into(),
+            backends: vec![crate::exec::Backend::Reference],
+            shapes: Vec::new(),
+            rows: Vec::new(),
+        };
+        assert_eq!(optimize(&t, Objective::Latency).unwrap_err(), PlanError::EmptyModel);
+        assert_eq!(pareto_frontier(&t).unwrap_err(), PlanError::EmptyModel);
+    }
+
+    #[test]
+    fn plan_materializes_through_with_placement() {
+        let p = make_model_params(Some(vec![
+            BlockConfig::new(8, 8, 8, 16, 8, 2, false),
+            BlockConfig::new(4, 4, 8, 16, 8, 1, true),
+        ]));
+        let t = CostTable::profile(&p, &super::super::DEFAULT_ALLOWLIST).unwrap();
+        let plan = optimize(&t, Objective::Energy).unwrap();
+        let ep = plan.to_execution_plan(&p).unwrap();
+        assert_eq!(ep.len(), 2);
+        for (step, b) in ep.steps().iter().zip(&plan.placement) {
+            assert_eq!(step.backend, *b);
+        }
+        // A placement for a different block count is a typed error.
+        let other = make_model_params(Some(vec![BlockConfig::new(8, 8, 8, 16, 8, 2, false)]));
+        assert_eq!(
+            plan.to_execution_plan(&other).unwrap_err(),
+            PlanError::StepCountMismatch { plan: 2, model: 1 }
+        );
+    }
+
+    #[test]
+    fn objective_names_parse_and_round_trip() {
+        for o in Objective::ALL {
+            assert_eq!(o.name().parse::<Objective>().unwrap(), o);
+            assert_eq!(format!("{o}"), o.name());
+        }
+        assert_eq!("lat".parse::<Objective>().unwrap(), Objective::Latency);
+        assert!("speed".parse::<Objective>().is_err());
+    }
+
+    #[test]
+    fn placement_summary_groups_in_first_appearance_order() {
+        let t = table();
+        let plan = optimize(&t, Objective::Bytes).unwrap();
+        let summary = plan.placement_summary();
+        assert!(summary.contains(" x"), "{summary}");
+        let uni = uniform_plan(&t, 0);
+        assert_eq!(uni.placement_summary(), format!("{} x{}", t.backends[0].name(), t.len()));
+        assert!(uni.is_uniform());
+    }
+
+    #[test]
+    fn tuned_plan_json_round_trips() {
+        let t = table();
+        let plan = optimize(&t, Objective::Balanced).unwrap();
+        let text = plan.to_json().render();
+        let back = TunedPlan::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, plan);
+    }
+}

@@ -125,6 +125,62 @@ fn coordinator_end_to_end_consistency() {
     assert_eq!(snap.total_latency.count, 24);
 }
 
+/// The tuner's headline behavior on the default model (the ISSUE 5
+/// acceptance criterion): the latency objective selects a genuinely
+/// heterogeneous plan — the fused CFU on the stride-2 downsampling blocks
+/// (where its 9-engine × 8-lane expansion array runs fully fed at full
+/// input resolution), the host core on the rest — that beats every
+/// uniform plan on modeled latency, executes through the coordinator via
+/// `ServeConfig::plan`, and serves logits bit-identical to the uniform
+/// reference plan.
+#[test]
+fn tuner_selects_a_heterogeneous_plan_on_the_backbone() {
+    use fused_dsc::tune::{self, Objective};
+    let params = make_model_params(None);
+    let result = tune::tune(&params, &tune::DEFAULT_ALLOWLIST).unwrap();
+
+    let latency = result.plan_for(Objective::Latency);
+    assert!(
+        !latency.is_uniform(),
+        "latency plan should mix host and CFU placements: [{}]",
+        latency.placement_summary()
+    );
+    assert!(latency.placement.iter().any(|b| matches!(b, Backend::FusedHost(_))));
+    assert!(latency.placement.iter().any(|b| *b == Backend::Reference));
+    for uniform in result.uniform_plans() {
+        assert!(
+            latency.latency_s <= uniform.latency_s,
+            "tuned latency {} worse than {}",
+            latency.latency_s,
+            uniform.objective
+        );
+    }
+    // The energy objective stays on the accelerator (the paper's v3 draws
+    // the least power AND finishes fastest among the CFU versions).
+    let energy = result.plan_for(Objective::Energy);
+    assert!(
+        energy.placement.iter().all(|b| matches!(b, Backend::FusedHost(_))),
+        "energy plan should stay on the CFU: [{}]",
+        energy.placement_summary()
+    );
+    assert!(energy.energy_j < latency.energy_j);
+    assert!(latency.latency_s < energy.latency_s);
+
+    // The heterogeneous plan serves through the coordinator, bit-exact
+    // against the uniform reference plan.
+    let engine = Arc::new(Engine::new(params.clone(), Backend::Reference));
+    let x = block_input(&params.blocks[0].cfg, params.blocks[0].zp_in(), "int.tune");
+    let want = engine.infer(&x).unwrap();
+    let plan = latency.to_execution_plan(&params).unwrap();
+    let coord = Coordinator::start(
+        Arc::clone(&engine),
+        ServeConfig { plan: Some(plan), ..Default::default() },
+    );
+    let got = coord.submit(x).unwrap().wait().into_output().unwrap();
+    assert_eq!(got.logits, want.logits);
+    assert!(got.sim_cycles > 0, "the CFU-placed blocks contribute cycles");
+}
+
 /// Backbone geometry invariants used throughout the system.
 #[test]
 fn backbone_is_well_formed() {

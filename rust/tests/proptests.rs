@@ -201,6 +201,7 @@ fn coordinator_scheduling_invariants() {
                 batch_timeout: std::time::Duration::from_micros(g.i64(0, 2000) as u64),
                 workers,
                 queue_depth,
+                plan: None,
             },
         );
         let c = engine.params.blocks[0].cfg;
@@ -248,6 +249,88 @@ fn coordinator_scheduling_invariants() {
         prop_assert_eq!(snap.failed, 0);
         prop_assert_eq!(snap.total_latency.count as usize, admitted);
         prop_assert!(snap.max_batch_seen <= max_batch, "batch bound violated");
+        Ok(())
+    });
+}
+
+/// Build a random chained model of 1–3 small blocks (the tuner's probe
+/// space: every block's input geometry equals its predecessor's output).
+fn arb_chained_model(g: &mut Gen) -> fused_dsc::model::weights::ModelParams {
+    let nblocks = g.usize(1, 3);
+    let (mut h, mut w, mut cin) = (g.i32(3, 6) as u32, g.i32(3, 6) as u32, 8u32);
+    let mut cfgs = Vec::new();
+    for _ in 0..nblocks {
+        let m = 8 * g.i32(1, 2) as u32;
+        let cout = 8 * g.i32(1, 2) as u32;
+        let stride = *g.pick(&[1u32, 2]);
+        let residual = stride == 1 && cin == cout && g.bool();
+        let cfg = BlockConfig::new(h, w, cin, m, cout, stride, residual);
+        (h, w, cin) = (cfg.h_out(), cfg.w_out(), cout);
+        cfgs.push(cfg);
+    }
+    fused_dsc::model::weights::make_model_params(Some(cfgs))
+}
+
+/// THE tuner correctness property: every plan the search emits — the four
+/// per-objective optima and the whole Pareto frontier, heterogeneous or
+/// not — produces logits bit-identical to `ExecutionPlan::uniform
+/// (Reference)` across random chained geometries.  Tuning moves *where*
+/// blocks run, never *what* they compute.
+#[test]
+fn tuned_plans_are_bit_identical_to_the_uniform_reference() {
+    use fused_dsc::tune;
+    check("tuned plans == uniform reference", |g| {
+        let params = arb_chained_model(g);
+        let result = tune::tune(&params, &tune::DEFAULT_ALLOWLIST).map_err(|e| e.to_string())?;
+        let reference = Engine::new(params.clone(), Backend::Reference);
+        let x = reference.synthetic_input("pt.tune");
+        let want = reference.infer(&x).map_err(|e| e.to_string())?;
+        for plan in result.plans.iter().chain(result.pareto.iter()) {
+            let ep = plan.to_execution_plan(&params).map_err(|e| e.to_string())?;
+            let engine = Engine::with_plan(params.clone(), ep);
+            let got = engine.infer(&x).map_err(|e| e.to_string())?;
+            prop_assert!(
+                got.logits == want.logits,
+                "plan '{}' [{}] diverged from the reference",
+                plan.objective,
+                plan.placement_summary()
+            );
+            prop_assert_eq!(got.class, want.class);
+        }
+        Ok(())
+    });
+}
+
+/// Cost-table and plan-cache serialization is deterministic and lossless:
+/// profiling the same geometry twice yields byte-identical JSON, the
+/// parsed form reconstructs the exact table/plans, and a cache store →
+/// load round trip returns the same result.
+#[test]
+fn tune_serialization_round_trips_deterministically() {
+    use fused_dsc::tune;
+    use fused_dsc::util::json::Json;
+    check("tune serialization round trip", |g| {
+        let params = arb_chained_model(g);
+        let first = tune::tune(&params, &tune::DEFAULT_ALLOWLIST).map_err(|e| e.to_string())?;
+        let again = tune::tune(&params, &tune::DEFAULT_ALLOWLIST).map_err(|e| e.to_string())?;
+        let text = first.to_json().render();
+        prop_assert!(
+            again.to_json().render() == text,
+            "same geometry serialized to different bytes"
+        );
+        let parsed = Json::parse(&text).map_err(|e| format!("parse: {e}"))?;
+        let back = tune::TuneResult::from_json(&parsed).map_err(|e| format!("from_json: {e}"))?;
+        prop_assert!(back == first, "round trip lost information");
+        prop_assert!(back.to_json().render() == text, "re-render not byte-identical");
+        // And through the on-disk cache (seeded dir per case to avoid
+        // cross-case interference under parallel test threads).
+        let dir = std::env::temp_dir()
+            .join(format!("fused_dsc_pt_cache_{}_{:x}", std::process::id(), g.seed()));
+        let cache = tune::PlanCache::new(&dir);
+        cache.store(&first).map_err(|e| e.to_string())?;
+        let loaded = cache.load(&params, &tune::DEFAULT_ALLOWLIST).ok_or("cache miss after store")?;
+        std::fs::remove_dir_all(&dir).ok();
+        prop_assert!(loaded == first, "cache round trip lost information");
         Ok(())
     });
 }

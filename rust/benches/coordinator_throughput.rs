@@ -27,6 +27,7 @@ fn main() {
     let engine = Arc::new(Engine::new(params, Backend::FusedHost(PipelineVersion::V3)));
     let input = |i: u64| engine.synthetic_input(&format!("ct.{i}"));
 
+    let threads = b.threads();
     for (batch, workers) in [(1usize, 1usize), (4, 2), (8, 4), (16, 8)] {
         let engine = Arc::clone(&engine);
         b.bench(&format!("serve/batch{batch}-workers{workers} (64 req)"), || {
@@ -36,6 +37,7 @@ fn main() {
                 workers,
                 queue_depth: 128,
                 plan: None,
+                threads,
             };
             let coord = Coordinator::start(Arc::clone(&engine), cfg);
             let tickets: Vec<_> = (0..64)

@@ -4,6 +4,14 @@
 //!
 //! `--json <dir>` emits the `BENCH_simulator_hotpath.json` artifact tracked
 //! per-PR by the CI bench-smoke job (EXPERIMENTS.md §Perf log).
+//!
+//! `--threads N` runs the `block/fused-*-host-functional` workloads on an
+//! `N`-chunk row pool (the `ExecutionPlan::with_threads` backend).  The
+//! bench *name* stays the same at every thread count — the CI job uploads
+//! one artifact per thread count instead — and the cycles/logits are
+//! bit-identical by construction, so only wall time moves.
+
+use std::sync::Arc;
 
 use fused_dsc::baseline::run_block_v0;
 use fused_dsc::cfu::{CfuUnit, PipelineVersion};
@@ -16,6 +24,7 @@ use fused_dsc::model::blocks::BlockConfig;
 use fused_dsc::model::weights::{gen_input, make_block_params};
 use fused_dsc::tensor::TensorI8;
 use fused_dsc::util::bench::Bencher;
+use fused_dsc::util::pool::RowPool;
 
 fn main() {
     let mut b = Bencher::named("simulator_hotpath");
@@ -66,9 +75,14 @@ fn main() {
     );
     b.bench("block/v0-software-iss", || run_block_v0(&bp, &x).unwrap().cycles);
     b.bench("block/fused-v3-iss", || run_block_fused(&bp, &x, PipelineVersion::V3).unwrap().cycles);
-    b.bench("block/fused-v3-host-functional", || {
-        let mut u = CfuUnit::new(PipelineVersion::V3);
-        u.run_block_host(&bp, &x).1
-    });
+    // The tentpole workload: one persistent (warm) unit, optionally backed
+    // by a row pool — the same configuration the serving steady state runs.
+    let threads = b.threads();
+    let pool = (threads > 1).then(|| Arc::new(RowPool::new(threads)));
+    let mut unit = match &pool {
+        Some(pool) => CfuUnit::with_parallelism(PipelineVersion::V3, Arc::clone(pool)),
+        None => CfuUnit::new(PipelineVersion::V3),
+    };
+    b.bench("block/fused-v3-host-functional", || unit.run_block_host(&bp, &x).1);
     b.finish();
 }

@@ -27,6 +27,7 @@ fn main() -> anyhow::Result<()> {
         // (shed) rather than serve stale ones seconds late.
         queue_depth: 32,
         plan: None,
+        threads: 1,
     };
     println!(
         "coordinator: max_batch={} workers={} queue_depth={} backend={}",

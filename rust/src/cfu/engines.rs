@@ -34,28 +34,45 @@ pub struct EngineStats {
     pub requants: u64,
 }
 
+/// Output pixels per row tile in the batch path ([`fused_row`]): the
+/// input columns a tile's 3×3 windows touch are fetched into the column
+/// scratch **once** and shared by every pixel of the tile (adjacent
+/// windows overlap two of their three columns at stride 1).
+pub const ROW_TILE: usize = 4;
+
+/// Widest column scratch any tile needs: `(ROW_TILE - 1) * stride + 3`
+/// input columns at the maximum stride of 2.
+const MAX_TILE_COLS: usize = (ROW_TILE - 1) * 2 + 3;
+
 /// Reusable flat scratch buffers for the fused pixel pipeline — the host
 /// model of the hardware's transient pipeline registers.
 ///
 /// Sized once per layer by [`FusedScratch::ensure`]; the steady-state pixel
 /// loop then runs with **zero heap allocations** (guarded by
-/// `tests/alloc_regression.rs`).  Layouts are flat and row-major so the
-/// inner MAC loops walk contiguous memory:
+/// `tests/alloc_regression.rs`).  Layouts are flat and channel-blocked so
+/// the inner MAC loops walk contiguous memory in fixed 8-lane strides:
 ///
-/// * `tile[f * 9 + pos]` — the F1 tile value for expanded channel `f` at
-///   window position `pos` (what the nine engines hold in their output
-///   registers before streaming to the depthwise unit);
+/// * `tile[pos * M + f]` — the F1 tile value for expanded channel `f` at
+///   window position `pos` (**pos-major**, so the depthwise stage reads
+///   each tap's M channels as one contiguous slice);
 /// * `xc[ch * 9 + pos]` — the pre-centered (`x - zp_in`) input window for
-///   channel `ch`, fetched once per pixel (Input-Stationary);
+///   channel `ch`, fetched once per pixel (Input-Stationary; the
+///   per-pixel [`expansion_tile`] path);
+/// * `cols[(ky * ncols + ci) * Cin + ch]` — the pre-centered input
+///   *columns* of a whole row tile (the [`fused_row`] batch path): window
+///   row `ky`, tile-local column `ci`, all Cin channels contiguous;
 /// * `f2[ch]` — the depthwise output vector;
 /// * `f2c[ch]` — `f2` pre-centered at the projection broadcast port;
+/// * `dw_acc[ch]` — the depthwise accumulators (vectorized batch path);
 /// * `out[c]` — the pixel's Cout output channels.
 #[derive(Debug, Default)]
 pub struct FusedScratch {
     tile: Vec<i8>,
     xc: Vec<i32>,
+    cols: Vec<i32>,
     f2: Vec<i8>,
     f2c: Vec<i32>,
+    dw_acc: Vec<i32>,
     out: Vec<i8>,
 }
 
@@ -82,10 +99,14 @@ impl FusedScratch {
         self.tile.resize(m * 9, 0);
         self.xc.clear();
         self.xc.resize(cin * 9, 0);
+        self.cols.clear();
+        self.cols.resize(3 * MAX_TILE_COLS * cin, 0);
         self.f2.clear();
         self.f2.resize(m, 0);
         self.f2c.clear();
         self.f2c.resize(m, 0);
+        self.dw_acc.clear();
+        self.dw_acc.resize(m, 0);
         self.out.clear();
         self.out.resize(cout, 0);
     }
@@ -108,7 +129,7 @@ impl FusedScratch {
 }
 
 /// Compute the 3×3×M F1 tile for the output pixel at (`oy`, `ox`) into
-/// `scratch.tile` (`tile[f * 9 + pos]` — see [`FusedScratch`]).
+/// `scratch.tile` (pos-major, `tile[pos * M + f]` — see [`FusedScratch`]).
 #[allow(clippy::too_many_arguments)]
 pub fn expansion_tile(
     cfg: &LayerConfig,
@@ -164,18 +185,18 @@ pub fn expansion_tile(
             }
         }
         // Post-processing pipeline (Fig. 6b): bias already folded into the
-        // accumulator init; requantize + ReLU per engine.
-        let t: &mut [i8; 9] = (&mut scratch.tile[f * 9..f * 9 + 9]).try_into().unwrap();
+        // accumulator init; requantize + ReLU per engine.  The tile is
+        // pos-major so each tap's M channels are contiguous downstream.
         for pos in 0..9 {
-            t[pos] = q.requantize(acc[pos]);
+            scratch.tile[pos * m + f] = q.requantize(acc[pos]);
         }
     }
     stats.ex_macs += (m * chunks * 8 * 9) as u64;
     stats.requants += (m * 9) as u64;
 }
 
-/// Depthwise: consume the F1 tile (flat, `tile[ch * 9 + pos]`), produce the
-/// M-element F2 vector for this pixel into `f2`.  The window position mask
+/// Depthwise: consume the F1 tile (flat pos-major, `tile[pos * M + ch]`),
+/// produce the M-element F2 vector for this pixel into `f2`.  The window position mask
 /// handles F1's *virtual* padding: tile positions whose source coordinates
 /// fall outside the map are replaced by the F1 zero point before the MAC
 /// (the hardware's address-generation check, Fig. 13b).
@@ -208,18 +229,17 @@ pub fn depthwise_pixel(
     let all_valid = valid == [true; 9];
     for ch in 0..m {
         let w = dww.read_filter(ch); // one-cycle 72-bit fetch
-        let t: &[i8; 9] = tile[ch * 9..ch * 9 + 9].try_into().unwrap();
         let mut acc = dw_bias[ch];
         // Nine-way MAC array: all nine taps in a single cycle.  Interior
         // pixels (the common case) take the branch-free path.
         if all_valid {
-            for pos in 0..9 {
-                acc += (t[pos] as i32 - zp) * (w[pos] as i32);
+            for (pos, &wv) in w.iter().enumerate() {
+                acc += (tile[pos * m + ch] as i32 - zp) * (wv as i32);
             }
         } else {
-            for pos in 0..9 {
-                let x = if valid[pos] { t[pos] as i32 } else { zp };
-                acc += (x - zp) * (w[pos] as i32);
+            for (pos, &wv) in w.iter().enumerate() {
+                let x = if valid[pos] { tile[pos * m + ch] as i32 } else { zp };
+                acc += (x - zp) * (wv as i32);
             }
         }
         f2[ch] = q.requantize(acc);
@@ -301,6 +321,223 @@ pub fn fused_pixel(
     );
 }
 
+/// Fixed-width 8-lane dot product over pre-centered inputs — the shape the
+/// autovectorizer turns into packed integer MACs.  Both slices must have
+/// the same multiple-of-8 length (every channel dim is a multiple of 8 by
+/// [`crate::model::blocks::BlockConfig::validate`]).  The lane-then-sum
+/// order is a pure reordering of i32 additions, which wrap and are exactly
+/// associative — bit-identical to the sequential accumulation.
+#[inline(always)]
+fn dot_blocked(x: &[i32], w: &[i8]) -> i32 {
+    debug_assert_eq!(x.len(), w.len());
+    debug_assert_eq!(x.len() % 8, 0);
+    let mut lanes = [0i32; 8];
+    for (xs, ws) in x.chunks_exact(8).zip(w.chunks_exact(8)) {
+        for l in 0..8 {
+            lanes[l] += xs[l] * ws[l] as i32;
+        }
+    }
+    lanes.iter().sum()
+}
+
+/// Expansion stage of the batch path: build the pos-major F1 tile for
+/// tile-local pixel `px` from the shared pre-centered column scratch.
+/// Pure compute over contiguous slices — no gathers, no counters.
+fn expansion_from_cols(
+    cfg: &LayerConfig,
+    exw: &ExpansionFilterBuffer,
+    ex_bias: &[i32],
+    cols: &[i32],
+    ncols: usize,
+    px: usize,
+    tile: &mut [i8],
+) {
+    let m = cfg.m as usize;
+    let cin = cfg.cin as usize;
+    let q = cfg.ex_quant();
+    let stride = cfg.stride as usize;
+    for f in 0..m {
+        let w = exw.filter_row(f);
+        for pos in 0..9 {
+            let (ky, kx) = (pos / 3, pos % 3);
+            let ci = px * stride + kx;
+            let x = &cols[(ky * ncols + ci) * cin..][..cin];
+            tile[pos * m + f] = q.requantize(ex_bias[f] + dot_blocked(x, w));
+        }
+    }
+}
+
+/// Depthwise stage of the batch path: one contiguous M-wide pass per tap,
+/// accumulating into `dw_acc`.  Out-of-map taps are *skipped* instead of
+/// masked — the padded F1 value equals the zero point, so the masked term
+/// `(zp - zp) * w` is exactly zero.
+#[allow(clippy::too_many_arguments)]
+fn depthwise_from_tile(
+    cfg: &LayerConfig,
+    dww: &DwFilterBuffer,
+    dw_bias: &[i32],
+    oy: u32,
+    ox: u32,
+    tile: &[i8],
+    dw_acc: &mut [i32],
+    f2: &mut [i8],
+) {
+    let m = cfg.m as usize;
+    let q = cfg.dw_quant();
+    let zp = cfg.zp_f1;
+    let cy = (oy * cfg.stride) as i64;
+    let cx = (ox * cfg.stride) as i64;
+    dw_acc[..m].copy_from_slice(&dw_bias[..m]);
+    for pos in 0..9 {
+        let (ky, kx) = ((pos / 3) as i64, (pos % 3) as i64);
+        let r = cy - 1 + ky;
+        let c = cx - 1 + kx;
+        if r < 0 || c < 0 || r >= cfg.h as i64 || c >= cfg.w as i64 {
+            continue;
+        }
+        let t = &tile[pos * m..(pos + 1) * m];
+        let w = dww.bank(pos);
+        for ch in 0..m {
+            dw_acc[ch] += (t[ch] as i32 - zp) * w[ch] as i32;
+        }
+    }
+    for ch in 0..m {
+        f2[ch] = q.requantize(dw_acc[ch]);
+    }
+}
+
+/// Projection stage of the batch path: pre-center F2 once, then one
+/// contiguous blocked dot per active engine per pass.
+fn projection_from_f2(
+    cfg: &LayerConfig,
+    prw: &ProjectionWeightBuffers,
+    pr_bias: &[i32],
+    f2: &[i8],
+    f2c: &mut [i32],
+    out: &mut [i8],
+) {
+    let m = cfg.m as usize;
+    let cout = cfg.cout as usize;
+    let q = cfg.pr_quant();
+    let passes = cout.div_ceil(NUM_PROJ_ENGINES);
+    for (c, &x) in f2.iter().take(m).enumerate() {
+        f2c[c] = x as i32 - cfg.zp_f2;
+    }
+    let xc = &f2c[..m];
+    for pass in 0..passes {
+        let active = (cout - pass * NUM_PROJ_ENGINES).min(NUM_PROJ_ENGINES);
+        for e in 0..active {
+            let w = prw.engine_weights(e, pass);
+            let a = pr_bias[pass * NUM_PROJ_ENGINES + e] + dot_blocked(xc, w);
+            out[pass * NUM_PROJ_ENGINES + e] = q.requantize(a);
+        }
+    }
+}
+
+/// Batch fused pixel path: compute `npx` horizontally adjacent output
+/// pixels of row `oy` starting at column `ox0`, writing their outputs
+/// contiguously into `out` (`npx * Cout` bytes).
+///
+/// The input columns all `npx` windows touch are fetched from the banked
+/// IFMAP buffer **once** into `scratch.cols` (pre-centered), so adjacent
+/// pixels share their overlapping window columns; the per-stage cores then
+/// run over contiguous channel-blocked slices.  Bit-identical to calling
+/// [`fused_pixel`] per pixel: same requantization, same i32 sums (addition
+/// reordering is exact), same virtual-padding values.
+///
+/// This path is pure `&self` compute and bumps **no** counters; callers
+/// account traffic and MAC activity in closed form with
+/// [`account_pixels`] — which is what makes the result independent of how
+/// pixels are tiled or partitioned across threads.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_row(
+    cfg: &LayerConfig,
+    ifmap: &IfmapBuffer,
+    exw: &ExpansionFilterBuffer,
+    dww: &DwFilterBuffer,
+    prw: &ProjectionWeightBuffers,
+    ex_bias: &[i32],
+    dw_bias: &[i32],
+    pr_bias: &[i32],
+    oy: u32,
+    ox0: u32,
+    npx: usize,
+    scratch: &mut FusedScratch,
+    out: &mut [i8],
+) {
+    let cin = cfg.cin as usize;
+    let cout = cfg.cout as usize;
+    let stride = cfg.stride as usize;
+    debug_assert!(npx >= 1 && npx <= ROW_TILE);
+    debug_assert!(out.len() >= npx * cout);
+    let ncols = (npx - 1) * stride + 3;
+    debug_assert!(ncols <= MAX_TILE_COLS);
+    let cy = (oy * cfg.stride) as i64;
+    let cx0 = (ox0 * cfg.stride) as i64;
+    // One shared fetch: every input column any window of this tile touches,
+    // pre-centered (x - zp_in), padded on the fly.
+    for ky in 0..3usize {
+        for ci in 0..ncols {
+            let dst = &mut scratch.cols[(ky * ncols + ci) * cin..][..cin];
+            ifmap.site_centered_into(cy - 1 + ky as i64, cx0 - 1 + ci as i64, cfg.zp_in, dst);
+        }
+    }
+    for px in 0..npx {
+        expansion_from_cols(cfg, exw, ex_bias, &scratch.cols, ncols, px, &mut scratch.tile);
+        depthwise_from_tile(
+            cfg,
+            dww,
+            dw_bias,
+            oy,
+            ox0 + px as u32,
+            &scratch.tile,
+            &mut scratch.dw_acc,
+            &mut scratch.f2,
+        );
+        projection_from_f2(
+            cfg,
+            prw,
+            pr_bias,
+            &scratch.f2,
+            &mut scratch.f2c,
+            &mut out[px * cout..(px + 1) * cout],
+        );
+    }
+}
+
+/// Closed-form traffic + MAC accounting for `n` pixels computed via the
+/// batch path ([`fused_row`]).  Matches exactly what the per-pixel counted
+/// path ([`fused_pixel`]) accumulates: every counter below is a fixed
+/// per-pixel amount at a given layer geometry, so `n` pixels' worth can be
+/// added in one step — deterministically, regardless of pixel order or
+/// thread partition.
+pub fn account_pixels(
+    cfg: &LayerConfig,
+    n: u64,
+    stats: &mut EngineStats,
+    ifmap: &mut IfmapBuffer,
+    exw: &mut ExpansionFilterBuffer,
+    dww: &mut DwFilterBuffer,
+    prw: &mut ProjectionWeightBuffers,
+) {
+    let m = cfg.m as u64;
+    let cin = cfg.cin as u64;
+    let cout = cfg.cout as u64;
+    // expansion_tile: one window read per input channel; one chunk read per
+    // (filter, 8-channel chunk).
+    ifmap.window_reads += n * cin;
+    exw.chunk_reads += n * m * (cin / 8);
+    // depthwise_pixel: one 72-bit filter read per expanded channel.
+    dww.filter_reads += n * m;
+    // projection_pixel: engine_slice bumps reads by m per (pass, engine);
+    // summed over all active engines that is m per output channel.
+    prw.reads += n * m * cout;
+    stats.ex_macs += n * m * cin * 9;
+    stats.dw_macs += n * m * 9;
+    stats.pr_macs += n * m * cout;
+    stats.requants += n * (m * 9 + m + cout);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -354,7 +591,8 @@ mod tests {
                 let w = (((base * 5) % 17) as i8 - 8) as i32;
                 acc += x * w;
             }
-            assert_eq!(scratch.tile()[f * 9], q.requantize(acc), "filter {f}");
+            // pos-major tile: window position (0,0) is pos 0, index 0*m + f.
+            assert_eq!(scratch.tile()[f], q.requantize(acc), "filter {f}");
         }
         assert_eq!(stats.ex_macs, 8 * 8 * 9);
         assert_eq!(stats.requants, 8 * 9);
@@ -434,6 +672,112 @@ mod tests {
         );
         assert_eq!(scratch.out().len(), 8);
         assert!(stats.ex_macs > 0 && stats.dw_macs > 0 && stats.pr_macs > 0);
+    }
+
+    #[test]
+    fn fused_row_batch_path_is_bit_identical_to_per_pixel_path() {
+        // The vectorized batch path (fused_row + account_pixels) must match
+        // the counted per-pixel path exactly: outputs, MAC/requant stats,
+        // and every buffer traffic counter — at stride 1 and 2, with
+        // non-zero zero points so the virtual-padding fill is exercised.
+        for stride in [1u32, 2u32] {
+            let cfg = LayerConfig {
+                h: 5,
+                w: 7,
+                cin: 8,
+                m: 16,
+                cout: 8,
+                stride,
+                zp_in: 3,
+                zp_f1: 5,
+                zp_f2: -2,
+                zp_out: 1,
+                ex_mult: 1 << 30,
+                ex_shift: 0,
+                dw_mult: 1 << 30,
+                dw_shift: 0,
+                pr_mult: 1 << 30,
+                pr_shift: 0,
+                relu: 1,
+            };
+            let (m, cin, cout) = (16usize, 8usize, 8usize);
+            let build = || {
+                let mut ifmap = IfmapBuffer::new(5, 7, cin);
+                let mut exw = ExpansionFilterBuffer::new(cin, m);
+                let mut dww = DwFilterBuffer::new(m);
+                let mut prw = ProjectionWeightBuffers::new(m, cout);
+                for i in 0..(5 * 7 * cin) {
+                    ifmap.write_linear(i, ((i * 13) % 41) as i8 - 20);
+                }
+                for i in 0..(m * cin) {
+                    exw.write_linear(i, ((i * 7) % 15) as i8 - 7);
+                }
+                for i in 0..(9 * m) {
+                    dww.write_linear(i, ((i * 3) % 9) as i8 - 4);
+                }
+                for i in 0..(m * cout) {
+                    prw.write_linear(i, ((i * 5) % 11) as i8 - 5);
+                }
+                (ifmap, exw, dww, prw)
+            };
+            let ex_bias: Vec<i32> = (0..m as i32).map(|i| i - 4).collect();
+            let dw_bias: Vec<i32> = (0..m as i32).map(|i| 2 * i - 9).collect();
+            let pr_bias: Vec<i32> = (0..cout as i32).map(|i| 3 - i).collect();
+            let h_out = (5 + stride as usize - 1) / stride as usize;
+            let w_out = (7 + stride as usize - 1) / stride as usize;
+
+            // Reference: the counted per-pixel wrappers.
+            let (mut ifmap, mut exw, mut dww, mut prw) = build();
+            let mut stats_ref = EngineStats::default();
+            let mut scratch = FusedScratch::for_layer(&cfg);
+            let mut out_ref = Vec::new();
+            for oy in 0..h_out {
+                for ox in 0..w_out {
+                    fused_pixel(
+                        &cfg, &mut ifmap, &mut exw, &mut dww, &mut prw, &ex_bias, &dw_bias,
+                        &pr_bias, oy as u32, ox as u32, &mut stats_ref, &mut scratch,
+                    );
+                    out_ref.extend_from_slice(scratch.out());
+                }
+            }
+            let counters_ref =
+                (ifmap.window_reads, exw.chunk_reads, dww.filter_reads, prw.reads);
+
+            // Batch: fused_row over ROW_TILE-wide tiles + closed-form account.
+            let (mut ifmap, mut exw, mut dww, mut prw) = build();
+            let mut stats = EngineStats::default();
+            let mut scratch = FusedScratch::for_layer(&cfg);
+            let mut out = vec![0i8; h_out * w_out * cout];
+            for oy in 0..h_out {
+                let mut ox = 0usize;
+                while ox < w_out {
+                    let npx = ROW_TILE.min(w_out - ox);
+                    let base = (oy * w_out + ox) * cout;
+                    fused_row(
+                        &cfg, &ifmap, &exw, &dww, &prw, &ex_bias, &dw_bias, &pr_bias,
+                        oy as u32, ox as u32, npx, &mut scratch,
+                        &mut out[base..base + npx * cout],
+                    );
+                    ox += npx;
+                }
+            }
+            account_pixels(
+                &cfg,
+                (h_out * w_out) as u64,
+                &mut stats,
+                &mut ifmap,
+                &mut exw,
+                &mut dww,
+                &mut prw,
+            );
+            assert_eq!(out, out_ref, "outputs diverge at stride {stride}");
+            assert_eq!(stats, stats_ref, "engine stats diverge at stride {stride}");
+            assert_eq!(
+                (ifmap.window_reads, exw.chunk_reads, dww.filter_reads, prw.reads),
+                counters_ref,
+                "traffic counters diverge at stride {stride}"
+            );
+        }
     }
 
     #[test]

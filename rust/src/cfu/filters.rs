@@ -45,6 +45,17 @@ impl ExpansionFilterBuffer {
         out
     }
 
+    /// Uncounted view of filter `f`'s whole 1×1×Cin weight row
+    /// (filter-major, contiguous — what the chunk stream walks).
+    /// Functional accessor for the vectorized host pixel loop; chunk
+    /// traffic stays on `chunk_reads`, bumped in closed form by
+    /// `engines::account_pixels`.
+    #[inline(always)]
+    pub fn filter_row(&self, f: usize) -> &[i8] {
+        debug_assert!(f < self.m);
+        &self.data[f * self.cin..(f + 1) * self.cin]
+    }
+
     pub fn capacity_bytes(&self) -> usize {
         self.data.len()
     }
@@ -92,6 +103,15 @@ impl DwFilterBuffer {
         debug_assert!(f < self.m);
         self.filter_reads += 1;
         std::array::from_fn(|pos| self.banks[pos][f])
+    }
+
+    /// Uncounted view of kernel-position `pos`'s bank (one weight per
+    /// expanded channel, contiguous over M).  Functional accessor for the
+    /// vectorized host pixel loop; fetch traffic stays on `filter_reads`,
+    /// bumped in closed form by `engines::account_pixels`.
+    #[inline(always)]
+    pub fn bank(&self, pos: usize) -> &[i8] {
+        &self.banks[pos]
     }
 
     pub fn capacity_bytes(&self) -> usize {
@@ -159,6 +179,15 @@ impl ProjectionWeightBuffers {
     pub fn engine_slice(&mut self, engine: usize, pass: usize) -> &[i8] {
         debug_assert!(engine < NUM_PROJ_ENGINES);
         self.reads += self.m as u64;
+        &self.engines[engine][pass * self.m..(pass + 1) * self.m]
+    }
+
+    /// Uncounted form of [`ProjectionWeightBuffers::engine_slice`] for the
+    /// vectorized host pixel loop; LUTRAM traffic stays on `reads`, bumped
+    /// in closed form by `engines::account_pixels`.
+    #[inline(always)]
+    pub fn engine_weights(&self, engine: usize, pass: usize) -> &[i8] {
+        debug_assert!(engine < NUM_PROJ_ENGINES);
         &self.engines[engine][pass * self.m..(pass + 1) * self.m]
     }
 

@@ -95,6 +95,31 @@ impl IfmapBuffer {
         out
     }
 
+    /// Uncounted bulk read of one (row, col) site: every channel is
+    /// pre-centered (`value - zp`) into `dst` (length C), with on-the-fly
+    /// padding — an out-of-range site yields the padded-then-centered
+    /// value for every channel, exactly as [`IfmapBuffer::read_window`]
+    /// taps would.  This is the functional accessor of the vectorized
+    /// host pixel loop (`engines::fused_row`); window-traffic accounting
+    /// stays on `window_reads`, which the batch path bumps in closed form
+    /// (`engines::account_pixels`), so counters remain bit-identical.
+    #[inline]
+    pub fn site_centered_into(&self, row: i64, col: i64, zp: i32, dst: &mut [i32]) {
+        debug_assert_eq!(dst.len(), self.c);
+        if row < 0 || col < 0 || row >= self.h as i64 || col >= self.w as i64 {
+            // Virtual padding: the tap value is the (i8-truncated) zero
+            // point, mirroring `read_window(.., zp as i8)` call sites.
+            dst.fill((zp as i8) as i32 - zp);
+            return;
+        }
+        let (row, col) = (row as usize, col as usize);
+        let base = self.slot(row, col, 0);
+        let src = &self.banks[bank_id(row, col)][base..base + self.c];
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d = s as i32 - zp;
+        }
+    }
+
     pub fn dims(&self) -> (usize, usize, usize) {
         (self.h, self.w, self.c)
     }

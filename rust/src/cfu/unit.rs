@@ -8,8 +8,10 @@
 //! pipeline tail restart (see [`super::pipeline`]).
 
 use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
 
 use crate::cpu::{CfuPort, CfuResponse};
+use crate::util::pool::RowPool;
 
 use super::config::{LayerConfig, CFG};
 use super::engines::{self, EngineStats, FusedScratch};
@@ -41,6 +43,14 @@ pub mod counters {
     pub const STALL: u32 = 5;
 }
 
+/// Per-worker compute lane of the parallel batch path: a private pipeline
+/// scratch plus an output staging buffer for the chunk's pixel range.
+#[derive(Default)]
+struct LaneState {
+    scratch: FusedScratch,
+    out: Vec<i8>,
+}
+
 /// The fused-DSC accelerator as seen from the CPU.
 pub struct CfuUnit {
     pub version: PipelineVersion,
@@ -62,6 +72,11 @@ pub struct CfuUnit {
     /// Host-path scratch for the filter-major expansion-weight repack
     /// (capacity-retaining, see `run_block_host_into`).
     exw_scratch: Vec<i8>,
+    /// Data-parallel batch compute: worker-chunk count (1 = inline path)
+    /// plus the shared row pool and per-chunk lanes when `threads > 1`.
+    threads: usize,
+    pool: Option<Arc<RowPool>>,
+    lanes: Vec<Mutex<LaneState>>,
     // Active START batch.
     batch_first: u32,
     batch_count: u32,
@@ -103,6 +118,9 @@ impl CfuUnit {
             pr_bias: Vec::new(),
             scratch: FusedScratch::new(),
             exw_scratch: Vec::new(),
+            threads: 1,
+            pool: None,
+            lanes: Vec::new(),
             batch_first: 0,
             batch_count: 0,
             outputs: Vec::new(),
@@ -116,6 +134,20 @@ impl CfuUnit {
             pixels_done: 0,
             start_time: 0,
         }
+    }
+
+    /// A unit whose `START` batches are computed by `pool`'s worker chunks
+    /// in parallel — bit-identical to the single-threaded unit: same
+    /// outputs (i32 addition reordering is exact), same cycle model (the
+    /// START/RD_OUT handshake recurrence never looks at the values), and
+    /// same traffic counters (accounted in closed form, see
+    /// [`engines::account_pixels`]).
+    pub fn with_parallelism(version: PipelineVersion, pool: Arc<RowPool>) -> Self {
+        let mut u = Self::new(version);
+        u.threads = pool.threads();
+        u.lanes = (0..u.threads).map(|_| Mutex::new(LaneState::default())).collect();
+        u.pool = Some(pool);
+        u
     }
 
     /// (Re)allocate buffers for the configured geometry.  Reprogramming the
@@ -152,6 +184,11 @@ impl CfuUnit {
             self.pr_bias = vec![0; cfg.cout as usize];
         }
         self.scratch.ensure(&cfg);
+        for lane in &mut self.lanes {
+            let lane = lane.get_mut().unwrap_or_else(|p| p.into_inner());
+            lane.scratch.ensure(&cfg);
+            lane.out.clear();
+        }
         // Reprogramming fully resets batch/readback state (no stale outputs).
         self.outputs.clear();
         self.batch_count = 0;
@@ -180,13 +217,23 @@ impl CfuUnit {
 
     /// Compute the whole batch functionally (values only; readiness times
     /// are produced by the handshake recurrence as the CPU reads).
+    ///
+    /// The compute runs through the channel-blocked batch path
+    /// ([`engines::fused_row`]) — row tiles of up to
+    /// [`engines::ROW_TILE`] pixels sharing one column fetch — and, when
+    /// the unit was built [`with_parallelism`](Self::with_parallelism),
+    /// splits the pixel range into one contiguous chunk per pool worker.
+    /// Each chunk accumulates into its own lane buffer (per-row
+    /// deterministic reduction order, no atomics anywhere) and the lanes
+    /// are stitched back in chunk order, so the batch is bit-identical at
+    /// every thread count.  Buffer traffic and MAC stats are accounted
+    /// once, in closed form, after the compute.
     fn start(&mut self, first: u32, count: u32, now: u64) {
         assert!(
             self.rd_pixel == self.batch_count,
             "START while {} pixels of the previous batch are unread",
             self.batch_count - self.rd_pixel
         );
-        let w_out = self.cfg.w_out();
         assert!(first + count <= self.cfg.num_pixels(), "START range out of bounds");
         self.batch_first = first;
         self.batch_count = count;
@@ -198,34 +245,71 @@ impl CfuUnit {
         // after the first row the whole pixel loop is allocation-free
         // (guarded by tests/alloc_regression.rs).
         self.outputs.clear();
-        self.outputs.reserve(count as usize * self.cfg.cout as usize);
+        self.outputs.resize(count as usize * self.cfg.cout as usize, 0);
         let cfg = self.cfg;
-        let (ifmap, exw, dww, prw) = (
+        {
+            let (ifmap, exw, dww, prw) = (
+                self.ifmap.as_ref().unwrap(),
+                self.exw.as_ref().unwrap(),
+                self.dww.as_ref().unwrap(),
+                self.prw.as_ref().unwrap(),
+            );
+            let (ex_bias, dw_bias, pr_bias) =
+                (&self.ex_bias[..], &self.dw_bias[..], &self.pr_bias[..]);
+            match &self.pool {
+                None => compute_pixels(
+                    &cfg,
+                    ifmap,
+                    exw,
+                    dww,
+                    prw,
+                    ex_bias,
+                    dw_bias,
+                    pr_bias,
+                    first,
+                    0,
+                    count,
+                    &mut self.scratch,
+                    &mut self.outputs,
+                ),
+                Some(pool) => {
+                    let threads = self.threads as u32;
+                    let base = count / threads;
+                    let rem = (count % threads) as usize;
+                    let lanes = &self.lanes;
+                    pool.run(&|chunk| {
+                        let start = chunk as u32 * base + chunk.min(rem) as u32;
+                        let len = base + (chunk < rem) as u32;
+                        let mut lane =
+                            lanes[chunk].lock().unwrap_or_else(|p| p.into_inner());
+                        let lane = &mut *lane;
+                        lane.out.clear();
+                        lane.out.resize(len as usize * cfg.cout as usize, 0);
+                        compute_pixels(
+                            &cfg, ifmap, exw, dww, prw, ex_bias, dw_bias, pr_bias, first,
+                            start, len, &mut lane.scratch, &mut lane.out,
+                        );
+                    });
+                    // Stitch the lanes back in chunk order — the partition
+                    // is deterministic, so so is the output layout.
+                    let mut off = 0usize;
+                    for lane in lanes {
+                        let lane = lane.lock().unwrap_or_else(|p| p.into_inner());
+                        self.outputs[off..off + lane.out.len()].copy_from_slice(&lane.out);
+                        off += lane.out.len();
+                    }
+                }
+            }
+        }
+        engines::account_pixels(
+            &cfg,
+            count as u64,
+            &mut self.stats,
             self.ifmap.as_mut().unwrap(),
             self.exw.as_mut().unwrap(),
             self.dww.as_mut().unwrap(),
             self.prw.as_mut().unwrap(),
         );
-        let scratch = &mut self.scratch;
-        for k in 0..count {
-            let lin = first + k;
-            let (oy, ox) = (lin / w_out, lin % w_out);
-            engines::fused_pixel(
-                &cfg,
-                ifmap,
-                exw,
-                dww,
-                prw,
-                &self.ex_bias,
-                &self.dw_bias,
-                &self.pr_bias,
-                oy,
-                ox,
-                &mut self.stats,
-                scratch,
-            );
-            self.outputs.extend_from_slice(scratch.out());
-        }
         // First pixel completes after dispatch + pipeline fill.
         self.ready_time =
             now + self.timing.start_overhead + self.times.fill_latency(self.version, &self.timing);
@@ -276,6 +360,54 @@ impl CfuUnit {
             }
         }
         CfuResponse { value, stall_cycles: stall }
+    }
+}
+
+/// Compute `range_len` linear output pixels starting at batch offset
+/// `range_start` (absolute pixel `first + range_start + i`) into `dst`
+/// (`range_len * Cout` bytes), walking [`engines::ROW_TILE`]-wide row
+/// tiles so adjacent pixels share one column fetch.  Pure `&`-compute: no
+/// counters, safe to run from any worker chunk.
+#[allow(clippy::too_many_arguments)]
+fn compute_pixels(
+    cfg: &LayerConfig,
+    ifmap: &IfmapBuffer,
+    exw: &ExpansionFilterBuffer,
+    dww: &DwFilterBuffer,
+    prw: &ProjectionWeightBuffers,
+    ex_bias: &[i32],
+    dw_bias: &[i32],
+    pr_bias: &[i32],
+    first: u32,
+    range_start: u32,
+    range_len: u32,
+    scratch: &mut FusedScratch,
+    dst: &mut [i8],
+) {
+    let w_out = cfg.w_out();
+    let cout = cfg.cout as usize;
+    let mut lin = 0u32;
+    while lin < range_len {
+        let px = first + range_start + lin;
+        let (oy, ox) = (px / w_out, px % w_out);
+        let npx = (engines::ROW_TILE as u32).min(w_out - ox).min(range_len - lin) as usize;
+        let base = lin as usize * cout;
+        engines::fused_row(
+            cfg,
+            ifmap,
+            exw,
+            dww,
+            prw,
+            ex_bias,
+            dw_bias,
+            pr_bias,
+            oy,
+            ox,
+            npx,
+            scratch,
+            &mut dst[base..base + npx * cout],
+        );
+        lin += npx as u32;
     }
 }
 
@@ -691,6 +823,60 @@ mod tests {
             let (got, cycles) = unit.run_block_host(&bp, &x);
             assert_eq!(got.data, want.data, "layer {tag}");
             assert!(cycles > 0);
+        }
+    }
+
+    #[test]
+    fn parallel_units_are_bit_identical_to_scalar() {
+        // The whole acceptance contract of the parallel batch path, at the
+        // unit level: outputs, completion cycles, MAC/requant stats, and
+        // buffer traffic counters must match the scalar unit exactly at
+        // every thread count — including thread counts that exceed the
+        // pixel count (empty chunks).
+        use crate::model::blocks::BlockConfig;
+        use crate::model::weights::{gen_input, make_block_params};
+        use crate::util::pool::RowPool;
+        use std::sync::Arc;
+        for (cfg, tag) in [
+            (BlockConfig::new(7, 9, 16, 24, 64, 1, false), "wide"),
+            (BlockConfig::new(6, 5, 8, 16, 8, 2, false), "strided"),
+            (BlockConfig::new(2, 3, 8, 8, 8, 1, true), "tiny-residual"),
+        ] {
+            let bp = make_block_params(7, cfg, -3);
+            let x = crate::tensor::TensorI8::from_vec(
+                &[cfg.h as usize, cfg.w as usize, cfg.cin as usize],
+                gen_input("unit.par.x", (cfg.h * cfg.w * cfg.cin) as usize, bp.zp_in()),
+            );
+            let mut scalar = CfuUnit::new(PipelineVersion::V3);
+            let (want, want_cycles) = scalar.run_block_host(&bp, &x);
+            for threads in [1usize, 2, 3, 4, 8] {
+                let pool = Arc::new(RowPool::new(threads));
+                let mut u = CfuUnit::with_parallelism(PipelineVersion::V3, pool);
+                let (got, cycles) = u.run_block_host(&bp, &x);
+                assert_eq!(got.data, want.data, "{tag}: logits at {threads} threads");
+                assert_eq!(cycles, want_cycles, "{tag}: cycles at {threads} threads");
+                assert_eq!(u.stats, scalar.stats, "{tag}: stats at {threads} threads");
+                assert_eq!(
+                    u.ifmap.as_ref().unwrap().window_reads,
+                    scalar.ifmap.as_ref().unwrap().window_reads,
+                    "{tag}: window reads at {threads} threads"
+                );
+                assert_eq!(
+                    u.exw.as_ref().unwrap().chunk_reads,
+                    scalar.exw.as_ref().unwrap().chunk_reads,
+                    "{tag}: chunk reads at {threads} threads"
+                );
+                assert_eq!(
+                    u.dww.as_ref().unwrap().filter_reads,
+                    scalar.dww.as_ref().unwrap().filter_reads,
+                    "{tag}: filter reads at {threads} threads"
+                );
+                assert_eq!(
+                    u.prw.as_ref().unwrap().reads,
+                    scalar.prw.as_ref().unwrap().reads,
+                    "{tag}: projection reads at {threads} threads"
+                );
+            }
         }
     }
 

@@ -33,7 +33,7 @@ use std::time::{Duration, Instant};
 
 use crate::exec::ExecutionPlan;
 use crate::tensor::TensorI8;
-use crate::util::pool::ShardPool;
+use crate::util::pool::{panic_message, ShardPool};
 
 use super::engine::{Engine, EngineShard, InferenceOutput};
 use super::metrics::Metrics;
@@ -60,6 +60,10 @@ pub struct ServeConfig {
     /// ([`crate::tune::QosRouter`]): one shared parameter set, one
     /// coordinator per tuned placement.
     pub plan: Option<ExecutionPlan>,
+    /// Intra-request data parallelism: worker chunks per `FusedHost` pixel
+    /// batch (see [`ExecutionPlan::with_threads`]).  `1` (the default) is
+    /// the scalar path; any value serves bit-identical logits.
+    pub threads: usize,
 }
 
 impl Default for ServeConfig {
@@ -70,6 +74,7 @@ impl Default for ServeConfig {
             workers: 4,
             queue_depth: 128,
             plan: None,
+            threads: 1,
         }
     }
 }
@@ -247,8 +252,15 @@ impl Coordinator {
     /// `cfg.plan` whose step count does not match the engine's model.
     pub fn start(engine: Arc<Engine>, mut cfg: ServeConfig) -> Self {
         assert!(cfg.max_batch > 0 && cfg.workers > 0 && cfg.queue_depth > 0);
+        let threads = cfg.threads.max(1);
         let engine = match cfg.plan.take() {
-            Some(plan) => Arc::new(Engine::with_plan(engine.params.clone(), plan)),
+            Some(plan) => {
+                Arc::new(Engine::with_plan(engine.params.clone(), plan.with_threads(threads)))
+            }
+            None if threads > 1 => Arc::new(Engine::with_plan(
+                engine.params.clone(),
+                engine.plan.clone().with_threads(threads),
+            )),
             None => engine,
         };
         let (tx, rx) = mpsc::sync_channel::<Request>(cfg.queue_depth);
@@ -368,6 +380,21 @@ fn batcher_loop(
     // `shards` drops here: queues close, workers drain and join.
 }
 
+/// Run one inference attempt with a panic guard: a backend panic (e.g. an
+/// assertion deep in a simulator) is this *request's* failure, not the
+/// worker's, so it maps to [`ServeError::Inference`] — the client gets an
+/// error response and the shard keeps serving, instead of the ticket
+/// resolving as [`ServeError::WorkerLost`] from a dead worker.
+fn run_guarded<F>(f: F) -> Result<InferenceOutput, ServeError>
+where
+    F: FnOnce() -> anyhow::Result<InferenceOutput>,
+{
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    catch_unwind(AssertUnwindSafe(f))
+        .map_err(|p| ServeError::Inference(format!("backend panicked: {}", panic_message(&*p))))
+        .and_then(|r| r.map_err(|e| ServeError::Inference(e.to_string())))
+}
+
 /// Execute one request on a worker shard and deliver its single terminal
 /// outcome (success or error — never silence).
 fn serve_one(shard: &mut EngineShard, req: Request, metrics: &Metrics) {
@@ -375,18 +402,13 @@ fn serve_one(shard: &mut EngineShard, req: Request, metrics: &Metrics) {
     // queue (behind up to max_batch earlier requests) is attributed to
     // queueing, not silently folded into service time.
     let queue_time = Instant::now().saturating_duration_since(req.submitted_at);
-    let result = shard.infer(&req.input);
+    let result = run_guarded(|| shard.infer(&req.input));
     let total_time = req.submitted_at.elapsed();
     match &result {
         Ok(out) => metrics.note_completed(queue_time, total_time, out.sim_cycles),
         Err(_) => metrics.note_failed(queue_time, total_time),
     }
-    let _ = req.respond.send(Response {
-        id: req.id,
-        queue_time,
-        total_time,
-        result: result.map_err(|e| ServeError::Inference(e.to_string())),
-    });
+    let _ = req.respond.send(Response { id: req.id, queue_time, total_time, result });
 }
 
 #[cfg(test)]
@@ -504,6 +526,7 @@ mod tests {
             workers: 1,
             queue_depth: 1,
             plan: None,
+            threads: 1,
         };
         let coord = Coordinator::start(Arc::clone(&engine), cfg);
         let attempts = 64;
@@ -555,6 +578,49 @@ mod tests {
         let got = coord.submit(x).unwrap().wait().into_output().unwrap();
         assert_eq!(got.logits, want.logits);
         assert!(got.sim_cycles > 0, "the fused block contributes cycles");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn backend_panic_maps_to_inference_error_not_worker_loss() {
+        // The serve-path panic guard: a panicking backend resolves as a
+        // per-request inference error carrying the panic message.
+        let r = run_guarded(|| panic!("engine exploded at pixel 7"));
+        match r {
+            Err(ServeError::Inference(msg)) => {
+                assert!(msg.contains("backend panicked"), "{msg}");
+                assert!(msg.contains("engine exploded at pixel 7"), "{msg}");
+            }
+            other => panic!("expected Inference error, got {other:?}"),
+        }
+        // Non-panic errors still pass through with their own message.
+        match run_guarded(|| Err(anyhow::Error::msg("plain failure"))) {
+            Err(ServeError::Inference(msg)) => assert_eq!(msg, "plain failure"),
+            other => panic!("expected Inference error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn threaded_serving_is_bit_identical_to_scalar() {
+        // ServeConfig::threads fans each fused pixel batch across a row
+        // pool; the served logits and simulated cycles must match the
+        // scalar engine exactly.
+        use crate::cfu::PipelineVersion;
+        let p = make_model_params(Some(vec![
+            BlockConfig::new(6, 6, 8, 16, 8, 1, true),
+            BlockConfig::new(6, 6, 8, 16, 8, 1, true),
+        ]));
+        let engine = Arc::new(Engine::new(p, Backend::FusedHost(PipelineVersion::V3)));
+        let x = input(&engine, 11);
+        let want = engine.infer(&x).unwrap();
+        let cfg = ServeConfig { workers: 2, threads: 3, ..Default::default() };
+        let coord = Coordinator::start(Arc::clone(&engine), cfg);
+        for _ in 0..4 {
+            let got = coord.submit(x.clone()).unwrap().wait().into_output().unwrap();
+            assert_eq!(got.logits, want.logits);
+            assert_eq!(got.sim_cycles, want.sim_cycles);
+            assert_eq!(got.class, want.class);
+        }
         coord.shutdown();
     }
 

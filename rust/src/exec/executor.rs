@@ -157,6 +157,17 @@ impl FusedHostExecutor {
     pub fn new(version: PipelineVersion) -> Self {
         Self { unit: CfuUnit::new(version) }
     }
+
+    /// An executor whose unit splits each pixel batch across `pool`'s
+    /// worker chunks (see [`CfuUnit::with_parallelism`]) — bit-identical
+    /// outputs, cycles, and counters to the scalar executor.  The pool is
+    /// shared by every `FusedHost` executor of one plan instance.
+    pub fn with_parallelism(
+        version: PipelineVersion,
+        pool: std::sync::Arc<crate::util::pool::RowPool>,
+    ) -> Self {
+        Self { unit: CfuUnit::with_parallelism(version, pool) }
+    }
 }
 
 impl BlockExecutor for FusedHostExecutor {

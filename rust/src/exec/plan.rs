@@ -9,19 +9,29 @@
 //! [`ExecutionPlan::uniform`].
 
 use std::fmt;
+use std::sync::Arc;
 
 use crate::model::blocks::BlockConfig;
 use crate::model::weights::ModelParams;
+use crate::util::pool::RowPool;
 
+use super::executor::FusedHostExecutor;
 use super::{executor_for, Backend, BlockExecutor};
 
 /// Why a plan could not be built over a model — the typed form of what
 /// used to be assertion panics, so planners (the `tune` subsystem, config
 /// loaders) can surface degenerate geometries as recoverable errors.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum PlanError {
     /// The model has no blocks; plans require at least one step.
     EmptyModel,
+    /// A block's own geometry is malformed (`BlockConfig::validate`).
+    BadGeometry {
+        /// Index of the offending block.
+        block: usize,
+        /// What the validator rejected.
+        reason: String,
+    },
     /// Block `block`'s input geometry does not equal block `block - 1`'s
     /// output geometry.
     Unchained {
@@ -45,6 +55,9 @@ impl fmt::Display for PlanError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
             PlanError::EmptyModel => write!(f, "plan over an empty model"),
+            PlanError::BadGeometry { block, reason } => {
+                write!(f, "block {block} has invalid geometry: {reason}")
+            }
             PlanError::Unchained { block, expected, got } => write!(
                 f,
                 "block {block} input geometry {got:?} does not chain from block {} \
@@ -84,6 +97,8 @@ impl PlanStep {
 pub struct ExecutionPlan {
     steps: Vec<PlanStep>,
     max_activation_elems: usize,
+    /// Intra-block data-parallel threads for host backends (1 = scalar).
+    threads: usize,
 }
 
 impl ExecutionPlan {
@@ -133,6 +148,7 @@ impl ExecutionPlan {
         let mut prev_out: Option<[usize; 3]> = None;
         for (i, bp) in params.blocks.iter().enumerate() {
             let c = bp.cfg;
+            c.validate().map_err(|reason| PlanError::BadGeometry { block: i, reason })?;
             let in_dims = [c.h as usize, c.w as usize, c.cin as usize];
             if let Some(prev) = prev_out {
                 if prev != in_dims {
@@ -147,7 +163,21 @@ impl ExecutionPlan {
             prev_out = Some(out_dims);
             steps.push(step);
         }
-        Ok(Self { steps, max_activation_elems })
+        Ok(Self { steps, max_activation_elems, threads: 1 })
+    }
+
+    /// Set the intra-block data-parallel thread count for host backends
+    /// (output rows of each fused block are split across `threads`
+    /// threads; results stay bit-identical to the scalar path).  Clamped
+    /// to at least 1.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Intra-block data-parallel thread count (1 = scalar).
+    pub fn threads(&self) -> usize {
+        self.threads
     }
 
     /// Per-block steps in execution order.
@@ -183,8 +213,29 @@ impl ExecutionPlan {
     }
 
     /// Instantiate one executor per step (each owning its warm state).
+    ///
+    /// When the plan carries `threads > 1`, all `FusedHost` steps share
+    /// one [`RowPool`] (the blocks of a single inference run
+    /// sequentially, so the workers are never contended) and run their
+    /// pixel loops row-parallel.
     pub fn make_executors(&self) -> Vec<Box<dyn BlockExecutor>> {
-        self.steps.iter().map(|s| executor_for(s.backend)).collect()
+        let pool = if self.threads > 1
+            && self.steps.iter().any(|s| matches!(s.backend, Backend::FusedHost(_)))
+        {
+            Some(Arc::new(RowPool::new(self.threads)))
+        } else {
+            None
+        };
+        self.steps
+            .iter()
+            .map(|s| match (s.backend, &pool) {
+                (Backend::FusedHost(v), Some(pool)) => {
+                    Box::new(FusedHostExecutor::with_parallelism(v, Arc::clone(pool)))
+                        as Box<dyn BlockExecutor>
+                }
+                _ => executor_for(s.backend),
+            })
+            .collect()
     }
 }
 
@@ -262,6 +313,34 @@ mod tests {
         let err = ExecutionPlan::try_uniform(&empty, Backend::Reference).unwrap_err();
         assert_eq!(err, PlanError::EmptyModel);
         assert_eq!(err.to_string(), "plan over an empty model");
+    }
+
+    #[test]
+    fn bad_block_geometry_is_a_typed_plan_error() {
+        // A malformed geometry reaching plan construction (e.g. through a
+        // computed model description) resolves as `PlanError::BadGeometry`
+        // instead of panicking the process.
+        let p = make_model_params(Some(vec![BlockConfig::new(4, 4, 12, 16, 8, 1, false)]));
+        let err = ExecutionPlan::try_uniform(&p, Backend::Reference).unwrap_err();
+        match &err {
+            PlanError::BadGeometry { block: 0, reason } => {
+                assert!(reason.contains("Cin"), "{reason}");
+            }
+            other => panic!("expected BadGeometry, got {other:?}"),
+        }
+        assert!(err.to_string().contains("invalid geometry"), "{err}");
+    }
+
+    #[test]
+    fn threads_knob_defaults_to_scalar_and_clamps() {
+        let p = params();
+        let plan = ExecutionPlan::uniform(&p, Backend::FusedHost(PipelineVersion::V3));
+        assert_eq!(plan.threads(), 1);
+        assert_eq!(plan.clone().with_threads(0).threads(), 1);
+        let parallel = plan.with_threads(4);
+        assert_eq!(parallel.threads(), 4);
+        // Parallel plans still build one executor per step.
+        assert_eq!(parallel.make_executors().len(), 2);
     }
 
     #[test]

@@ -144,10 +144,15 @@ fn cmd_tune(args: &Args) -> Result<()> {
 
 fn serve_config(args: &Args) -> Result<ServeConfig> {
     let d = ServeConfig::default();
+    let threads: usize = args.opt_parse("threads", d.threads).map_err(anyhow::Error::msg)?;
+    if threads == 0 {
+        bail!("--threads must be >= 1");
+    }
     Ok(ServeConfig {
         max_batch: args.opt_parse("batch", d.max_batch).map_err(anyhow::Error::msg)?,
         workers: args.opt_parse("workers", d.workers).map_err(anyhow::Error::msg)?,
         queue_depth: args.opt_parse("queue-depth", d.queue_depth).map_err(anyhow::Error::msg)?,
+        threads,
         ..d
     })
 }
@@ -358,10 +363,13 @@ fn usage() {
     println!("         [--json PATH]                       profile (block, backend) costs, search");
     println!("                                             per-objective + Pareto plans; writes");
     println!("                                             BENCH_tune.json");
-    println!("  serve  [--requests N] [--batch B] [--workers W] [--queue-depth D] [--backend host-v3]");
+    println!("  serve  [--requests N] [--batch B] [--workers W] [--queue-depth D] [--threads T]");
+    println!("         [--backend host-v3]                  --threads T splits each fused pixel");
+    println!("                                             batch across T chunks (bit-identical)");
     println!("  serve  --qos latency|energy|balanced|mixed serve QoS classes from tuned plans");
     println!("  serve loadgen [--mode closed|open] [--clients N] [--rate R] [--requests N]");
-    println!("                [--batch B] [--workers W] [--queue-depth D] [--backend reference]");
+    println!("                [--batch B] [--workers W] [--queue-depth D] [--threads T]");
+    println!("                [--backend reference]");
     println!("                [--json PATH]                load-generate; writes BENCH_serve.json");
     println!("  golden [--layer TAG]                        CFU sim vs PJRT cross-check");
     println!("  version");

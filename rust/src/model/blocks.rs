@@ -70,12 +70,32 @@ impl BlockConfig {
         ]
     }
 
-    pub fn validate(&self) {
-        assert!(self.cin % 8 == 0 && self.m % 8 == 0 && self.cout % 8 == 0);
-        assert!(self.stride == 1 || self.stride == 2);
-        if self.residual {
-            assert!(self.stride == 1 && self.cin == self.cout);
+    /// Typed geometry validation, mirroring `cfu/config.rs::validate` —
+    /// a malformed block reaching construction through exec/tune resolves
+    /// as `PlanError`/`ServeError` instead of panicking the process.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.cin == 0 || self.cin % 8 != 0 {
+            return Err(format!("Cin must be a nonzero multiple of 8, got {}", self.cin));
         }
+        if self.m == 0 || self.m % 8 != 0 {
+            return Err(format!("M must be a nonzero multiple of 8, got {}", self.m));
+        }
+        if self.cout == 0 || self.cout % 8 != 0 {
+            return Err(format!("Cout must be a nonzero multiple of 8, got {}", self.cout));
+        }
+        if self.stride != 1 && self.stride != 2 {
+            return Err(format!("stride must be 1 or 2, got {}", self.stride));
+        }
+        if self.h == 0 || self.w == 0 {
+            return Err("empty feature map".to_string());
+        }
+        if self.residual && (self.stride != 1 || self.cin != self.cout) {
+            return Err(format!(
+                "residual requires stride 1 and Cin == Cout, got stride {} Cin {} Cout {}",
+                self.stride, self.cin, self.cout
+            ));
+        }
+        Ok(())
     }
 }
 
@@ -127,8 +147,28 @@ mod tests {
             assert_eq!(pair[0].cout, pair[1].cin, "block {i}");
         }
         for b in &bb {
-            b.validate();
+            b.validate().unwrap();
         }
+    }
+
+    #[test]
+    fn bad_geometry_is_rejected_not_panicked() {
+        // Non-multiple-of-8 channel counts, bad strides, empty maps, and
+        // shape-mismatched residuals all resolve as typed errors.
+        let cases = [
+            (BlockConfig::new(4, 4, 7, 16, 8, 1, false), "Cin"),
+            (BlockConfig::new(4, 4, 8, 0, 8, 1, false), "M"),
+            (BlockConfig::new(4, 4, 8, 16, 12, 1, false), "Cout"),
+            (BlockConfig::new(4, 4, 8, 16, 8, 3, false), "stride"),
+            (BlockConfig::new(0, 4, 8, 16, 8, 1, false), "empty"),
+            (BlockConfig::new(4, 4, 8, 16, 8, 2, true), "residual"),
+            (BlockConfig::new(4, 4, 8, 16, 16, 1, true), "residual"),
+        ];
+        for (cfg, needle) in cases {
+            let err = cfg.validate().unwrap_err();
+            assert!(err.contains(needle), "{cfg:?}: {err}");
+        }
+        BlockConfig::new(4, 4, 8, 16, 8, 1, true).validate().unwrap();
     }
 
     #[test]

@@ -214,7 +214,7 @@ pub fn from_qmw(qmw: &QmwFile) -> Result<ModelParams> {
             c[0] as u32, c[1] as u32, c[2] as u32, c[3] as u32, c[4] as u32, c[5] as u32,
             c[6] != 0,
         );
-        bc.validate();
+        bc.validate().map_err(|e| anyhow::anyhow!("block {}: {e}", i + 1))?;
         let p = format!("b{}", i + 1);
         let get_i8 = |suffix: &str| -> Result<Vec<i8>> {
             Ok(qmw.get(&format!("{p}.{suffix}"))

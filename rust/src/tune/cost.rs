@@ -50,6 +50,21 @@ pub const HOST_MACS_PER_SEC: f64 = 2.4e9;
 /// offload costs energy.
 pub const HOST_ACTIVE_POWER_W: f64 = 2.5;
 
+/// Parallel efficiency of each *additional* host core on the fused pixel
+/// loop: the per-row split keeps workers independent, but the shared
+/// column fetches and the lane-stitch copy cost a fraction of linear
+/// scaling.  `threads` cores deliver `1 + (threads - 1) * 0.85` cores'
+/// worth of MAC throughput.
+pub const HOST_PARALLEL_EFF: f64 = 0.85;
+
+/// Modeled host-core latency (s) for `macs` MACs on `threads` cores (the
+/// parallel variant of the `Backend::Reference` latency model; `threads =
+/// 1` reproduces it exactly).
+pub fn host_core_latency_s(macs: u64, threads: usize) -> f64 {
+    let threads = threads.max(1) as f64;
+    macs as f64 / (HOST_MACS_PER_SEC * (1.0 + (threads - 1.0) * HOST_PARALLEL_EFF))
+}
+
 /// Activity factor for the CFU-Playground comparator's small datapath
 /// (its 1×1-only SIMD MAC idles through depthwise work).
 const PLAYGROUND_ACTIVITY: f64 = 0.5;
@@ -165,6 +180,25 @@ impl CostTable {
     /// the default allowlist ([`super::DEFAULT_ALLOWLIST`]) sticks to the
     /// latter.
     pub fn profile(params: &ModelParams, allowlist: &[Backend]) -> Result<CostTable> {
+        Self::profile_with_threads(params, allowlist, 1)
+    }
+
+    /// [`profile`](Self::profile) with the host-core columns priced for
+    /// `threads`-way intra-block parallelism (the `threads` knob of
+    /// [`crate::exec::ExecutionPlan`] / `ServeConfig`).
+    ///
+    /// Only the [`Backend::Reference`] host column changes: its latency
+    /// scales by [`HOST_PARALLEL_EFF`]-discounted cores and its energy
+    /// charges every active core, so extra threads trade energy for
+    /// latency in the placement search.  The accelerator columns price
+    /// *simulated hardware* cycles, which host threading does not alter
+    /// (the parallel executor is bit-identical, cycles included).
+    /// `threads = 1` reproduces [`profile`](Self::profile) exactly.
+    pub fn profile_with_threads(
+        params: &ModelParams,
+        allowlist: &[Backend],
+        threads: usize,
+    ) -> Result<CostTable> {
         if allowlist.is_empty() {
             bail!("cost profile needs a non-empty backend allowlist");
         }
@@ -183,19 +217,20 @@ impl CostTable {
                 let fused = uses_fused_dataflow(backend);
                 let bytes = memtraffic::block_traffic_bytes(&c, fused);
                 let (latency_s, sim_cycles) = match backend {
-                    Backend::Reference => (c.macs() as f64 / HOST_MACS_PER_SEC, 0u64),
+                    Backend::Reference => (host_core_latency_s(c.macs(), threads), 0u64),
                     _ => {
                         let mut executor = executor_for(backend);
                         let cycles = executor.run_block_into(bp, &x, &mut out)?;
                         (cycles as f64 / ACCEL_CLOCK_HZ, cycles)
                     }
                 };
-                row.push(CostVector {
-                    latency_s,
-                    sim_cycles,
-                    bytes,
-                    energy_j: backend_power_w(backend) * latency_s,
-                });
+                // Host parallelism charges every active core for the
+                // block's duration; accelerator power is thread-invariant.
+                let power_w = match backend {
+                    Backend::Reference => HOST_ACTIVE_POWER_W * threads.max(1) as f64,
+                    _ => backend_power_w(backend),
+                };
+                row.push(CostVector { latency_s, sim_cycles, bytes, energy_j: power_w * latency_s });
             }
             rows.push(row);
         }
@@ -344,6 +379,31 @@ mod tests {
             backend_power_w(Backend::FusedIss(PipelineVersion::V2)),
             backend_power_w(Backend::FusedHost(PipelineVersion::V2))
         );
+    }
+
+    #[test]
+    fn parallel_host_column_trades_energy_for_latency() {
+        let p = mini();
+        let allow = super::super::DEFAULT_ALLOWLIST;
+        let scalar = CostTable::profile(&p, &allow).unwrap();
+        assert_eq!(
+            scalar,
+            CostTable::profile_with_threads(&p, &allow, 1).unwrap(),
+            "threads = 1 must reproduce the scalar profile bit-exactly"
+        );
+        let quad = CostTable::profile_with_threads(&p, &allow, 4).unwrap();
+        for (s_row, q_row) in scalar.rows.iter().zip(&quad.rows) {
+            // Host column: faster (sub-linear) but more energy.
+            let speedup = s_row[0].latency_s / q_row[0].latency_s;
+            assert!(speedup > 1.0 && speedup < 4.0, "speedup {speedup}");
+            assert!((speedup - (1.0 + 3.0 * HOST_PARALLEL_EFF)).abs() < 1e-9);
+            assert!(q_row[0].energy_j > s_row[0].energy_j);
+            // Accelerator columns are untouched by host threading.
+            assert_eq!(&s_row[1..], &q_row[1..]);
+        }
+        // The closed-form latency helper agrees with the table.
+        let c = p.blocks[0].cfg;
+        assert!((quad.rows[0][0].latency_s - host_core_latency_s(c.macs(), 4)).abs() < 1e-18);
     }
 
     #[test]

@@ -9,10 +9,14 @@
 //!   criterion's filter;
 //! * `--quick` — fewer iterations (CI smoke runs);
 //! * `--json <path>` — additionally write a machine-readable
-//!   `BENCH_<name>.json` artifact (mean/std/percentiles/throughput per
+//!   `BENCH_<name>.json` artifact (mean/std/p50/p90/p99/throughput per
 //!   bench) so the perf trajectory accumulates per-PR (EXPERIMENTS.md
 //!   §Perf).  `<path>` is a directory unless it ends in `.json`, in which
-//!   case it is the exact output file.
+//!   case it is the exact output file;
+//! * `--threads N` — a thread-count knob the bench bodies can consult
+//!   (via [`Bencher::threads`]) to size data-parallel backends; recorded
+//!   in the JSON artifact so single- and multi-thread trajectories are
+//!   tracked separately.
 //!
 //! Unknown flags are rejected (exit code 2) instead of being silently
 //! swallowed — a typoed `--jsno` must not quietly drop the artifact.
@@ -49,6 +53,7 @@ pub struct Bencher {
     filter: Option<String>,
     quick: bool,
     json_out: Option<PathBuf>,
+    threads: usize,
     results: Vec<BenchResult>,
 }
 
@@ -92,7 +97,7 @@ impl Bencher {
             Ok(b) => b,
             Err(msg) => {
                 eprintln!("error: {msg}");
-                eprintln!("usage: {name} [FILTER] [--quick] [--json <path>]");
+                eprintln!("usage: {name} [FILTER] [--quick] [--json <path>] [--threads N]");
                 std::process::exit(2);
             }
         }
@@ -103,6 +108,7 @@ impl Bencher {
         let mut filter = None;
         let mut quick = false;
         let mut json_out = None;
+        let mut threads = 1usize;
         let mut it = args.iter();
         while let Some(a) = it.next() {
             match a.as_str() {
@@ -111,13 +117,28 @@ impl Bencher {
                     let p = it.next().ok_or("--json requires a path argument")?;
                     json_out = Some(PathBuf::from(p));
                 }
+                "--threads" => {
+                    let t = it.next().ok_or("--threads requires a count argument")?;
+                    threads = t
+                        .parse()
+                        .map_err(|_| format!("invalid --threads value `{t}`"))?;
+                    if threads == 0 {
+                        return Err("--threads must be >= 1".to_string());
+                    }
+                }
                 // cargo bench passes --bench through to the harness binary.
                 "--bench" | "--exact" => {}
                 s if s.starts_with('-') => return Err(format!("unknown flag `{s}`")),
                 s => filter = Some(s.to_string()),
             }
         }
-        Ok(Self { name: name.to_string(), filter, quick, json_out, results: Vec::new() })
+        Ok(Self { name: name.to_string(), filter, quick, json_out, threads, results: Vec::new() })
+    }
+
+    /// The `--threads N` knob (1 when absent) — bench bodies consult this
+    /// to size data-parallel backends.
+    pub fn threads(&self) -> usize {
+        self.threads
     }
 
     fn runs(&self) -> usize {
@@ -136,8 +157,9 @@ impl Bencher {
                 return;
             }
         }
-        // Warmup.
-        let units = f();
+        // Warmup (result discarded; `runs() > 0` always, so the measured
+        // samples alone determine the per-run unit count).
+        f();
         let mut samples = Vec::with_capacity(self.runs());
         let mut total_units = 0u64;
         for _ in 0..self.runs() {
@@ -146,7 +168,7 @@ impl Bencher {
             samples.push(t0.elapsed().as_secs_f64());
         }
         let s = Summary::of(&samples);
-        let per_run_units = if self.runs() > 0 { total_units / self.runs() as u64 } else { units };
+        let per_run_units = total_units / self.runs() as u64;
         let r = BenchResult { name: name.to_string(), summary: s, units_per_run: per_run_units };
         let thr = r
             .units_per_sec()
@@ -214,6 +236,8 @@ impl Bencher {
                 .set("min_s", r.summary.min)
                 .set("max_s", r.summary.max)
                 .set("p50_s", r.summary.p50)
+                .set("p90_s", r.summary.p90)
+                .set("p99_s", r.summary.p99)
                 .set("units_per_run", r.units_per_run);
             o = match r.units_per_sec() {
                 Some(u) => o.set("units_per_sec", u),
@@ -224,6 +248,7 @@ impl Bencher {
         Json::obj()
             .set("bench", self.name.as_str())
             .set("quick", self.quick)
+            .set("threads", self.threads)
             .set("results", arr)
     }
 
@@ -266,6 +291,7 @@ mod tests {
             filter: filter.map(str::to_string),
             quick: true,
             json_out: None,
+            threads: 1,
             results: Vec::new(),
         }
     }
@@ -295,20 +321,27 @@ mod tests {
 
     #[test]
     fn parse_accepts_known_args() {
-        let args: Vec<String> = ["--quick", "--bench", "fig14", "--json", "out/dir"]
-            .iter()
-            .map(|s| s.to_string())
-            .collect();
+        let args: Vec<String> =
+            ["--quick", "--bench", "fig14", "--json", "out/dir", "--threads", "4"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
         let b = Bencher::parse("t", &args).unwrap();
         assert!(b.quick);
         assert_eq!(b.filter.as_deref(), Some("fig14"));
         assert_eq!(b.json_out.as_deref(), Some(Path::new("out/dir")));
+        assert_eq!(b.threads(), 4);
+        // Absent --threads defaults to scalar.
+        assert_eq!(Bencher::parse("t", &[]).unwrap().threads(), 1);
     }
 
     #[test]
     fn parse_rejects_unknown_flags_and_dangling_json() {
         assert!(Bencher::parse("t", &["--jsno".to_string()]).is_err());
         assert!(Bencher::parse("t", &["--json".to_string()]).is_err());
+        assert!(Bencher::parse("t", &["--threads".to_string()]).is_err());
+        assert!(Bencher::parse("t", &["--threads".to_string(), "0".to_string()]).is_err());
+        assert!(Bencher::parse("t", &["--threads".to_string(), "x".to_string()]).is_err());
     }
 
     #[test]
@@ -321,6 +354,10 @@ mod tests {
         let body = std::fs::read_to_string(&file).unwrap();
         assert!(body.contains("\"bench\":\"smoke\""), "{body}");
         assert!(body.contains("\"units_per_sec\":"), "{body}");
+        // The documented percentile schema: p50/p90/p99 all present.
+        for key in ["\"p50_s\":", "\"p90_s\":", "\"p99_s\":", "\"threads\":1"] {
+            assert!(body.contains(key), "missing {key}: {body}");
+        }
         std::fs::remove_dir_all(&dir).ok();
     }
 

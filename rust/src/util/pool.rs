@@ -2,7 +2,7 @@
 //! set; the coordinator's concurrency needs are classic worker-pool shaped
 //! anyway — CPU-bound simulation jobs, no async I/O).
 //!
-//! Two pools live here:
+//! Three pools live here:
 //!
 //! * [`ThreadPool`] — stateless workers pulling boxed closures off one
 //!   shared queue (fork/join `map` workloads, e.g. the report harness).
@@ -11,13 +11,44 @@
 //!   serving substrate: an engine shard keeps its scratch buffers warm
 //!   across requests, and the bounded queues give the dispatcher real
 //!   backpressure instead of an unbounded pile-up.
+//! * [`RowPool`] — an allocation-free fork/join barrier for intra-block
+//!   data parallelism (the fused pixel loop splits output rows across its
+//!   chunks; the caller participates as chunk 0).
+//!
+//! All three are panic-safe: a panicking job is caught with
+//! [`std::panic::catch_unwind`], the worker thread stays alive, and the
+//! failure surfaces as a job-level error (or a caller-side panic carrying
+//! the original message) instead of silently shrinking the pool.
 
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Best-effort extraction of a panic payload's message (`&str` / `String`
+/// payloads cover everything `panic!` produces in this crate).
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Lock a mutex, recovering the guard when a previous holder panicked —
+/// pool bookkeeping stays consistent because every critical section here
+/// finishes its updates before any user code can unwind.
+fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
 
 /// Fixed-size worker pool executing boxed closures.
 pub struct ThreadPool {
@@ -35,11 +66,16 @@ impl ThreadPool {
                 let rx = Arc::clone(&rx);
                 std::thread::spawn(move || loop {
                     let job = {
-                        let guard = rx.lock().unwrap();
+                        let guard = lock_unpoisoned(&rx);
                         guard.recv()
                     };
                     match job {
-                        Ok(job) => job(),
+                        // A panicking job must not kill the worker: catch
+                        // the unwind and keep pulling from the queue (the
+                        // pool would otherwise shrink forever).
+                        Ok(job) => {
+                            let _ = catch_unwind(AssertUnwindSafe(job));
+                        }
                         Err(_) => break, // sender dropped -> shut down
                     }
                 })
@@ -57,7 +93,32 @@ impl ThreadPool {
     }
 
     /// Run `f` over all items in parallel and collect results in input order.
+    ///
+    /// # Panics
+    ///
+    /// If any job panics, `map` re-panics **on the caller** with the
+    /// original message after every job has finished — the workers survive
+    /// and the pool stays at full strength.  Use [`ThreadPool::try_map`]
+    /// to handle per-item failures instead.
     pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        self.try_map(items, f)
+            .into_iter()
+            .map(|r| match r {
+                Ok(v) => v,
+                Err(msg) => panic!("pool job panicked: {msg}"),
+            })
+            .collect()
+    }
+
+    /// [`map`](Self::map) with per-item fault isolation: each slot is
+    /// `Ok(result)` or `Err(panic message)`, in input order.  A panicking
+    /// job never kills its worker and never loses the other items.
+    pub fn try_map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<Result<R, String>>
     where
         T: Send + 'static,
         R: Send + 'static,
@@ -70,16 +131,20 @@ impl ThreadPool {
             let tx = tx.clone();
             let f = Arc::clone(&f);
             self.spawn(move || {
-                let r = f(item);
+                let r = catch_unwind(AssertUnwindSafe(|| f(item)))
+                    .map_err(|p| panic_message(p.as_ref()));
                 let _ = tx.send((i, r));
             });
         }
         drop(tx);
-        let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        let mut slots: Vec<Option<Result<R, String>>> = (0..n).map(|_| None).collect();
         for (i, r) in rx {
             slots[i] = Some(r);
         }
-        slots.into_iter().map(|s| s.expect("worker panicked")).collect()
+        slots
+            .into_iter()
+            .map(|s| s.unwrap_or_else(|| Err("job result never arrived".to_string())))
+            .collect()
     }
 }
 
@@ -138,7 +203,12 @@ impl<S: Send + 'static> ShardPool<S> {
                 let mut state = init(i);
                 let handle = std::thread::spawn(move || {
                     while let Ok(job) = rx.recv() {
-                        job(&mut state);
+                        // Panic-safe: a panicking job must neither kill
+                        // this worker nor leak `in_flight` (a leak skews
+                        // least-loaded dispatch away from this shard
+                        // forever; a dead worker panics the next
+                        // dispatcher with "worker is gone").
+                        let _ = catch_unwind(AssertUnwindSafe(|| job(&mut state)));
                         inflight2.fetch_sub(1, Ordering::Release);
                     }
                 });
@@ -262,6 +332,175 @@ impl<S> Drop for ShardPool<S> {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Row-parallel fork/join pool
+// ---------------------------------------------------------------------------
+
+/// Lifetime-erased reference to the caller's fork/join job.
+///
+/// `&dyn Fn(usize) + Sync` is `Send + Copy`, so handing it to the workers
+/// copies a wide pointer — no boxing, no allocation.  Soundness is
+/// [`RowPool::run`]'s contract: it blocks until every worker has finished
+/// the round, so the erased borrow never outlives the closure it points at.
+#[derive(Clone, Copy)]
+struct RowJob(&'static (dyn Fn(usize) + Sync));
+
+struct RowState {
+    /// Round counter; workers run one job per epoch bump.
+    epoch: u64,
+    job: Option<RowJob>,
+    /// Workers still executing the current round.
+    remaining: usize,
+    /// A worker's job panicked this round (re-surfaced on the caller).
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct RowShared {
+    state: Mutex<RowState>,
+    /// Signals workers: a new round started (or shutdown).
+    go: Condvar,
+    /// Signals the caller: `remaining` reached zero.
+    done: Condvar,
+}
+
+/// Allocation-free fork/join pool for intra-block data parallelism.
+///
+/// [`RowPool::run`] hands the same `Fn(usize)` to every thread — worker
+/// `i` is called with chunk id `i + 1`, and the **caller participates as
+/// chunk 0** — then blocks until all chunks return.  The job crosses to
+/// the workers as a borrowed wide pointer through a pre-allocated slot, so
+/// steady-state dispatch performs zero heap allocations
+/// (`tests/alloc_regression.rs` pins this for the fused pixel loop).
+///
+/// Panic-safe like the other pools: a panicking chunk is caught on its
+/// worker (the thread survives), the round still completes, and the panic
+/// re-surfaces on the caller after the join barrier.
+pub struct RowPool {
+    shared: Arc<RowShared>,
+    /// Serializes concurrent `run` calls (one round in flight at a time).
+    gate: Mutex<()>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl RowPool {
+    /// A pool executing jobs on `threads` chunks: `threads - 1` spawned
+    /// workers plus the calling thread.  `threads == 1` degenerates to
+    /// running the job inline with no workers at all.
+    pub fn new(threads: usize) -> Self {
+        assert!(threads > 0, "RowPool needs at least one thread");
+        let shared = Arc::new(RowShared {
+            state: Mutex::new(RowState {
+                epoch: 0,
+                job: None,
+                remaining: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            go: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let workers = (1..threads)
+            .map(|chunk| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || Self::worker_loop(&shared, chunk))
+            })
+            .collect();
+        Self { shared, gate: Mutex::new(()), workers }
+    }
+
+    /// Total chunk count (spawned workers + the caller).
+    pub fn threads(&self) -> usize {
+        self.workers.len() + 1
+    }
+
+    fn worker_loop(shared: &RowShared, chunk: usize) {
+        let mut seen = 0u64;
+        loop {
+            let job = {
+                let mut st = lock_unpoisoned(&shared.state);
+                loop {
+                    if st.shutdown {
+                        return;
+                    }
+                    match st.job {
+                        Some(job) if st.epoch != seen => {
+                            seen = st.epoch;
+                            break job;
+                        }
+                        _ => st = shared.go.wait(st).unwrap_or_else(|p| p.into_inner()),
+                    }
+                }
+            };
+            let result = catch_unwind(AssertUnwindSafe(|| (job.0)(chunk)));
+            let mut st = lock_unpoisoned(&shared.state);
+            if result.is_err() {
+                st.panicked = true;
+            }
+            st.remaining -= 1;
+            if st.remaining == 0 {
+                shared.done.notify_all();
+            }
+        }
+    }
+
+    /// Run `job(chunk)` for every chunk id in `0..threads()` — chunk 0 on
+    /// the calling thread, the rest on the workers — and return once all
+    /// chunks have finished.
+    ///
+    /// # Panics
+    ///
+    /// Re-panics on the caller if any chunk panicked (after the barrier,
+    /// so the pool is left idle and fully reusable).
+    pub fn run(&self, job: &(dyn Fn(usize) + Sync)) {
+        if self.workers.is_empty() {
+            return job(0);
+        }
+        let _round = lock_unpoisoned(&self.gate);
+        // SAFETY: lifetime erasure only.  The barrier below does not
+        // return until every worker has finished the round, so the
+        // 'static borrow never escapes this call's frame.
+        let erased: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(job) };
+        {
+            let mut st = lock_unpoisoned(&self.shared.state);
+            st.epoch += 1;
+            st.job = Some(RowJob(erased));
+            st.remaining = self.workers.len();
+            st.panicked = false;
+            self.shared.go.notify_all();
+        }
+        // The caller is chunk 0: one chunk runs for free on this thread.
+        let caller = catch_unwind(AssertUnwindSafe(|| job(0)));
+        let worker_panicked = {
+            let mut st = lock_unpoisoned(&self.shared.state);
+            while st.remaining > 0 {
+                st = self.shared.done.wait(st).unwrap_or_else(|p| p.into_inner());
+            }
+            st.job = None;
+            std::mem::take(&mut st.panicked)
+        };
+        if let Err(payload) = caller {
+            resume_unwind(payload);
+        }
+        if worker_panicked {
+            panic!("RowPool worker chunk panicked");
+        }
+    }
+}
+
+impl Drop for RowPool {
+    fn drop(&mut self) {
+        {
+            let mut st = lock_unpoisoned(&self.shared.state);
+            st.shutdown = true;
+            self.shared.go.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -335,6 +574,139 @@ mod tests {
         }
         assert_eq!(hits[0].load(Ordering::SeqCst), 0);
         assert_eq!(hits[1].load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn panicking_job_does_not_shrink_thread_pool() {
+        // Regression: a panicking job used to kill its worker thread, so
+        // enough panics emptied the pool and `map` hung forever.  Kill
+        // "both" workers of a 2-thread pool, then prove the pool still
+        // runs a full fork/join round.
+        let pool = ThreadPool::new(2);
+        for _ in 0..4 {
+            pool.spawn(|| panic!("boom"));
+        }
+        let out = pool.map((0..16).collect::<Vec<i32>>(), |x| x + 1);
+        assert_eq!(out, (1..17).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn try_map_isolates_panicking_items() {
+        let pool = ThreadPool::new(2);
+        let out = pool.try_map(vec![1i32, 2, 3, 4], |x| {
+            if x == 3 {
+                panic!("bad item {x}");
+            }
+            x * 10
+        });
+        assert_eq!(out[0], Ok(10));
+        assert_eq!(out[1], Ok(20));
+        assert_eq!(out[3], Ok(40));
+        let err = out[2].as_ref().unwrap_err();
+        assert!(err.contains("bad item 3"), "panic message lost: {err}");
+    }
+
+    #[test]
+    fn map_repanics_caller_with_the_original_message() {
+        let pool = ThreadPool::new(2);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.map(vec![0i32, 1], |x| {
+                if x == 1 {
+                    panic!("job exploded");
+                }
+                x
+            })
+        }));
+        let msg = super::panic_message(caught.unwrap_err().as_ref());
+        assert!(msg.contains("job exploded"), "{msg}");
+        // The workers survived the panic: the pool still completes work.
+        assert_eq!(pool.map(vec![5i32], |x| x), vec![5]);
+    }
+
+    #[test]
+    fn shard_pool_survives_panicking_job() {
+        // Regression: a panicking shard job used to (a) kill the worker,
+        // so the next dispatch to that shard panicked "worker is gone",
+        // and (b) leak `in_flight`, wedging least-loaded dispatch away
+        // from the shard forever.
+        let hits: Vec<Arc<AtomicUsize>> =
+            (0..2).map(|_| Arc::new(AtomicUsize::new(0))).collect();
+        let pool = {
+            let h2 = hits.clone();
+            ShardPool::new(2, 4, move |i| Arc::clone(&h2[i]))
+        };
+        pool.spawn_on(0, |_: &mut Arc<AtomicUsize>| panic!("poisoned job"));
+        // The counter must drain back to zero (no in_flight leak).
+        for _ in 0..1000 {
+            if pool.in_flight(0) == 0 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert_eq!(pool.in_flight(0), 0, "in_flight leaked after a panicking job");
+        // The worker survived: both targeted and least-loaded dispatch
+        // still reach shard 0.
+        pool.spawn_on(0, |h: &mut Arc<AtomicUsize>| {
+            h.fetch_add(1, Ordering::SeqCst);
+        });
+        for _ in 0..40 {
+            pool.spawn_least_loaded(|h: &mut Arc<AtomicUsize>| {
+                h.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // drain + join
+        let total: usize = hits.iter().map(|h| h.load(Ordering::SeqCst)).sum();
+        assert_eq!(total, 41);
+        assert!(hits[0].load(Ordering::SeqCst) > 0, "shard 0 was wedged out of dispatch");
+    }
+
+    #[test]
+    fn row_pool_runs_every_chunk_exactly_once() {
+        let pool = RowPool::new(4);
+        assert_eq!(pool.threads(), 4);
+        let counts: Vec<AtomicUsize> = (0..4).map(|_| AtomicUsize::new(0)).collect();
+        // Reusable across rounds with no re-setup.
+        for _ in 0..3 {
+            pool.run(&|chunk| {
+                counts[chunk].fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        for (i, c) in counts.iter().enumerate() {
+            assert_eq!(c.load(Ordering::SeqCst), 3, "chunk {i}");
+        }
+    }
+
+    #[test]
+    fn row_pool_single_thread_runs_inline() {
+        let pool = RowPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        let hit = AtomicUsize::new(0);
+        pool.run(&|chunk| {
+            assert_eq!(chunk, 0);
+            hit.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hit.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn row_pool_survives_panicking_chunk() {
+        let pool = RowPool::new(3);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(&|chunk| {
+                if chunk == 1 {
+                    panic!("chunk 1 down");
+                }
+            });
+        }));
+        assert!(caught.is_err(), "worker panic must re-surface on the caller");
+        // All workers survived: the next round still covers every chunk.
+        let counts: Vec<AtomicUsize> = (0..3).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(&|chunk| {
+            counts[chunk].fetch_add(1, Ordering::SeqCst);
+        });
+        for c in &counts {
+            assert_eq!(c.load(Ordering::SeqCst), 1);
+        }
     }
 
     #[test]

@@ -28,6 +28,8 @@ pub struct Summary {
     pub max: f64,
     /// Median (nearest rank).
     pub p50: f64,
+    /// 90th percentile (nearest rank).
+    pub p90: f64,
     /// 95th percentile (nearest rank).
     pub p95: f64,
     /// 99th percentile (nearest rank).
@@ -50,6 +52,7 @@ impl Summary {
             min: sorted[0],
             max: sorted[n - 1],
             p50: percentile(&sorted, 0.50),
+            p90: percentile(&sorted, 0.90),
             p95: percentile(&sorted, 0.95),
             p99: percentile(&sorted, 0.99),
         }
@@ -327,6 +330,7 @@ mod tests {
         let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
         let s = Summary::of(&xs);
         assert_eq!(s.p50, 50.0);
+        assert_eq!(s.p90, 90.0);
         assert_eq!(s.p95, 95.0);
         assert_eq!(s.p99, 99.0);
         assert_eq!(s.min, 1.0);

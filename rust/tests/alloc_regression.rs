@@ -174,6 +174,52 @@ fn steady_state_whole_model_warm_shard_inference_allocates_nothing() {
 }
 
 #[test]
+fn steady_state_multi_threaded_inference_allocates_nothing() {
+    // The multi-threaded fused pixel loop must preserve the zero-allocation
+    // steady state: the RowPool lane buffers (per-chunk FusedScratch and
+    // staging outputs) are sized during materialize / the first batch, and
+    // every batch after that reuses them.  The allocation counter is
+    // thread-local, so this window observes the submitting thread — the
+    // one that resizes the flat output buffer, runs chunk 0 of every
+    // batch, and stitches the lane outputs back together.
+    use fused_dsc::exec::ExecutionPlan;
+    let params = make_model_params(Some(vec![
+        BlockConfig::new(8, 8, 8, 16, 8, 2, false),
+        BlockConfig::new(4, 4, 8, 16, 16, 1, false),
+        BlockConfig::new(4, 4, 16, 32, 16, 1, true),
+    ]));
+    let backend = Backend::FusedHost(PipelineVersion::V3);
+    let plan = ExecutionPlan::uniform(&params, backend).with_threads(3);
+    let engine = Arc::new(Engine::with_plan(params.clone(), plan));
+    let mut shard = EngineShard::new(Arc::clone(&engine));
+    let inputs: Vec<TensorI8> =
+        (0..5).map(|i| engine.synthetic_input(&format!("alloc.t{i}"))).collect();
+    let mut out = InferenceOutput::default();
+
+    // Warm-up request sizes the arena, the lane buffers, and the logits.
+    shard.infer_into(&inputs[0], &mut out).unwrap();
+
+    let before = alloc_events_now();
+    for x in &inputs[1..] {
+        shard.infer_into(x, &mut out).unwrap();
+    }
+    let after = alloc_events_now();
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state multi-threaded warm-shard inference performed {} heap \
+         allocations on the submitting thread (expected zero after warm-up — \
+         the RowPool lane-staging path regressed)",
+        after - before
+    );
+    // Parallelism must not move the numbers: bit-identical to the scalar plan.
+    let scalar = Engine::with_plan(params, ExecutionPlan::uniform(&engine.params, backend));
+    let want = scalar.infer(&inputs[4]).unwrap();
+    assert_eq!(out.logits, want.logits, "threaded path must stay bit-identical");
+    assert_eq!(out.sim_cycles, want.sim_cycles);
+}
+
+#[test]
 fn metrics_recording_is_o_buckets_not_o_requests() {
     // The serving metrics sink must not grow with request count: recording
     // into the atomic counters and the fixed-bucket histograms performs

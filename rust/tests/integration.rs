@@ -187,7 +187,7 @@ fn backbone_is_well_formed() {
     let bb = backbone();
     assert_eq!(bb.len(), 16);
     for b in &bb {
-        b.validate();
+        b.validate().unwrap();
         assert!(b.m >= b.cin, "inverted residual expands");
     }
 }

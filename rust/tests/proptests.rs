@@ -202,6 +202,7 @@ fn coordinator_scheduling_invariants() {
                 workers,
                 queue_depth,
                 plan: None,
+                threads: 1,
             },
         );
         let c = engine.params.blocks[0].cfg;
@@ -269,6 +270,45 @@ fn arb_chained_model(g: &mut Gen) -> fused_dsc::model::weights::ModelParams {
         cfgs.push(cfg);
     }
     fused_dsc::model::weights::make_model_params(Some(cfgs))
+}
+
+/// THE parallel-backend acceptance property: an [`ExecutionPlan`] carrying
+/// any `threads` count serves logits, `sim_cycles`, AND engine stats
+/// bit-identical to the scalar plan, across random chained geometries.
+/// Parallelism moves *where* pixels are computed, never *what* any output
+/// bit is — the per-row reduction order is deterministic and the traffic
+/// counters are accounted in closed form.
+#[test]
+fn parallel_plans_are_bit_identical_across_thread_counts() {
+    use fused_dsc::exec::ExecutionPlan;
+    check("parallel plan == scalar plan", |g| {
+        let params = arb_chained_model(g);
+        let version = *g.pick(&PipelineVersion::ALL);
+        let scalar_plan =
+            ExecutionPlan::uniform(&params, Backend::FusedHost(version));
+        let reference = Engine::with_plan(params.clone(), scalar_plan.clone());
+        let x = reference.synthetic_input("pt.par");
+        let want = reference.infer(&x).map_err(|e| e.to_string())?;
+        for threads in [2usize, 4, 8] {
+            let engine =
+                Engine::with_plan(params.clone(), scalar_plan.clone().with_threads(threads));
+            let got = engine.infer(&x).map_err(|e| e.to_string())?;
+            prop_assert!(
+                got.logits == want.logits,
+                "logits diverged at {threads} threads on {}",
+                version.name()
+            );
+            prop_assert_eq!(got.sim_cycles, want.sim_cycles);
+            prop_assert_eq!(got.class, want.class);
+            // The warm shard path must agree too (it owns the pool-backed
+            // executors for the serving steady state).
+            let mut shard = EngineShard::new(Arc::new(engine));
+            let warm = shard.infer(&x).map_err(|e| e.to_string())?;
+            prop_assert!(warm.logits == want.logits, "warm shard diverged at {threads}");
+            prop_assert_eq!(warm.sim_cycles, want.sim_cycles);
+        }
+        Ok(())
+    });
 }
 
 /// THE tuner correctness property: every plan the search emits — the four

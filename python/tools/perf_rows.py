@@ -1,0 +1,125 @@
+#!/usr/bin/env python3
+"""Render EXPERIMENTS.md §Perf markdown rows from BENCH_*.json artifacts.
+
+Stdlib-only on purpose: this runs wherever the CI artifacts were
+downloaded, with no environment setup.
+
+Two modes, matching the two artifact conventions in the perf log:
+
+* Single file — for artifacts whose before/after pair is self-contained
+  (iteration 7: every `iss/*` / `block/*-iss` case has a `*-stepped`
+  oracle twin in the same JSON)::
+
+      python3 python/tools/perf_rows.py BENCH_simulator_hotpath.json
+
+  Cases with a twin get a `stepped | block | speedup` row; the rest get
+  a plain `mean ms` row.
+
+* Cross-commit pair — for iterations whose "before" lives in the parent
+  commit's artifact (iterations 3–6)::
+
+      python3 python/tools/perf_rows.py --pair before.json after.json
+
+  Benches present in both files get `before | after | speedup`; benches
+  new in `after` get `n/a (new)`.
+
+The output is pasted verbatim into the matching EXPERIMENTS.md table.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from pathlib import Path
+
+# `iss/alu-loop-stepped (Msim-cycles/s)` pairs with
+# `iss/alu-loop (Msim-cycles/s)`: the `-stepped` tag sits before the
+# optional parenthesised unit suffix.
+_STEPPED = re.compile(r"^(?P<base>.*?)-stepped(?P<suffix>( \([^)]*\))?)$")
+
+
+def _load(path: Path) -> dict[str, float]:
+    """name -> mean seconds for every result in one artifact."""
+    doc = json.loads(path.read_text())
+    means = {}
+    for r in doc.get("results", []):
+        means[r["name"]] = float(r["mean_s"])
+    if not means:
+        sys.exit(f"error: no results in {path}")
+    return means
+
+
+def _ms(seconds: float) -> str:
+    return f"{seconds * 1e3:.3f} ms"
+
+
+def _speedup(slow: float, fast: float) -> str:
+    return f"{slow / fast:.2f}×" if fast > 0 else "n/a"
+
+
+def render_single(path: Path) -> list[str]:
+    means = _load(path)
+    paired = {}  # base name -> stepped mean
+    for name, mean in means.items():
+        m = _STEPPED.match(name)
+        if m:
+            paired[m.group("base") + m.group("suffix")] = mean
+    rows = [
+        "| bench | stepped oracle (mean ms) | block dispatch (mean ms) | speedup |",
+        "|---|---|---|---|",
+    ]
+    for name, mean in means.items():
+        if _STEPPED.match(name):
+            continue  # rendered as its twin's column
+        if name in paired:
+            rows.append(
+                f"| `{name}` | {_ms(paired[name])} | {_ms(mean)} "
+                f"| {_speedup(paired[name], mean)} |"
+            )
+        else:
+            rows.append(f"| `{name}` | — | {_ms(mean)} | — |")
+    return rows
+
+
+def render_pair(before_path: Path, after_path: Path) -> list[str]:
+    before, after = _load(before_path), _load(after_path)
+    rows = [
+        "| bench | before (mean ms) | after (mean ms) | speedup |",
+        "|---|---|---|---|",
+    ]
+    for name, mean in after.items():
+        if name in before:
+            rows.append(
+                f"| `{name}` | {_ms(before[name])} | {_ms(mean)} "
+                f"| {_speedup(before[name], mean)} |"
+            )
+        else:
+            rows.append(f"| `{name}` | n/a (new) | {_ms(mean)} | — |")
+    return rows
+
+
+def main(argv: list[str] | None = None) -> None:
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("artifact", type=Path, nargs="?", help="single BENCH_*.json")
+    p.add_argument(
+        "--pair",
+        nargs=2,
+        type=Path,
+        metavar=("BEFORE", "AFTER"),
+        help="cross-commit before/after artifacts",
+    )
+    a = p.parse_args(argv)
+    if a.pair and a.artifact:
+        p.error("use either a single artifact or --pair, not both")
+    if a.pair:
+        print("\n".join(render_pair(*a.pair)))
+    elif a.artifact:
+        print("\n".join(render_single(a.artifact)))
+    else:
+        p.error("an artifact path (or --pair) is required")
+
+
+if __name__ == "__main__":
+    main()

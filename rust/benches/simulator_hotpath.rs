@@ -2,6 +2,13 @@
 //! the targets of EXPERIMENTS.md §Perf.  Reports simulated-cycles-per-
 //! second for the ISS and pixel throughput for the CFU functional model.
 //!
+//! The `iss/*` and `block/fused-v3-iss` cases run the basic-block dispatch
+//! engine (`Machine::run`); their `*-stepped` twins run the retained
+//! per-instruction oracle (`Machine::run_stepped`) so every artifact
+//! carries its own before/after pair for the iteration-7 speedup.  Before
+//! timing anything, `verify_dispatch_identity` re-asserts that the two
+//! dispatchers agree bit-for-bit on the bench programs.
+//!
 //! `--json <dir>` emits the `BENCH_simulator_hotpath.json` artifact tracked
 //! per-PR by the CI bench-smoke job (EXPERIMENTS.md §Perf log).
 //!
@@ -15,55 +22,95 @@ use std::sync::Arc;
 
 use fused_dsc::baseline::run_block_v0;
 use fused_dsc::cfu::{CfuUnit, PipelineVersion};
-use fused_dsc::driver::run_block_fused;
-use fused_dsc::isa::asm::Asm;
-use fused_dsc::isa::*;
 use fused_dsc::cpu::core::Machine;
 use fused_dsc::cpu::NoCfu;
+use fused_dsc::driver::{run_block_fused, run_block_fused_stepped};
+use fused_dsc::isa::asm::Asm;
+use fused_dsc::isa::*;
 use fused_dsc::model::blocks::BlockConfig;
 use fused_dsc::model::weights::{gen_input, make_block_params};
 use fused_dsc::tensor::TensorI8;
 use fused_dsc::util::bench::Bencher;
 use fused_dsc::util::pool::RowPool;
 
+/// Tight ALU loop (I$-resident): the raw dispatch-rate workload.
+fn alu_loop_prog() -> Vec<Instr> {
+    let mut a = Asm::new();
+    a.li(T0, 0);
+    a.li(T1, 2_000_000);
+    a.label("l");
+    a.addi(T0, T0, 1);
+    a.xor(T2, T0, T1);
+    a.and(T3, T2, T0);
+    a.blt(T0, T1, "l");
+    a.ebreak();
+    a.assemble().unwrap()
+}
+
+/// Memory-heavy loop (D$ exercise).
+fn memcpy_loop_prog() -> Vec<Instr> {
+    let mut a = Asm::new();
+    a.li(S0, 0x8000);
+    a.li(S1, 0x20000);
+    a.li(S2, 64 * 1024);
+    a.label("l");
+    a.lw(T0, S0, 0);
+    a.sw(T0, S1, 0);
+    a.addi(S0, S0, 4);
+    a.addi(S1, S1, 4);
+    a.addi(S2, S2, -4);
+    a.bnez(S2, "l");
+    a.ebreak();
+    a.assemble().unwrap()
+}
+
+fn run_prog(prog: &[Instr], mem_size: usize, stepped: bool) -> Machine<NoCfu> {
+    let mut m = Machine::new(mem_size, NoCfu);
+    m.load_program(0, prog).unwrap();
+    if stepped {
+        m.run_stepped(u64::MAX).unwrap();
+    } else {
+        m.run(u64::MAX).unwrap();
+    }
+    m
+}
+
+/// The block dispatcher must match the stepped oracle bit-for-bit; assert
+/// it on the bench programs so every bench-smoke run (CI) re-checks the
+/// invariant before timing anything.
+fn verify_dispatch_identity() {
+    for (prog, mem_size) in [(alu_loop_prog(), 1 << 16), (memcpy_loop_prog(), 1 << 20)] {
+        let b = run_prog(&prog, mem_size, false);
+        let s = run_prog(&prog, mem_size, true);
+        assert_eq!((b.cycles, b.instret), (s.cycles, s.instret), "cycle/instret divergence");
+        assert_eq!(b.regs, s.regs, "register divergence");
+        assert_eq!(b.stats, s.stats, "stats divergence");
+        assert_eq!(
+            (b.icache.hits, b.icache.misses, b.dcache.hits, b.dcache.misses),
+            (s.icache.hits, s.icache.misses, s.dcache.hits, s.dcache.misses),
+            "cache counter divergence"
+        );
+    }
+}
+
 fn main() {
+    verify_dispatch_identity();
     let mut b = Bencher::named("simulator_hotpath");
 
-    // Raw ISS dispatch rate: a tight ALU loop (icache-resident).
+    // Raw ISS dispatch rate: block engine vs the per-instruction oracle.
     b.bench("iss/alu-loop (Msim-cycles/s)", || {
-        let mut a = Asm::new();
-        a.li(T0, 0);
-        a.li(T1, 2_000_000);
-        a.label("l");
-        a.addi(T0, T0, 1);
-        a.xor(T2, T0, T1);
-        a.and(T3, T2, T0);
-        a.blt(T0, T1, "l");
-        a.ebreak();
-        let prog = a.assemble().unwrap();
-        let mut m = Machine::new(1 << 16, NoCfu);
-        m.load_program(0, &prog).unwrap();
-        m.run(u64::MAX).unwrap().cycles
+        run_prog(&alu_loop_prog(), 1 << 16, false).cycles
+    });
+    b.bench("iss/alu-loop-stepped (Msim-cycles/s)", || {
+        run_prog(&alu_loop_prog(), 1 << 16, true).cycles
     });
 
-    // Memory-heavy ISS rate (D$ exercise).
+    // Memory-heavy ISS rate (D$ exercise), same pairing.
     b.bench("iss/memcpy-loop (Msim-cycles/s)", || {
-        let mut a = Asm::new();
-        a.li(S0, 0x8000);
-        a.li(S1, 0x20000);
-        a.li(S2, 64 * 1024);
-        a.label("l");
-        a.lw(T0, S0, 0);
-        a.sw(T0, S1, 0);
-        a.addi(S0, S0, 4);
-        a.addi(S1, S1, 4);
-        a.addi(S2, S2, -4);
-        a.bnez(S2, "l");
-        a.ebreak();
-        let prog = a.assemble().unwrap();
-        let mut m = Machine::new(1 << 20, NoCfu);
-        m.load_program(0, &prog).unwrap();
-        m.run(u64::MAX).unwrap().cycles
+        run_prog(&memcpy_loop_prog(), 1 << 20, false).cycles
+    });
+    b.bench("iss/memcpy-loop-stepped (Msim-cycles/s)", || {
+        run_prog(&memcpy_loop_prog(), 1 << 20, true).cycles
     });
 
     // End-to-end block paths (the report workloads).
@@ -75,6 +122,9 @@ fn main() {
     );
     b.bench("block/v0-software-iss", || run_block_v0(&bp, &x).unwrap().cycles);
     b.bench("block/fused-v3-iss", || run_block_fused(&bp, &x, PipelineVersion::V3).unwrap().cycles);
+    b.bench("block/fused-v3-iss-stepped", || {
+        run_block_fused_stepped(&bp, &x, PipelineVersion::V3).unwrap().cycles
+    });
     // The tentpole workload: one persistent (warm) unit, optionally backed
     // by a row pool — the same configuration the serving steady state runs.
     let threads = b.threads();

@@ -179,7 +179,8 @@ pub fn run_block_cfu_playground(bp: &BlockParams, x: &TensorI8) -> Result<PgResu
     let r = mach.run(20_000_000_000)?;
     anyhow::ensure!(r.reason == ExitReason::Halted, "cfu-playground run did not halt");
     let (ho, wo) = (cfg.h_out() as usize, cfg.w_out() as usize);
-    let out = TensorI8::from_vec(&[ho, wo, cout], mach.mem.read_i8_slice(l.out, ho * wo * cout)?);
+    let mut out = TensorI8::zeros(&[ho, wo, cout]);
+    mach.mem.read_i8_into(l.out, &mut out.data)?;
     Ok(PgResult { out, cycles: r.cycles, instret: r.instret, macc_ops: mach.cfu.macc_ops })
 }
 

@@ -310,10 +310,8 @@ pub fn run_block_v0(bp: &BlockParams, x: &TensorI8) -> Result<V0Result> {
     let r = m.run(20_000_000_000)?;
     anyhow::ensure!(r.reason == ExitReason::Halted, "v0 did not halt");
     let (ho, wo, cout) = (cfg.h_out() as usize, cfg.w_out() as usize, cfg.cout as usize);
-    let out = TensorI8::from_vec(
-        &[ho, wo, cout],
-        m.mem.read_i8_slice(l.out, ho * wo * cout)?,
-    );
+    let mut out = TensorI8::zeros(&[ho, wo, cout]);
+    m.mem.read_i8_into(l.out, &mut out.data)?;
     Ok(V0Result {
         out,
         cycles: r.cycles,

@@ -63,6 +63,13 @@ impl Cache {
         addr >> self.line_bits
     }
 
+    /// The line size in bytes — exposes the geometry that callers doing
+    /// decode-time fetch accounting (the ISS block cache) plan around.
+    #[inline(always)]
+    pub fn line_bytes(&self) -> u32 {
+        1 << self.line_bits
+    }
+
     /// Record a hit that the caller proved without a tag lookup (a repeat
     /// access to the line it just touched: `access` fills on miss, and a
     /// direct-mapped lookup has no replacement state, so re-walking the tag

@@ -49,6 +49,18 @@ impl CostModel {
         }
     }
 
+    /// Cycles charged for one instruction issue given whether its I$ fetch
+    /// hit.  Both ISS dispatch loops price fetches through this single
+    /// helper, so the block engine and the stepped oracle cannot drift.
+    #[inline(always)]
+    pub fn fetch_cycles(&self, icache_hit: bool) -> u64 {
+        if icache_hit {
+            self.base
+        } else {
+            self.base + self.icache_miss_penalty
+        }
+    }
+
     /// An idealized core (1 cycle everything, perfect caches) — used by
     /// ablation benches to separate ISA cost from memory-system cost.
     pub fn ideal() -> Self {

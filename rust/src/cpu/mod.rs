@@ -5,6 +5,13 @@
 //! on the core* (baseline software v0 and CFU driver loops alike); this
 //! module measures the same quantity: real RV32IM programs execute against
 //! a pipeline cost model with I$/D$ simulation and a blocking CFU port.
+//!
+//! Execution is dispatched through a basic-block engine
+//! ([`core::Machine::run`]) that decodes straight-line instruction runs
+//! once and replays them with precomputed fetch accounting; the
+//! per-instruction loop survives as [`core::Machine::run_stepped`], the
+//! oracle every simulated counter is differentially tested against
+//! (ARCHITECTURE.md §ISS basic-block dispatch).
 
 pub mod cache;
 pub mod core;

@@ -152,15 +152,17 @@ pub struct FusedResult {
     pub instret: u64,
     pub cfu_ops: u64,
     pub cfu_stall_cycles: u64,
+    pub icache_hits: u64,
+    pub icache_misses: u64,
+    pub dcache_hits: u64,
+    pub dcache_misses: u64,
 }
 
-/// Run one block on the ISS through the fused CFU with the given pipeline
-/// version; returns bit-exact outputs plus the measured cycle count
-/// (including all CPU↔CFU overhead, per the paper's methodology).
-pub fn run_block_fused(
+fn run_block_fused_impl(
     bp: &BlockParams,
     x: &TensorI8,
     version: PipelineVersion,
+    stepped: bool,
 ) -> Result<FusedResult> {
     let cfg = &bp.cfg;
     let l = BlockLayout::for_block(cfg);
@@ -178,17 +180,50 @@ pub fn run_block_fused(
         }
     }
     mach.mem.write_i8_slice(l.ex_w, &exw_fm)?;
-    let r = mach.run(20_000_000_000)?;
+    let r = if stepped {
+        mach.run_stepped(20_000_000_000)
+    } else {
+        mach.run(20_000_000_000)
+    }?;
     anyhow::ensure!(r.reason == ExitReason::Halted, "driver did not halt");
     let (ho, wo, cout) = (cfg.h_out() as usize, cfg.w_out() as usize, cfg.cout as usize);
-    let out = TensorI8::from_vec(&[ho, wo, cout], mach.mem.read_i8_slice(l.out, ho * wo * cout)?);
+    let mut out = TensorI8::zeros(&[ho, wo, cout]);
+    mach.mem.read_i8_into(l.out, &mut out.data)?;
     Ok(FusedResult {
         out,
         cycles: r.cycles,
         instret: r.instret,
         cfu_ops: mach.stats.cfu_ops,
         cfu_stall_cycles: mach.stats.cfu_stall_cycles,
+        icache_hits: mach.icache.hits,
+        icache_misses: mach.icache.misses,
+        dcache_hits: mach.dcache.hits,
+        dcache_misses: mach.dcache.misses,
     })
+}
+
+/// Run one block on the ISS through the fused CFU with the given pipeline
+/// version; returns bit-exact outputs plus the measured cycle count
+/// (including all CPU↔CFU overhead, per the paper's methodology).
+pub fn run_block_fused(
+    bp: &BlockParams,
+    x: &TensorI8,
+    version: PipelineVersion,
+) -> Result<FusedResult> {
+    run_block_fused_impl(bp, x, version, false)
+}
+
+/// [`run_block_fused`] on the per-instruction oracle loop
+/// ([`Machine::run_stepped`]) instead of the block dispatcher — same
+/// simulated numbers by construction (the differential tests assert it),
+/// slower on the host.  Exists for differential testing and the
+/// before/after pair in the `simulator_hotpath` bench.
+pub fn run_block_fused_stepped(
+    bp: &BlockParams,
+    x: &TensorI8,
+    version: PipelineVersion,
+) -> Result<FusedResult> {
+    run_block_fused_impl(bp, x, version, true)
 }
 
 #[cfg(test)]

@@ -154,6 +154,22 @@ impl Instr {
             _ => None,
         }
     }
+
+    /// Whether this instruction terminates a basic block: control transfers
+    /// (branches, `jal`, `jalr`) and halts (`ebreak`).  `ecall` is included
+    /// so a marker's timestamp is taken at a block boundary and the block
+    /// engine ([`crate::cpu::core::Machine::run`]) never has to reason about
+    /// host hooks mid-block.
+    pub fn ends_block(&self) -> bool {
+        matches!(
+            *self,
+            Instr::Branch { .. }
+                | Instr::Jal { .. }
+                | Instr::Jalr { .. }
+                | Instr::Ecall
+                | Instr::Ebreak
+        )
+    }
 }
 
 /// Pretty-print (disassembly) — used in traces and failure reports.
@@ -192,5 +208,26 @@ impl std::fmt::Display for Instr {
             Instr::Ecall => write!(f, "Ecall"),
             Instr::Ebreak => write!(f, "Ebreak"),
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_terminators_are_exactly_the_dispatch_boundaries() {
+        assert!(Instr::Branch { op: BranchOp::Beq, rs1: T0, rs2: T1, imm: 8 }.ends_block());
+        assert!(Instr::Jal { rd: RA, imm: 16 }.ends_block());
+        assert!(Instr::Jalr { rd: ZERO, rs1: RA, imm: 0 }.ends_block());
+        assert!(Instr::Ecall.ends_block());
+        assert!(Instr::Ebreak.ends_block());
+        assert!(!Instr::Alu { op: AluOp::Add, rd: T0, rs1: T1, rs2: T2 }.ends_block());
+        assert!(!Instr::AluImm { op: AluImmOp::Addi, rd: T0, rs1: T0, imm: 1 }.ends_block());
+        assert!(!Instr::Load { op: LoadOp::Lw, rd: T0, rs1: S0, imm: 0 }.ends_block());
+        assert!(!Instr::Store { op: StoreOp::Sw, rs1: S0, rs2: T0, imm: 0 }.ends_block());
+        assert!(!Instr::Lui { rd: T0, imm: 0x1000 }.ends_block());
+        assert!(!Instr::Auipc { rd: T0, imm: 0 }.ends_block());
+        assert!(!Instr::Cfu { funct7: 1, funct3: 0, rd: T0, rs1: T1, rs2: T2 }.ends_block());
     }
 }

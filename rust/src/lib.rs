@@ -19,7 +19,7 @@
 //!
 //! | Module | Role |
 //! |---|---|
-//! | [`cpu`] | Cycle-accurate RV32IM core, I$/D$ model, cost model |
+//! | [`cpu`] | Cycle-accurate RV32IM core (basic-block dispatch + stepped oracle), I$/D$ model, cost model |
 //! | [`isa`] | RV32IM + custom-0 encode/decode and the mini assembler |
 //! | [`cfu`] | The fused-DSC accelerator: buffers, engines, pipeline model |
 //! | [`driver`] | RV32IM firmware that programs the CFU from inside the ISS |

@@ -5,7 +5,7 @@ use fused_dsc::baseline::cfu_playground::run_block_cfu_playground;
 use fused_dsc::baseline::run_block_v0;
 use fused_dsc::cfu::{CfuUnit, PipelineVersion};
 use fused_dsc::coordinator::{Backend, Coordinator, Engine, ServeConfig};
-use fused_dsc::driver::run_block_fused;
+use fused_dsc::driver::{run_block_fused, run_block_fused_stepped};
 use fused_dsc::model::blocks::{backbone, BlockConfig};
 use fused_dsc::model::refimpl::{block_ref, model_ref};
 use fused_dsc::model::weights::{gen_input, make_block_params, make_model_params};
@@ -72,6 +72,78 @@ fn cycle_ordering_v0_pg_v1_v2_v3() {
     assert!(c1 > c2, "v1 {c1} <= v2 {c2}");
     assert!(c2 >= c3, "v2 {c2} < v3 {c3}");
     assert!(c0 / c3 > 20, "fused speedup too small: {}", c0 / c3);
+}
+
+/// The block-dispatch engine and the retained per-instruction oracle agree
+/// bit-for-bit on the full CFU driver path (program + CFU stalls + caches),
+/// not just on synthetic ALU streams: same output bytes, same cycle count,
+/// same CFU op/stall totals, same hit/miss split on both caches.
+#[test]
+fn fused_driver_block_dispatch_matches_stepped_oracle() {
+    for (cfg, salt) in [
+        (BlockConfig::new(7, 5, 8, 16, 16, 2, false), "int.bd1"),
+        (BlockConfig::new(10, 10, 8, 48, 8, 1, true), "int.bd2"),
+    ] {
+        let bp = make_block_params(6, cfg, -4);
+        let x = block_input(&cfg, bp.zp_in(), salt);
+        for v in PipelineVersion::ALL {
+            let b = run_block_fused(&bp, &x, v).unwrap();
+            let s = run_block_fused_stepped(&bp, &x, v).unwrap();
+            assert_eq!(b.out.data, s.out.data, "{} output", v.name());
+            assert_eq!(
+                (b.cycles, b.instret, b.cfu_ops, b.cfu_stall_cycles),
+                (s.cycles, s.instret, s.cfu_ops, s.cfu_stall_cycles),
+                "{} counters",
+                v.name()
+            );
+            assert_eq!(
+                (b.icache_hits, b.icache_misses, b.dcache_hits, b.dcache_misses),
+                (s.icache_hits, s.icache_misses, s.dcache_hits, s.dcache_misses),
+                "{} cache counters",
+                v.name()
+            );
+        }
+    }
+}
+
+/// Pin the ISS cycle model at block granularity against a committed
+/// snapshot (same record-or-compare convention as `sim_cycles_mini.txt`):
+/// the block-dispatch engine is a host-speed change only and must never
+/// move simulated cycles, instret, or watch traffic.
+#[test]
+fn sim_cycles_golden_iss_block_run() {
+    let cfg = BlockConfig::new(10, 10, 8, 48, 8, 1, true);
+    let bp = make_block_params(3, cfg, -3);
+    let x = block_input(&cfg, bp.zp_in(), "int.gold");
+    let v0 = run_block_v0(&bp, &x).unwrap();
+    let fused = run_block_fused(&bp, &x, PipelineVersion::V3).unwrap();
+    let mut lines = String::new();
+    lines.push_str(&format!("v0 {} {}\n", v0.cycles, v0.instret));
+    lines.push_str(&format!(
+        "v0.f1_watch {} {} {} {}\n",
+        v0.f1_watch.loads, v0.f1_watch.stores, v0.f1_watch.bytes, v0.f1_watch.cycles
+    ));
+    lines.push_str(&format!("fused_v3 {} {}\n", fused.cycles, fused.instret));
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden/sim_cycles_iss.txt");
+    match std::fs::read_to_string(&path) {
+        Ok(want) => assert_eq!(
+            lines,
+            want,
+            "ISS block cycle snapshot diverged — if the cycle model changed \
+             on purpose, delete {} and re-run to re-bless",
+            path.display()
+        ),
+        Err(_) => {
+            std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+            std::fs::write(&path, &lines).unwrap();
+            println!(
+                "RECORDED: ISS block cycle snapshot at {} — commit it to pin \
+                 the cycle model.",
+                path.display()
+            );
+        }
+    }
 }
 
 /// The v0 baseline moves every F1/F2 byte through RAM; the fused driver's

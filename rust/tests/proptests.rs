@@ -375,6 +375,185 @@ fn tune_serialization_round_trips_deterministically() {
     });
 }
 
+/// THE dispatch-identity property (EXPERIMENTS.md §Perf iteration 7): on
+/// random valid instruction streams — ALU mixes, loads/stores over a seeded
+/// memory image, forward/backward branches, calls, ecall markers, watches,
+/// and deliberately misaligned `jalr` targets — the basic-block engine
+/// (`Machine::run`) and the per-instruction oracle (`Machine::run_stepped`)
+/// agree on every observable: `RunResult`, registers, pc, `Stats`, markers,
+/// watch counters, I$/D$ hit/miss counts and memory contents, including
+/// across a resume after a mid-block budget cut.
+#[test]
+fn iss_block_dispatch_is_bit_identical_to_the_stepped_oracle() {
+    use fused_dsc::cpu::core::{Machine, RunResult};
+    use fused_dsc::cpu::{ExitReason, NoCfu};
+    use fused_dsc::isa::asm::Asm;
+    use fused_dsc::isa::*;
+
+    // x8 (S0) holds the data-region base and x31 (T6) the loop counters;
+    // every other generated write goes to this pool so streams stay
+    // well-formed (x29/T4 is the auipc scratch for jalr segments).
+    const RD_POOL: [Reg; 12] = [T0, T1, T2, T3, T5, A0, A1, A2, A3, S1, S2, S3];
+    let alu_ops = [
+        AluOp::Add, AluOp::Sub, AluOp::Sll, AluOp::Slt, AluOp::Sltu, AluOp::Xor,
+        AluOp::Srl, AluOp::Sra, AluOp::Or, AluOp::And, AluOp::Mul, AluOp::Mulh,
+        AluOp::Mulhsu, AluOp::Mulhu, AluOp::Div, AluOp::Divu, AluOp::Rem, AluOp::Remu,
+    ];
+    let imm_ops = [
+        AluImmOp::Addi, AluImmOp::Slti, AluImmOp::Sltiu, AluImmOp::Xori,
+        AluImmOp::Ori, AluImmOp::Andi, AluImmOp::Slli, AluImmOp::Srli, AluImmOp::Srai,
+    ];
+    let load_ops = [LoadOp::Lb, LoadOp::Lh, LoadOp::Lw, LoadOp::Lbu, LoadOp::Lhu];
+    let store_ops = [StoreOp::Sb, StoreOp::Sh, StoreOp::Sw];
+
+    let any_alu = move |g: &mut Gen, a: &mut Asm| {
+        let rd = *g.pick(&RD_POOL);
+        let rs1 = g.usize(0, 31) as Reg;
+        if g.bool() {
+            let rs2 = g.usize(0, 31) as Reg;
+            a.emit(Instr::Alu { op: *g.pick(&alu_ops), rd, rs1, rs2 });
+        } else {
+            let op = *g.pick(&imm_ops);
+            let shift = matches!(op, AluImmOp::Slli | AluImmOp::Srli | AluImmOp::Srai);
+            let imm = if shift {
+                g.i32(0, 31)
+            } else {
+                g.i32(-2048, 2047)
+            };
+            a.emit(Instr::AluImm { op, rd, rs1, imm });
+        }
+    };
+    // Loads/stores are S0-relative: addresses land in [0x7800, 0x8804),
+    // inside the seeded image, so every access is in bounds (the ISS allows
+    // unaligned data addresses).
+    let mem_op = move |g: &mut Gen, a: &mut Asm| {
+        let imm = g.i32(-2048, 2044);
+        if g.bool() {
+            a.emit(Instr::Load { op: *g.pick(&load_ops), rd: *g.pick(&RD_POOL), rs1: S0, imm });
+        } else {
+            let op = *g.pick(&store_ops);
+            a.emit(Instr::Store { op, rs1: S0, rs2: g.usize(0, 31) as Reg, imm });
+        }
+    };
+
+    check("ISS block dispatch == stepped oracle", |g| {
+        let mut a = Asm::new();
+        a.li(S0, 0x8000);
+        let segs = g.usize(3, 18);
+        for s in 0..segs {
+            match g.usize(0, 7) {
+                0 | 1 => any_alu(g, &mut a),
+                2 | 3 => mem_op(g, &mut a),
+                4 => {
+                    // Forward conditional branch over a short filler run.
+                    let lbl = format!("f{s}");
+                    let (rs1, rs2) = (g.usize(0, 31) as Reg, g.usize(0, 31) as Reg);
+                    match g.usize(0, 5) {
+                        0 => a.beq(rs1, rs2, &lbl),
+                        1 => a.bne(rs1, rs2, &lbl),
+                        2 => a.blt(rs1, rs2, &lbl),
+                        3 => a.bge(rs1, rs2, &lbl),
+                        4 => a.bltu(rs1, rs2, &lbl),
+                        _ => a.bgeu(rs1, rs2, &lbl),
+                    }
+                    for _ in 0..g.usize(1, 3) {
+                        any_alu(g, &mut a);
+                    }
+                    a.label(&lbl);
+                }
+                5 => {
+                    // Bounded backward loop (T6 is reserved for the count).
+                    let lbl = format!("l{s}");
+                    a.li(T6, g.i32(1, 5));
+                    a.label(&lbl);
+                    for _ in 0..g.usize(1, 2) {
+                        if g.bool() {
+                            any_alu(g, &mut a);
+                        } else {
+                            mem_op(g, &mut a);
+                        }
+                    }
+                    a.addi(T6, T6, -1);
+                    a.bnez(T6, &lbl);
+                }
+                6 => {
+                    // Measurement marker (tag in a0).
+                    a.li(A0, g.i32(0, 999));
+                    a.ecall();
+                }
+                _ => {
+                    if g.bool() {
+                        a.jal(*g.pick(&[ZERO, RA, T5]), &format!("j{s}"));
+                        for _ in 0..g.usize(1, 2) {
+                            any_alu(g, &mut a);
+                        }
+                        a.label(&format!("j{s}"));
+                    } else {
+                        // auipc+jalr hops: +8 lands on the nop, +12 skips
+                        // it, +10 lands on a 2-byte-misaligned pc — the
+                        // block engine's single-step fallback path.  (If
+                        // already misaligned the offsets shift by 2 and
+                        // +10 realigns; all three stay inside the stream.)
+                        a.emit(Instr::Auipc { rd: T4, imm: 0 });
+                        a.jalr(*g.pick(&[ZERO, S4]), T4, *g.pick(&[8, 12, 10]));
+                        a.nop();
+                    }
+                }
+            }
+        }
+        a.ebreak();
+        let prog = a.assemble().map_err(|e| e.to_string())?;
+        let base = *g.pick(&[0u32, 0x40, 0x100]);
+        let img = g.vec_i8(0x1800);
+        let nwatch = g.usize(0, 3);
+        let mut watches = Vec::new();
+        for _ in 0..nwatch {
+            let lo = g.i64(0x7000, 0x9000) as u32;
+            watches.push((lo, lo + g.i64(1, 0x800) as u32));
+        }
+        // Sometimes a budget small enough to cut execution mid-block.
+        let budget = if g.bool() {
+            200_000u64
+        } else {
+            g.usize(0, 300) as u64
+        };
+        let run_one = |stepped: bool| -> Result<(Machine<NoCfu>, RunResult), String> {
+            let mut m = Machine::new(1 << 16, NoCfu);
+            m.load_program(base, &prog).map_err(|e| e.to_string())?;
+            m.mem.write_i8_slice(0x7800, &img).map_err(|e| e.to_string())?;
+            for &(lo, hi) in &watches {
+                m.watch(lo, hi);
+            }
+            let r = if stepped {
+                m.run_stepped(budget)
+            } else {
+                m.run(budget)
+            };
+            Ok((m, r.map_err(|e| e.to_string())?))
+        };
+        let (mut mb, rb) = run_one(false)?;
+        let (mut ms, ro) = run_one(true)?;
+        prop_assert_eq!(rb, ro);
+        if rb.reason == ExitReason::MaxInstructions {
+            // Resume both from the budget cut (mid-block for the engine).
+            let rb2 = mb.run(300_000).map_err(|e| e.to_string())?;
+            let ro2 = ms.run_stepped(300_000).map_err(|e| e.to_string())?;
+            prop_assert_eq!(rb2, ro2);
+        }
+        prop_assert_eq!(mb.cycles, ms.cycles);
+        prop_assert_eq!(mb.instret, ms.instret);
+        prop_assert_eq!(mb.pc, ms.pc);
+        prop_assert_eq!(mb.regs, ms.regs);
+        prop_assert_eq!(mb.stats, ms.stats);
+        prop_assert!(mb.markers == ms.markers, "markers diverged");
+        prop_assert!(mb.watches == ms.watches, "watch counters diverged");
+        prop_assert_eq!((mb.icache.hits, mb.icache.misses), (ms.icache.hits, ms.icache.misses));
+        prop_assert_eq!((mb.dcache.hits, mb.dcache.misses), (ms.dcache.hits, ms.dcache.misses));
+        prop_assert!(mb.mem.data == ms.mem.data, "memory contents diverged");
+        Ok(())
+    });
+}
+
 /// Requantization in generated RV32IM code equals the Rust spec on random
 /// accumulators (the asm emitter is exercised through a tiny program).
 #[test]

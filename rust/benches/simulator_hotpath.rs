@@ -28,7 +28,7 @@ use fused_dsc::driver::{run_block_fused, run_block_fused_stepped};
 use fused_dsc::isa::asm::Asm;
 use fused_dsc::isa::*;
 use fused_dsc::model::blocks::BlockConfig;
-use fused_dsc::model::weights::{gen_input, make_block_params};
+use fused_dsc::model::weights::{gen_input, make_block_params, make_model_params};
 use fused_dsc::tensor::TensorI8;
 use fused_dsc::util::bench::Bencher;
 use fused_dsc::util::pool::RowPool;
@@ -134,5 +134,22 @@ fn main() {
         None => CfuUnit::new(PipelineVersion::V3),
     };
     b.bench("block/fused-v3-host-functional", || unit.run_block_host(&bp, &x).1);
+
+    // Whole-model compiled path (perf iteration 8): one linked instruction
+    // stream for a tiny three-block model, compiled once and timed
+    // end-to-end under the ISS — with the same `-stepped` oracle twin
+    // pairing as the `iss/*` cases, so the artifact is self-contained.
+    let tiny = make_model_params(Some(vec![
+        BlockConfig::new(8, 8, 8, 16, 8, 2, false),
+        BlockConfig::new(4, 4, 8, 16, 16, 1, false),
+        BlockConfig::new(4, 4, 16, 24, 16, 1, false),
+    ]));
+    let cm = fused_dsc::compile::compile(&tiny, PipelineVersion::V3).unwrap();
+    let cx = TensorI8::from_vec(
+        &[8, 8, 8],
+        gen_input("hot.cx", 8 * 8 * 8, tiny.blocks[0].zp_in()),
+    );
+    b.bench("compile/tiny-iss", || cm.run_iss(&cx).unwrap().cycles);
+    b.bench("compile/tiny-iss-stepped", || cm.run_iss_stepped(&cx).unwrap().cycles);
     b.finish();
 }

@@ -37,9 +37,21 @@ fn align4(x: u32) -> u32 {
 
 impl BlockLayout {
     pub fn for_block(cfg: &BlockConfig) -> Self {
+        Self::for_block_at(DATA_BASE, cfg)
+    }
+
+    /// The same bump layout based at `base` instead of [`DATA_BASE`].
+    ///
+    /// The whole-model compiler gives every block a private staging region
+    /// that is an exact replica of the standalone layout at a base congruent
+    /// to `DATA_BASE` modulo 4096 — this keeps each address's low 12 bits
+    /// (hence `li` instruction widths) and every D$ set index identical to
+    /// the standalone driver's, which is what makes per-block cycle counts
+    /// bit-reproducible.
+    pub fn for_block_at(base: u32, cfg: &BlockConfig) -> Self {
         let (h, w, cin, m, cout) = (cfg.h, cfg.w, cfg.cin, cfg.m, cfg.cout);
         let (ho, wo) = (cfg.h_out(), cfg.w_out());
-        let mut p = DATA_BASE;
+        let mut p = base;
         let mut take = |bytes: u32| {
             let at = p;
             p = align4(p + bytes);

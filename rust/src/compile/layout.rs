@@ -1,0 +1,162 @@
+//! Whole-model data-section layouter: one contiguous RAM map holding the
+//! ping-pong activation arenas, a D$ scrub region, every block's private
+//! staging replica, and the classifier head's tensors.
+//!
+//! # Why staging replicas instead of in-place arena execution
+//!
+//! The compiled program must report *per-block CFU cycle counts
+//! bit-identical to [`crate::driver::run_block_fused`]* (the differential
+//! battery enforces it).  Cycle counts depend on three address-sensitive
+//! mechanisms:
+//!
+//! 1. **`li` widths** — an address with zero low-12 bits assembles to one
+//!    `lui`; anything else adds an `addi`.  Different instruction counts
+//!    shift every later fetch.
+//! 2. **D$ set indices** — the direct-mapped D$ maps `addr >> 5` modulo 128
+//!    sets; two layouts collide differently unless every tensor address is
+//!    translated by a multiple of the 4 KiB cache size.
+//! 3. **I$ line phase** — fetch cost depends on where instructions fall in
+//!    32-byte lines.
+//!
+//! So each block gets a staging region that is an *exact*
+//! [`BlockLayout::for_block_at`] replica at a base congruent to
+//! [`DATA_BASE`] modulo [`Cache::L1_SIZE_BYTES`]: identical low-12 bits
+//! (same `li` widths), identical set indices, identical intra-block
+//! distances.  Glue loops copy `arena.cur → staging.x` before the section
+//! and `staging.out → arena.next` after it; the emitter scrubs the D$
+//! between the copies and the section's start marker so the section always
+//! begins from the same "nothing of mine is resident" cache state the
+//! standalone driver sees on a fresh machine.
+
+use crate::baseline::layout::{BlockLayout, DATA_BASE};
+use crate::cpu::Cache;
+use crate::exec::ExecutionPlan;
+use crate::model::weights::ModelParams;
+
+/// Addresses of everything the compiled whole-model program touches.
+#[derive(Debug, Clone)]
+pub struct ModelLayout {
+    /// Ping-pong activation buffers (the compiled analogue of
+    /// [`crate::exec::ActivationArena`]'s `cur`/`next`).  Which one is
+    /// "current" before block `k` is compile-time knowledge: `k % 2`.
+    pub arena: [u32; 2],
+    /// Capacity of each arena buffer in bytes (peak activation footprint).
+    pub arena_bytes: u32,
+    /// One-cache-size region the glue reads through to evict every D$ set
+    /// before each block section.
+    pub scrub: u32,
+    /// Per-block staging regions: exact standalone-driver layout replicas.
+    pub blocks: Vec<BlockLayout>,
+    /// Classifier FC weights, `(C, classes)` i8 row-major.
+    pub fc_w: u32,
+    /// Classifier FC bias, `(classes,)` i32.
+    pub fc_b: u32,
+    /// Global-average-pool scratch, `(C,)` i32.
+    pub pooled: u32,
+    /// Output logits, `(classes,)` i32.
+    pub logits: u32,
+    /// Predicted class index, one u32 word.
+    pub class: u32,
+    /// First free byte after the layout.
+    pub end: u32,
+}
+
+fn align(p: u32, to: u32) -> u32 {
+    (p + to - 1) & !(to - 1)
+}
+
+impl ModelLayout {
+    /// Lay out the data section for `plan` over `params`, starting at
+    /// [`DATA_BASE`] (the program text lives below it).
+    pub fn for_model(plan: &ExecutionPlan, params: &ModelParams) -> Self {
+        let classes = params.head.fc_b.len() as u32;
+        let final_c = plan.steps().last().expect("plans are non-empty").out_dims[2] as u32;
+        let arena_bytes = align(plan.max_activation_elems() as u32, 4);
+        fn take(p: &mut u32, bytes: u32, al: u32) -> u32 {
+            let at = align(*p, al);
+            *p = at + bytes;
+            at
+        }
+        let mut p = DATA_BASE;
+        let arena = [
+            take(&mut p, arena_bytes, Cache::L1_LINE_BYTES),
+            take(&mut p, arena_bytes, Cache::L1_LINE_BYTES),
+        ];
+        let scrub = take(&mut p, Cache::L1_SIZE_BYTES, Cache::L1_LINE_BYTES);
+        // Staging bases ≡ DATA_BASE (mod L1 size): DATA_BASE is 4 KiB
+        // aligned, so aligning to the cache size suffices.
+        let blocks: Vec<BlockLayout> = plan
+            .steps()
+            .iter()
+            .zip(&params.blocks)
+            .map(|(_, bp)| {
+                let base = align(p, Cache::L1_SIZE_BYTES);
+                let l = BlockLayout::for_block_at(base, &bp.cfg);
+                p = l.end;
+                l
+            })
+            .collect();
+        let fc_w = take(&mut p, final_c * classes, 4);
+        let fc_b = take(&mut p, 4 * classes, 4);
+        let pooled = take(&mut p, 4 * final_c, 4);
+        let logits = take(&mut p, 4 * classes, 4);
+        let class = take(&mut p, 4, 4);
+        Self { arena, arena_bytes, scrub, blocks, fc_w, fc_b, pooled, logits, class, end: p }
+    }
+
+    /// Total data-section footprint in bytes (from [`DATA_BASE`]).
+    pub fn data_bytes(&self) -> u32 {
+        self.end - DATA_BASE
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::Backend;
+    use crate::model::blocks::BlockConfig;
+    use crate::model::weights::make_model_params;
+
+    #[test]
+    fn staging_bases_preserve_standalone_offsets() {
+        let p = make_model_params(Some(vec![
+            BlockConfig::new(8, 8, 8, 16, 8, 2, false),
+            BlockConfig::new(4, 4, 8, 16, 16, 1, false),
+        ]));
+        let plan = ExecutionPlan::try_uniform(&p, Backend::Reference).unwrap();
+        let l = ModelLayout::for_model(&plan, &p);
+        assert_eq!(l.blocks.len(), 2);
+        for (k, (bl, bp)) in l.blocks.iter().zip(&p.blocks).enumerate() {
+            // Base congruent to DATA_BASE modulo the cache size…
+            assert_eq!(bl.x % Cache::L1_SIZE_BYTES, DATA_BASE % Cache::L1_SIZE_BYTES, "block {k}");
+            // …and every internal offset identical to the standalone layout.
+            let alone = BlockLayout::for_block(&bp.cfg);
+            let t = bl.x - alone.x;
+            for (a, b) in [
+                (bl.ex_w, alone.ex_w),
+                (bl.ex_b, alone.ex_b),
+                (bl.f1, alone.f1),
+                (bl.dw_w, alone.dw_w),
+                (bl.dw_b, alone.dw_b),
+                (bl.f2, alone.f2),
+                (bl.pr_w, alone.pr_w),
+                (bl.pr_b, alone.pr_b),
+                (bl.out, alone.out),
+                (bl.end, alone.end),
+            ] {
+                assert_eq!(a - b, t, "block {k} offset drifted");
+            }
+            assert_eq!(t % Cache::L1_SIZE_BYTES, 0, "block {k} translation not cache-aligned");
+        }
+        // Regions are disjoint and ordered.
+        assert!(l.arena[0] + l.arena_bytes <= l.arena[1]);
+        assert!(l.arena[1] + l.arena_bytes <= l.scrub);
+        assert!(l.scrub + Cache::L1_SIZE_BYTES <= l.blocks[0].x);
+        assert!(l.blocks[0].end <= l.blocks[1].x);
+        assert!(l.blocks[1].end <= l.fc_w);
+        assert!(l.fc_w < l.fc_b && l.fc_b < l.pooled && l.pooled < l.logits);
+        assert!(l.logits < l.class && l.class < l.end);
+        // Arena holds the peak activation (8×8×8 input = 512 elements).
+        assert_eq!(l.arena_bytes, 512);
+    }
+}

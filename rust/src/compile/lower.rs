@@ -1,0 +1,204 @@
+//! Lowering: [`ModelLayout`] + weights → one linked RV32IM+CFU program.
+//!
+//! Program shape (one `Asm`, assembled once):
+//!
+//! ```text
+//! for block k in 0..n:
+//!   copy   arena[k%2] → staging[k].x        (RV32IM word loop, glue)
+//!   scrub  D$                                (128 loads, one per set)
+//!   pad    nops so the section starts on an I$ line boundary
+//!   li a0, k ; ecall                         (start marker)
+//!   <exact standalone driver section>        (emit_block_driver)
+//!   ecall                                    (end marker — a0 still k)
+//!   copy   staging[k].out → arena[(k+1)%2]   (glue)
+//! head: avg-pool → FC → argmax               (plain RV32IM, bit-exact
+//!                                             vs model::refimpl::head_ref)
+//! ebreak
+//! ```
+//!
+//! Marker accounting: `ecall` costs exactly its fetch and records
+//! `cycle = cycles-after-ecall`; the standalone driver's final `ebreak`
+//! also costs exactly its fetch.  The end `ecall` sits at the same word
+//! index (mod I$ line) as that `ebreak`, the section before it is the same
+//! instruction sequence over a translated-by-4KiB-multiples data layout,
+//! and the D$ was scrubbed at entry — so `end.cycle - start.cycle` equals
+//! the standalone [`crate::driver::run_block_fused`] cycle count bit-exactly.
+
+use crate::cpu::Cache;
+use crate::driver::emit_block_driver;
+use crate::isa::asm::Asm;
+use crate::isa::*;
+use crate::model::weights::ModelParams;
+
+use super::layout::ModelLayout;
+use super::BlockStat;
+
+/// Words per I$ line (nop padding aligns block sections to this).
+const WORDS_PER_LINE: usize = (Cache::L1_LINE_BYTES / 4) as usize;
+
+/// Emit a glue loop copying `n_words` 32-bit words from `src` to `dst`.
+fn emit_copy_words(a: &mut Asm, uniq: &str, dst: u32, src: u32, n_words: u32) {
+    debug_assert!(n_words > 0);
+    a.li(S0, src as i32);
+    a.li(S1, dst as i32);
+    a.li(S2, n_words as i32);
+    a.label(&format!("cp_{uniq}"));
+    a.lw(T1, S0, 0);
+    a.sw(T1, S1, 0);
+    a.addi(S0, S0, 4);
+    a.addi(S1, S1, 4);
+    a.addi(S2, S2, -1);
+    a.bnez(S2, &format!("cp_{uniq}"));
+}
+
+/// Emit a glue loop loading one word per cache line across a full
+/// cache-size region: evicts every D$ set, so the following block section
+/// starts from the same "no staging line resident" state a fresh machine
+/// has.  (The glue copy loops would otherwise leave `staging.x` lines warm
+/// and the section's first ifmap pass cheaper than the standalone driver's.)
+fn emit_dcache_scrub(a: &mut Asm, uniq: &str, scrub: u32) {
+    let lines = (Cache::L1_SIZE_BYTES / Cache::L1_LINE_BYTES) as i32;
+    a.li(S0, scrub as i32);
+    a.li(S2, lines);
+    a.label(&format!("sc_{uniq}"));
+    a.lw(T1, S0, 0);
+    a.addi(S0, S0, Cache::L1_LINE_BYTES as i32);
+    a.addi(S2, S2, -1);
+    a.bnez(S2, &format!("sc_{uniq}"));
+}
+
+/// Emit the classifier head: global average pool (round-half-away-from-zero
+/// integer mean), FC accumulate, argmax — the RV32IM transliteration of
+/// [`crate::model::refimpl::head_ref_into`] and the engine's argmax
+/// (first maximum wins), so logits and class are bit-exact by construction.
+fn emit_head(a: &mut Asm, l: &ModelLayout, params: &ModelParams, in_dims: [usize; 3]) {
+    let (h, w, c) = (in_dims[0] as i32, in_dims[1] as i32, in_dims[2] as i32);
+    let n = h * w;
+    let classes = params.head.fc_b.len() as i32;
+    let x = l.arena[l.blocks.len() % 2];
+
+    // --- Global average pool: pooled[ch] = round_half_away(sum / n). ---
+    a.li(S1, 0); // ch
+    a.label("hd_ch");
+    a.li(T0, x as i32);
+    a.add(T0, T0, S1); // ptr = x + ch
+    a.li(T1, n);
+    a.li(T2, 0); // sum
+    a.label("hd_px");
+    a.lb(T3, T0, 0);
+    a.add(T2, T2, T3);
+    a.addi(T0, T0, c);
+    a.addi(T1, T1, -1);
+    a.bnez(T1, "hd_px");
+    // p = s >= 0 ? (s + n/2) / n : -((-s + n/2) / n)   (trunc division,
+    // matching both Rust `/` and the ISS DIV).
+    a.li(T0, n);
+    a.li(T1, n / 2);
+    a.blt(T2, ZERO, "hd_neg");
+    a.add(T2, T2, T1);
+    a.div(T3, T2, T0);
+    a.j("hd_store");
+    a.label("hd_neg");
+    a.neg(T2, T2);
+    a.add(T2, T2, T1);
+    a.div(T3, T2, T0);
+    a.neg(T3, T3);
+    a.label("hd_store");
+    a.slli(T4, S1, 2);
+    a.li(T0, l.pooled as i32);
+    a.add(T0, T0, T4);
+    a.sw(T3, T0, 0);
+    a.addi(S1, S1, 1);
+    a.li(T0, c);
+    a.blt(S1, T0, "hd_ch");
+
+    // --- FC: logits = fc_b; logits[cl] += (pooled[ch] - zp) * fc_w. ---
+    emit_copy_words(a, "fcb", l.logits, l.fc_b, classes as u32);
+    a.li(S0, l.pooled as i32);
+    a.li(S1, l.fc_w as i32);
+    a.li(S2, c);
+    a.label("fc_ch");
+    a.lw(T0, S0, 0);
+    a.addi(T0, T0, -params.head.zp_in);
+    a.li(S3, l.logits as i32);
+    a.li(S4, classes);
+    a.label("fc_cl");
+    a.lb(T1, S1, 0);
+    a.mul(T2, T0, T1);
+    a.lw(T3, S3, 0);
+    a.add(T3, T3, T2);
+    a.sw(T3, S3, 0);
+    a.addi(S1, S1, 1);
+    a.addi(S3, S3, 4);
+    a.addi(S4, S4, -1);
+    a.bnez(S4, "fc_cl");
+    a.addi(S0, S0, 4);
+    a.addi(S2, S2, -1);
+    a.bnez(S2, "fc_ch");
+
+    // --- Argmax (first maximum wins, matching the engine). ---
+    a.li(S0, l.logits as i32);
+    a.lw(T0, S0, 0); // best value = logits[0]
+    a.li(T1, 0); // best index
+    a.li(T2, 1); // i
+    a.li(T3, classes);
+    a.label("am_loop");
+    a.bge(T2, T3, "am_done");
+    a.slli(T4, T2, 2);
+    a.add(T4, T4, S0);
+    a.lw(T4, T4, 0);
+    a.bge(T0, T4, "am_skip"); // only strictly greater updates
+    a.mv(T0, T4);
+    a.mv(T1, T2);
+    a.label("am_skip");
+    a.addi(T2, T2, 1);
+    a.j("am_loop");
+    a.label("am_done");
+    a.li(T4, l.class as i32);
+    a.sw(T1, T4, 0);
+}
+
+/// Emit the whole-model program over `layout`; returns the builder plus
+/// per-block code statistics.
+pub(crate) fn emit_program(
+    params: &ModelParams,
+    layout: &ModelLayout,
+    in_dims: &[[usize; 3]],
+    out_dims: &[[usize; 3]],
+) -> (Asm, Vec<BlockStat>) {
+    let mut a = Asm::new();
+    let mut stats = Vec::with_capacity(params.blocks.len());
+    for (k, bp) in params.blocks.iter().enumerate() {
+        let l = &layout.blocks[k];
+        let glue_start = a.here();
+        let in_words = (in_dims[k].iter().product::<usize>() / 4) as u32;
+        let out_words = (out_dims[k].iter().product::<usize>() / 4) as u32;
+        emit_copy_words(&mut a, &format!("in{k}"), l.x, layout.arena[k % 2], in_words);
+        emit_dcache_scrub(&mut a, &format!("b{k}"), layout.scrub);
+        // Pad so the driver section starts on an I$ line boundary (the
+        // standalone program starts at pc 0): 2 marker words follow.
+        while (a.here() + 2) % WORDS_PER_LINE != 0 {
+            a.nop();
+        }
+        debug_assert!((k as i32) < 2048, "block tag must stay a 1-word li");
+        a.li(A0, k as i32); // marker tag
+        a.ecall(); // start marker
+        let section_start = a.here();
+        emit_block_driver(&mut a, &format!("b{k}"), bp, l);
+        a.ecall(); // end marker — the driver section never writes A0
+        let section_end = a.here();
+        emit_copy_words(&mut a, &format!("out{k}"), layout.arena[(k + 1) % 2], l.out, out_words);
+        stats.push(BlockStat {
+            index: k,
+            cfg: bp.cfg,
+            section_start,
+            // The end marker stands where the standalone ebreak would.
+            section_words: section_end - section_start,
+            glue_words: (section_start - glue_start - 2) + (a.here() - section_end),
+            staging_bytes: l.end - l.x,
+        });
+    }
+    emit_head(&mut a, layout, params, *out_dims.last().unwrap());
+    a.ebreak();
+    (a, stats)
+}

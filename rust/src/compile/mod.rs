@@ -1,0 +1,400 @@
+//! Whole-backbone model → instruction-stream compiler.
+//!
+//! Lowers a [`ModelParams`] + uniform fused-CFU [`ExecutionPlan`] into
+//! **one** linked RV32IM+CFU program: per-block CFG/stream/START/RD_OUT
+//! sections (the exact standalone [`crate::driver`] sequences), RV32IM
+//! glue that ping-pongs activations between two arena buffers, and a
+//! plain-RV32IM classifier head (average pool → FC → argmax).  The result
+//! runs end-to-end under the ISS ([`CompiledModel::run_iss`]) and is
+//! proven bit-identical to the [`crate::exec`] layer-by-layer path by the
+//! differential battery in `tests/compile_e2e.rs`:
+//!
+//! * logits and predicted class equal the [`crate::coordinator::Engine`]
+//!   reference output exactly;
+//! * each block's marker-delta cycle count equals the standalone
+//!   [`crate::driver::run_block_fused`] measurement bit-for-bit (see
+//!   [`layout`] for the staging-replica construction that makes this
+//!   possible);
+//! * the block-dispatch and per-instruction-oracle runs of the same
+//!   program produce identical [`CompiledRun`]s.
+//!
+//! This is the compiled-firmware deployment story of the paper (§IV-B): a
+//! TFLite-style model baked into one firmware image, instead of the host
+//! re-driving the ISS block by block.
+
+pub mod layout;
+mod lower;
+
+use std::fmt;
+
+use crate::baseline::layout::PROG_BASE;
+use crate::cfu::{CfuUnit, PipelineVersion};
+use crate::cpu::core::{ExitReason, Machine};
+use crate::driver::exw_filter_major;
+use crate::exec::{Backend, ExecutionPlan, PlanError};
+use crate::isa::Instr;
+use crate::model::blocks::BlockConfig;
+use crate::model::weights::ModelParams;
+use crate::tensor::TensorI8;
+
+pub use layout::ModelLayout;
+
+/// Instruction budget for a compiled whole-model run (same headroom as the
+/// per-block driver path).
+const RUN_BUDGET: u64 = 20_000_000_000;
+
+/// Default simulated-RAM budget (256 MiB) a compiled model may require.
+pub const DEFAULT_MEM_BUDGET: usize = 1 << 28;
+
+/// Why a model failed to compile.
+#[derive(Debug)]
+pub enum CompileError {
+    /// The model does not form a valid uniform fused-CFU plan (bad block
+    /// geometry, blocks that do not chain, empty model — see [`PlanError`]).
+    Plan(PlanError),
+    /// The data section (arenas + staging replicas + head tensors) needs
+    /// more simulated RAM than the budget allows.
+    DataSection {
+        /// Bytes of simulated RAM the compiled model would need.
+        required: usize,
+        /// The configured budget ([`CompileOptions::mem_budget`]).
+        budget: usize,
+    },
+    /// The program text would overrun the data-section base.
+    ProgramSection {
+        /// Emitted program size in words.
+        words: usize,
+        /// Words available between `PROG_BASE` and `DATA_BASE`.
+        capacity: usize,
+    },
+    /// The assembler rejected the emitted program (e.g. a branch or jump
+    /// target out of encodable range).
+    Asm(String),
+}
+
+impl fmt::Display for CompileError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CompileError::Plan(e) => write!(f, "plan rejected: {e}"),
+            CompileError::DataSection { required, budget } => write!(
+                f,
+                "data section needs {required} bytes of simulated RAM (budget {budget})"
+            ),
+            CompileError::ProgramSection { words, capacity } => write!(
+                f,
+                "program text is {words} words but only {capacity} fit below the data section"
+            ),
+            CompileError::Asm(e) => write!(f, "assembly failed: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for CompileError {}
+
+impl From<PlanError> for CompileError {
+    fn from(e: PlanError) -> Self {
+        CompileError::Plan(e)
+    }
+}
+
+/// Compilation knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct CompileOptions {
+    /// Maximum simulated RAM (bytes) the compiled machine may be sized to.
+    pub mem_budget: usize,
+}
+
+impl Default for CompileOptions {
+    fn default() -> Self {
+        Self { mem_budget: DEFAULT_MEM_BUDGET }
+    }
+}
+
+/// Per-block program statistics from lowering.
+#[derive(Debug, Clone, Copy)]
+pub struct BlockStat {
+    /// Block index in the backbone.
+    pub index: usize,
+    /// The block's geometry.
+    pub cfg: BlockConfig,
+    /// Word index of the block's driver section within the program.
+    pub section_start: usize,
+    /// Driver-section length in words (CFG + streams + row loop +
+    /// residual — identical to the standalone driver program minus its
+    /// `ebreak`).
+    pub section_words: usize,
+    /// Glue words around the section (arena copies, D$ scrub, alignment
+    /// nops; excludes the two marker words).
+    pub glue_words: usize,
+    /// Size of the block's private staging region in bytes.
+    pub staging_bytes: u32,
+}
+
+/// Per-block measurement extracted from one compiled run's markers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockRun {
+    /// Block index in the backbone.
+    pub index: usize,
+    /// Cycles between the block's start and end markers — bit-identical to
+    /// the standalone [`crate::driver::run_block_fused`] cycle count.
+    pub cycles: u64,
+    /// Load instructions retired inside the section.
+    pub loads: u64,
+    /// Store instructions retired inside the section.
+    pub stores: u64,
+}
+
+/// Everything one end-to-end compiled run produced.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CompiledRun {
+    /// Classifier logits, read back from simulated RAM.
+    pub logits: Vec<i32>,
+    /// argmax class (computed *inside* the program, read back as a word).
+    pub class: usize,
+    /// Total simulated cycles for the whole program (blocks + glue + head).
+    pub cycles: u64,
+    /// Total instructions retired.
+    pub instret: u64,
+    /// Total CFU instructions issued (all inside block sections).
+    pub cfu_ops: u64,
+    /// Total cycles the CPU stalled waiting on the CFU.
+    pub cfu_stall_cycles: u64,
+    /// Per-block marker-delta measurements, in block order.
+    pub blocks: Vec<BlockRun>,
+}
+
+/// A model lowered to one linked instruction stream plus its RAM map.
+#[derive(Debug, Clone)]
+pub struct CompiledModel {
+    params: ModelParams,
+    version: PipelineVersion,
+    /// The whole-model RAM map the program's immediates are baked against.
+    pub layout: ModelLayout,
+    program: Vec<Instr>,
+    words: Vec<u32>,
+    /// Per-block code statistics from lowering.
+    pub blocks: Vec<BlockStat>,
+}
+
+/// Compile `params` for pipeline `version` with default options.
+pub fn compile(
+    params: &ModelParams,
+    version: PipelineVersion,
+) -> Result<CompiledModel, CompileError> {
+    compile_with(params, version, &CompileOptions::default())
+}
+
+/// Compile `params` for pipeline `version`.
+pub fn compile_with(
+    params: &ModelParams,
+    version: PipelineVersion,
+    opts: &CompileOptions,
+) -> Result<CompiledModel, CompileError> {
+    let plan = ExecutionPlan::try_uniform(params, Backend::FusedIss(version))?;
+    let layout = ModelLayout::for_model(&plan, params);
+    let mem_size = (layout.end as usize + (1 << 16)).next_power_of_two();
+    if mem_size > opts.mem_budget {
+        return Err(CompileError::DataSection { required: mem_size, budget: opts.mem_budget });
+    }
+    let in_dims: Vec<[usize; 3]> = plan.steps().iter().map(|s| s.in_dims).collect();
+    let out_dims: Vec<[usize; 3]> = plan.steps().iter().map(|s| s.out_dims).collect();
+    let (asm, blocks) = lower::emit_program(params, &layout, &in_dims, &out_dims);
+    let program = asm.assemble().map_err(|e| CompileError::Asm(e.to_string()))?;
+    let capacity = ((crate::baseline::layout::DATA_BASE - PROG_BASE) / 4) as usize;
+    if program.len() > capacity {
+        return Err(CompileError::ProgramSection { words: program.len(), capacity });
+    }
+    let words = asm.assemble_words().map_err(|e| CompileError::Asm(e.to_string()))?;
+    Ok(CompiledModel { params: params.clone(), version, layout, program, words, blocks })
+}
+
+impl CompiledModel {
+    /// The pipeline version the program drives.
+    pub fn version(&self) -> PipelineVersion {
+        self.version
+    }
+
+    /// The model parameters the program was compiled from.
+    pub fn params(&self) -> &ModelParams {
+        &self.params
+    }
+
+    /// The assembled instruction stream.
+    pub fn program(&self) -> &[Instr] {
+        &self.program
+    }
+
+    /// The encoded program words (what a firmware image would contain).
+    pub fn program_words(&self) -> &[u32] {
+        &self.words
+    }
+
+    /// Program text size in bytes.
+    pub fn program_bytes(&self) -> usize {
+        self.words.len() * 4
+    }
+
+    /// Data-section footprint in bytes.
+    pub fn data_bytes(&self) -> usize {
+        self.layout.data_bytes() as usize
+    }
+
+    /// Simulated-RAM size a run of this program allocates.
+    pub fn mem_size(&self) -> usize {
+        (self.layout.end as usize + (1 << 16)).next_power_of_two()
+    }
+
+    /// Build a machine with the program loaded and every constant tensor
+    /// (weights, biases, head) placed; the input is not yet written.
+    fn prepare_machine(&self) -> anyhow::Result<Machine<CfuUnit>> {
+        let mut mach = Machine::new(self.mem_size(), CfuUnit::new(self.version));
+        mach.load_program(PROG_BASE, &self.program)?;
+        for (bp, l) in self.params.blocks.iter().zip(&self.layout.blocks) {
+            // Same placement as the standalone driver, including the
+            // filter-major expansion-weight repack.
+            mach.mem.write_i8_slice(l.ex_w, &exw_filter_major(bp))?;
+            mach.mem.write_i32_slice(l.ex_b, &bp.ex_b)?;
+            mach.mem.write_i8_slice(l.dw_w, &bp.dw_w)?;
+            mach.mem.write_i32_slice(l.dw_b, &bp.dw_b)?;
+            mach.mem.write_i8_slice(l.pr_w, &bp.pr_w)?;
+            mach.mem.write_i32_slice(l.pr_b, &bp.pr_b)?;
+        }
+        mach.mem.write_i8_slice(self.layout.fc_w, &self.params.head.fc_w)?;
+        mach.mem.write_i32_slice(self.layout.fc_b, &self.params.head.fc_b)?;
+        Ok(mach)
+    }
+
+    /// Run the compiled program end-to-end under the ISS (basic-block
+    /// dispatch) and read back logits, class, and per-block measurements.
+    pub fn run_iss(&self, x: &TensorI8) -> anyhow::Result<CompiledRun> {
+        self.run_impl(x, false)
+    }
+
+    /// [`run_iss`](Self::run_iss) on the per-instruction oracle loop —
+    /// identical [`CompiledRun`] by construction (differentially tested).
+    pub fn run_iss_stepped(&self, x: &TensorI8) -> anyhow::Result<CompiledRun> {
+        self.run_impl(x, true)
+    }
+
+    fn run_impl(&self, x: &TensorI8, stepped: bool) -> anyhow::Result<CompiledRun> {
+        let c = self.params.blocks[0].cfg;
+        let want = (c.h * c.w * c.cin) as usize;
+        anyhow::ensure!(
+            x.data.len() == want,
+            "input has {} elements, model wants {want}",
+            x.data.len()
+        );
+        let mut mach = self.prepare_machine()?;
+        mach.mem.write_i8_slice(self.layout.arena[0], &x.data)?;
+        let r = if stepped { mach.run_stepped(RUN_BUDGET) } else { mach.run(RUN_BUDGET) }?;
+        anyhow::ensure!(r.reason == ExitReason::Halted, "compiled model did not halt: {r:?}");
+
+        let classes = self.params.head.fc_b.len();
+        let mut raw = vec![0i8; 4 * classes];
+        mach.mem.read_i8_into(self.layout.logits, &mut raw)?;
+        let logits: Vec<i32> = raw
+            .chunks_exact(4)
+            .map(|w| i32::from_le_bytes([w[0] as u8, w[1] as u8, w[2] as u8, w[3] as u8]))
+            .collect();
+        let class = mach.mem.read_u32(self.layout.class)? as usize;
+
+        // Each block leaves exactly two markers (tag = block index): one
+        // right before its driver section, one right after.
+        let n = self.params.blocks.len();
+        anyhow::ensure!(
+            mach.markers.len() == 2 * n,
+            "expected {} markers, got {}",
+            2 * n,
+            mach.markers.len()
+        );
+        let blocks = mach
+            .markers
+            .chunks_exact(2)
+            .enumerate()
+            .map(|(k, pair)| {
+                anyhow::ensure!(
+                    pair[0].tag == k as u32 && pair[1].tag == k as u32,
+                    "block {k} markers mis-tagged: {} / {}",
+                    pair[0].tag,
+                    pair[1].tag
+                );
+                Ok(BlockRun {
+                    index: k,
+                    cycles: pair[1].cycle - pair[0].cycle,
+                    loads: pair[1].loads - pair[0].loads,
+                    stores: pair[1].stores - pair[0].stores,
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+
+        Ok(CompiledRun {
+            logits,
+            class,
+            cycles: r.cycles,
+            instret: r.instret,
+            cfu_ops: mach.stats.cfu_ops,
+            cfu_stall_cycles: mach.stats.cfu_stall_cycles,
+            blocks,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Engine;
+    use crate::model::blocks::BlockConfig;
+    use crate::model::weights::make_model_params;
+
+    fn mini() -> ModelParams {
+        make_model_params(Some(vec![
+            BlockConfig::new(8, 8, 8, 16, 8, 2, false),
+            BlockConfig::new(4, 4, 8, 16, 8, 1, true),
+        ]))
+    }
+
+    #[test]
+    fn compiled_mini_model_matches_reference_engine() {
+        let p = mini();
+        let cm = compile(&p, PipelineVersion::V3).unwrap();
+        let engine = Engine::new(p, Backend::Reference);
+        let x = engine.synthetic_input("compile.smoke");
+        let want = engine.infer(&x).unwrap();
+        let got = cm.run_iss(&x).unwrap();
+        assert_eq!(got.logits, want.logits);
+        assert_eq!(got.class, want.class);
+        assert_eq!(got.blocks.len(), 2);
+        assert!(got.cycles > got.blocks.iter().map(|b| b.cycles).sum::<u64>());
+    }
+
+    #[test]
+    fn data_section_over_budget_is_rejected() {
+        let err = compile_with(
+            &mini(),
+            PipelineVersion::V3,
+            &CompileOptions { mem_budget: 1 << 12 },
+        )
+        .unwrap_err();
+        match err {
+            CompileError::DataSection { required, budget } => {
+                assert!(required > budget);
+                assert_eq!(budget, 1 << 12);
+            }
+            other => panic!("expected DataSection, got {other}"),
+        }
+    }
+
+    #[test]
+    fn unchained_model_is_rejected_at_compile_time() {
+        // Block 1's input geometry does not match block 0's output.
+        let p = make_model_params(Some(vec![
+            BlockConfig::new(8, 8, 8, 16, 8, 2, false),
+            BlockConfig::new(6, 6, 8, 16, 8, 1, false),
+        ]));
+        let err = compile(&p, PipelineVersion::V3).unwrap_err();
+        match err {
+            CompileError::Plan(PlanError::Unchained { block, .. }) => assert_eq!(block, 1),
+            other => panic!("expected Plan(Unchained), got {other}"),
+        }
+    }
+}

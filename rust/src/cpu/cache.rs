@@ -29,9 +29,16 @@ impl Cache {
         }
     }
 
+    /// Default L1 capacity in bytes (VexRiscv/LiteX configuration).  The
+    /// whole-model compiler's layout alignment and D$ scrub loops are
+    /// derived from these two constants.
+    pub const L1_SIZE_BYTES: u32 = 4096;
+    /// Default L1 line size in bytes.
+    pub const L1_LINE_BYTES: u32 = 32;
+
     /// VexRiscv/LiteX default configuration.
     pub fn default_l1() -> Self {
-        Self::new(4096, 32)
+        Self::new(Self::L1_SIZE_BYTES as usize, Self::L1_LINE_BYTES as usize)
     }
 
     #[inline(always)]

@@ -53,13 +53,47 @@ fn emit_stream_bias(a: &mut Asm, uniq: &str, stage: u32, src: u32, n: u32) {
     a.bnez(S2, &format!("sb_{uniq}"));
 }
 
-/// Build the full driver program for one block.
+/// Filter-major repack of a block's expansion weights (Fig. 11 layout) —
+/// what the CFU's WR_EXW stream expects in RAM.  The host writes this over
+/// the layout's `ex_w` region before the run; [`run_block_fused`] and the
+/// whole-model compiler (`crate::compile`) share it.
+pub fn exw_filter_major(bp: &BlockParams) -> Vec<i8> {
+    let (cin, m) = (bp.cfg.cin as usize, bp.cfg.m as usize);
+    let mut exw_fm = vec![0i8; cin * m];
+    for ci in 0..cin {
+        for f in 0..m {
+            exw_fm[f * cin + ci] = bp.ex_w[ci * m + f];
+        }
+    }
+    exw_fm
+}
+
+/// Build the full driver program for one block: the block section plus the
+/// terminating `ebreak`.
 ///
-/// `exw_fm` must already hold the *filter-major* repack of the expansion
-/// weights in RAM (the host prepares it, see [`run_block_fused`]).
+/// The layout's `ex_w` region must already hold the *filter-major* repack
+/// of the expansion weights ([`exw_filter_major`]; the host prepares it,
+/// see [`run_block_fused`]).
 pub fn build_driver_program(bp: &BlockParams, l: &BlockLayout) -> Asm {
-    let cfg = &bp.cfg;
     let mut a = Asm::new();
+    emit_block_driver(&mut a, "drv", bp, l);
+    a.ebreak();
+    a
+}
+
+/// Emit one block's complete driver section (CFG + streams + row loop +
+/// optional residual, **no** `ebreak`) into an existing program, with every
+/// label suffixed by `uniq` so multiple blocks can share one `Asm`.
+///
+/// The emitted instruction sequence is byte-identical to the standalone
+/// [`build_driver_program`] body — the whole-model compiler leans on this
+/// to keep per-block cycle counts bit-identical to the driver path.
+///
+/// Register discipline: uses `S0`–`S5`, `S7`, `T0`–`T3` only.  In
+/// particular it never touches `A0`, so a marker tag loaded before the
+/// section survives to an `ecall` placed right after it.
+pub fn emit_block_driver(a: &mut Asm, uniq: &str, bp: &BlockParams, l: &BlockLayout) {
+    let cfg = &bp.cfg;
 
     // --- 1. Layer configuration (CFG words in ascending order). ---
     let relu = (bp.ex_q.relu as u32) | ((bp.dw_q.relu as u32) << 1) | ((bp.pr_q.relu as u32) << 2);
@@ -90,13 +124,19 @@ pub fn build_driver_program(bp: &BlockParams, l: &BlockLayout) -> Asm {
 
     // --- 2. Stream IFMAP + weights + biases into the CFU buffers. ---
     let (h, w, cin, m, cout) = (cfg.h, cfg.w, cfg.cin, cfg.m, cfg.cout);
-    emit_stream_words(&mut a, "if", opcodes::WR_IFMAP, l.x, h * w * cin / 4);
-    emit_stream_words(&mut a, "ex", opcodes::WR_EXW, l.ex_w, cin * m / 4);
-    emit_stream_words(&mut a, "dw", opcodes::WR_DWW, l.dw_w, 9 * m / 4 + (9 * m % 4 != 0) as u32);
-    emit_stream_words(&mut a, "pr", opcodes::WR_PRW, l.pr_w, m * cout / 4);
-    emit_stream_bias(&mut a, "eb", 0, l.ex_b, m);
-    emit_stream_bias(&mut a, "db", 1, l.dw_b, m);
-    emit_stream_bias(&mut a, "pb", 2, l.pr_b, cout);
+    emit_stream_words(a, &format!("if_{uniq}"), opcodes::WR_IFMAP, l.x, h * w * cin / 4);
+    emit_stream_words(a, &format!("ex_{uniq}"), opcodes::WR_EXW, l.ex_w, cin * m / 4);
+    emit_stream_words(
+        a,
+        &format!("dw_{uniq}"),
+        opcodes::WR_DWW,
+        l.dw_w,
+        9 * m / 4 + (9 * m % 4 != 0) as u32,
+    );
+    emit_stream_words(a, &format!("pr_{uniq}"), opcodes::WR_PRW, l.pr_w, m * cout / 4);
+    emit_stream_bias(a, &format!("eb_{uniq}"), 0, l.ex_b, m);
+    emit_stream_bias(a, &format!("db_{uniq}"), 1, l.dw_b, m);
+    emit_stream_bias(a, &format!("pb_{uniq}"), 2, l.pr_b, cout);
 
     // --- 3. Per-row processing: START a row, read back pixel by pixel. ---
     // The readback loop stores raw packed words; the residual connection is
@@ -110,12 +150,12 @@ pub fn build_driver_program(bp: &BlockParams, l: &BlockLayout) -> Asm {
     a.li(S3, 0);
     a.li(S4, 0);
     a.li(S5, l.out as i32);
-    a.label("row");
+    a.label(&format!("row_{uniq}"));
     a.li(T2, wo as i32);
     a.cfu(opcodes::START, ZERO, S4, T2); // one row in flight
     // S7 = pixel-in-row counter
     a.li(S7, wo as i32);
-    a.label("px");
+    a.label(&format!("px_{uniq}"));
     for wd in 0..words_per_px {
         a.li(T1, wd as i32);
         a.cfu(opcodes::RD_OUT, T3, T1, ZERO); // blocks until ready
@@ -123,25 +163,16 @@ pub fn build_driver_program(bp: &BlockParams, l: &BlockLayout) -> Asm {
     }
     a.addi(S5, S5, cout as i32);
     a.addi(S7, S7, -1);
-    a.bnez(S7, "px");
+    a.bnez(S7, &format!("px_{uniq}"));
     a.addi(S4, S4, wo as i32);
     a.addi(S3, S3, 1);
     a.li(T0, ho as i32);
-    a.blt(S3, T0, "row");
+    a.blt(S3, T0, &format!("row_{uniq}"));
 
     // --- 4. Residual skip connection as its own ADD pass (TFLite-style). ---
     if cfg.residual {
-        crate::baseline::sw_kernels::emit_residual(
-            &mut a,
-            "drv",
-            l.out,
-            l.x,
-            ho * wo * cout,
-            bp.zp_in(),
-        );
+        crate::baseline::sw_kernels::emit_residual(a, uniq, l.out, l.x, ho * wo * cout, bp.zp_in());
     }
-    a.ebreak();
-    a
 }
 
 /// Result of a fused-CFU driver run.
@@ -172,14 +203,7 @@ fn run_block_fused_impl(
     mach.load_program(PROG_BASE, &prog)?;
     l.place(&mut mach.mem, bp, &x.data)?;
     // Filter-major repack of the expansion weights (Fig. 11 layout).
-    let (cin, m) = (cfg.cin as usize, cfg.m as usize);
-    let mut exw_fm = vec![0i8; cin * m];
-    for ci in 0..cin {
-        for f in 0..m {
-            exw_fm[f * cin + ci] = bp.ex_w[ci * m + f];
-        }
-    }
-    mach.mem.write_i8_slice(l.ex_w, &exw_fm)?;
+    mach.mem.write_i8_slice(l.ex_w, &exw_filter_major(bp))?;
     let r = if stepped {
         mach.run_stepped(20_000_000_000)
     } else {

@@ -261,7 +261,14 @@ impl Asm {
                     }
                     Instr::Branch { op: *op, rs1: *rs1, rs2: *rs2, imm }
                 }
-                Item::Jal { rd, label } => Instr::Jal { rd: *rd, imm: resolve(label)? },
+                Item::Jal { rd, label } => {
+                    let imm = resolve(label)?;
+                    // JAL encodes a 21-bit signed byte offset (±1 MiB).
+                    if !(-1_048_576..=1_048_574).contains(&imm) {
+                        bail!("jal to '{label}' out of range ({imm})");
+                    }
+                    Instr::Jal { rd: *rd, imm }
+                }
             };
             out.push(instr);
         }
@@ -317,6 +324,34 @@ mod tests {
         assert_eq!(regs[T1 as usize], 0x12345);
         assert_eq!(regs[T2 as usize], -0x12345);
         assert_eq!(regs[T3 as usize], i32::MIN);
+    }
+
+    #[test]
+    fn branch_out_of_range_is_an_error_not_a_panic() {
+        // A branch immediate is 13-bit (±4 KiB); 1200 instructions of
+        // padding put the target well past it.  Whole-model codegen relies
+        // on this surfacing as Err so the compiler can report it.
+        let mut a = Asm::new();
+        a.label("top");
+        for _ in 0..1200 {
+            a.nop();
+        }
+        a.beq(ZERO, ZERO, "top");
+        let err = a.assemble().unwrap_err();
+        assert!(err.to_string().contains("branch to 'top' out of range"), "{err}");
+    }
+
+    #[test]
+    fn jal_out_of_range_is_an_error_not_a_panic() {
+        // JAL reaches ±1 MiB; pad past 2^18 instructions to overflow it.
+        let mut a = Asm::new();
+        a.j("end");
+        for _ in 0..263_000 {
+            a.nop();
+        }
+        a.label("end");
+        let err = a.assemble().unwrap_err();
+        assert!(err.to_string().contains("jal to 'end' out of range"), "{err}");
     }
 
     #[test]

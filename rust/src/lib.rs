@@ -27,6 +27,7 @@
 //! | [`model`] | Quantized MobileNetV2-style blocks, weights, reference impl |
 //! | [`quant`] | Fixed-point requantization primitives (SRDHM, rounding) |
 //! | [`exec`] | Execution layer: backend ids, executors, whole-model plans, activation arena |
+//! | [`compile`] | Whole-backbone → single-instruction-stream compiler + ISS runner |
 //! | [`coordinator`] | Serving core: sharded engines, bounded admission, metrics, loadgen |
 //! | [`cost`] | FPGA/ASIC resource, power, and area models |
 //! | [`memtraffic`] | Memory-traffic analytics (paper Table VI) |
@@ -52,6 +53,7 @@ pub mod util;
 
 pub mod baseline;
 pub mod cfu;
+pub mod compile;
 pub mod coordinator;
 pub mod cost;
 pub mod cpu;

@@ -3,8 +3,10 @@
 //! Subcommands:
 //!
 //! ```text
-//! report <table1..table7|fig14|tune|all>  regenerate the paper's evaluation
+//! report <table1..table7|fig14|tune|compile|all>  regenerate the paper's evaluation
 //! run [--backend B] [--layer TAG]     run one block / the whole model
+//! compile [--model M] [--pipeline V]  lower the model to one RISC-V+CFU program
+//! run-iss [--model M] [--stepped]     run the compiled program under the ISS
 //! tune [--model M] [--backends LIST]  cost-profile + search execution plans
 //! serve [--requests N] [--batch B]    batched edge-serving demo
 //! serve --qos CLASS                   QoS-class serving from tuned plans
@@ -19,6 +21,7 @@ use anyhow::{bail, Context, Result};
 
 use fused_dsc::cfu::PipelineVersion;
 use fused_dsc::cli::Args;
+use fused_dsc::compile::{self, CompiledModel, CompiledRun};
 use fused_dsc::coordinator::loadgen::{self, LoadMode, LoadgenConfig};
 use fused_dsc::coordinator::{Backend, Coordinator, Engine, Rejected, ServeConfig};
 use fused_dsc::model::blocks::{backbone, evaluated_blocks, BlockConfig};
@@ -28,6 +31,7 @@ use fused_dsc::runtime::{artifact_path, Runtime};
 use fused_dsc::tensor::TensorI8;
 use fused_dsc::tune::{self, PlanCache, QosClass, QosRouter};
 use fused_dsc::util::bench::write_bench_artifact;
+use fused_dsc::util::json::Json;
 use fused_dsc::util::stats::fmt_cycles;
 
 /// Resolve `--backend` through the one parser in [`fused_dsc::exec`]
@@ -84,6 +88,140 @@ fn cmd_run(args: &Args) -> Result<()> {
             out.sim_cycles as f64 / 100e6 * 1e3,
             out.logits
         );
+    }
+    Ok(())
+}
+
+/// Parse `--pipeline` into the CFU pipeline version the compiler targets.
+fn parse_pipeline(s: &str) -> Result<PipelineVersion> {
+    match s {
+        "v1" => Ok(PipelineVersion::V1),
+        "v2" => Ok(PipelineVersion::V2),
+        "v3" => Ok(PipelineVersion::V3),
+        other => bail!("unknown --pipeline '{other}' (expected v1|v2|v3)"),
+    }
+}
+
+/// Print a compiled model's program statistics: totals plus the per-block
+/// section/glue/staging breakdown.
+fn print_compiled_stats(model: &str, cm: &CompiledModel) {
+    println!(
+        "compiled {model} for pipeline {}: {} instructions ({} text bytes), {} data bytes, mem {} KiB",
+        cm.version().name(),
+        cm.program().len(),
+        cm.program_bytes(),
+        cm.data_bytes(),
+        cm.mem_size() / 1024
+    );
+    println!(
+        "  {:<5} {:>20} {:>9} {:>9} {:>11}",
+        "block", "geometry", "sect(w)", "glue(w)", "staging(B)"
+    );
+    for s in &cm.blocks {
+        let c = s.cfg;
+        let geom = format!("{}x{}x{} m{} c{} s{}", c.h, c.w, c.cin, c.m, c.cout, c.stride);
+        println!(
+            "  {:<5} {:>20} {:>9} {:>9} {:>11}",
+            s.index, geom, s.section_words, s.glue_words, s.staging_bytes
+        );
+    }
+}
+
+/// Render the `BENCH_compile_<model>.json` body: program stats, and when
+/// the model was actually run, total + per-block simulated cycles.
+fn compiled_json(model: &str, cm: &CompiledModel, run: Option<&CompiledRun>) -> Json {
+    let mut blocks = Json::arr();
+    for s in &cm.blocks {
+        let mut b = Json::obj()
+            .set("index", s.index)
+            .set("section_words", s.section_words)
+            .set("glue_words", s.glue_words)
+            .set("staging_bytes", s.staging_bytes as u64);
+        if let Some(r) = run {
+            b = b.set("sim_cycles", r.blocks[s.index].cycles);
+        }
+        blocks = blocks.push(b);
+    }
+    let mut j = Json::obj()
+        .set("model", model)
+        .set("pipeline", cm.version().name())
+        .set("instructions", cm.program().len())
+        .set("program_bytes", cm.program_bytes())
+        .set("data_bytes", cm.data_bytes())
+        .set("blocks", blocks);
+    if let Some(r) = run {
+        j = j
+            .set("sim_cycles", r.cycles)
+            .set("instret", r.instret)
+            .set("cfu_ops", r.cfu_ops)
+            .set("cfu_stall_cycles", r.cfu_stall_cycles)
+            .set("logits_match_exec", true);
+    }
+    j
+}
+
+/// `fused-dsc compile`: lower the model to one linked RISC-V+CFU
+/// instruction stream and print program statistics (no execution).
+fn cmd_compile(args: &Args) -> Result<()> {
+    let model = args.opt_or("model", "backbone").to_string();
+    let params = tune_params(args)?;
+    let version = parse_pipeline(args.opt_or("pipeline", "v3"))?;
+    let cm = compile::compile(&params, version)?;
+    print_compiled_stats(&model, &cm);
+    if let Some(dir) = args.opt("json") {
+        let file = write_bench_artifact(
+            &format!("compile_{model}"),
+            std::path::Path::new(dir),
+            &compiled_json(&model, &cm, None),
+        )?;
+        println!("bench json written: {}", file.display());
+    }
+    Ok(())
+}
+
+/// `fused-dsc run-iss`: compile the model, execute the single instruction
+/// stream end-to-end under the cycle-modeled ISS, and cross-check logits
+/// bit-exactly against the `exec/`-layer reference engine.
+fn cmd_run_iss(args: &Args) -> Result<()> {
+    let model = args.opt_or("model", "backbone").to_string();
+    let params = tune_params(args)?;
+    let version = parse_pipeline(args.opt_or("pipeline", "v3"))?;
+    let cm = compile::compile(&params, version)?;
+    let engine = Engine::new(params, Backend::Reference);
+    let x = engine.synthetic_input(&format!("cli.cx{}", args.opt_or("salt", "0")));
+    let run = if args.flag("stepped") { cm.run_iss_stepped(&x)? } else { cm.run_iss(&x)? };
+    let want = engine.infer(&x)?;
+    print_compiled_stats(&model, &cm);
+    println!(
+        "run-iss {model}: class={} sim_cycles={} ({:.2} ms @100MHz) instret={} cfu_ops={} cfu_stall={}",
+        run.class,
+        fmt_cycles(run.cycles),
+        run.cycles as f64 / 100e6 * 1e3,
+        run.instret,
+        run.cfu_ops,
+        run.cfu_stall_cycles
+    );
+    println!("  {:<5} {:>14} {:>12} {:>12}", "block", "sim cycles", "loads", "stores");
+    for b in &run.blocks {
+        println!("  {:<5} {:>14} {:>12} {:>12}", b.index, b.cycles, b.loads, b.stores);
+    }
+    if run.logits != want.logits || run.class != want.class {
+        bail!(
+            "logits MISMATCH vs exec: compiled {:?} class {} vs reference {:?} class {}",
+            run.logits,
+            run.class,
+            want.logits,
+            want.class
+        );
+    }
+    println!("logits match exec: OK");
+    if let Some(dir) = args.opt("json") {
+        let file = write_bench_artifact(
+            &format!("compile_{model}"),
+            std::path::Path::new(dir),
+            &compiled_json(&model, &cm, Some(&run)),
+        )?;
+        println!("bench json written: {}", file.display());
     }
     Ok(())
 }
@@ -357,8 +495,15 @@ fn usage() {
         fused_dsc::version()
     );
     println!("usage: fused-dsc <command> [options]");
-    println!("  report <table1..table7|fig14|tune|all>     regenerate paper evaluation");
+    println!("  report <table1..table7|fig14|tune|compile|all>  regenerate paper evaluation");
     println!("  run    [--backend NAME|list] [--layer 3rd|5th|8th|15th]");
+    println!("  compile [--model backbone|tiny] [--pipeline v1|v2|v3]");
+    println!("          [--json PATH]                      lower the model to one RISC-V+CFU");
+    println!("                                             program; print size + per-block stats");
+    println!("  run-iss [--model backbone|tiny] [--pipeline v1|v2|v3] [--salt S] [--stepped]");
+    println!("          [--json PATH]                      run the compiled program end-to-end");
+    println!("                                             under the ISS, cross-check logits vs");
+    println!("                                             exec/; writes BENCH_compile_*.json");
     println!("  tune   [--model backbone|tiny] [--backends LIST|all] [--cache DIR] [--no-cache]");
     println!("         [--json PATH]                       profile (block, backend) costs, search");
     println!("                                             per-objective + Pareto plans; writes");
@@ -378,13 +523,15 @@ fn usage() {
 
 fn main() -> Result<()> {
     let raw: Vec<String> = std::env::args().skip(1).collect();
-    let args = Args::parse(&raw, &["no-cache"]).map_err(anyhow::Error::msg)?;
+    let args = Args::parse(&raw, &["no-cache", "stepped"]).map_err(anyhow::Error::msg)?;
     match args.positional.first().map(|s| s.as_str()) {
         Some("report") => {
             let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
             report::tables::print_report(which)?;
         }
         Some("run") => cmd_run(&args)?,
+        Some("compile") => cmd_compile(&args)?,
+        Some("run-iss") => cmd_run_iss(&args)?,
         Some("tune") => cmd_tune(&args)?,
         Some("serve") => cmd_serve(&args)?,
         Some("golden") => cmd_golden(&args)?,

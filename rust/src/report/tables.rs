@@ -4,12 +4,12 @@
 
 use crate::cfu::PipelineVersion;
 use crate::cost::asic::{asic_summary, AsicNode, DEFAULT_ACTIVITY};
-use crate::exec::Backend;
 use crate::cost::fpga::{
     cfu_breakdown, cfu_resources, system_resources, ArchParams, ARTIX7_XC7A100T, BASE_SOC,
     CFU_PLAYGROUND_REF,
 };
 use crate::cost::power::{base_power_w, fpga_power_w};
+use crate::exec::Backend;
 use crate::memtraffic;
 use crate::model::blocks::evaluated_blocks;
 use crate::util::stats::fmt_cycles;
@@ -262,7 +262,56 @@ pub fn print_tune() -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Print one named report (table1..table7, fig14, tune, all).
+/// `fused-dsc report compile` — program size and simulated cycles per
+/// block for the whole backbone compiled to a single RISC-V+CFU
+/// instruction stream (ROADMAP item 1's paper-style table).  The numbers
+/// come from a real compiled run under the ISS, cross-checked bit-exactly
+/// against the `exec/` reference engine before printing.  Not part of
+/// `all`: it is this repo's extension, not a paper table.
+pub fn print_compile() -> anyhow::Result<()> {
+    let params = crate::model::weights::make_model_params(None);
+    let cm = crate::compile::compile(&params, PipelineVersion::V3)?;
+    let engine = crate::coordinator::Engine::new(params, Backend::Reference);
+    let x = engine.synthetic_input("report.compile");
+    let run = cm.run_iss(&x)?;
+    let want = engine.infer(&x)?;
+    anyhow::ensure!(
+        run.logits == want.logits && run.class == want.class,
+        "compiled backbone logits diverge from the exec/ layer"
+    );
+    println!("== Compiled backbone: program size + simulated cycles per block (v3) ==");
+    println!(
+        "  program: {} instructions, {} text bytes, {} data bytes",
+        cm.program().len(),
+        cm.program_bytes(),
+        cm.data_bytes()
+    );
+    println!(
+        "  {:<5} {:>20} {:>9} {:>9} {:>14}",
+        "block", "geometry", "sect(w)", "glue(w)", "sim cycles"
+    );
+    for (s, b) in cm.blocks.iter().zip(&run.blocks) {
+        let c = s.cfg;
+        let geom = format!("{}x{}x{} m{} c{} s{}", c.h, c.w, c.cin, c.m, c.cout, c.stride);
+        println!(
+            "  {:<5} {:>20} {:>9} {:>9} {:>14}",
+            s.index, geom, s.section_words, s.glue_words, b.cycles
+        );
+    }
+    let block_total: u64 = run.blocks.iter().map(|b| b.cycles).sum();
+    println!(
+        "  total: {} sim cycles ({:.2} ms @100MHz); blocks {} + glue/head {}; cfu stall {}",
+        fmt_cycles(run.cycles),
+        run.cycles as f64 / 100e6 * 1e3,
+        fmt_cycles(block_total),
+        fmt_cycles(run.cycles - block_total),
+        fmt_cycles(run.cfu_stall_cycles)
+    );
+    println!("  logits match exec: OK (class {})", run.class);
+    Ok(())
+}
+
+/// Print one named report (table1..table7, fig14, tune, compile, all).
 pub fn print_report(which: &str) -> anyhow::Result<()> {
     let needs_data = matches!(which, "fig14" | "table3" | "table4" | "table6" | "all");
     let data = if needs_data { Some(super::collect_measurements()?) } else { None };
@@ -277,8 +326,13 @@ pub fn print_report(which: &str) -> anyhow::Result<()> {
         "table7" => print_table7(),
         "fig14" => print_fig14(d.unwrap()),
         "tune" => print_tune()?,
+        "compile" => print_compile()?,
         "all" => print_all(d.unwrap()),
-        other => anyhow::bail!("unknown report '{other}' (try: table1..table7, fig14, tune, all)"),
+        other => {
+            anyhow::bail!(
+                "unknown report '{other}' (try: table1..table7, fig14, tune, compile, all)"
+            )
+        }
     }
     Ok(())
 }

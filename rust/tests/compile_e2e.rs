@@ -1,0 +1,175 @@
+//! Differential battery for the whole-model compiler (`compile/`): the
+//! single linked instruction stream must be *provably* equivalent to the
+//! layer-by-layer `exec/` path — logits bit-identical to the reference
+//! engine, per-block cycles bit-identical to the standalone driver, and
+//! the block-dispatch/stepped-oracle runs of the compiled program
+//! indistinguishable.  Plus the two golden snapshots (record-on-first-run,
+//! `tests/golden/` convention): compiled program words for a fixed tiny
+//! geometry and simulated cycles for the default backbone.
+
+use fused_dsc::cfu::PipelineVersion;
+use fused_dsc::compile::{compile, CompiledModel};
+use fused_dsc::coordinator::{Backend, Engine};
+use fused_dsc::driver::run_block_fused;
+use fused_dsc::model::blocks::BlockConfig;
+use fused_dsc::model::refimpl::block_ref;
+use fused_dsc::model::weights::{make_model_params, ModelParams};
+use fused_dsc::util::check::{check, Gen};
+use fused_dsc::prop_assert_eq;
+
+/// The fixed tiny geometry (same three blocks as `fused-dsc --model tiny`).
+fn tiny_params() -> ModelParams {
+    make_model_params(Some(vec![
+        BlockConfig::new(8, 8, 8, 16, 8, 2, false),
+        BlockConfig::new(4, 4, 8, 16, 16, 1, false),
+        BlockConfig::new(4, 4, 16, 24, 16, 1, false),
+    ]))
+}
+
+/// A random chained model: 1–3 blocks whose geometries compose (each
+/// block's input dims equal the previous block's output dims).
+fn arb_chained_cfgs(g: &mut Gen) -> Vec<BlockConfig> {
+    let n = g.usize(1, 3);
+    let mut h = g.i64(6, 8) as u32;
+    let mut w = g.i64(6, 8) as u32;
+    let mut cin = 8 * g.i32(1, 2) as u32;
+    let mut cfgs = Vec::with_capacity(n);
+    for _ in 0..n {
+        let m = 8 * g.i32(1, 3) as u32;
+        let cout = 8 * g.i32(1, 2) as u32;
+        let stride = if h >= 6 && w >= 6 { *g.pick(&[1u32, 2]) } else { 1 };
+        let residual = stride == 1 && cin == cout && g.bool();
+        let cfg = BlockConfig::new(h, w, cin, m, cout, stride, residual);
+        h = cfg.h_out();
+        w = cfg.w_out();
+        cin = cout;
+        cfgs.push(cfg);
+    }
+    cfgs
+}
+
+/// THE compiler property: for random chained geometries and weights, the
+/// compiled single-stream run must (a) produce logits and class equal to
+/// the `exec/` reference engine, (b) spend *exactly* the same simulated
+/// cycles inside each block section as the standalone
+/// `driver::run_block_fused` path, (c) issue the same total CFU traffic,
+/// and (d) be bit-identical between `Machine::run` and the `run_stepped`
+/// oracle.
+#[test]
+fn compiled_backbone_is_bit_identical_to_exec_layer() {
+    check("compiled model == exec layer", |g| {
+        let cfgs = arb_chained_cfgs(g);
+        let version = *g.pick(&PipelineVersion::ALL);
+        let params = make_model_params(Some(cfgs));
+        let cm = compile(&params, version)
+            .map_err(|e| format!("compile failed: {e} (seed {})", g.seed()))?;
+        let engine = Engine::new(params.clone(), Backend::Reference);
+        let x = engine.synthetic_input("ce2e.x");
+
+        // (a) logits + class vs the exec/ reference path.
+        let want = engine.infer(&x).map_err(|e| e.to_string())?;
+        let run = cm.run_iss(&x).map_err(|e| e.to_string())?;
+        prop_assert_eq!(run.logits, want.logits);
+        prop_assert_eq!(run.class, want.class);
+
+        // (b) + (c): per-block cycles and total CFU traffic vs the
+        // standalone driver on the same chained inputs.
+        let mut block_x = x.clone();
+        let mut cfu_ops = 0u64;
+        let mut cfu_stall = 0u64;
+        for (k, bp) in params.blocks.iter().enumerate() {
+            let fr = run_block_fused(bp, &block_x, version).map_err(|e| e.to_string())?;
+            prop_assert_eq!(run.blocks[k].cycles, fr.cycles);
+            cfu_ops += fr.cfu_ops;
+            cfu_stall += fr.cfu_stall_cycles;
+            block_x = block_ref(&block_x, bp);
+        }
+        prop_assert_eq!(run.cfu_ops, cfu_ops);
+        prop_assert_eq!(run.cfu_stall_cycles, cfu_stall);
+
+        // (d) block dispatch vs the per-instruction oracle on the whole
+        // compiled program.
+        let stepped = cm.run_iss_stepped(&x).map_err(|e| e.to_string())?;
+        prop_assert_eq!(run, stepped);
+        Ok(())
+    });
+}
+
+/// Golden-snapshot helper (tests/golden/ convention): compare against the
+/// committed file, or record it on first run with a loud `RECORDED:` line.
+fn golden_assert(file: &str, lines: &str, what: &str) {
+    let path =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden").join(file);
+    match std::fs::read_to_string(&path) {
+        Ok(want) => assert_eq!(
+            lines,
+            want,
+            "{what} snapshot diverged — if codegen or the cycle model changed \
+             on purpose, delete {} and re-run to re-bless",
+            path.display()
+        ),
+        Err(_) => {
+            std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+            std::fs::write(&path, lines).unwrap();
+            println!("RECORDED: {what} snapshot at {} — commit it to pin.", path.display());
+        }
+    }
+}
+
+/// The compiled program words for the fixed tiny geometry: any codegen
+/// drift (emission order, li widths, padding, label resolution) fails
+/// loudly here even when it happens to be cycle-neutral.
+#[test]
+fn golden_program_tiny() {
+    let cm = compile(&tiny_params(), PipelineVersion::V3).unwrap();
+    let mut lines = String::new();
+    for w in cm.program_words() {
+        lines.push_str(&format!("{w:08x}\n"));
+    }
+    golden_assert("program_tiny.txt", &lines, "tiny compiled program");
+}
+
+/// Total + per-block simulated cycles for the default 16-block backbone
+/// compiled to one stream: pins the end-to-end cost model at the deployed
+/// workload level.
+#[test]
+fn golden_sim_cycles_compiled_backbone() {
+    let params = make_model_params(None);
+    let cm = compile(&params, PipelineVersion::V3).unwrap();
+    let engine = Engine::new(params, Backend::Reference);
+    let x = engine.synthetic_input("ce2e.backbone");
+    let run = cm.run_iss(&x).unwrap();
+    // The run must still be semantically right before we pin its cycles.
+    let want = engine.infer(&x).unwrap();
+    assert_eq!(run.logits, want.logits, "backbone logits diverge from exec/");
+    assert_eq!(run.class, want.class);
+    let mut lines = String::new();
+    for b in &run.blocks {
+        lines.push_str(&format!("block{:02} {}\n", b.index, b.cycles));
+    }
+    lines.push_str(&format!("total {} {}\n", run.cycles, run.instret));
+    golden_assert("sim_cycles_compiled.txt", &lines, "compiled backbone cycles");
+}
+
+/// The compiled run reports one marker-pair measurement per block, the
+/// program stats cover every block, and the head (between the last block
+/// section and `ebreak`) costs nonzero cycles.
+#[test]
+fn compiled_tiny_structural_invariants() {
+    let params = tiny_params();
+    let cm: CompiledModel = compile(&params, PipelineVersion::V3).unwrap();
+    assert_eq!(cm.blocks.len(), 3);
+    for (k, s) in cm.blocks.iter().enumerate() {
+        assert_eq!(s.index, k);
+        assert!(s.section_words > 0 && s.glue_words > 0);
+        // Sections start on an I$ line boundary (8 words at 32-byte lines).
+        assert_eq!(s.section_start % 8, 0, "block {k} section misaligned");
+    }
+    assert!(cm.program_bytes() > 0 && cm.data_bytes() > 0);
+    let engine = Engine::new(params, Backend::Reference);
+    let x = engine.synthetic_input("ce2e.struct");
+    let run = cm.run_iss(&x).unwrap();
+    assert_eq!(run.blocks.len(), 3);
+    let in_blocks: u64 = run.blocks.iter().map(|b| b.cycles).sum();
+    assert!(run.cycles > in_blocks, "glue + head must cost cycles");
+}

@@ -7,7 +7,10 @@
 //! per-instruction oracle (`Machine::run_stepped`) so every artifact
 //! carries its own before/after pair for the iteration-7 speedup.  Before
 //! timing anything, `verify_dispatch_identity` re-asserts that the two
-//! dispatchers agree bit-for-bit on the bench programs.
+//! dispatchers agree bit-for-bit on the bench programs.  The
+//! `compile/tiny-iss-warm` case is `compile/tiny-iss`'s warm-session twin
+//! (iteration 9): same workload on one persistent `IssSession`, so each
+//! artifact carries the cold/warm pair for the amortization win.
 //!
 //! `--json <dir>` emits the `BENCH_simulator_hotpath.json` artifact tracked
 //! per-PR by the CI bench-smoke job (EXPERIMENTS.md §Perf log).
@@ -144,12 +147,26 @@ fn main() {
         BlockConfig::new(4, 4, 8, 16, 16, 1, false),
         BlockConfig::new(4, 4, 16, 24, 16, 1, false),
     ]));
-    let cm = fused_dsc::compile::compile(&tiny, PipelineVersion::V3).unwrap();
+    let cm = Arc::new(fused_dsc::compile::compile(&tiny, PipelineVersion::V3).unwrap());
     let cx = TensorI8::from_vec(
         &[8, 8, 8],
         gen_input("hot.cx", 8 * 8 * 8, tiny.blocks[0].zp_in()),
     );
+    // Warm-session twin (perf iteration 9): the same workload on one
+    // persistent IssSession — machine construction, weight staging, and
+    // block decode amortized across iterations.  Before timing, re-assert
+    // the session's contract on the bench model: a warm run is
+    // bit-identical (full CompiledRun equality) to a cold one.
+    let mut session = fused_dsc::compile::IssSession::new(Arc::clone(&cm)).unwrap();
+    for _ in 0..2 {
+        assert_eq!(
+            session.run(&cx).unwrap(),
+            cm.run_iss(&cx).unwrap(),
+            "warm session diverged from cold run_iss on the bench model"
+        );
+    }
     b.bench("compile/tiny-iss", || cm.run_iss(&cx).unwrap().cycles);
     b.bench("compile/tiny-iss-stepped", || cm.run_iss_stepped(&cx).unwrap().cycles);
+    b.bench("compile/tiny-iss-warm", || session.run(&cx).unwrap().cycles);
     b.finish();
 }

@@ -108,6 +108,30 @@ impl ModelLayout {
     pub fn data_bytes(&self) -> u32 {
         self.end - DATA_BASE
     }
+
+    /// Every `(addr, len)` region the compiled program (or the host writing
+    /// the input) may mutate during a run, in ascending address order: the
+    /// two arena buffers, each block's input/intermediate/output scratch
+    /// inside its staging replica (`x`, `f1`, `f2`, `out` — the weight and
+    /// bias spans between them are written once at session setup and only
+    /// ever read), and the head's pooled/logits/class words.  The warm-
+    /// session reset zeroes exactly these, which returns RAM to its
+    /// freshly-constructed state: every region starts a cold run all-zero,
+    /// and region lengths run to the next neighbour's base so alignment
+    /// padding (never written, hence still zero) is covered too.
+    pub fn mutated_regions(&self) -> Vec<(u32, u32)> {
+        let mut r = vec![(self.arena[0], self.arena_bytes), (self.arena[1], self.arena_bytes)];
+        for b in &self.blocks {
+            r.push((b.x, b.ex_w - b.x));
+            r.push((b.f1, b.dw_w - b.f1));
+            r.push((b.f2, b.pr_w - b.f2));
+            r.push((b.out, b.end - b.out));
+        }
+        r.push((self.pooled, self.logits - self.pooled));
+        r.push((self.logits, self.class - self.logits));
+        r.push((self.class, self.end - self.class));
+        r
+    }
 }
 
 #[cfg(test)]
@@ -158,5 +182,38 @@ mod tests {
         assert!(l.logits < l.class && l.class < l.end);
         // Arena holds the peak activation (8×8×8 input = 512 elements).
         assert_eq!(l.arena_bytes, 512);
+    }
+
+    #[test]
+    fn mutated_regions_cover_scratch_and_never_weights() {
+        let p = make_model_params(Some(vec![
+            BlockConfig::new(8, 8, 8, 16, 8, 2, false),
+            BlockConfig::new(4, 4, 8, 16, 16, 1, false),
+        ]));
+        let plan = ExecutionPlan::try_uniform(&p, Backend::Reference).unwrap();
+        let l = ModelLayout::for_model(&plan, &p);
+        let regions = l.mutated_regions();
+        // Ascending, disjoint, inside the data section, ending at `end`.
+        for w in regions.windows(2) {
+            assert!(w[0].0 + w[0].1 <= w[1].0, "{w:?}");
+        }
+        assert!(regions.first().unwrap().0 >= DATA_BASE);
+        let (last, len) = *regions.last().unwrap();
+        assert_eq!(last + len, l.end);
+        // The host rewrites the input arena first on every run.
+        assert_eq!(regions[0], (l.arena[0], l.arena_bytes));
+        // No mutated byte overlaps a weight span or the scrub region.
+        let mut keep = vec![(l.scrub, Cache::L1_SIZE_BYTES)];
+        for b in &l.blocks {
+            keep.push((b.ex_w, b.f1 - b.ex_w));
+            keep.push((b.dw_w, b.f2 - b.dw_w));
+            keep.push((b.pr_w, b.out - b.pr_w));
+        }
+        keep.push((l.fc_w, l.pooled - l.fc_w));
+        for &(ka, kl) in &keep {
+            for &(ma, ml) in &regions {
+                assert!(ma + ml <= ka || ka + kl <= ma, "{ma:#x}+{ml} overlaps {ka:#x}+{kl}");
+            }
+        }
     }
 }

@@ -24,6 +24,7 @@
 
 pub mod layout;
 mod lower;
+pub mod session;
 
 use std::fmt;
 
@@ -38,6 +39,7 @@ use crate::model::weights::ModelParams;
 use crate::tensor::TensorI8;
 
 pub use layout::ModelLayout;
+pub use session::IssSession;
 
 /// Instruction budget for a compiled whole-model run (same headroom as the
 /// per-block driver path).
@@ -276,7 +278,8 @@ impl CompiledModel {
         self.run_impl(x, true)
     }
 
-    fn run_impl(&self, x: &TensorI8, stepped: bool) -> anyhow::Result<CompiledRun> {
+    /// Validate an input tensor against the compiled geometry.
+    fn check_input(&self, x: &TensorI8) -> anyhow::Result<()> {
         let c = self.params.blocks[0].cfg;
         let want = (c.h * c.w * c.cin) as usize;
         anyhow::ensure!(
@@ -284,8 +287,26 @@ impl CompiledModel {
             "input has {} elements, model wants {want}",
             x.data.len()
         );
+        Ok(())
+    }
+
+    fn run_impl(&self, x: &TensorI8, stepped: bool) -> anyhow::Result<CompiledRun> {
+        self.check_input(x)?;
         let mut mach = self.prepare_machine()?;
         mach.mem.write_i8_slice(self.layout.arena[0], &x.data)?;
+        self.exec_prepared(&mut mach, stepped)
+    }
+
+    /// Run an already-prepared machine (program + weights + input staged)
+    /// to completion and read back the [`CompiledRun`].  Shared by the
+    /// cold path ([`run_iss`](Self::run_iss)) and the warm
+    /// [`IssSession`] — both observe the exact same execution and
+    /// extraction, so they can only differ in how the machine was prepared.
+    fn exec_prepared(
+        &self,
+        mach: &mut Machine<CfuUnit>,
+        stepped: bool,
+    ) -> anyhow::Result<CompiledRun> {
         let r = if stepped { mach.run_stepped(RUN_BUDGET) } else { mach.run(RUN_BUDGET) }?;
         anyhow::ensure!(r.reason == ExitReason::Halted, "compiled model did not halt: {r:?}");
 

@@ -1,0 +1,164 @@
+//! Persistent warm-machine ISS sessions: pay the whole-model setup cost
+//! once, then run inference after inference on the same [`Machine`].
+//!
+//! A cold [`CompiledModel::run_iss`] re-does, on *every* inference, work
+//! that depends only on the model: allocate and zero the simulated RAM
+//! (megabytes — [`CompiledModel::mem_size`]), encode the program into it,
+//! stage every weight section, and — since PR 7's block engine decodes
+//! lazily — re-decode the entire `BlockCache` of pre-lowered micro-ops.  An [`IssSession`] hoists all of
+//! that into construction and re-runs inferences through a reset protocol
+//! that provably returns the machine to the cold-run start state:
+//!
+//! * **retained** (per-model, immutable during a run): the RAM allocation,
+//!   the encoded program text, every weight/bias section (block staging
+//!   replicas + classifier head), the scrub region, and the decoded block
+//!   cache — block decode is a pure function of the program and the I$
+//!   line geometry, so a warm cache replays exactly what a cold machine
+//!   would decode on first touch;
+//! * **reset** ([`Machine::reset_core`]): registers, pc, cycle/instret
+//!   counters, [`crate::cpu::core::Stats`], markers, watch counters, both
+//!   cache models (valid bits *and* hit/miss counters) and the
+//!   straight-line fetch tracker — plus a freshly constructed CFU, exactly
+//!   what a cold machine is born with;
+//! * **re-zeroed**: the regions [`super::ModelLayout::mutated_regions`]
+//!   enumerates — the two activation arenas, each block's
+//!   input/intermediate/output staging scratch, and the head's
+//!   pooled/logits/class words.  Everything a run can write starts a cold
+//!   run all-zero, so zeroing is re-initialization.
+//!
+//! Run N is therefore bit-identical to a fresh `run_iss` — logits,
+//! per-block marker-delta cycles, `Stats`, and cache counters — which the
+//! proptests in `tests/compile_e2e.rs` and the pre-timing assert in
+//! `benches/simulator_hotpath.rs` enforce.
+
+use std::sync::Arc;
+
+use crate::cfu::CfuUnit;
+use crate::cpu::core::Machine;
+use crate::tensor::TensorI8;
+
+use super::{CompiledModel, CompiledRun};
+
+/// A warm machine bound to one compiled model.  See the module docs for
+/// the reset protocol; the serving layer holds one session per shard.
+pub struct IssSession {
+    model: Arc<CompiledModel>,
+    mach: Machine<CfuUnit>,
+    runs: u64,
+}
+
+impl IssSession {
+    /// Build the machine once: size the RAM, load + encode the program,
+    /// stage every constant tensor.  No inference has run yet, so the
+    /// first [`run`](Self::run) executes on a machine indistinguishable
+    /// from the cold path's.
+    pub fn new(model: Arc<CompiledModel>) -> anyhow::Result<Self> {
+        let mach = model.prepare_machine()?;
+        Ok(Self { model, mach, runs: 0 })
+    }
+
+    /// The compiled model this session runs.
+    pub fn model(&self) -> &CompiledModel {
+        &self.model
+    }
+
+    /// Completed (attempted) inferences on this session.
+    pub fn runs(&self) -> u64 {
+        self.runs
+    }
+
+    /// Read-only view of the warm machine — the differential tests use it
+    /// to compare `Stats` and cache counters against a cold machine.
+    pub fn machine(&self) -> &Machine<CfuUnit> {
+        &self.mach
+    }
+
+    /// Mutable access to the warm machine.  Exists for the poisoning
+    /// tests, which scribble over RAM between runs to prove the reset
+    /// protocol isolates consecutive inferences; serving code has no
+    /// reason to touch this.
+    pub fn machine_mut(&mut self) -> &mut Machine<CfuUnit> {
+        &mut self.mach
+    }
+
+    /// Run one inference on the warm machine (basic-block dispatch),
+    /// bit-identical to a cold [`CompiledModel::run_iss`] of the same
+    /// input.
+    pub fn run(&mut self, x: &TensorI8) -> anyhow::Result<CompiledRun> {
+        self.run_inner(x, false)
+    }
+
+    /// [`run`](Self::run) on the per-instruction oracle loop.
+    pub fn run_stepped(&mut self, x: &TensorI8) -> anyhow::Result<CompiledRun> {
+        self.run_inner(x, true)
+    }
+
+    fn run_inner(&mut self, x: &TensorI8, stepped: bool) -> anyhow::Result<CompiledRun> {
+        self.model.check_input(x)?;
+        if self.runs > 0 {
+            self.reset()?;
+        }
+        self.runs += 1;
+        self.mach.mem.write_i8_slice(self.model.layout.arena[0], &x.data)?;
+        self.model.exec_prepared(&mut self.mach, stepped)
+    }
+
+    /// The warm-session reset protocol (see module docs).  Also runs
+    /// before a retry after a failed run: a fault leaves counters parked
+    /// at the faulting instruction and scratch partially written, and the
+    /// reset returns all of it to the cold start state.
+    fn reset(&mut self) -> anyhow::Result<()> {
+        self.mach.reset_core();
+        // A cold machine is born with a fresh CFU; match it exactly
+        // instead of reasoning about which pipeline state is sticky.
+        self.mach.cfu = CfuUnit::new(self.model.version());
+        for (addr, len) in self.model.layout.mutated_regions() {
+            self.mach.mem.zero_bytes(addr, len)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfu::PipelineVersion;
+    use crate::compile::compile;
+    use crate::coordinator::Engine;
+    use crate::exec::Backend;
+    use crate::model::blocks::BlockConfig;
+    use crate::model::weights::make_model_params;
+
+    fn mini_session() -> (IssSession, Engine) {
+        let p = make_model_params(Some(vec![
+            BlockConfig::new(8, 8, 8, 16, 8, 2, false),
+            BlockConfig::new(4, 4, 8, 16, 8, 1, true),
+        ]));
+        let cm = compile(&p, PipelineVersion::V3).unwrap();
+        let engine = Engine::new(p, Backend::Reference);
+        (IssSession::new(Arc::new(cm)).unwrap(), engine)
+    }
+
+    #[test]
+    fn warm_runs_match_cold_runs_bitwise() {
+        let (mut s, engine) = mini_session();
+        for k in 0..4 {
+            let x = engine.synthetic_input(&format!("session.{k}"));
+            let warm = s.run(&x).unwrap();
+            let cold = s.model().run_iss(&x).unwrap();
+            assert_eq!(warm, cold, "run {k} diverged from cold path");
+        }
+        assert_eq!(s.runs(), 4);
+    }
+
+    #[test]
+    fn failed_run_does_not_poison_the_next() {
+        let (mut s, engine) = mini_session();
+        let x = engine.synthetic_input("session.recover");
+        let good = s.run(&x).unwrap();
+        // Wrong-size input: rejected before any machine state changes.
+        let bad = TensorI8::from_vec(&[1], vec![0i8]);
+        assert!(s.run(&bad).is_err());
+        assert_eq!(s.run(&x).unwrap(), good);
+    }
+}

@@ -17,6 +17,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
+use crate::compile::{CompiledModel, IssSession};
 use crate::exec::{executor_for, ActivationArena, BlockExecutor, ExecutionPlan, PlanError};
 use crate::model::refimpl;
 use crate::model::weights::ModelParams;
@@ -189,6 +190,12 @@ pub struct EngineShard {
     engine: Arc<Engine>,
     executors: Vec<Box<dyn BlockExecutor>>,
     arena: ActivationArena,
+    /// When set, inference routes through this warm whole-model ISS
+    /// session (`serve --engine compiled-iss`) instead of the exec-layer
+    /// executors.  One session per shard: the simulated machine is the
+    /// shard's warm state, paid for once and reset (bit-identically, see
+    /// [`crate::compile::session`]) between requests.
+    session: Option<IssSession>,
 }
 
 impl EngineShard {
@@ -196,12 +203,30 @@ impl EngineShard {
     pub fn new(engine: Arc<Engine>) -> Self {
         let executors = engine.plan.make_executors();
         let arena = ActivationArena::for_plan(&engine.plan);
-        Self { engine, executors, arena }
+        Self { engine, executors, arena, session: None }
+    }
+
+    /// Create a shard whose inferences run the compiled whole-model
+    /// RISC-V+CFU program under a warm ISS session.  Logits and class are
+    /// bit-identical to [`EngineShard::new`]'s exec-layer path (the
+    /// compiled program is differentially proven against it);
+    /// `sim_cycles` reports the whole-program simulated cycles — blocks
+    /// *plus* glue and head — rather than the exec path's block-only sum.
+    pub fn with_compiled(engine: Arc<Engine>, model: Arc<CompiledModel>) -> Result<Self> {
+        let session = IssSession::new(model)?;
+        let mut shard = Self::new(engine);
+        shard.session = Some(session);
+        Ok(shard)
     }
 
     /// The shared immutable engine this shard executes.
     pub fn engine(&self) -> &Engine {
         &self.engine
+    }
+
+    /// The warm compiled-ISS session, when this shard runs one.
+    pub fn session(&self) -> Option<&IssSession> {
+        self.session.as_ref()
     }
 
     /// Full-model inference reusing this shard's persistent backend state.
@@ -219,6 +244,17 @@ impl EngineShard {
     /// warm shard and a reused `out`, the whole call performs zero heap
     /// allocations.
     pub fn infer_into(&mut self, x: &TensorI8, out: &mut InferenceOutput) -> Result<()> {
+        if let Some(session) = self.session.as_mut() {
+            // Validate first so a malformed request is a typed error (and
+            // the session machine is never touched).
+            self.engine.validate_input(x)?;
+            let run = session.run(x)?;
+            out.logits.clear();
+            out.logits.extend_from_slice(&run.logits);
+            out.sim_cycles = run.cycles;
+            out.class = run.class;
+            return Ok(());
+        }
         self.engine.infer_with(&mut self.executors, &mut self.arena, x, out)
     }
 
@@ -401,6 +437,29 @@ mod tests {
             assert_eq!(got.logits, want.logits, "salt {salt}");
             assert_eq!(got.sim_cycles, want.sim_cycles, "salt {salt}");
         }
+    }
+
+    #[test]
+    fn compiled_iss_shard_matches_default_shard() {
+        let p = mini_params();
+        let cm = Arc::new(crate::compile::compile(&p, PipelineVersion::V3).unwrap());
+        let engine = Arc::new(Engine::new(p, Backend::Reference));
+        let mut compiled = EngineShard::with_compiled(Arc::clone(&engine), cm).unwrap();
+        let mut plain = EngineShard::new(Arc::clone(&engine));
+        for k in 0..3 {
+            let x = engine.synthetic_input(&format!("eng.ci{k}"));
+            let a = compiled.infer(&x).unwrap();
+            let b = plain.infer(&x).unwrap();
+            assert_eq!(a.logits, b.logits, "salt {k}");
+            assert_eq!(a.class, b.class, "salt {k}");
+            assert!(a.sim_cycles > 0, "whole-program cycles must be reported");
+        }
+        assert_eq!(compiled.session().unwrap().runs(), 3);
+        // A malformed request errors and leaves the session serviceable.
+        let bad = TensorI8::from_vec(&[1, 1, 8], vec![0i8; 8]);
+        assert!(compiled.infer(&bad).is_err());
+        let x = engine.synthetic_input("eng.ci.after");
+        assert_eq!(compiled.infer(&x).unwrap().logits, plain.infer(&x).unwrap().logits);
     }
 
     #[test]

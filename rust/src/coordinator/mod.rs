@@ -36,4 +36,6 @@ pub mod serve;
 
 pub use engine::{infer_golden, Backend, Engine, EngineShard, InferenceOutput};
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use serve::{Coordinator, Rejected, Request, Response, ServeConfig, ServeError, Ticket};
+pub use serve::{
+    Coordinator, EngineMode, Rejected, Request, Response, ServeConfig, ServeError, Ticket,
+};

@@ -31,12 +31,45 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::cfu::PipelineVersion;
+use crate::compile::CompiledModel;
 use crate::exec::ExecutionPlan;
 use crate::tensor::TensorI8;
 use crate::util::pool::{panic_message, ShardPool};
 
-use super::engine::{Engine, EngineShard, InferenceOutput};
+use super::engine::{Backend, Engine, EngineShard, InferenceOutput};
 use super::metrics::Metrics;
+
+/// Which execution machinery each worker shard runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EngineMode {
+    /// The exec layer: one warm [`crate::exec::BlockExecutor`] per block
+    /// plus a capacity-retaining activation arena (the default).
+    #[default]
+    Exec,
+    /// The compiled whole-model RISC-V+CFU program under a warm
+    /// [`crate::compile::IssSession`] per shard: the model is compiled
+    /// once at [`Coordinator::start`], each shard holds one persistent
+    /// simulated machine, and the bit-identical session reset replaces
+    /// per-request machine setup.  Logits and class match [`Exec`]
+    /// (differentially proven); `sim_cycles` reports whole-program cycles
+    /// (blocks + glue + head) instead of the exec path's block-only sum.
+    ///
+    /// [`Exec`]: EngineMode::Exec
+    CompiledIss,
+}
+
+impl std::str::FromStr for EngineMode {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "exec" | "default" => Ok(EngineMode::Exec),
+            "compiled-iss" => Ok(EngineMode::CompiledIss),
+            other => Err(format!("unknown engine mode '{other}' (expected exec | compiled-iss)")),
+        }
+    }
+}
 
 /// Coordinator configuration.
 #[derive(Debug, Clone)]
@@ -64,6 +97,10 @@ pub struct ServeConfig {
     /// batch (see [`ExecutionPlan::with_threads`]).  `1` (the default) is
     /// the scalar path; any value serves bit-identical logits.
     pub threads: usize,
+    /// Which execution machinery the worker shards run (`serve --engine`).
+    /// [`EngineMode::CompiledIss`] ignores `plan`/`threads` — the compiled
+    /// program is always the uniform fused placement.
+    pub engine: EngineMode,
 }
 
 impl Default for ServeConfig {
@@ -75,6 +112,7 @@ impl Default for ServeConfig {
             queue_depth: 128,
             plan: None,
             threads: 1,
+            engine: EngineMode::Exec,
         }
     }
 }
@@ -263,12 +301,28 @@ impl Coordinator {
             )),
             None => engine,
         };
+        // Compiled-ISS mode: compile the whole-model program once, here on
+        // the caller's thread (a compile failure surfaces as this panic, not
+        // as a dead batcher), and let every shard warm its own persistent
+        // session from the shared model.
+        let compiled = match cfg.engine {
+            EngineMode::Exec => None,
+            EngineMode::CompiledIss => {
+                let version = match engine.backend {
+                    Backend::FusedIss(v) | Backend::FusedHost(v) => v,
+                    _ => PipelineVersion::V3,
+                };
+                let cm = crate::compile::compile(&engine.params, version)
+                    .expect("compiled-ISS serving: model failed to compile");
+                Some(Arc::new(cm))
+            }
+        };
         let (tx, rx) = mpsc::sync_channel::<Request>(cfg.queue_depth);
         let metrics = Arc::new(Metrics::default());
         let m2 = Arc::clone(&metrics);
         let queue_depth = cfg.queue_depth;
         let batcher = std::thread::spawn(move || {
-            batcher_loop(rx, engine, cfg, m2);
+            batcher_loop(rx, engine, compiled, cfg, m2);
         });
         Self {
             tx: Some(tx),
@@ -340,15 +394,19 @@ impl Drop for Coordinator {
 fn batcher_loop(
     rx: Receiver<Request>,
     engine: Arc<Engine>,
+    compiled: Option<Arc<CompiledModel>>,
     cfg: ServeConfig,
     metrics: Arc<Metrics>,
 ) {
     // Each worker owns an EngineShard (persistent backend state) and a
     // bounded queue of max_batch requests: dispatch blocks when every
     // worker is saturated, which in turn lets the admission queue fill and
-    // shed — bounded end to end.
-    let shards = ShardPool::new(cfg.workers, cfg.max_batch, |_| {
-        EngineShard::new(Arc::clone(&engine))
+    // shed — bounded end to end.  In compiled-ISS mode each shard also owns
+    // a warm IssSession over the shared compiled model.
+    let shards = ShardPool::new(cfg.workers, cfg.max_batch, |_| match &compiled {
+        Some(model) => EngineShard::with_compiled(Arc::clone(&engine), Arc::clone(model))
+            .expect("warming a shard session cannot fail once the model compiled"),
+        None => EngineShard::new(Arc::clone(&engine)),
     });
     loop {
         // Block for the first request of a batch.
@@ -527,6 +585,7 @@ mod tests {
             queue_depth: 1,
             plan: None,
             threads: 1,
+            engine: EngineMode::Exec,
         };
         let coord = Coordinator::start(Arc::clone(&engine), cfg);
         let attempts = 64;
@@ -579,6 +638,37 @@ mod tests {
         assert_eq!(got.logits, want.logits);
         assert!(got.sim_cycles > 0, "the fused block contributes cycles");
         coord.shutdown();
+    }
+
+    #[test]
+    fn compiled_iss_serving_is_bit_identical() {
+        // `serve --engine compiled-iss`: every shard serves from a warm
+        // ISS session over the one shared compiled model; logits and class
+        // must match the default exec engine bit for bit, run after run on
+        // the same warm machines.
+        let engine = mini_engine();
+        let x = input(&engine, 21);
+        let want = engine.infer(&x).unwrap();
+        let cfg = ServeConfig {
+            workers: 2,
+            engine: EngineMode::CompiledIss,
+            ..Default::default()
+        };
+        let coord = Coordinator::start(Arc::clone(&engine), cfg);
+        for _ in 0..3 {
+            let got = coord.submit(x.clone()).unwrap().wait().into_output().unwrap();
+            assert_eq!(got.logits, want.logits);
+            assert_eq!(got.class, want.class);
+            assert!(got.sim_cycles > 0, "whole-program cycle count should be reported");
+        }
+        coord.shutdown();
+    }
+
+    #[test]
+    fn engine_mode_parses_from_cli_spellings() {
+        assert_eq!("exec".parse::<EngineMode>().unwrap(), EngineMode::Exec);
+        assert_eq!("compiled-iss".parse::<EngineMode>().unwrap(), EngineMode::CompiledIss);
+        assert!("jit".parse::<EngineMode>().is_err());
     }
 
     #[test]

@@ -92,6 +92,16 @@ impl Cache {
         self.misses = 0;
     }
 
+    /// Back to cold-cache state, as if freshly constructed: every resident
+    /// line forgotten *and* the counters zeroed.  `reset_stats` keeps the
+    /// tags, which is wrong for a warm-session reset — a retained line would
+    /// turn run N's first touch into a hit the cold run never saw.
+    pub fn reset(&mut self) {
+        self.valid.fill(false);
+        self.hits = 0;
+        self.misses = 0;
+    }
+
     pub fn hit_rate(&self) -> f64 {
         let total = self.hits + self.misses;
         if total == 0 {
@@ -154,6 +164,17 @@ mod tests {
             }
         }
         assert_eq!((fast.hits, fast.misses), (slow.hits, slow.misses));
+    }
+
+    #[test]
+    fn reset_is_cold_not_just_zeroed() {
+        let mut c = Cache::new(4096, 32);
+        c.access(0x100);
+        c.access(0x100);
+        c.reset();
+        assert_eq!((c.hits, c.misses), (0, 0));
+        // The line must be gone, not just the counters: first touch misses.
+        assert!(!c.access(0x100));
     }
 
     #[test]

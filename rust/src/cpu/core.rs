@@ -5,10 +5,11 @@
 //! Two dispatch loops share one instruction executor ([`Machine::exec_one`]):
 //!
 //! * [`Machine::run`] — the basic-block engine (EXPERIMENTS.md §Perf,
-//!   iteration 7).  Straight-line instruction runs are decoded once into a
-//!   pc-indexed [`BlockCache`] and replayed with one pc-bounds check and one
-//!   budget check per block, with every fetch's I$ line crossing precomputed
-//!   at decode time.
+//!   iterations 7 and 9).  Straight-line instruction runs are decoded once
+//!   into a pc-indexed [`BlockCache`] of pre-lowered [`Micro`] ops (operand
+//!   fields extracted, one flat tag per executable operation) and replayed
+//!   with one pc-bounds check and one budget check per block, with every
+//!   fetch's I$ line crossing precomputed at decode time.
 //! * [`Machine::run_stepped`] — the per-instruction oracle, the loop the
 //!   block engine replaced.  It re-checks pc, budget and fetch line at every
 //!   instruction and is what the differential tests compare against.
@@ -99,6 +100,15 @@ impl Memory {
     pub fn write_bytes(&mut self, addr: u32, bytes: &[u8]) -> Result<()> {
         let i = self.check(addr, bytes.len() as u32)?;
         self.data[i..i + bytes.len()].copy_from_slice(bytes);
+        Ok(())
+    }
+
+    /// Zero `len` bytes at `addr` — the warm-session primitive that returns
+    /// a mutated region to its freshly-constructed (all-zero) state without
+    /// reallocating the RAM.
+    pub fn zero_bytes(&mut self, addr: u32, len: u32) -> Result<()> {
+        let i = self.check(addr, len)?;
+        self.data[i..i + len as usize].fill(0);
         Ok(())
     }
 
@@ -220,10 +230,169 @@ enum Exec {
     Halt,
 }
 
-/// One instruction of a cached block plus its decode-time fetch geometry.
+/// Compact pre-lowered op tag: one flat discriminant per executable
+/// operation, so the hot dispatch match in [`Machine::exec_one`] is a single
+/// jump table instead of re-matching the nested `Instr` + sub-op enums on
+/// every executed instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum OpTag {
+    Add,
+    Sub,
+    Sll,
+    Slt,
+    Sltu,
+    Xor,
+    Srl,
+    Sra,
+    Or,
+    And,
+    Mul,
+    Mulh,
+    Mulhsu,
+    Mulhu,
+    Div,
+    Divu,
+    Rem,
+    Remu,
+    Addi,
+    Slti,
+    Sltiu,
+    Xori,
+    Ori,
+    Andi,
+    Slli,
+    Srli,
+    Srai,
+    Lb,
+    Lh,
+    Lw,
+    Lbu,
+    Lhu,
+    Sb,
+    Sh,
+    Sw,
+    Beq,
+    Bne,
+    Blt,
+    Bge,
+    Bltu,
+    Bgeu,
+    Lui,
+    Auipc,
+    Jal,
+    Jalr,
+    Cfu,
+    Ecall,
+    Ebreak,
+}
+
+/// One pre-lowered instruction: tag + pre-extracted operand fields.  `imm`
+/// holds the sign-extended immediate; for [`OpTag::Cfu`] it packs
+/// `funct7 << 8 | funct3` instead (a CFU op has no immediate).
+#[derive(Debug, Clone, Copy)]
+struct Micro {
+    tag: OpTag,
+    rd: u8,
+    rs1: u8,
+    rs2: u8,
+    imm: i32,
+}
+
+impl Micro {
+    /// Lower a decoded [`Instr`] to its flat executable form.  Every
+    /// instruction has exactly one lowering, so the stepped oracle lowers
+    /// inline and shares [`Machine::exec_one`] with the block engine — the
+    /// two dispatch loops cannot drift apart semantically.
+    #[inline(always)]
+    fn lower(instr: Instr) -> Self {
+        match instr {
+            Instr::Alu { op, rd, rs1, rs2 } => {
+                let tag = match op {
+                    AluOp::Add => OpTag::Add,
+                    AluOp::Sub => OpTag::Sub,
+                    AluOp::Sll => OpTag::Sll,
+                    AluOp::Slt => OpTag::Slt,
+                    AluOp::Sltu => OpTag::Sltu,
+                    AluOp::Xor => OpTag::Xor,
+                    AluOp::Srl => OpTag::Srl,
+                    AluOp::Sra => OpTag::Sra,
+                    AluOp::Or => OpTag::Or,
+                    AluOp::And => OpTag::And,
+                    AluOp::Mul => OpTag::Mul,
+                    AluOp::Mulh => OpTag::Mulh,
+                    AluOp::Mulhsu => OpTag::Mulhsu,
+                    AluOp::Mulhu => OpTag::Mulhu,
+                    AluOp::Div => OpTag::Div,
+                    AluOp::Divu => OpTag::Divu,
+                    AluOp::Rem => OpTag::Rem,
+                    AluOp::Remu => OpTag::Remu,
+                };
+                Micro { tag, rd, rs1, rs2, imm: 0 }
+            }
+            Instr::AluImm { op, rd, rs1, imm } => {
+                let tag = match op {
+                    AluImmOp::Addi => OpTag::Addi,
+                    AluImmOp::Slti => OpTag::Slti,
+                    AluImmOp::Sltiu => OpTag::Sltiu,
+                    AluImmOp::Xori => OpTag::Xori,
+                    AluImmOp::Ori => OpTag::Ori,
+                    AluImmOp::Andi => OpTag::Andi,
+                    AluImmOp::Slli => OpTag::Slli,
+                    AluImmOp::Srli => OpTag::Srli,
+                    AluImmOp::Srai => OpTag::Srai,
+                };
+                Micro { tag, rd, rs1, rs2: 0, imm }
+            }
+            Instr::Load { op, rd, rs1, imm } => {
+                let tag = match op {
+                    LoadOp::Lb => OpTag::Lb,
+                    LoadOp::Lh => OpTag::Lh,
+                    LoadOp::Lw => OpTag::Lw,
+                    LoadOp::Lbu => OpTag::Lbu,
+                    LoadOp::Lhu => OpTag::Lhu,
+                };
+                Micro { tag, rd, rs1, rs2: 0, imm }
+            }
+            Instr::Store { op, rs1, rs2, imm } => {
+                let tag = match op {
+                    StoreOp::Sb => OpTag::Sb,
+                    StoreOp::Sh => OpTag::Sh,
+                    StoreOp::Sw => OpTag::Sw,
+                };
+                Micro { tag, rd: 0, rs1, rs2, imm }
+            }
+            Instr::Branch { op, rs1, rs2, imm } => {
+                let tag = match op {
+                    BranchOp::Beq => OpTag::Beq,
+                    BranchOp::Bne => OpTag::Bne,
+                    BranchOp::Blt => OpTag::Blt,
+                    BranchOp::Bge => OpTag::Bge,
+                    BranchOp::Bltu => OpTag::Bltu,
+                    BranchOp::Bgeu => OpTag::Bgeu,
+                };
+                Micro { tag, rd: 0, rs1, rs2, imm }
+            }
+            Instr::Lui { rd, imm } => Micro { tag: OpTag::Lui, rd, rs1: 0, rs2: 0, imm },
+            Instr::Auipc { rd, imm } => Micro { tag: OpTag::Auipc, rd, rs1: 0, rs2: 0, imm },
+            Instr::Jal { rd, imm } => Micro { tag: OpTag::Jal, rd, rs1: 0, rs2: 0, imm },
+            Instr::Jalr { rd, rs1, imm } => Micro { tag: OpTag::Jalr, rd, rs1, rs2: 0, imm },
+            Instr::Cfu { funct7, funct3, rd, rs1, rs2 } => {
+                // funct7/funct3 are routing fields, not an immediate: pack
+                // them so `Micro` stays one word of operand payload.
+                let imm = ((funct7 as i32) << 8) | funct3 as i32;
+                Micro { tag: OpTag::Cfu, rd, rs1, rs2, imm }
+            }
+            Instr::Ecall => Micro { tag: OpTag::Ecall, rd: 0, rs1: 0, rs2: 0, imm: 0 },
+            Instr::Ebreak => Micro { tag: OpTag::Ebreak, rd: 0, rs1: 0, rs2: 0, imm: 0 },
+        }
+    }
+}
+
+/// One pre-lowered instruction of a cached block plus its decode-time fetch
+/// geometry.
 #[derive(Debug, Clone, Copy)]
 struct BlockOp {
-    instr: Instr,
+    op: Micro,
     /// Whether the *following* op's fetch lands on a different I$ line.
     /// (Each op's own crossing is the previous op's flag; the first op's
     /// depends on runtime history and is resolved at block entry.)
@@ -277,7 +446,7 @@ impl BlockCache {
         }
         let mut ops = Vec::new();
         for &instr in &program[idx..] {
-            ops.push(BlockOp { instr, crosses_next: false });
+            ops.push(BlockOp { op: Micro::lower(instr), crosses_next: false });
             if instr.ends_block() {
                 break;
             }
@@ -415,6 +584,31 @@ impl<C: CfuPort> Machine<C> {
         Ok(())
     }
 
+    /// Reset every piece of architectural and measurement state to its
+    /// power-on value — registers, pc (back to the program base), cycle and
+    /// instret counters, [`Stats`], markers, watch counters, both cache
+    /// models (valid bits *and* counters) and the straight-line fetch
+    /// tracker — while retaining RAM contents, the loaded program and the
+    /// decoded block cache.  This is the warm-session reset protocol's core:
+    /// after it (plus re-initializing whatever RAM the previous run
+    /// mutated), a run is bit-identical to one on a freshly constructed
+    /// machine, because block decode is a pure function of the unchanged
+    /// program and I$ line geometry.
+    pub fn reset_core(&mut self) {
+        self.regs = [0; 32];
+        self.pc = self.prog_base;
+        self.cycles = 0;
+        self.instret = 0;
+        self.stats = Stats::default();
+        self.markers.clear();
+        for w in &mut self.watches {
+            *w = RegionWatch::new(w.lo, w.hi);
+        }
+        self.icache.reset();
+        self.dcache.reset();
+        self.last_fetch_line = u32::MAX;
+    }
+
     #[inline(always)]
     fn rs(&self, r: u8) -> u32 {
         self.regs[r as usize]
@@ -439,185 +633,235 @@ impl<C: CfuPort> Machine<C> {
         )
     }
 
-    /// Execute one instruction's architectural effects: registers, memory,
-    /// caches (D$ only — the I$ fetch is the dispatch loop's job), stats,
-    /// markers, CFU.  `cyc` arrives holding the fetch cost and accumulates
-    /// the instruction's extra cycles; `cycles_now` is the cycle counter
-    /// *before* this instruction (markers and the CFU timestamp off it).
+    /// Address computation + D$ timing shared by every load.
+    #[inline(always)]
+    fn load_prolog(&mut self, rs1: u8, imm: i32, cyc: &mut u64) -> u32 {
+        let addr = self.rs(rs1).wrapping_add(imm as u32);
+        *cyc += self.cost.load_hit_extra;
+        if !self.dcache.access(addr) {
+            *cyc += self.cost.dcache_miss_penalty;
+        }
+        addr
+    }
+
+    /// Write-back + stat/watch accounting shared by every load.
+    #[inline(always)]
+    fn load_epilog(&mut self, rd: u8, addr: u32, v: u32, bytes: u64, cyc: u64) {
+        self.wr(rd, v);
+        self.stats.loads += 1;
+        self.stats.load_bytes += bytes;
+        self.stats.mem_cycles += cyc - self.cost.base;
+        if !self.watches.is_empty() {
+            self.note_access(addr, bytes, cyc, false);
+        }
+    }
+
+    /// Address/value reads + D$ timing shared by every store.
+    #[inline(always)]
+    fn store_prolog(&mut self, rs1: u8, rs2: u8, imm: i32, cyc: &mut u64) -> (u32, u32) {
+        let addr = self.rs(rs1).wrapping_add(imm as u32);
+        let v = self.rs(rs2);
+        if !self.dcache.access(addr) {
+            *cyc += self.cost.dcache_miss_penalty;
+        }
+        (addr, v)
+    }
+
+    /// Stat/watch accounting shared by every store.
+    #[inline(always)]
+    fn store_epilog(&mut self, addr: u32, bytes: u64, cyc: u64) {
+        self.stats.stores += 1;
+        self.stats.store_bytes += bytes;
+        self.stats.mem_cycles += cyc - self.cost.base;
+        if !self.watches.is_empty() {
+            self.note_access(addr, bytes, cyc, true);
+        }
+    }
+
+    /// Taken-branch bookkeeping shared by the six conditional branches.
+    #[inline(always)]
+    fn take_branch(&mut self, pc: u32, imm: i32, cyc: &mut u64) -> Exec {
+        *cyc += self.cost.taken_branch_penalty;
+        self.stats.branches_taken += 1;
+        Exec::Jump(pc.wrapping_add(imm as u32))
+    }
+
+    /// Execute one pre-lowered instruction's architectural effects:
+    /// registers, memory, caches (D$ only — the I$ fetch is the dispatch
+    /// loop's job), stats, markers, CFU.  `cyc` arrives holding the fetch
+    /// cost and accumulates the instruction's extra cycles; `cycles_now` is
+    /// the cycle counter *before* this instruction (markers and the CFU
+    /// timestamp off it).
     ///
     /// Both dispatch loops inline this, so simulated behaviour can only
     /// diverge in fetch accounting and loop control — which the
     /// differential tests pin.
     #[inline(always)]
-    fn exec_one(&mut self, instr: Instr, pc: u32, cyc: &mut u64, cycles_now: u64) -> Result<Exec> {
-        match instr {
-            Instr::Alu { op, rd, rs1, rs2 } => {
-                let a = self.rs(rs1);
-                let b = self.rs(rs2);
-                let v = match op {
-                    AluOp::Add => a.wrapping_add(b),
-                    AluOp::Sub => a.wrapping_sub(b),
-                    AluOp::Sll => a.wrapping_shl(b & 31),
-                    AluOp::Slt => ((a as i32) < (b as i32)) as u32,
-                    AluOp::Sltu => (a < b) as u32,
-                    AluOp::Xor => a ^ b,
-                    AluOp::Srl => a.wrapping_shr(b & 31),
-                    AluOp::Sra => ((a as i32).wrapping_shr(b & 31)) as u32,
-                    AluOp::Or => a | b,
-                    AluOp::And => a & b,
-                    AluOp::Mul => {
-                        *cyc += self.cost.mul_extra;
-                        a.wrapping_mul(b)
-                    }
-                    AluOp::Mulh => {
-                        *cyc += self.cost.mul_extra;
-                        (((a as i32 as i64) * (b as i32 as i64)) >> 32) as u32
-                    }
-                    AluOp::Mulhsu => {
-                        *cyc += self.cost.mul_extra;
-                        (((a as i32 as i64) * (b as u64 as i64)) >> 32) as u32
-                    }
-                    AluOp::Mulhu => {
-                        *cyc += self.cost.mul_extra;
-                        (((a as u64) * (b as u64)) >> 32) as u32
-                    }
-                    AluOp::Div => {
-                        *cyc += self.cost.div_extra;
-                        let (a, b) = (a as i32, b as i32);
-                        if b == 0 {
-                            u32::MAX
-                        } else if a == i32::MIN && b == -1 {
-                            a as u32
-                        } else {
-                            (a / b) as u32
-                        }
-                    }
-                    AluOp::Divu => {
-                        *cyc += self.cost.div_extra;
-                        if b == 0 {
-                            u32::MAX
-                        } else {
-                            a / b
-                        }
-                    }
-                    AluOp::Rem => {
-                        *cyc += self.cost.div_extra;
-                        let (a, b) = (a as i32, b as i32);
-                        if b == 0 {
-                            a as u32
-                        } else if a == i32::MIN && b == -1 {
-                            0
-                        } else {
-                            (a % b) as u32
-                        }
-                    }
-                    AluOp::Remu => {
-                        *cyc += self.cost.div_extra;
-                        if b == 0 {
-                            a
-                        } else {
-                            a % b
-                        }
-                    }
+    fn exec_one(&mut self, op: Micro, pc: u32, cyc: &mut u64, cycles_now: u64) -> Result<Exec> {
+        let Micro { tag, rd, rs1, rs2, imm } = op;
+        match tag {
+            OpTag::Add => self.wr(rd, self.rs(rs1).wrapping_add(self.rs(rs2))),
+            OpTag::Sub => self.wr(rd, self.rs(rs1).wrapping_sub(self.rs(rs2))),
+            OpTag::Sll => self.wr(rd, self.rs(rs1).wrapping_shl(self.rs(rs2) & 31)),
+            OpTag::Slt => self.wr(rd, ((self.rs(rs1) as i32) < (self.rs(rs2) as i32)) as u32),
+            OpTag::Sltu => self.wr(rd, (self.rs(rs1) < self.rs(rs2)) as u32),
+            OpTag::Xor => self.wr(rd, self.rs(rs1) ^ self.rs(rs2)),
+            OpTag::Srl => self.wr(rd, self.rs(rs1).wrapping_shr(self.rs(rs2) & 31)),
+            OpTag::Sra => {
+                self.wr(rd, ((self.rs(rs1) as i32).wrapping_shr(self.rs(rs2) & 31)) as u32)
+            }
+            OpTag::Or => self.wr(rd, self.rs(rs1) | self.rs(rs2)),
+            OpTag::And => self.wr(rd, self.rs(rs1) & self.rs(rs2)),
+            OpTag::Mul => {
+                *cyc += self.cost.mul_extra;
+                self.wr(rd, self.rs(rs1).wrapping_mul(self.rs(rs2)));
+            }
+            OpTag::Mulh => {
+                *cyc += self.cost.mul_extra;
+                let (a, b) = (self.rs(rs1) as i32 as i64, self.rs(rs2) as i32 as i64);
+                self.wr(rd, ((a * b) >> 32) as u32);
+            }
+            OpTag::Mulhsu => {
+                *cyc += self.cost.mul_extra;
+                let (a, b) = (self.rs(rs1) as i32 as i64, self.rs(rs2) as u64 as i64);
+                self.wr(rd, ((a * b) >> 32) as u32);
+            }
+            OpTag::Mulhu => {
+                *cyc += self.cost.mul_extra;
+                let v = (((self.rs(rs1) as u64) * (self.rs(rs2) as u64)) >> 32) as u32;
+                self.wr(rd, v);
+            }
+            OpTag::Div => {
+                *cyc += self.cost.div_extra;
+                let (a, b) = (self.rs(rs1) as i32, self.rs(rs2) as i32);
+                let v = if b == 0 {
+                    u32::MAX
+                } else if a == i32::MIN && b == -1 {
+                    a as u32
+                } else {
+                    (a / b) as u32
                 };
                 self.wr(rd, v);
             }
-            Instr::AluImm { op, rd, rs1, imm } => {
-                let a = self.rs(rs1);
-                let b = imm as u32;
-                let v = match op {
-                    AluImmOp::Addi => a.wrapping_add(b),
-                    AluImmOp::Slti => ((a as i32) < imm) as u32,
-                    AluImmOp::Sltiu => (a < b) as u32,
-                    AluImmOp::Xori => a ^ b,
-                    AluImmOp::Ori => a | b,
-                    AluImmOp::Andi => a & b,
-                    AluImmOp::Slli => a.wrapping_shl(b & 31),
-                    AluImmOp::Srli => a.wrapping_shr(b & 31),
-                    AluImmOp::Srai => ((a as i32).wrapping_shr(b & 31)) as u32,
+            OpTag::Divu => {
+                *cyc += self.cost.div_extra;
+                let (a, b) = (self.rs(rs1), self.rs(rs2));
+                self.wr(rd, if b == 0 { u32::MAX } else { a / b });
+            }
+            OpTag::Rem => {
+                *cyc += self.cost.div_extra;
+                let (a, b) = (self.rs(rs1) as i32, self.rs(rs2) as i32);
+                let v = if b == 0 {
+                    a as u32
+                } else if a == i32::MIN && b == -1 {
+                    0
+                } else {
+                    (a % b) as u32
                 };
                 self.wr(rd, v);
             }
-            Instr::Load { op, rd, rs1, imm } => {
-                let addr = self.rs(rs1).wrapping_add(imm as u32);
-                *cyc += self.cost.load_hit_extra;
-                if !self.dcache.access(addr) {
-                    *cyc += self.cost.dcache_miss_penalty;
-                }
-                let (v, bytes) = match op {
-                    LoadOp::Lb => (self.mem.read_u8(addr)? as i8 as i32 as u32, 1),
-                    LoadOp::Lbu => (self.mem.read_u8(addr)? as u32, 1),
-                    LoadOp::Lh => (self.mem.read_u16(addr)? as i16 as i32 as u32, 2),
-                    LoadOp::Lhu => (self.mem.read_u16(addr)? as u32, 2),
-                    LoadOp::Lw => (self.mem.read_u32(addr)?, 4),
-                };
-                self.wr(rd, v);
-                self.stats.loads += 1;
-                self.stats.load_bytes += bytes;
-                self.stats.mem_cycles += *cyc - self.cost.base;
-                if !self.watches.is_empty() {
-                    self.note_access(addr, bytes, *cyc, false);
+            OpTag::Remu => {
+                *cyc += self.cost.div_extra;
+                let (a, b) = (self.rs(rs1), self.rs(rs2));
+                self.wr(rd, if b == 0 { a } else { a % b });
+            }
+            OpTag::Addi => self.wr(rd, self.rs(rs1).wrapping_add(imm as u32)),
+            OpTag::Slti => self.wr(rd, ((self.rs(rs1) as i32) < imm) as u32),
+            OpTag::Sltiu => self.wr(rd, (self.rs(rs1) < imm as u32) as u32),
+            OpTag::Xori => self.wr(rd, self.rs(rs1) ^ imm as u32),
+            OpTag::Ori => self.wr(rd, self.rs(rs1) | imm as u32),
+            OpTag::Andi => self.wr(rd, self.rs(rs1) & imm as u32),
+            OpTag::Slli => self.wr(rd, self.rs(rs1).wrapping_shl(imm as u32 & 31)),
+            OpTag::Srli => self.wr(rd, self.rs(rs1).wrapping_shr(imm as u32 & 31)),
+            OpTag::Srai => {
+                self.wr(rd, ((self.rs(rs1) as i32).wrapping_shr(imm as u32 & 31)) as u32)
+            }
+            OpTag::Lb => {
+                let addr = self.load_prolog(rs1, imm, cyc);
+                let v = self.mem.read_u8(addr)? as i8 as i32 as u32;
+                self.load_epilog(rd, addr, v, 1, *cyc);
+            }
+            OpTag::Lbu => {
+                let addr = self.load_prolog(rs1, imm, cyc);
+                let v = self.mem.read_u8(addr)? as u32;
+                self.load_epilog(rd, addr, v, 1, *cyc);
+            }
+            OpTag::Lh => {
+                let addr = self.load_prolog(rs1, imm, cyc);
+                let v = self.mem.read_u16(addr)? as i16 as i32 as u32;
+                self.load_epilog(rd, addr, v, 2, *cyc);
+            }
+            OpTag::Lhu => {
+                let addr = self.load_prolog(rs1, imm, cyc);
+                let v = self.mem.read_u16(addr)? as u32;
+                self.load_epilog(rd, addr, v, 2, *cyc);
+            }
+            OpTag::Lw => {
+                let addr = self.load_prolog(rs1, imm, cyc);
+                let v = self.mem.read_u32(addr)?;
+                self.load_epilog(rd, addr, v, 4, *cyc);
+            }
+            OpTag::Sb => {
+                let (addr, v) = self.store_prolog(rs1, rs2, imm, cyc);
+                self.mem.write_u8(addr, v as u8)?;
+                self.store_epilog(addr, 1, *cyc);
+            }
+            OpTag::Sh => {
+                let (addr, v) = self.store_prolog(rs1, rs2, imm, cyc);
+                self.mem.write_u16(addr, v as u16)?;
+                self.store_epilog(addr, 2, *cyc);
+            }
+            OpTag::Sw => {
+                let (addr, v) = self.store_prolog(rs1, rs2, imm, cyc);
+                self.mem.write_u32(addr, v)?;
+                self.store_epilog(addr, 4, *cyc);
+            }
+            OpTag::Beq => {
+                if self.rs(rs1) == self.rs(rs2) {
+                    return Ok(self.take_branch(pc, imm, cyc));
                 }
             }
-            Instr::Store { op, rs1, rs2, imm } => {
-                let addr = self.rs(rs1).wrapping_add(imm as u32);
-                let v = self.rs(rs2);
-                if !self.dcache.access(addr) {
-                    *cyc += self.cost.dcache_miss_penalty;
-                }
-                let bytes = match op {
-                    StoreOp::Sb => {
-                        self.mem.write_u8(addr, v as u8)?;
-                        1
-                    }
-                    StoreOp::Sh => {
-                        self.mem.write_u16(addr, v as u16)?;
-                        2
-                    }
-                    StoreOp::Sw => {
-                        self.mem.write_u32(addr, v)?;
-                        4
-                    }
-                };
-                self.stats.stores += 1;
-                self.stats.store_bytes += bytes;
-                self.stats.mem_cycles += *cyc - self.cost.base;
-                if !self.watches.is_empty() {
-                    self.note_access(addr, bytes, *cyc, true);
+            OpTag::Bne => {
+                if self.rs(rs1) != self.rs(rs2) {
+                    return Ok(self.take_branch(pc, imm, cyc));
                 }
             }
-            Instr::Branch { op, rs1, rs2, imm } => {
-                let a = self.rs(rs1);
-                let b = self.rs(rs2);
-                let taken = match op {
-                    BranchOp::Beq => a == b,
-                    BranchOp::Bne => a != b,
-                    BranchOp::Blt => (a as i32) < (b as i32),
-                    BranchOp::Bge => (a as i32) >= (b as i32),
-                    BranchOp::Bltu => a < b,
-                    BranchOp::Bgeu => a >= b,
-                };
-                if taken {
-                    *cyc += self.cost.taken_branch_penalty;
-                    self.stats.branches_taken += 1;
-                    return Ok(Exec::Jump(pc.wrapping_add(imm as u32)));
+            OpTag::Blt => {
+                if (self.rs(rs1) as i32) < (self.rs(rs2) as i32) {
+                    return Ok(self.take_branch(pc, imm, cyc));
                 }
             }
-            Instr::Lui { rd, imm } => self.wr(rd, imm as u32),
-            Instr::Auipc { rd, imm } => self.wr(rd, pc.wrapping_add(imm as u32)),
-            Instr::Jal { rd, imm } => {
+            OpTag::Bge => {
+                if (self.rs(rs1) as i32) >= (self.rs(rs2) as i32) {
+                    return Ok(self.take_branch(pc, imm, cyc));
+                }
+            }
+            OpTag::Bltu => {
+                if self.rs(rs1) < self.rs(rs2) {
+                    return Ok(self.take_branch(pc, imm, cyc));
+                }
+            }
+            OpTag::Bgeu => {
+                if self.rs(rs1) >= self.rs(rs2) {
+                    return Ok(self.take_branch(pc, imm, cyc));
+                }
+            }
+            OpTag::Lui => self.wr(rd, imm as u32),
+            OpTag::Auipc => self.wr(rd, pc.wrapping_add(imm as u32)),
+            OpTag::Jal => {
                 self.wr(rd, pc.wrapping_add(4));
                 *cyc += self.cost.taken_branch_penalty;
                 return Ok(Exec::Jump(pc.wrapping_add(imm as u32)));
             }
-            Instr::Jalr { rd, rs1, imm } => {
+            OpTag::Jalr => {
                 // Target reads rs1 *before* the link write (rd == rs1 case).
                 let target = self.rs(rs1).wrapping_add(imm as u32) & !1;
                 self.wr(rd, pc.wrapping_add(4));
                 *cyc += self.cost.taken_branch_penalty;
                 return Ok(Exec::Jump(target));
             }
-            Instr::Cfu { funct7, funct3, rd, rs1, rs2 } => {
+            OpTag::Cfu => {
+                let (funct7, funct3) = (((imm >> 8) & 0x7F) as u8, (imm & 7) as u8);
                 let a = self.rs(rs1);
                 let b = self.rs(rs2);
                 *cyc += self.cost.cfu_issue_extra;
@@ -627,7 +871,7 @@ impl<C: CfuPort> Machine<C> {
                 self.stats.cfu_ops += 1;
                 self.stats.cfu_stall_cycles += resp.stall_cycles;
             }
-            Instr::Ecall => {
+            OpTag::Ecall => {
                 // Host hook: record a measurement marker (tag = a0).
                 self.markers.push(Marker {
                     tag: self.regs[10],
@@ -638,7 +882,7 @@ impl<C: CfuPort> Machine<C> {
                     store_bytes: self.stats.store_bytes,
                 });
             }
-            Instr::Ebreak => return Ok(Exec::Halt),
+            OpTag::Ebreak => return Ok(Exec::Halt),
         }
         Ok(Exec::Fall)
     }
@@ -729,7 +973,7 @@ impl<C: CfuPort> Machine<C> {
                 self.cost.base
             };
             cross = op.crosses_next;
-            let exec = match self.exec_one(op.instr, pc, &mut cyc, cycles) {
+            let exec = match self.exec_one(op.op, pc, &mut cyc, cycles) {
                 Ok(e) => e,
                 Err(e) => {
                     self.cycles = cycles;
@@ -790,7 +1034,7 @@ impl<C: CfuPort> Machine<C> {
             }
 
             let pc = self.pc;
-            let exec = self.exec_one(instr, pc, &mut cyc, self.cycles)?;
+            let exec = self.exec_one(Micro::lower(instr), pc, &mut cyc, self.cycles)?;
             self.cycles += cyc;
             self.instret += 1;
             match exec {
@@ -1168,6 +1412,39 @@ mod tests {
         assert_eq!(rb, rs);
         assert_eq!(rb.reason, ExitReason::Halted);
         assert_machines_agree(&mb, &ms);
+    }
+
+    #[test]
+    fn reset_core_replays_bit_identically() {
+        let mut a = Asm::new();
+        a.li(S0, 0x4000);
+        a.li(A0, 3); // marker tag
+        a.ecall();
+        a.li(T0, 0);
+        a.li(T1, 40);
+        a.label("loop");
+        a.sw(T0, S0, 0);
+        a.lw(T2, S0, 0);
+        a.addi(S0, S0, 4);
+        a.addi(T0, T0, 1);
+        a.blt(T0, T1, "loop");
+        a.ebreak();
+        let prog = a.assemble().unwrap();
+        let mut warm = Machine::new(1 << 20, NoCfu);
+        warm.load_program(0, &prog).unwrap();
+        warm.watch(0x4000, 0x4000 + 40 * 4);
+        warm.run(u64::MAX).unwrap();
+        // Reset + re-zero the one region the program mutates: the second
+        // run must be indistinguishable from a cold machine's first.
+        warm.reset_core();
+        warm.mem.zero_bytes(0x4000, 40 * 4).unwrap();
+        let r = warm.run(u64::MAX).unwrap();
+        assert_eq!(r.reason, ExitReason::Halted);
+        let mut cold = Machine::new(1 << 20, NoCfu);
+        cold.load_program(0, &prog).unwrap();
+        cold.watch(0x4000, 0x4000 + 40 * 4);
+        cold.run(u64::MAX).unwrap();
+        assert_machines_agree(&warm, &cold);
     }
 
     // ---- watch ordering (sorted early-exit scan) --------------------------

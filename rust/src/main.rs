@@ -21,9 +21,9 @@ use anyhow::{bail, Context, Result};
 
 use fused_dsc::cfu::PipelineVersion;
 use fused_dsc::cli::Args;
-use fused_dsc::compile::{self, CompiledModel, CompiledRun};
+use fused_dsc::compile::{self, CompiledModel, CompiledRun, IssSession};
 use fused_dsc::coordinator::loadgen::{self, LoadMode, LoadgenConfig};
-use fused_dsc::coordinator::{Backend, Coordinator, Engine, Rejected, ServeConfig};
+use fused_dsc::coordinator::{Backend, Coordinator, Engine, EngineMode, Rejected, ServeConfig};
 use fused_dsc::model::blocks::{backbone, evaluated_blocks, BlockConfig};
 use fused_dsc::model::weights::{gen_input, make_model_params, ModelParams};
 use fused_dsc::report;
@@ -186,7 +186,11 @@ fn cmd_run_iss(args: &Args) -> Result<()> {
     let model = args.opt_or("model", "backbone").to_string();
     let params = tune_params(args)?;
     let version = parse_pipeline(args.opt_or("pipeline", "v3"))?;
-    let cm = compile::compile(&params, version)?;
+    let repeat: usize = args.opt_parse("repeat", 1usize).map_err(anyhow::Error::msg)?;
+    if repeat == 0 {
+        bail!("--repeat must be >= 1");
+    }
+    let cm = Arc::new(compile::compile(&params, version)?);
     let engine = Engine::new(params, Backend::Reference);
     let x = engine.synthetic_input(&format!("cli.cx{}", args.opt_or("salt", "0")));
     let run = if args.flag("stepped") { cm.run_iss_stepped(&x)? } else { cm.run_iss(&x)? };
@@ -221,6 +225,79 @@ fn cmd_run_iss(args: &Args) -> Result<()> {
             std::path::Path::new(dir),
             &compiled_json(&model, &cm, Some(&run)),
         )?;
+        println!("bench json written: {}", file.display());
+    }
+    if repeat > 1 {
+        run_iss_warm_study(&model, &cm, &engine, args, repeat)?;
+    }
+    Ok(())
+}
+
+/// The `run-iss --repeat N` warm-session study: N cold inferences (a fresh
+/// machine per run, as `run_iss` always worked) against N warm inferences
+/// on one persistent [`IssSession`], asserting bit-identity against the
+/// cold path *and* the exec-layer engine on every run, then reporting the
+/// amortization win.  The `warm speedup:` line is grep-asserted by the
+/// `iss-warm-smoke` CI job.
+fn run_iss_warm_study(
+    model: &str,
+    cm: &Arc<CompiledModel>,
+    engine: &Engine,
+    args: &Args,
+    repeat: usize,
+) -> Result<()> {
+    /// A warm steady-state inference must beat the cold path by at least
+    /// this factor: per-run machine construction (RAM allocation, program
+    /// encode, weight staging, block decode) is the cost a session
+    /// amortizes away.
+    const WARM_SPEEDUP_FLOOR: f64 = 3.0;
+    let stepped = args.flag("stepped");
+    let salt = args.opt_or("salt", "0");
+    let mut session = IssSession::new(Arc::clone(cm))?;
+    let mut cold_ms = Vec::with_capacity(repeat);
+    let mut warm_ms = Vec::with_capacity(repeat);
+    for i in 0..repeat {
+        let x = engine.synthetic_input(&format!("cli.cx{salt}.{i}"));
+        let t = std::time::Instant::now();
+        let cold = if stepped { cm.run_iss_stepped(&x)? } else { cm.run_iss(&x)? };
+        cold_ms.push(t.elapsed().as_secs_f64() * 1e3);
+        let t = std::time::Instant::now();
+        let warm = if stepped { session.run_stepped(&x)? } else { session.run(&x)? };
+        warm_ms.push(t.elapsed().as_secs_f64() * 1e3);
+        if warm != cold {
+            bail!("run {i}: warm session diverged from cold run_iss");
+        }
+        let want = engine.infer(&x)?;
+        if warm.logits != want.logits || warm.class != want.class {
+            bail!("run {i}: logits MISMATCH vs exec on the warm session");
+        }
+        println!("  run {i}: cold {:.2} ms, warm {:.2} ms, bit-identical", cold_ms[i], warm_ms[i]);
+    }
+    // Steady state excludes the first warm run: it executes on the freshly
+    // built machine (no reset has happened yet); runs 1.. pay the full
+    // reset protocol and are what a serving shard sees.
+    let mean = |xs: &[f64]| xs.iter().sum::<f64>() / xs.len() as f64;
+    let cold = mean(&cold_ms);
+    let warm = mean(&warm_ms[1..]);
+    let speedup = cold / warm.max(1e-9);
+    println!(
+        "run-iss {model} x{repeat}: cold {cold:.2} ms/inf, warm steady state {warm:.2} ms/inf"
+    );
+    let verdict = if speedup >= WARM_SPEEDUP_FLOOR { "OK" } else { "MISS" };
+    println!("warm speedup: {speedup:.2}x (floor {WARM_SPEEDUP_FLOOR:.1}x: {verdict})");
+    if let Some(dir) = args.opt("json") {
+        let j = Json::obj()
+            .set("model", model)
+            .set("pipeline", cm.version().name())
+            .set("repeat", repeat as u64)
+            .set("cold_ms_per_inference", cold)
+            .set("warm_ms_per_inference", warm)
+            .set("warm_ms_first", warm_ms[0])
+            .set("speedup", speedup)
+            .set("speedup_floor", WARM_SPEEDUP_FLOOR)
+            .set("warm_matches_cold", true)
+            .set("logits_match_exec", true);
+        let file = write_bench_artifact("compile_warm", std::path::Path::new(dir), &j)?;
         println!("bench json written: {}", file.display());
     }
     Ok(())
@@ -286,11 +363,13 @@ fn serve_config(args: &Args) -> Result<ServeConfig> {
     if threads == 0 {
         bail!("--threads must be >= 1");
     }
+    let engine: EngineMode = args.opt_or("engine", "exec").parse().map_err(anyhow::Error::msg)?;
     Ok(ServeConfig {
         max_batch: args.opt_parse("batch", d.max_batch).map_err(anyhow::Error::msg)?,
         workers: args.opt_parse("workers", d.workers).map_err(anyhow::Error::msg)?,
         queue_depth: args.opt_parse("queue-depth", d.queue_depth).map_err(anyhow::Error::msg)?,
         threads,
+        engine,
         ..d
     })
 }
@@ -501,20 +580,25 @@ fn usage() {
     println!("          [--json PATH]                      lower the model to one RISC-V+CFU");
     println!("                                             program; print size + per-block stats");
     println!("  run-iss [--model backbone|tiny] [--pipeline v1|v2|v3] [--salt S] [--stepped]");
-    println!("          [--json PATH]                      run the compiled program end-to-end");
+    println!("          [--repeat N] [--json PATH]         run the compiled program end-to-end");
     println!("                                             under the ISS, cross-check logits vs");
-    println!("                                             exec/; writes BENCH_compile_*.json");
+    println!("                                             exec/; writes BENCH_compile_*.json;");
+    println!("                                             --repeat N adds a cold-vs-warm session");
+    println!("                                             study (writes BENCH_compile_warm.json)");
     println!("  tune   [--model backbone|tiny] [--backends LIST|all] [--cache DIR] [--no-cache]");
     println!("         [--json PATH]                       profile (block, backend) costs, search");
     println!("                                             per-objective + Pareto plans; writes");
     println!("                                             BENCH_tune.json");
     println!("  serve  [--requests N] [--batch B] [--workers W] [--queue-depth D] [--threads T]");
     println!("         [--backend host-v3]                  --threads T splits each fused pixel");
-    println!("                                             batch across T chunks (bit-identical)");
+    println!("         [--engine exec|compiled-iss]        batch across T chunks (bit-identical);");
+    println!("                                             compiled-iss serves the compiled whole-");
+    println!("                                             model program on warm per-shard ISS");
+    println!("                                             sessions (bit-identical logits)");
     println!("  serve  --qos latency|energy|balanced|mixed serve QoS classes from tuned plans");
     println!("  serve loadgen [--mode closed|open] [--clients N] [--rate R] [--requests N]");
     println!("                [--batch B] [--workers W] [--queue-depth D] [--threads T]");
-    println!("                [--backend reference]");
+    println!("                [--backend reference] [--engine exec|compiled-iss]");
     println!("                [--json PATH]                load-generate; writes BENCH_serve.json");
     println!("  golden [--layer TAG]                        CFU sim vs PJRT cross-check");
     println!("  version");

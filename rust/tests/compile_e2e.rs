@@ -7,8 +7,10 @@
 //! `tests/golden/` convention): compiled program words for a fixed tiny
 //! geometry and simulated cycles for the default backbone.
 
+use std::sync::Arc;
+
 use fused_dsc::cfu::PipelineVersion;
-use fused_dsc::compile::{compile, CompiledModel};
+use fused_dsc::compile::{compile, CompiledModel, IssSession};
 use fused_dsc::coordinator::{Backend, Engine};
 use fused_dsc::driver::run_block_fused;
 use fused_dsc::model::blocks::BlockConfig;
@@ -149,6 +151,71 @@ fn golden_sim_cycles_compiled_backbone() {
     }
     lines.push_str(&format!("total {} {}\n", run.cycles, run.instret));
     golden_assert("sim_cycles_compiled.txt", &lines, "compiled backbone cycles");
+}
+
+/// The warm-session property (perf iteration 9): N consecutive inferences
+/// on one [`IssSession`] must each be bit-identical to a fresh cold run —
+/// the `CompiledRun` (logits, class, total + per-block marker-delta
+/// cycles, instret, CFU traffic) *and* the machine itself (`Stats`, I$/D$
+/// hit/miss counters) — for random chained geometries, pipeline versions,
+/// and inputs.
+#[test]
+fn warm_session_is_bit_identical_to_cold_runs() {
+    check("warm IssSession == cold run_iss", |g| {
+        let cfgs = arb_chained_cfgs(g);
+        let version = *g.pick(&PipelineVersion::ALL);
+        let params = make_model_params(Some(cfgs));
+        let cm =
+            Arc::new(compile(&params, version).map_err(|e| format!("compile failed: {e}"))?);
+        let engine = Engine::new(params, Backend::Reference);
+        let mut warm = IssSession::new(Arc::clone(&cm)).unwrap();
+        let n = g.usize(2, 4);
+        for i in 0..n {
+            let x = engine.synthetic_input(&format!("ce2e.w{i}.{}", g.i64(0, 1 << 20)));
+            let got = warm.run(&x).map_err(|e| e.to_string())?;
+            // A brand-new session's first run IS the cold path; running it
+            // side by side exposes the whole machine for comparison, not
+            // just the CompiledRun.
+            let mut cold = IssSession::new(Arc::clone(&cm)).unwrap();
+            let want = cold.run(&x).map_err(|e| e.to_string())?;
+            prop_assert_eq!(&got, &want);
+            let (wm, om) = (warm.machine(), cold.machine());
+            prop_assert_eq!(&wm.stats, &om.stats);
+            prop_assert_eq!(
+                (wm.icache.hits, wm.icache.misses, wm.dcache.hits, wm.dcache.misses),
+                (om.icache.hits, om.icache.misses, om.dcache.hits, om.dcache.misses)
+            );
+            // And anchor against the one-shot API itself.
+            prop_assert_eq!(got, cm.run_iss(&x).map_err(|e| e.to_string())?);
+        }
+        // The per-instruction oracle agrees on the warm machine too.
+        let x = engine.synthetic_input("ce2e.w.stepped");
+        let got = warm.run_stepped(&x).map_err(|e| e.to_string())?;
+        prop_assert_eq!(got, cm.run_iss_stepped(&x).map_err(|e| e.to_string())?);
+        Ok(())
+    });
+}
+
+/// Dirtying everything a run may write between warm runs must not leak
+/// into the next inference: the session reset re-zeroes exactly the
+/// [`fused_dsc::compile::ModelLayout::mutated_regions`] set.
+#[test]
+fn warm_session_reset_clears_poisoned_scratch() {
+    let params = tiny_params();
+    let cm = Arc::new(compile(&params, PipelineVersion::V3).unwrap());
+    let engine = Engine::new(params, Backend::Reference);
+    let x = engine.synthetic_input("ce2e.poison");
+    let mut session = IssSession::new(Arc::clone(&cm)).unwrap();
+    let want = session.run(&x).unwrap();
+    // Scribble garbage over every mutable region — activation arenas,
+    // per-block staging scratch, head outputs — the worst state a prior
+    // run (or an aborted one) could leave behind.
+    for &(addr, len) in &cm.layout.mutated_regions() {
+        let junk = vec![0x5Ai8; len as usize];
+        session.machine_mut().mem.write_i8_slice(addr, &junk).unwrap();
+    }
+    let again = session.run(&x).unwrap();
+    assert_eq!(again, want, "poisoned scratch leaked into the next warm run");
 }
 
 /// The compiled run reports one marker-pair measurement per block, the

@@ -70,6 +70,7 @@ fn main() {
             mode: LoadMode::Closed { clients: 4 },
             requests: 64,
             serve: ServeConfig { batch_timeout: Duration::from_micros(500), ..Default::default() },
+            metrics_out: None,
         };
         let report = loadgen::run(Arc::clone(&engine), &cfg, input);
         assert_eq!(report.metrics.completed, 64);

@@ -278,6 +278,27 @@ impl CompiledModel {
         self.run_impl(x, true)
     }
 
+    /// [`run_iss`](Self::run_iss) with a cycle-attribution profiler
+    /// attached: returns the (bit-identical) run plus a finished
+    /// [`crate::obs::Profile`] whose per-basic-block and per-phase cycle
+    /// partitions both sum exactly to `CompiledRun::cycles`
+    /// ([`crate::obs::Profile::check`]).
+    pub fn run_iss_profiled(
+        &self,
+        x: &TensorI8,
+        stepped: bool,
+    ) -> anyhow::Result<(CompiledRun, crate::obs::Profile)> {
+        self.check_input(x)?;
+        let mut mach = self.prepare_machine()?;
+        mach.profiler = Some(Box::new(crate::obs::Profiler::new()));
+        mach.mem.write_i8_slice(self.layout.arena[0], &x.data)?;
+        let run = self.exec_prepared(&mut mach, stepped)?;
+        let prof = mach.profiler.take().expect("profiler still attached");
+        let n = self.params.blocks.len();
+        let profile = crate::obs::Profile::from_run(&prof, &mach.markers, run.cycles, n);
+        Ok((run, profile))
+    }
+
     /// Validate an input tensor against the compiled geometry.
     fn check_input(&self, x: &TensorI8) -> anyhow::Result<()> {
         let c = self.params.blocks[0].cfg;
@@ -307,9 +328,13 @@ impl CompiledModel {
         mach: &mut Machine<CfuUnit>,
         stepped: bool,
     ) -> anyhow::Result<CompiledRun> {
-        let r = if stepped { mach.run_stepped(RUN_BUDGET) } else { mach.run(RUN_BUDGET) }?;
+        let r = {
+            let _g = crate::obs::span("iss", "iss.exec");
+            if stepped { mach.run_stepped(RUN_BUDGET) } else { mach.run(RUN_BUDGET) }?
+        };
         anyhow::ensure!(r.reason == ExitReason::Halted, "compiled model did not halt: {r:?}");
 
+        let _g = crate::obs::span("iss", "iss.readback");
         let classes = self.params.head.fc_b.len();
         let mut raw = vec![0i8; 4 * classes];
         mach.mem.read_i8_into(self.layout.logits, &mut raw)?;

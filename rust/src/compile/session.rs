@@ -53,7 +53,11 @@ impl IssSession {
     /// first [`run`](Self::run) executes on a machine indistinguishable
     /// from the cold path's.
     pub fn new(model: Arc<CompiledModel>) -> anyhow::Result<Self> {
-        let mach = model.prepare_machine()?;
+        let mut mach = model.prepare_machine()?;
+        // Serving-wide cycle attribution (`--profile`): attach only when
+        // requested; the accumulated counters flush to the global
+        // collector when the session drops (shard teardown).
+        mach.profiler = crate::obs::profile::attach();
         Ok(Self { model, mach, runs: 0 })
     }
 
@@ -96,6 +100,7 @@ impl IssSession {
     fn run_inner(&mut self, x: &TensorI8, stepped: bool) -> anyhow::Result<CompiledRun> {
         self.model.check_input(x)?;
         if self.runs > 0 {
+            let _g = crate::obs::span("session", "session.reset");
             self.reset()?;
         }
         self.runs += 1;
@@ -116,6 +121,14 @@ impl IssSession {
             self.mach.mem.zero_bytes(addr, len)?;
         }
         Ok(())
+    }
+}
+
+impl Drop for IssSession {
+    fn drop(&mut self) {
+        if let Some(p) = self.mach.profiler.take() {
+            crate::obs::profile::flush(&p);
+        }
     }
 }
 

@@ -135,11 +135,13 @@ impl Engine {
         self.validate_input(x)?;
         arena.load_input(x);
         let mut cycles = 0u64;
-        for (bp, executor) in self.params.blocks.iter().zip(executors.iter_mut()) {
+        for (k, (bp, executor)) in self.params.blocks.iter().zip(executors.iter_mut()).enumerate() {
+            let _g = crate::obs::span_block("exec", "block", k as u64, executor.backend().name());
             let (cur, next) = arena.pair();
             cycles += executor.run_block_into(bp, cur, next)?;
             arena.swap();
         }
+        let _g = crate::obs::span("exec", "head");
         let (acts, pooled) = arena.head_io();
         refimpl::head_ref_into(acts, &self.params.head, pooled, &mut out.logits);
         out.sim_cycles = cycles;

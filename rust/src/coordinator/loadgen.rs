@@ -27,7 +27,7 @@ use crate::util::bench::write_bench_artifact;
 use crate::util::json::Json;
 use crate::util::stats::fmt_cycles;
 
-use super::metrics::MetricsSnapshot;
+use super::metrics::{MetricsDumper, MetricsSnapshot};
 use super::serve::{Coordinator, ServeConfig, Ticket};
 use super::Engine;
 
@@ -67,6 +67,10 @@ pub struct LoadgenConfig {
     pub requests: usize,
     /// The coordinator under test.
     pub serve: ServeConfig,
+    /// Periodic metrics dump target (`--metrics-out`): a JSON array of
+    /// [`MetricsSnapshot`] objects rewritten once a second and once more
+    /// at the end of the run.  `None` disables the dumper thread.
+    pub metrics_out: Option<PathBuf>,
 }
 
 /// Results of a [`run`]: wall-clock throughput plus the coordinator's own
@@ -107,6 +111,13 @@ pub fn run(
 ) -> LoadgenReport {
     let backend = engine.backend.name().to_string();
     let coord = Coordinator::start(Arc::clone(&engine), cfg.serve.clone());
+    let dumper = cfg.metrics_out.as_ref().map(|p| {
+        MetricsDumper::spawn(
+            vec![(None, Arc::clone(&coord.metrics))],
+            p.clone(),
+            Duration::from_secs(1),
+        )
+    });
     let t0 = Instant::now();
     match cfg.mode {
         LoadMode::Closed { clients } => {
@@ -157,6 +168,9 @@ pub fn run(
     let wall_s = t0.elapsed().as_secs_f64();
     let metrics = coord.metrics.snapshot();
     coord.shutdown();
+    if let Some(d) = dumper {
+        d.stop(); // final dump reflects the end-of-run counters
+    }
     let (clients, rate_hz) = match cfg.mode {
         LoadMode::Closed { clients } => (Some(clients), None),
         LoadMode::Open { rate_hz } => (None, Some(rate_hz)),
@@ -267,6 +281,7 @@ mod tests {
             mode: LoadMode::Closed { clients: 4 },
             requests: 32,
             serve: ServeConfig::default(),
+            metrics_out: None,
         };
         let report = run(Arc::clone(&engine), &cfg, make_input(&engine));
         assert_eq!(report.metrics.completed, 32);
@@ -282,6 +297,7 @@ mod tests {
             mode: LoadMode::Open { rate_hz: 4000.0 },
             requests: 32,
             serve: ServeConfig { queue_depth: 8, ..Default::default() },
+            metrics_out: None,
         };
         let report = run(Arc::clone(&engine), &cfg, make_input(&engine));
         let m = &report.metrics;
@@ -298,6 +314,7 @@ mod tests {
             mode: LoadMode::Closed { clients: 2 },
             requests: 8,
             serve: ServeConfig::default(),
+            metrics_out: None,
         };
         let report = run(Arc::clone(&engine), &cfg, make_input(&engine));
         let body = report.to_json().render();

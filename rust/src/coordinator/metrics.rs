@@ -7,7 +7,11 @@
 //! never grows this structure (proved by the counting-allocator test in
 //! `rust/tests/alloc_regression.rs`).
 
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::util::json::Json;
@@ -38,6 +42,9 @@ pub struct Metrics {
 /// [`MetricsSnapshot::to_json`].
 #[derive(Debug, Clone)]
 pub struct MetricsSnapshot {
+    /// QoS-class label (`None` outside QoS-routed serving).  Set by
+    /// [`Metrics::snapshot_labeled`]; serialized as `qos_class`.
+    pub class: Option<String>,
     /// Requests admitted by `submit` (excludes rejected ones).
     pub submitted: u64,
     /// Requests shed at admission (queue full / shutting down).
@@ -91,9 +98,17 @@ impl Metrics {
         self.total_latency.record(total);
     }
 
+    /// [`snapshot`](Self::snapshot) stamped with a QoS-class label.
+    pub fn snapshot_labeled(&self, class: &str) -> MetricsSnapshot {
+        let mut s = self.snapshot();
+        s.class = Some(class.to_string());
+        s
+    }
+
     /// Take a point-in-time copy of every counter and both histograms.
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
+            class: None,
             submitted: self.submitted.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
@@ -111,8 +126,11 @@ impl MetricsSnapshot {
     /// The machine-readable form embedded in `BENCH_serve.json` and
     /// printable anywhere a metrics dump is wanted.
     pub fn to_json(&self) -> Json {
-        Json::obj()
-            .set("submitted", self.submitted)
+        let mut j = Json::obj();
+        if let Some(class) = &self.class {
+            j = j.set("qos_class", class.as_str());
+        }
+        j.set("submitted", self.submitted)
             .set("rejected", self.rejected)
             .set("completed", self.completed)
             .set("failed", self.failed)
@@ -122,6 +140,73 @@ impl MetricsSnapshot {
             .set("queue_latency", self.queue_latency.to_json())
             .set("total_latency", self.total_latency.to_json())
     }
+}
+
+/// Periodic `--metrics-out` sampler: a background thread that rewrites
+/// `path` every `period` with a JSON **array** of labeled
+/// [`MetricsSnapshot::to_json`] objects — one per source — and once more on
+/// [`stop`](MetricsDumper::stop), so the file always holds the final
+/// totals.  The serving hot path is untouched: sampling uses the same
+/// wait-free [`Metrics::snapshot`] any observer would.
+pub struct MetricsDumper {
+    tx: Option<Sender<()>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl MetricsDumper {
+    /// Start sampling `sources` (`(qos label, metrics)` pairs) into `path`.
+    pub fn spawn(
+        sources: Vec<(Option<String>, Arc<Metrics>)>,
+        path: PathBuf,
+        period: Duration,
+    ) -> Self {
+        let (tx, rx) = std::sync::mpsc::channel::<()>();
+        let handle = std::thread::spawn(move || loop {
+            let timed_out = matches!(rx.recv_timeout(period), Err(RecvTimeoutError::Timeout));
+            if let Err(e) = dump_metrics(&sources, &path) {
+                eprintln!("metrics-out: failed to write {}: {e}", path.display());
+            }
+            if !timed_out {
+                return; // stop requested (or dumper dropped): final dump done
+            }
+        });
+        Self { tx: Some(tx), handle: Some(handle) }
+    }
+
+    /// Stop the sampler after one final dump.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        if let Some(tx) = self.tx.take() {
+            let _ = tx.send(());
+        }
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for MetricsDumper {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn dump_metrics(sources: &[(Option<String>, Arc<Metrics>)], path: &Path) -> std::io::Result<()> {
+    let mut arr = Json::arr();
+    for (class, m) in sources {
+        let mut snap = m.snapshot();
+        snap.class = class.clone();
+        arr = arr.push(snap.to_json());
+    }
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, arr.render())
 }
 
 #[cfg(test)]
@@ -169,6 +254,79 @@ mod tests {
         assert!(body.contains("\"completed\":1"), "{body}");
         assert!(body.contains("\"queue_latency\":{\"count\":1"), "{body}");
         assert!(body.contains("\"p999_s\":"), "{body}");
+    }
+
+    /// Field-exact `to_json` → `Json::parse` round-trip: every counter and
+    /// every histogram quantile survives serialization bit-for-bit (the
+    /// writer renders integral floats as integers; `as_f64` reads both).
+    #[test]
+    fn snapshot_json_roundtrips_field_exact() {
+        let m = Metrics::default();
+        for k in 0..100u64 {
+            m.note_submitted();
+            m.note_completed(
+                Duration::from_micros(10 + 7 * k),
+                Duration::from_micros(40 + 13 * k),
+                3 * k,
+            );
+        }
+        m.note_rejected();
+        m.note_batch(9);
+        m.note_failed(Duration::from_micros(5), Duration::from_micros(11));
+        let snap = m.snapshot_labeled("latency");
+        let doc = Json::parse(&snap.to_json().render()).unwrap();
+
+        assert_eq!(doc.get("qos_class").and_then(|v| v.as_str()), Some("latency"));
+        let int = |k: &str| doc.get(k).and_then(|v| v.as_u64()).unwrap();
+        assert_eq!(int("submitted"), snap.submitted);
+        assert_eq!(int("rejected"), snap.rejected);
+        assert_eq!(int("completed"), snap.completed);
+        assert_eq!(int("failed"), snap.failed);
+        assert_eq!(int("batches"), snap.batches);
+        assert_eq!(int("max_batch_seen"), snap.max_batch_seen as u64);
+        assert_eq!(int("sim_cycles"), snap.sim_cycles);
+        let hists =
+            [("queue_latency", &snap.queue_latency), ("total_latency", &snap.total_latency)];
+        for (key, h) in hists {
+            let hj = doc.get(key).unwrap();
+            assert_eq!(hj.get("count").and_then(|v| v.as_u64()), Some(h.count));
+            let f = |k: &str| hj.get(k).and_then(|v| v.as_f64()).unwrap();
+            assert_eq!(f("mean_s"), h.mean_s, "{key}.mean_s");
+            assert_eq!(f("min_s"), h.min_s, "{key}.min_s");
+            assert_eq!(f("max_s"), h.max_s, "{key}.max_s");
+            assert_eq!(f("p50_s"), h.p50_s, "{key}.p50_s");
+            assert_eq!(f("p90_s"), h.p90_s, "{key}.p90_s");
+            assert_eq!(f("p99_s"), h.p99_s, "{key}.p99_s");
+            assert_eq!(f("p999_s"), h.p999_s, "{key}.p999_s");
+        }
+    }
+
+    #[test]
+    fn unlabeled_snapshot_omits_qos_class() {
+        let doc = Json::parse(&Metrics::default().snapshot().to_json().render()).unwrap();
+        assert!(doc.get("qos_class").is_none());
+        assert!(doc.get("submitted").is_some());
+    }
+
+    #[test]
+    fn dumper_writes_labeled_snapshot_array() {
+        let dir = std::env::temp_dir().join(format!("fused_dsc_metrics_{}", std::process::id()));
+        let path = dir.join("metrics.json");
+        let m = Arc::new(Metrics::default());
+        m.note_submitted();
+        m.note_completed(Duration::from_micros(10), Duration::from_micros(20), 42);
+        let dumper = MetricsDumper::spawn(
+            vec![(Some("balanced".to_string()), Arc::clone(&m))],
+            path.clone(),
+            Duration::from_secs(3600), // only the final stop-dump fires
+        );
+        dumper.stop();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let arr = doc.as_array().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("qos_class").and_then(|v| v.as_str()), Some("balanced"));
+        assert_eq!(arr[0].get("sim_cycles").and_then(|v| v.as_u64()), Some(42));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

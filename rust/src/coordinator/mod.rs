@@ -35,7 +35,7 @@ pub mod metrics;
 pub mod serve;
 
 pub use engine::{infer_golden, Backend, Engine, EngineShard, InferenceOutput};
-pub use metrics::{Metrics, MetricsSnapshot};
+pub use metrics::{Metrics, MetricsDumper, MetricsSnapshot};
 pub use serve::{
     Coordinator, EngineMode, Rejected, Request, Response, ServeConfig, ServeError, Ticket,
 };

@@ -345,6 +345,7 @@ impl Coordinator {
             None => return Err(Rejected::ShuttingDown { input }),
         };
         let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        let _g = crate::obs::span_num("serve", "admission", "request", id);
         // Depth 1 so the worker's send never blocks; the client may fetch
         // the response long after (or never — the buffer absorbs it).
         let (rtx, rrx) = mpsc::sync_channel(1);
@@ -428,6 +429,7 @@ fn batcher_loop(
             }
         }
         metrics.note_batch(batch.len());
+        let _g = crate::obs::span_num("serve", "dispatch", "batch", batch.len() as u64);
         for req in batch {
             let metrics = Arc::clone(&metrics);
             shards.spawn_least_loaded(move |shard: &mut EngineShard| {
@@ -459,13 +461,19 @@ fn serve_one(shard: &mut EngineShard, req: Request, metrics: &Metrics) {
     // Stamped at execution start, so time spent in the shard's bounded
     // queue (behind up to max_batch earlier requests) is attributed to
     // queueing, not silently folded into service time.
-    let queue_time = Instant::now().saturating_duration_since(req.submitted_at);
-    let result = run_guarded(|| shard.infer(&req.input));
+    let exec_start = Instant::now();
+    let queue_time = exec_start.saturating_duration_since(req.submitted_at);
+    crate::obs::record_past("serve", "queue_wait", req.submitted_at, exec_start, req.id);
+    let result = {
+        let _g = crate::obs::span_num("serve", "inference", "request", req.id);
+        run_guarded(|| shard.infer(&req.input))
+    };
     let total_time = req.submitted_at.elapsed();
     match &result {
         Ok(out) => metrics.note_completed(queue_time, total_time, out.sim_cycles),
         Err(_) => metrics.note_failed(queue_time, total_time),
     }
+    let _g = crate::obs::span_num("serve", "response", "request", req.id);
     let _ = req.respond.send(Response { id: req.id, queue_time, total_time, result });
 }
 

@@ -489,6 +489,12 @@ pub struct Machine<C: CfuPort> {
     /// lives separately in `watch_order`.
     pub watches: Vec<RegionWatch>,
     pub cfu: C,
+    /// Optional cycle-attribution profiler (`None` = one branch per
+    /// dispatched block, nothing else).  Purely observational: it snapshots
+    /// the counters above around each block, so attaching it changes no
+    /// architectural or measured state.  Survives [`Machine::reset_core`]
+    /// so warm sessions accumulate across runs.
+    pub profiler: Option<Box<crate::obs::profile::Profiler>>,
     program: Vec<Instr>,
     prog_base: u32,
     /// I$ line of the previous instruction fetch (`u32::MAX` = none).
@@ -519,6 +525,7 @@ impl<C: CfuPort> Machine<C> {
             markers: Vec::new(),
             watches: Vec::new(),
             cfu,
+            profiler: None,
             program: Vec::new(),
             prog_base: 0,
             last_fetch_line: u32::MAX,
@@ -920,7 +927,7 @@ impl<C: CfuPort> Machine<C> {
                 // bit 0).  The stepped loop resolves such a pc per
                 // instruction, so take the oracle path one step at a time
                 // until the pc realigns, halts or errors.
-                if let Some(r) = self.step_n(1)? {
+                if let Some(r) = self.step_profiled(1)? {
                     return Ok(r);
                 }
                 remaining -= 1;
@@ -935,7 +942,7 @@ impl<C: CfuPort> Machine<C> {
                 // The budget ends inside this block: finish on the stepped
                 // oracle so the MaxInstructions cut lands on exactly the
                 // same instruction.
-                return match self.step_n(remaining)? {
+                return match self.step_profiled(remaining)? {
                     Some(r) => Ok(r),
                     None => Ok(RunResult {
                         reason: ExitReason::MaxInstructions,
@@ -945,10 +952,59 @@ impl<C: CfuPort> Machine<C> {
                 };
             }
             remaining -= len;
-            if let Some(r) = self.exec_block(block)? {
+            if self.profiler.is_some() {
+                // Attribute this block's counter deltas.  The snapshot
+                // reads counters the block would update anyway; dispatch
+                // semantics and accounting are untouched.
+                let first_pc = block.first_pc;
+                let phase = self.markers.len() as u32;
+                let before = self.prof_counters();
+                let out = self.exec_block(block)?;
+                self.prof_note(first_pc, phase, before);
+                if let Some(r) = out {
+                    return Ok(r);
+                }
+            } else if let Some(r) = self.exec_block(block)? {
                 return Ok(r);
             }
         }
+    }
+
+    /// Snapshot of the counters the profiler attributes.
+    #[inline]
+    fn prof_counters(&self) -> crate::obs::profile::ProfCounters {
+        crate::obs::profile::ProfCounters {
+            cycles: self.cycles,
+            instret: self.instret,
+            icache_misses: self.icache.misses,
+            dcache_misses: self.dcache.misses,
+            cfu_stall_cycles: self.stats.cfu_stall_cycles,
+        }
+    }
+
+    /// Record the delta since `before` under `key` (a block's first pc or
+    /// [`crate::obs::profile::STEP_KEY`] for the stepped-oracle fallbacks).
+    fn prof_note(&mut self, key: u32, phase: u32, before: crate::obs::profile::ProfCounters) {
+        let delta = crate::obs::profile::ProfCounters::delta(&self.prof_counters(), &before);
+        if let Some(p) = self.profiler.as_mut() {
+            p.note_block(key, phase, delta);
+        }
+    }
+
+    /// [`Machine::step_n`], attributing the stepped cycles to the oracle
+    /// bucket when a profiler is attached (misaligned-pc and budget-tail
+    /// fallbacks, and the whole of [`Machine::run_stepped`]).
+    fn step_profiled(&mut self, n: u64) -> Result<Option<RunResult>> {
+        if self.profiler.is_none() {
+            return self.step_n(n);
+        }
+        let phase = self.markers.len() as u32;
+        let before = self.prof_counters();
+        let out = self.step_n(n);
+        if out.is_ok() {
+            self.prof_note(crate::obs::profile::STEP_KEY, phase, before);
+        }
+        out
     }
 
     /// Execute one cached block end-to-end (pc bounds and budget were
@@ -1058,7 +1114,7 @@ impl<C: CfuPort> Machine<C> {
     /// cycles, `instret`, [`Stats`], markers, watches, cache counters,
     /// memory, registers and final pc — just slower on the host.
     pub fn run_stepped(&mut self, max_instructions: u64) -> Result<RunResult> {
-        match self.step_n(max_instructions)? {
+        match self.step_profiled(max_instructions)? {
             Some(r) => Ok(r),
             None => Ok(RunResult {
                 reason: ExitReason::MaxInstructions,

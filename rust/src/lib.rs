@@ -29,6 +29,7 @@
 //! | [`exec`] | Execution layer: backend ids, executors, whole-model plans, activation arena |
 //! | [`compile`] | Whole-backbone → single-instruction-stream compiler + ISS runner |
 //! | [`coordinator`] | Serving core: sharded engines, bounded admission, metrics, loadgen |
+//! | [`obs`] | Observability: lock-free span tracing (Chrome-trace export) + ISS cycle-attribution profiler |
 //! | [`cost`] | FPGA/ASIC resource, power, and area models |
 //! | [`memtraffic`] | Memory-traffic analytics (paper Table VI) |
 //! | [`tune`] | Plan autotuner: (block, backend) cost profiling, per-objective + Pareto plan search, plan cache, QoS serving lanes |
@@ -62,6 +63,7 @@ pub mod exec;
 pub mod isa;
 pub mod memtraffic;
 pub mod model;
+pub mod obs;
 pub mod report;
 pub mod runtime;
 pub mod tune;

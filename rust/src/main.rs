@@ -3,7 +3,7 @@
 //! Subcommands:
 //!
 //! ```text
-//! report <table1..table7|fig14|tune|compile|all>  regenerate the paper's evaluation
+//! report <table1..table7|fig14|tune|compile|profile|all>  regenerate the paper's evaluation
 //! run [--backend B] [--layer TAG]     run one block / the whole model
 //! compile [--model M] [--pipeline V]  lower the model to one RISC-V+CFU program
 //! run-iss [--model M] [--stepped]     run the compiled program under the ISS
@@ -23,9 +23,12 @@ use fused_dsc::cfu::PipelineVersion;
 use fused_dsc::cli::Args;
 use fused_dsc::compile::{self, CompiledModel, CompiledRun, IssSession};
 use fused_dsc::coordinator::loadgen::{self, LoadMode, LoadgenConfig};
-use fused_dsc::coordinator::{Backend, Coordinator, Engine, EngineMode, Rejected, ServeConfig};
+use fused_dsc::coordinator::{
+    Backend, Coordinator, Engine, EngineMode, MetricsDumper, Rejected, ServeConfig,
+};
 use fused_dsc::model::blocks::{backbone, evaluated_blocks, BlockConfig};
 use fused_dsc::model::weights::{gen_input, make_model_params, ModelParams};
+use fused_dsc::obs;
 use fused_dsc::report;
 use fused_dsc::runtime::{artifact_path, Runtime};
 use fused_dsc::tensor::TensorI8;
@@ -47,6 +50,82 @@ fn parse_backend(s: &str) -> Result<Backend> {
 
 fn model_input(engine: &Engine, salt: u64) -> TensorI8 {
     engine.synthetic_input(&format!("cli.x{salt}"))
+}
+
+/// `--trace PATH`: install the process-global span sink before the traced
+/// work starts; returns the sink handle plus the export path.
+fn setup_trace(args: &Args) -> Option<(&'static obs::TraceSink, std::path::PathBuf)> {
+    let path = args.opt("trace")?;
+    let sink = obs::trace::install(obs::TraceSink::with_defaults());
+    Some((sink, std::path::PathBuf::from(path)))
+}
+
+/// Export `TRACE_<name>.json`, re-parse it with the crate's own JSON
+/// reader, and structurally verify it (well-formed events, per-lane span
+/// nesting, matched async pairs).  The `trace check:` line is grep-asserted
+/// by the `obs-smoke` CI job.
+fn finish_trace(
+    name: &str,
+    sink: &'static obs::TraceSink,
+    path: &std::path::Path,
+) -> Result<obs::trace::TraceCheck> {
+    obs::trace::set_enabled(false);
+    let file = obs::trace::write_trace_artifact(name, path, sink)?;
+    let doc = Json::parse(&std::fs::read_to_string(&file)?).map_err(anyhow::Error::msg)?;
+    let check = obs::trace::verify_chrome_trace(&doc)?;
+    println!(
+        "trace check: OK ({} events, {} threads, max depth {}, dropped {})",
+        check.events, check.threads, check.max_depth, check.dropped
+    );
+    println!("trace json written: {}", file.display());
+    Ok(check)
+}
+
+/// Coverage floor for a serving trace: every completed request must have
+/// left its per-block (exec) or whole-program (compiled-ISS) execution
+/// spans in the sink.
+fn check_trace_coverage(
+    check: &obs::trace::TraceCheck,
+    engine_mode: EngineMode,
+    completed: u64,
+    n_blocks: usize,
+) -> Result<()> {
+    let (name, floor) = match engine_mode {
+        EngineMode::Exec => ("block", completed as usize * n_blocks),
+        EngineMode::CompiledIss => ("iss.exec", completed as usize),
+    };
+    let got = check.count(name);
+    if got < floor {
+        bail!("trace coverage: {got} '{name}' spans < {floor} expected");
+    }
+    println!("trace coverage: OK ({got} '{name}' spans >= {floor})");
+    Ok(())
+}
+
+/// Print a finished [`obs::Profile`] plus the grep-asserted attribution
+/// line, then write `PROFILE_<name>.json` + the collapsed-stack file.
+fn emit_profile(name: &str, dir: &str, profile: &obs::Profile) -> Result<()> {
+    profile.check()?;
+    profile.print(10);
+    println!(
+        "profile attribution: OK ({} cycles across {} basic blocks, {} phases)",
+        profile.total.cycles,
+        profile.blocks.len(),
+        profile.phases.len()
+    );
+    let (json, collapsed) =
+        obs::profile::write_profile_artifacts(name, std::path::Path::new(dir), profile)?;
+    println!("profile json written: {}", json.display());
+    println!("collapsed stacks written: {}", collapsed.display());
+    Ok(())
+}
+
+/// `--profile` on the serving paths: drain the process-global collector
+/// the warm ISS sessions flushed into at shutdown and emit the artifacts.
+fn finish_collected_profile(name: &str, dir: &str, n_model_blocks: usize) -> Result<()> {
+    let prof = obs::profile::take_collected()
+        .context("--profile collected nothing (did any compiled-iss inference run?)")?;
+    emit_profile(name, dir, &obs::Profile::from_collected(&prof, n_model_blocks))
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
@@ -192,6 +271,7 @@ fn cmd_run_iss(args: &Args) -> Result<()> {
     }
     let cm = Arc::new(compile::compile(&params, version)?);
     let engine = Engine::new(params, Backend::Reference);
+    let trace = setup_trace(args);
     let x = engine.synthetic_input(&format!("cli.cx{}", args.opt_or("salt", "0")));
     let run = if args.flag("stepped") { cm.run_iss_stepped(&x)? } else { cm.run_iss(&x)? };
     let want = engine.infer(&x)?;
@@ -226,6 +306,23 @@ fn cmd_run_iss(args: &Args) -> Result<()> {
             &compiled_json(&model, &cm, Some(&run)),
         )?;
         println!("bench json written: {}", file.display());
+    }
+    if let Some(dir) = args.opt("profile") {
+        // The profiled run must not perturb the simulation: everything in
+        // the CompiledRun (logits, cycles, per-block measurements, cache
+        // counters) is compared bit-for-bit against the unprofiled run.
+        let (prun, profile) = cm.run_iss_profiled(&x, args.flag("stepped"))?;
+        if prun != run {
+            bail!("profiled run diverged from the unprofiled run");
+        }
+        println!("profiled run bit-identical to unprofiled run: OK");
+        emit_profile(&model, dir, &profile)?;
+    }
+    if let Some((sink, path)) = trace {
+        let check = finish_trace("run_iss", sink, &path)?;
+        if check.count("iss.exec") == 0 {
+            bail!("trace has no iss.exec span");
+        }
     }
     if repeat > 1 {
         run_iss_warm_study(&model, &cm, &engine, args, repeat)?;
@@ -379,17 +476,30 @@ fn serve_config(args: &Args) -> Result<ServeConfig> {
 /// tuned plan.  `CLASS` is `latency|energy|balanced`, or `mixed` to
 /// round-robin all three.
 fn cmd_serve_qos(args: &Args, class_arg: &str) -> Result<()> {
+    if args.opt("profile").is_some() {
+        bail!("--profile is not supported with --qos (it needs serve --engine compiled-iss)");
+    }
+    let trace = setup_trace(args);
     let n: usize = args.opt_parse("requests", 48usize).map_err(anyhow::Error::msg)?;
-    let params = tune_params(args)?;
-    let allowlist = tune_allowlist(args)?;
-    let (tuned, _) = tune::tune_cached(&params, &allowlist, tune_cache(args).as_ref())?;
-    let engine = Arc::new(Engine::new(params, Backend::Reference));
+    // Validate the class before the (potentially slow) tuning pass, so an
+    // unknown `--qos` fails fast with the valid choices.
     let classes: Vec<QosClass> = if class_arg == "mixed" {
         QosClass::ALL.to_vec()
     } else {
         vec![class_arg.parse().map_err(anyhow::Error::msg)?]
     };
+    let params = tune_params(args)?;
+    let allowlist = tune_allowlist(args)?;
+    let (tuned, _) = tune::tune_cached(&params, &allowlist, tune_cache(args).as_ref())?;
+    let engine = Arc::new(Engine::new(params, Backend::Reference));
     let router = QosRouter::start_classes(&engine, &tuned, &serve_config(args)?, &classes)?;
+    let dumper = args.opt("metrics-out").map(|p| {
+        MetricsDumper::spawn(
+            router.metrics_sources(),
+            std::path::PathBuf::from(p),
+            std::time::Duration::from_secs(1),
+        )
+    });
     let t0 = std::time::Instant::now();
     let mut tickets = Vec::with_capacity(n);
     for i in 0..n {
@@ -435,6 +545,13 @@ fn cmd_serve_qos(args: &Args, class_arg: &str) -> Result<()> {
         );
     }
     router.shutdown();
+    if let Some(d) = dumper {
+        d.stop();
+        println!("metrics json written: {}", args.opt_or("metrics-out", "?"));
+    }
+    if let Some((sink, path)) = trace {
+        finish_trace("serve_qos", sink, &path)?;
+    }
     Ok(())
 }
 
@@ -449,7 +566,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let backend = parse_backend(args.opt_or("backend", "host-v3"))?;
     let params = make_model_params(None);
     let engine = Arc::new(Engine::new(params, backend));
-    let coord = Coordinator::start(Arc::clone(&engine), serve_config(args)?);
+    let trace = setup_trace(args);
+    let cfg = serve_config(args)?;
+    let engine_mode = cfg.engine;
+    let profile_out = args.opt("profile");
+    if profile_out.is_some() {
+        if engine_mode != EngineMode::CompiledIss {
+            bail!("--profile needs --engine compiled-iss (cycle attribution lives in the ISS)");
+        }
+        obs::profile::request();
+    }
+    let coord = Coordinator::start(Arc::clone(&engine), cfg);
+    let dumper = args.opt("metrics-out").map(|p| {
+        MetricsDumper::spawn(
+            vec![(None, Arc::clone(&coord.metrics))],
+            std::path::PathBuf::from(p),
+            std::time::Duration::from_secs(1),
+        )
+    });
     let t0 = std::time::Instant::now();
     let mut tickets = Vec::with_capacity(n);
     for i in 0..n {
@@ -501,6 +635,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
         fmt_cycles(snap.sim_cycles),
         snap.sim_cycles as f64 / snap.completed.max(1) as f64 / 100e6 * 1e3
     );
+    // Join the workers before draining the observability state: warm ISS
+    // sessions flush their profilers on drop, inside the shutdown.
+    coord.shutdown();
+    if let Some(d) = dumper {
+        d.stop();
+        println!("metrics json written: {}", args.opt_or("metrics-out", "?"));
+    }
+    if let Some(dir) = profile_out {
+        finish_collected_profile("serve", dir, engine.params.blocks.len())?;
+    }
+    if let Some((sink, path)) = trace {
+        let check = finish_trace("serve", sink, &path)?;
+        check_trace_coverage(&check, engine_mode, snap.completed, engine.params.blocks.len())?;
+    }
     Ok(())
 }
 
@@ -525,11 +673,37 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     };
     let backend = parse_backend(args.opt_or("backend", "reference"))?;
     let engine = Arc::new(Engine::new(make_model_params(None), backend));
-    let cfg = LoadgenConfig { mode, requests, serve: serve_config(args)? };
+    let trace = setup_trace(args);
+    let serve = serve_config(args)?;
+    let engine_mode = serve.engine;
+    let profile_out = args.opt("profile");
+    if profile_out.is_some() {
+        if engine_mode != EngineMode::CompiledIss {
+            bail!("--profile needs --engine compiled-iss (cycle attribution lives in the ISS)");
+        }
+        obs::profile::request();
+    }
+    let cfg = LoadgenConfig {
+        mode,
+        requests,
+        serve,
+        metrics_out: args.opt("metrics-out").map(std::path::PathBuf::from),
+    };
     let report = loadgen::run(Arc::clone(&engine), &cfg, |i| model_input(&engine, i));
     report.print_table();
     let file = report.write_json(std::path::Path::new(args.opt_or("json", ".")))?;
     println!("bench json written: {}", file.display());
+    if let Some(p) = &cfg.metrics_out {
+        println!("metrics json written: {}", p.display());
+    }
+    if let Some(dir) = profile_out {
+        finish_collected_profile("serve", dir, engine.params.blocks.len())?;
+    }
+    if let Some((sink, path)) = trace {
+        let check = finish_trace("serve", sink, &path)?;
+        let n_blocks = engine.params.blocks.len();
+        check_trace_coverage(&check, engine_mode, report.metrics.completed, n_blocks)?;
+    }
     Ok(())
 }
 
@@ -574,17 +748,23 @@ fn usage() {
         fused_dsc::version()
     );
     println!("usage: fused-dsc <command> [options]");
-    println!("  report <table1..table7|fig14|tune|compile|all>  regenerate paper evaluation");
+    println!("  report <table1..table7|fig14|tune|compile|profile|all>  regenerate paper");
+    println!("                                             evaluation; `profile` prints the ISS");
+    println!("                                             cycle-attribution profile and writes");
+    println!("                                             PROFILE_backbone.{{json,collapsed.txt}}");
     println!("  run    [--backend NAME|list] [--layer 3rd|5th|8th|15th]");
     println!("  compile [--model backbone|tiny] [--pipeline v1|v2|v3]");
     println!("          [--json PATH]                      lower the model to one RISC-V+CFU");
     println!("                                             program; print size + per-block stats");
     println!("  run-iss [--model backbone|tiny] [--pipeline v1|v2|v3] [--salt S] [--stepped]");
     println!("          [--repeat N] [--json PATH]         run the compiled program end-to-end");
-    println!("                                             under the ISS, cross-check logits vs");
+    println!("          [--trace PATH] [--profile PATH]    under the ISS, cross-check logits vs");
     println!("                                             exec/; writes BENCH_compile_*.json;");
     println!("                                             --repeat N adds a cold-vs-warm session");
-    println!("                                             study (writes BENCH_compile_warm.json)");
+    println!("                                             study (writes BENCH_compile_warm.json);");
+    println!("                                             --trace writes Chrome-trace spans,");
+    println!("                                             --profile a bit-exact cycle attribution");
+    println!("                                             (PROFILE_*.json + collapsed stacks)");
     println!("  tune   [--model backbone|tiny] [--backends LIST|all] [--cache DIR] [--no-cache]");
     println!("         [--json PATH]                       profile (block, backend) costs, search");
     println!("                                             per-objective + Pareto plans; writes");
@@ -596,10 +776,14 @@ fn usage() {
     println!("                                             model program on warm per-shard ISS");
     println!("                                             sessions (bit-identical logits)");
     println!("  serve  --qos latency|energy|balanced|mixed serve QoS classes from tuned plans");
+    println!("         (serve also takes [--trace PATH] [--profile DIR] [--metrics-out PATH];");
+    println!("          --profile needs --engine compiled-iss; --metrics-out rewrites a JSON");
+    println!("          array of per-class metrics snapshots once a second)");
     println!("  serve loadgen [--mode closed|open] [--clients N] [--rate R] [--requests N]");
     println!("                [--batch B] [--workers W] [--queue-depth D] [--threads T]");
     println!("                [--backend reference] [--engine exec|compiled-iss]");
-    println!("                [--json PATH]                load-generate; writes BENCH_serve.json");
+    println!("                [--json PATH] [--trace PATH] [--profile DIR] [--metrics-out PATH]");
+    println!("                                             load-generate; writes BENCH_serve.json");
     println!("  golden [--layer TAG]                        CFU sim vs PJRT cross-check");
     println!("  version");
     println!("backends: `--backend list` prints every name, shorthand, and description");

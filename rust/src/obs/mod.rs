@@ -1,0 +1,33 @@
+//! Observability: tracing spans and ISS cycle-attribution profiling as a
+//! cross-cutting layer over the serving core, the block executors and the
+//! whole-model ISS.
+//!
+//! Two independent instruments share one contract — *observation must not
+//! perturb the system*:
+//!
+//! * [`trace`] — wall-clock spans (admission → queue wait → dispatch →
+//!   inference → per-block execution → response) recorded into a lock-free
+//!   [`trace::TraceSink`] and exported as Chrome trace-event JSON
+//!   (`TRACE_<name>.json`, loadable in Perfetto / `chrome://tracing`).
+//!   Disabled cost is one relaxed atomic load per instrumentation point;
+//!   enabled recording is allocation-free (fixed per-thread ring buffers,
+//!   drop-and-count on overflow) — `tests/alloc_regression.rs` enforces
+//!   both.
+//! * [`profile`] — *simulated*-time attribution: a [`profile::Profiler`]
+//!   hooked on the ISS block dispatch snapshots the machine's own counters
+//!   around every basic block, then folds them into per-model-block /
+//!   per-driver-phase tables via the compiler's `ecall` markers.  Both
+//!   partitions are bit-equal to the run's total cycle counter
+//!   ([`profile::Profile::check`]), and attaching the profiler changes no
+//!   architectural or measured state.
+//!
+//! This is the paper-§III story made inspectable: *where the cycles and
+//! bytes go*, per block and per stage, instead of whole-run aggregates.
+
+pub mod profile;
+pub mod trace;
+
+pub use profile::{Profile, Profiler};
+pub use trace::{
+    record_past, span, span_block, span_full, span_num, SpanGuard, TraceSink,
+};

@@ -1,0 +1,540 @@
+//! ISS cycle-attribution profiling: per-basic-block counter deltas taken at
+//! the [`crate::cpu::core::Machine`] block-dispatch boundary, folded into
+//! per-model-block / per-driver-phase attribution via the block-index-tagged
+//! `ecall` markers the whole-model compiler emits.
+//!
+//! The profiler is observational only: it snapshots the machine's existing
+//! counters (cycles, instret, I$/D$ misses, CFU stall cycles) before and
+//! after each dispatched block and records the deltas, so simulated cycles,
+//! logits, `Stats`, markers and cache counters are bit-identical with
+//! profiling on or off.  When no profiler is attached the hot path pays one
+//! `Option` check per *block*, not per instruction.
+//!
+//! Attribution axes (both exact partitions of the run's total cycles):
+//!
+//! * **basic blocks** — every cycle accrues inside a dispatched block or a
+//!   stepped-oracle fallback (misaligned pc / budget tail, keyed
+//!   [`STEP_KEY`]), so the per-block sums are bit-equal to the final cycle
+//!   counter;
+//! * **model blocks / driver phases** — the compiled model brackets each
+//!   block's driver section with a marker pair, so `[pair k]` is "block k"
+//!   and the gaps are "setup" / "glue k→k+1" / "head"; phase cycles are
+//!   marker-cycle differences, again bit-equal to the total by construction.
+//!
+//! A basic block is additionally labeled with the phase in effect when it
+//! was *first* entered (the marker count at dispatch), which is what the
+//! collapsed-stack export (`phase;pc` frames, cycle weights — the standard
+//! flamegraph input format) groups by.
+//!
+//! For serving (`--profile` on `serve`/`loadgen`), machines are owned by
+//! shard worker threads; [`request`]/[`attach`]/[`flush`] implement a
+//! process-global collector that warm sessions flush into when they drop,
+//! and the CLI drains after shutdown.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+use crate::cpu::core::Marker;
+use crate::util::json::Json;
+
+/// Pseudo-pc key for cycles attributed to the stepped-oracle fallback paths
+/// (misaligned pc, budget tail) rather than a dispatched block.
+pub const STEP_KEY: u32 = u32::MAX;
+
+/// The machine counters the profiler attributes. A snapshot before/after a
+/// block gives the block's delta; deltas sum to the run totals exactly.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ProfCounters {
+    pub cycles: u64,
+    pub instret: u64,
+    pub icache_misses: u64,
+    pub dcache_misses: u64,
+    pub cfu_stall_cycles: u64,
+}
+
+impl ProfCounters {
+    fn add(&mut self, d: &ProfCounters) {
+        self.cycles += d.cycles;
+        self.instret += d.instret;
+        self.icache_misses += d.icache_misses;
+        self.dcache_misses += d.dcache_misses;
+        self.cfu_stall_cycles += d.cfu_stall_cycles;
+    }
+
+    /// `after - before`, fieldwise.
+    pub fn delta(after: &ProfCounters, before: &ProfCounters) -> ProfCounters {
+        ProfCounters {
+            cycles: after.cycles - before.cycles,
+            instret: after.instret - before.instret,
+            icache_misses: after.icache_misses - before.icache_misses,
+            dcache_misses: after.dcache_misses - before.dcache_misses,
+            cfu_stall_cycles: after.cfu_stall_cycles - before.cfu_stall_cycles,
+        }
+    }
+}
+
+/// Accumulated attribution for one basic block (keyed by first pc).
+#[derive(Debug, Clone, Copy)]
+pub struct BlockProf {
+    pub first_pc: u32,
+    /// Marker count at this block's first dispatch — identifies the driver
+    /// phase it belongs to (see [`phase_name`]).
+    pub phase: u32,
+    /// Times the block was dispatched.
+    pub entries: u64,
+    pub c: ProfCounters,
+}
+
+/// Live per-machine accumulator, attached to a `Machine` during a run.
+#[derive(Debug, Default)]
+pub struct Profiler {
+    blocks: HashMap<u32, BlockProf>,
+}
+
+impl Profiler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fold one dispatched block's counter delta in.
+    #[inline]
+    pub fn note_block(&mut self, first_pc: u32, phase: u32, delta: ProfCounters) {
+        let e = self.blocks.entry(first_pc).or_insert(BlockProf {
+            first_pc,
+            phase,
+            entries: 0,
+            c: ProfCounters::default(),
+        });
+        e.entries += 1;
+        e.c.add(&delta);
+    }
+
+    /// Fold another profiler's blocks in (used by the global collector).
+    pub fn merge(&mut self, other: &Profiler) {
+        for b in other.blocks.values() {
+            let e = self.blocks.entry(b.first_pc).or_insert(BlockProf {
+                first_pc: b.first_pc,
+                phase: b.phase,
+                entries: 0,
+                c: ProfCounters::default(),
+            });
+            e.entries += b.entries;
+            e.c.add(&b.c);
+        }
+    }
+
+    /// Sum over every attributed block.
+    pub fn total(&self) -> ProfCounters {
+        let mut t = ProfCounters::default();
+        for b in self.blocks.values() {
+            t.add(&b.c);
+        }
+        t
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.blocks.is_empty()
+    }
+}
+
+/// Human name of the driver phase a marker count identifies: odd counts are
+/// inside a block's marker pair, even counts are the gaps around them.
+pub fn phase_name(phase: u32, n_model_blocks: usize) -> String {
+    if phase == STEP_KEY {
+        return "oracle".to_string();
+    }
+    if phase % 2 == 1 {
+        return format!("block {}", (phase - 1) / 2);
+    }
+    let gap = (phase / 2) as usize;
+    if gap == 0 {
+        "setup".to_string()
+    } else if gap >= n_model_blocks {
+        "head".to_string()
+    } else {
+        format!("glue {}->{}", gap - 1, gap)
+    }
+}
+
+/// One driver phase's cycle share, from the marker stream.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PhaseRow {
+    pub name: String,
+    pub start_cycle: u64,
+    pub cycles: u64,
+}
+
+/// A finished, render-ready profile.
+#[derive(Debug, Clone)]
+pub struct Profile {
+    pub total: ProfCounters,
+    /// Per-basic-block attribution, hottest first.
+    pub blocks: Vec<BlockProf>,
+    /// Marker-derived phase partition (empty when no marker stream was
+    /// available, e.g. aggregated serving profiles).
+    pub phases: Vec<PhaseRow>,
+    pub n_model_blocks: usize,
+}
+
+impl Profile {
+    /// Finish a profiler against a run's marker stream and total cycles.
+    /// `markers` must be the compiled model's paired stream (2 per block);
+    /// any other shape yields a single "all" phase.
+    pub fn from_run(
+        prof: &Profiler,
+        markers: &[Marker],
+        total_cycles: u64,
+        n_model_blocks: usize,
+    ) -> Profile {
+        let mut phases = Vec::new();
+        if markers.len() == 2 * n_model_blocks && n_model_blocks > 0 {
+            let mut prev = 0u64;
+            for (k, pair) in markers.chunks_exact(2).enumerate() {
+                phases.push(PhaseRow {
+                    name: phase_name(2 * k as u32, n_model_blocks),
+                    start_cycle: prev,
+                    cycles: pair[0].cycle - prev,
+                });
+                phases.push(PhaseRow {
+                    name: phase_name(2 * k as u32 + 1, n_model_blocks),
+                    start_cycle: pair[0].cycle,
+                    cycles: pair[1].cycle - pair[0].cycle,
+                });
+                prev = pair[1].cycle;
+            }
+            phases.push(PhaseRow {
+                name: "head".to_string(),
+                start_cycle: prev,
+                cycles: total_cycles - prev,
+            });
+        } else {
+            phases.push(PhaseRow {
+                name: "all".to_string(),
+                start_cycle: 0,
+                cycles: total_cycles,
+            });
+        }
+        Self::assemble(prof, phases, total_cycles, n_model_blocks)
+    }
+
+    /// Finish an aggregated profiler with no marker stream (serving).
+    pub fn from_collected(prof: &Profiler, n_model_blocks: usize) -> Profile {
+        let total = prof.total().cycles;
+        Self::assemble(prof, Vec::new(), total, n_model_blocks)
+    }
+
+    fn assemble(
+        prof: &Profiler,
+        phases: Vec<PhaseRow>,
+        total_cycles: u64,
+        n_model_blocks: usize,
+    ) -> Profile {
+        let mut blocks: Vec<BlockProf> = prof.blocks.values().copied().collect();
+        blocks.sort_by(|a, b| b.c.cycles.cmp(&a.c.cycles).then(a.first_pc.cmp(&b.first_pc)));
+        let mut total = prof.total();
+        total.cycles = total_cycles;
+        Profile {
+            total,
+            blocks,
+            phases,
+            n_model_blocks,
+        }
+    }
+
+    /// Sum of per-basic-block cycle attribution.
+    pub fn block_cycle_sum(&self) -> u64 {
+        self.blocks.iter().map(|b| b.c.cycles).sum()
+    }
+
+    /// Sum of the marker-derived phase partition.
+    pub fn phase_cycle_sum(&self) -> u64 {
+        self.phases.iter().map(|p| p.cycles).sum()
+    }
+
+    /// The 100%-attribution invariant: both partitions are bit-equal to the
+    /// run's total simulated cycles.
+    pub fn check(&self) -> anyhow::Result<()> {
+        let bsum = self.block_cycle_sum();
+        if bsum != self.total.cycles {
+            anyhow::bail!(
+                "profile: per-basic-block cycles {} != total {}",
+                bsum,
+                self.total.cycles
+            );
+        }
+        if !self.phases.is_empty() {
+            let psum = self.phase_cycle_sum();
+            if psum != self.total.cycles {
+                anyhow::bail!("profile: per-phase cycles {} != total {}", psum, self.total.cycles);
+            }
+        }
+        Ok(())
+    }
+
+    /// Print the phase table and the hottest `top` basic blocks.
+    pub fn print(&self, top: usize) {
+        if !self.phases.is_empty() {
+            println!("phase attribution (markers; exact partition of total cycles)");
+            println!("{:<14} {:>14} {:>7}", "phase", "cycles", "share");
+            for p in &self.phases {
+                println!(
+                    "{:<14} {:>14} {:>6.2}%",
+                    p.name,
+                    p.cycles,
+                    100.0 * p.cycles as f64 / self.total.cycles.max(1) as f64
+                );
+            }
+            println!("{:<14} {:>14} {:>7}", "total", self.total.cycles, "100%");
+            println!();
+        }
+        println!("hot basic blocks (top {top} of {})", self.blocks.len());
+        println!(
+            "{:<12} {:<14} {:>10} {:>14} {:>7} {:>9} {:>9} {:>10}",
+            "pc", "phase", "entries", "cycles", "share", "I$ miss", "D$ miss", "cfu stall"
+        );
+        for b in self.blocks.iter().take(top) {
+            let pc = if b.first_pc == STEP_KEY {
+                "oracle".to_string()
+            } else {
+                format!("{:#010x}", b.first_pc)
+            };
+            println!(
+                "{:<12} {:<14} {:>10} {:>14} {:>6.2}% {:>9} {:>9} {:>10}",
+                pc,
+                phase_name(b.phase, self.n_model_blocks),
+                b.entries,
+                b.c.cycles,
+                100.0 * b.c.cycles as f64 / self.total.cycles.max(1) as f64,
+                b.c.icache_misses,
+                b.c.dcache_misses,
+                b.c.cfu_stall_cycles,
+            );
+        }
+    }
+
+    /// Machine-readable profile: totals, phases, and every basic block.
+    pub fn to_json(&self) -> Json {
+        let mut phases = Json::arr();
+        for p in &self.phases {
+            phases = phases.push(
+                Json::obj()
+                    .set("name", p.name.as_str())
+                    .set("start_cycle", p.start_cycle)
+                    .set("cycles", p.cycles),
+            );
+        }
+        let mut blocks = Json::arr();
+        for b in &self.blocks {
+            blocks = blocks.push(
+                Json::obj()
+                    .set("pc", b.first_pc as u64)
+                    .set("phase", phase_name(b.phase, self.n_model_blocks).as_str())
+                    .set("entries", b.entries)
+                    .set("cycles", b.c.cycles)
+                    .set("instret", b.c.instret)
+                    .set("icache_misses", b.c.icache_misses)
+                    .set("dcache_misses", b.c.dcache_misses)
+                    .set("cfu_stall_cycles", b.c.cfu_stall_cycles),
+            );
+        }
+        Json::obj()
+            .set("total_cycles", self.total.cycles)
+            .set("total_instret", self.total.instret)
+            .set("icache_misses", self.total.icache_misses)
+            .set("dcache_misses", self.total.dcache_misses)
+            .set("cfu_stall_cycles", self.total.cfu_stall_cycles)
+            .set("n_model_blocks", self.n_model_blocks as u64)
+            .set("phases", phases)
+            .set("blocks", blocks)
+    }
+
+    /// Collapsed-stack rendering (`frame;frame weight` lines, cycle
+    /// weights) — the input format of standard flamegraph tooling.
+    pub fn to_collapsed(&self) -> String {
+        let mut lines: Vec<String> = self
+            .blocks
+            .iter()
+            .map(|b| {
+                let leaf = if b.first_pc == STEP_KEY {
+                    "oracle".to_string()
+                } else {
+                    format!("pc_{:#x}", b.first_pc)
+                };
+                format!(
+                    "iss;{};{} {}",
+                    phase_name(b.phase, self.n_model_blocks).replace(' ', "_"),
+                    leaf,
+                    b.c.cycles
+                )
+            })
+            .collect();
+        lines.sort();
+        let mut out = lines.join("\n");
+        out.push('\n');
+        out
+    }
+}
+
+/// Write `PROFILE_<name>.json` plus `PROFILE_<name>.collapsed.txt` under the
+/// shared artifact-path convention; returns `(json, collapsed)` paths.
+pub fn write_profile_artifacts(
+    name: &str,
+    path: &Path,
+    profile: &Profile,
+) -> std::io::Result<(PathBuf, PathBuf)> {
+    let json_file = if path.extension().is_some_and(|e| e == "json") {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        path.to_path_buf()
+    } else {
+        std::fs::create_dir_all(path)?;
+        path.join(format!("PROFILE_{name}.json"))
+    };
+    let collapsed_file = json_file.with_extension("collapsed.txt");
+    std::fs::write(&json_file, profile.to_json().render())?;
+    std::fs::write(&collapsed_file, profile.to_collapsed())?;
+    Ok((json_file, collapsed_file))
+}
+
+// ---------------------------------------------------------------------------
+// Process-global collector (drives `--profile` on `serve`/`loadgen`, where
+// the machines live on shard worker threads).
+// ---------------------------------------------------------------------------
+
+static REQUESTED: AtomicBool = AtomicBool::new(false);
+static COLLECTED: Mutex<Option<Profiler>> = Mutex::new(None);
+
+/// Ask that subsequently built warm ISS sessions attach a profiler.
+pub fn request() {
+    REQUESTED.store(true, Ordering::Release);
+}
+
+/// Is global profiling requested? One relaxed load.
+#[inline(always)]
+pub fn requested() -> bool {
+    REQUESTED.load(Ordering::Relaxed)
+}
+
+/// A fresh profiler iff global profiling was requested.
+pub fn attach() -> Option<Box<Profiler>> {
+    requested().then(|| Box::new(Profiler::new()))
+}
+
+/// Fold a finished machine's profiler into the global collector.
+pub fn flush(p: &Profiler) {
+    let mut g = COLLECTED.lock().unwrap();
+    g.get_or_insert_with(Profiler::new).merge(p);
+}
+
+/// Drain the global collector (and stop requesting attachment).
+pub fn take_collected() -> Option<Profiler> {
+    REQUESTED.store(false, Ordering::Release);
+    COLLECTED.lock().unwrap().take()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cnt(cycles: u64) -> ProfCounters {
+        ProfCounters {
+            cycles,
+            instret: cycles / 2,
+            icache_misses: 1,
+            dcache_misses: 2,
+            cfu_stall_cycles: 3,
+        }
+    }
+
+    fn marker(tag: u32, cycle: u64) -> Marker {
+        Marker {
+            tag,
+            cycle,
+            loads: 0,
+            stores: 0,
+            load_bytes: 0,
+            store_bytes: 0,
+        }
+    }
+
+    #[test]
+    fn note_block_accumulates_and_totals() {
+        let mut p = Profiler::new();
+        p.note_block(0x100, 1, cnt(10));
+        p.note_block(0x100, 1, cnt(10));
+        p.note_block(0x200, 3, cnt(5));
+        let t = p.total();
+        assert_eq!(t.cycles, 25);
+        assert_eq!(t.icache_misses, 3);
+        let prof = Profile::from_collected(&p, 2);
+        assert_eq!(prof.blocks.len(), 2);
+        assert_eq!(prof.blocks[0].first_pc, 0x100); // hottest first
+        assert_eq!(prof.blocks[0].entries, 2);
+        prof.check().unwrap();
+    }
+
+    #[test]
+    fn phases_partition_total_exactly() {
+        let mut p = Profiler::new();
+        p.note_block(0x0, 0, cnt(100));
+        let markers = vec![marker(0, 10), marker(0, 40), marker(1, 55), marker(1, 90)];
+        let prof = Profile::from_run(&p, &markers, 100, 2);
+        let names: Vec<&str> = prof.phases.iter().map(|p| p.name.as_str()).collect();
+        assert_eq!(names, ["setup", "block 0", "glue 0->1", "block 1", "head"]);
+        let cyc: Vec<u64> = prof.phases.iter().map(|p| p.cycles).collect();
+        assert_eq!(cyc, [10, 30, 15, 35, 10]);
+        assert_eq!(prof.phase_cycle_sum(), 100);
+        prof.check().unwrap();
+    }
+
+    #[test]
+    fn check_catches_unattributed_cycles() {
+        let mut p = Profiler::new();
+        p.note_block(0x0, 1, cnt(60));
+        let prof = Profile::from_run(&p, &[], 100, 0);
+        assert!(prof.check().is_err());
+    }
+
+    #[test]
+    fn collapsed_stack_format() {
+        let mut p = Profiler::new();
+        p.note_block(0x40, 1, cnt(7));
+        p.note_block(STEP_KEY, STEP_KEY, cnt(2));
+        let prof = Profile::from_collected(&p, 1);
+        let s = prof.to_collapsed();
+        assert!(s.contains("iss;block_0;pc_0x40 7\n"), "{s}");
+        assert!(s.contains("iss;oracle;oracle 2\n"), "{s}");
+        for line in s.lines() {
+            let (stack, weight) = line.rsplit_once(' ').unwrap();
+            assert!(stack.split(';').count() >= 2);
+            weight.parse::<u64>().unwrap();
+        }
+    }
+
+    #[test]
+    fn merge_and_global_collector() {
+        let mut a = Profiler::new();
+        a.note_block(0x10, 1, cnt(4));
+        let mut b = Profiler::new();
+        b.note_block(0x10, 1, cnt(6));
+        b.note_block(0x20, 2, cnt(1));
+        a.merge(&b);
+        assert_eq!(a.total().cycles, 11);
+        assert_eq!(a.blocks.len(), 2);
+    }
+
+    #[test]
+    fn phase_names() {
+        assert_eq!(phase_name(0, 3), "setup");
+        assert_eq!(phase_name(1, 3), "block 0");
+        assert_eq!(phase_name(2, 3), "glue 0->1");
+        assert_eq!(phase_name(5, 3), "block 2");
+        assert_eq!(phase_name(6, 3), "head");
+        assert_eq!(phase_name(STEP_KEY, 3), "oracle");
+    }
+}

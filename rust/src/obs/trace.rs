@@ -1,0 +1,738 @@
+//! Lock-free span tracing: fixed-capacity per-thread ring buffers feeding a
+//! Chrome trace-event JSON export.
+//!
+//! The sink follows the same discipline as [`crate::util::stats::Histogram`]:
+//! all storage is sized at construction, the hot path touches only relaxed
+//! (and one release) atomics, and overflow drops the newest span and bumps a
+//! counter instead of blocking or reallocating.  Each OS thread claims one
+//! ring buffer on its first span (a single `fetch_add`); from then on that
+//! buffer has exactly one writer, so slot writes are plain stores published
+//! by a release store of the buffer head.  Span names, categories and arg
+//! keys are `&'static str` — recording never allocates or formats.
+//!
+//! A process-global sink drives the CLI `--trace` flags: [`install`] leaks
+//! one sink for the life of the process (so a `&'static` handle is sound
+//! even across worker threads), [`enabled`] is a single relaxed load, and
+//! every instrumentation point goes through [`span`]/[`span_num`]/
+//! [`span_block`]/[`record_past`], which are no-ops while disabled.  The
+//! export ([`TraceSink::to_chrome_json`]) renders `ph:"X"` complete events
+//! (microsecond `ts`/`dur`, `tid` = ring index) loadable in Perfetto /
+//! `chrome://tracing`, written as `TRACE_<name>.json` by
+//! [`write_trace_artifact`] under the same path convention as
+//! [`crate::util::bench::write_bench_artifact`].
+
+use std::cell::{Cell, UnsafeCell};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicPtr, AtomicU64, AtomicUsize, Ordering};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Default number of per-thread ring buffers a sink pre-allocates.
+pub const DEFAULT_THREADS: usize = 32;
+/// Default spans per ring buffer.
+pub const DEFAULT_SPANS_PER_THREAD: usize = 4096;
+
+/// One completed span. All text is `&'static str`: recording a span moves a
+/// few words, never allocates.  `num_key`/`str_key` empty means "no arg".
+#[derive(Debug, Clone, Copy)]
+pub struct SpanRecord {
+    pub cat: &'static str,
+    pub name: &'static str,
+    /// Start, nanoseconds since the sink epoch.
+    pub start_ns: u64,
+    pub dur_ns: u64,
+    pub num_key: &'static str,
+    pub num_val: u64,
+    pub str_key: &'static str,
+    pub str_val: &'static str,
+    /// Exported as an async `ph:"b"`/`ph:"e"` pair (id = `num_val`)
+    /// instead of a synchronous `ph:"X"` complete event.  Used for
+    /// intervals that start on another thread (queue waits): they may
+    /// straddle the recording thread's own call stack, which complete
+    /// events must strictly nest under.
+    pub is_async: bool,
+}
+
+const EMPTY: SpanRecord = SpanRecord {
+    cat: "",
+    name: "",
+    start_ns: 0,
+    dur_ns: 0,
+    num_key: "",
+    num_val: 0,
+    str_key: "",
+    str_val: "",
+    is_async: false,
+};
+
+/// A slot is written by exactly one thread (the buffer's claimant) and read
+/// only at export, after the head's release store publishes it.
+struct Slot(UnsafeCell<SpanRecord>);
+
+// SAFETY: slots below `head` are immutable once published (release store on
+// `head`, acquire load at export); the slot at `head` is written only by the
+// single thread that claimed this buffer.
+unsafe impl Sync for Slot {}
+
+struct ThreadBuf {
+    slots: Box<[Slot]>,
+    /// Published span count; release-stored after the slot write.
+    head: AtomicUsize,
+    dropped: AtomicU64,
+}
+
+impl ThreadBuf {
+    fn new(cap: usize) -> Self {
+        let slots: Vec<Slot> = (0..cap).map(|_| Slot(UnsafeCell::new(EMPTY))).collect();
+        Self {
+            slots: slots.into_boxed_slice(),
+            head: AtomicUsize::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Owner-thread-only push: drop-and-count when full.
+    fn push(&self, rec: SpanRecord) {
+        let h = self.head.load(Ordering::Relaxed);
+        if h >= self.slots.len() {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        // SAFETY: only the claiming thread writes this buffer, and index `h`
+        // has not been published yet.
+        unsafe { *self.slots[h].0.get() = rec };
+        self.head.store(h + 1, Ordering::Release);
+    }
+}
+
+/// Monotonic sink identity so a cached thread-local buffer claim from one
+/// sink is never mistaken for a claim on another.
+static NEXT_SINK_ID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    /// `(sink id, claimed buffer index)` for this thread. Index
+    /// `u32::MAX` = this sink's buffer pool was exhausted.
+    static CLAIM: Cell<(u64, u32)> = const { Cell::new((0, 0)) };
+}
+
+const NO_BUF: u32 = u32::MAX;
+
+/// Fixed-capacity span sink. All memory is allocated here, in `new`.
+pub struct TraceSink {
+    id: u64,
+    epoch: Instant,
+    bufs: Box<[ThreadBuf]>,
+    next_buf: AtomicUsize,
+    /// Spans dropped because every per-thread buffer was already claimed.
+    unclaimed_dropped: AtomicU64,
+}
+
+impl TraceSink {
+    pub fn new(threads: usize, spans_per_thread: usize) -> Self {
+        assert!(threads > 0 && spans_per_thread > 0);
+        let bufs: Vec<ThreadBuf> = (0..threads).map(|_| ThreadBuf::new(spans_per_thread)).collect();
+        Self {
+            id: NEXT_SINK_ID.fetch_add(1, Ordering::Relaxed),
+            epoch: Instant::now(),
+            bufs: bufs.into_boxed_slice(),
+            next_buf: AtomicUsize::new(0),
+            unclaimed_dropped: AtomicU64::new(0),
+        }
+    }
+
+    pub fn with_defaults() -> Self {
+        Self::new(DEFAULT_THREADS, DEFAULT_SPANS_PER_THREAD)
+    }
+
+    /// The instant `start_ns`/`dur_ns` are measured from.
+    pub fn epoch(&self) -> Instant {
+        self.epoch
+    }
+
+    /// This thread's ring buffer, claimed on first use.
+    fn my_buf(&self) -> Option<&ThreadBuf> {
+        let (sid, idx) = CLAIM.with(|c| c.get());
+        if sid == self.id {
+            if idx == NO_BUF {
+                return None;
+            }
+            return Some(&self.bufs[idx as usize]);
+        }
+        let k = self.next_buf.fetch_add(1, Ordering::Relaxed);
+        let idx = if k < self.bufs.len() { k as u32 } else { NO_BUF };
+        CLAIM.with(|c| c.set((self.id, idx)));
+        if idx == NO_BUF {
+            None
+        } else {
+            Some(&self.bufs[idx as usize])
+        }
+    }
+
+    /// Record a finished span. Allocation-free; drop-and-count on overflow.
+    pub fn push(&self, rec: SpanRecord) {
+        match self.my_buf() {
+            Some(b) => b.push(rec),
+            None => {
+                self.unclaimed_dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Record a span whose endpoints were observed by the caller (e.g. a
+    /// queue wait that started on another thread).  Instants earlier than
+    /// the sink epoch saturate to 0.
+    #[allow(clippy::too_many_arguments)]
+    pub fn record_span(
+        &self,
+        cat: &'static str,
+        name: &'static str,
+        start: Instant,
+        end: Instant,
+        num_key: &'static str,
+        num_val: u64,
+        str_key: &'static str,
+        str_val: &'static str,
+    ) {
+        let start_ns = start.saturating_duration_since(self.epoch).as_nanos() as u64;
+        let dur_ns = end.saturating_duration_since(start).as_nanos() as u64;
+        self.push(SpanRecord {
+            cat,
+            name,
+            start_ns,
+            dur_ns,
+            num_key,
+            num_val,
+            str_key,
+            str_val,
+            is_async: false,
+        });
+    }
+
+    /// Record an async interval (exported as a `ph:"b"`/`ph:"e"` pair with
+    /// `id` — its own track in the viewer, free to straddle thread stacks).
+    pub fn record_async(
+        &self,
+        cat: &'static str,
+        name: &'static str,
+        start: Instant,
+        end: Instant,
+        id: u64,
+    ) {
+        let start_ns = start.saturating_duration_since(self.epoch).as_nanos() as u64;
+        let dur_ns = end.saturating_duration_since(start).as_nanos() as u64;
+        self.push(SpanRecord {
+            cat,
+            name,
+            start_ns,
+            dur_ns,
+            num_key: "id",
+            num_val: id,
+            str_key: "",
+            str_val: "",
+            is_async: true,
+        });
+    }
+
+    /// Total recorded spans across all thread buffers.
+    pub fn len(&self) -> usize {
+        self.bufs.iter().map(|b| b.head.load(Ordering::Acquire)).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Spans dropped on overflow (full ring or exhausted buffer pool).
+    pub fn dropped(&self) -> u64 {
+        self.unclaimed_dropped.load(Ordering::Relaxed)
+            + self.bufs.iter().map(|b| b.dropped.load(Ordering::Relaxed)).sum::<u64>()
+    }
+
+    /// Snapshot every published span as `(tid, record)`.
+    pub fn events(&self) -> Vec<(u32, SpanRecord)> {
+        let mut out = Vec::new();
+        for (tid, b) in self.bufs.iter().enumerate() {
+            let n = b.head.load(Ordering::Acquire);
+            for slot in &b.slots[..n] {
+                // SAFETY: slots below the acquired head are published and
+                // never rewritten.
+                out.push((tid as u32, unsafe { *slot.0.get() }));
+            }
+        }
+        out
+    }
+
+    /// Render the Chrome trace-event JSON document (`ph:"X"` complete
+    /// events, microsecond timestamps), loadable in Perfetto or
+    /// `chrome://tracing`.
+    pub fn to_chrome_json(&self) -> Json {
+        let mut evs = Json::arr();
+        for (tid, r) in self.events() {
+            if r.is_async {
+                // Async begin/end pair: its own id-keyed track, allowed to
+                // straddle any thread's call stack.
+                for (ph, ts_ns) in [("b", r.start_ns), ("e", r.start_ns + r.dur_ns)] {
+                    evs = evs.push(
+                        Json::obj()
+                            .set("name", r.name)
+                            .set("cat", r.cat)
+                            .set("ph", ph)
+                            .set("id", r.num_val as i64)
+                            .set("ts", ts_ns as f64 / 1e3)
+                            .set("pid", 1i64)
+                            .set("tid", tid as i64)
+                            .set("args", Json::obj().set(r.num_key, r.num_val as i64)),
+                    );
+                }
+                continue;
+            }
+            let mut args = Json::obj();
+            if !r.num_key.is_empty() {
+                args = args.set(r.num_key, r.num_val as i64);
+            }
+            if !r.str_key.is_empty() {
+                args = args.set(r.str_key, r.str_val);
+            }
+            evs = evs.push(
+                Json::obj()
+                    .set("name", r.name)
+                    .set("cat", r.cat)
+                    .set("ph", "X")
+                    .set("ts", r.start_ns as f64 / 1e3)
+                    .set("dur", r.dur_ns as f64 / 1e3)
+                    .set("pid", 1i64)
+                    .set("tid", tid as i64)
+                    .set("args", args),
+            );
+        }
+        Json::obj()
+            .set("traceEvents", evs)
+            .set("displayTimeUnit", "ms")
+            .set("droppedEvents", self.dropped() as i64)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Process-global sink (drives the CLI `--trace` flags).
+// ---------------------------------------------------------------------------
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static CURRENT: AtomicPtr<TraceSink> = AtomicPtr::new(std::ptr::null_mut());
+
+/// Install `sink` as the process-global trace sink and enable tracing.
+/// The sink is intentionally leaked: instrumentation points hold plain
+/// `&'static` references, so there is never a teardown race with worker
+/// threads.  The CLI installs at most one sink per process.
+pub fn install(sink: TraceSink) -> &'static TraceSink {
+    let s: &'static TraceSink = Box::leak(Box::new(sink));
+    CURRENT.store(s as *const TraceSink as *mut TraceSink, Ordering::Release);
+    ENABLED.store(true, Ordering::Release);
+    s
+}
+
+/// Flip global recording on/off without replacing the installed sink.
+/// Enabling without an installed sink is a no-op.
+pub fn set_enabled(on: bool) {
+    if on && CURRENT.load(Ordering::Acquire).is_null() {
+        return;
+    }
+    ENABLED.store(on, Ordering::Release);
+}
+
+/// Is global tracing live?  One relaxed load — this is the entire cost an
+/// instrumentation point pays when tracing is disabled.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// The installed sink, iff tracing is enabled.
+#[inline]
+pub fn current() -> Option<&'static TraceSink> {
+    if !enabled() {
+        return None;
+    }
+    let p = CURRENT.load(Ordering::Acquire);
+    // SAFETY: `install` leaks the sink, so a non-null pointer is valid for
+    // the rest of the process.
+    (!p.is_null()).then(|| unsafe { &*p })
+}
+
+/// RAII span: measures from construction to drop and records into the
+/// global sink.  When tracing is disabled at construction this is inert —
+/// no clock read, no record.
+pub struct SpanGuard {
+    armed: Option<(&'static TraceSink, Instant)>,
+    cat: &'static str,
+    name: &'static str,
+    num_key: &'static str,
+    num_val: u64,
+    str_key: &'static str,
+    str_val: &'static str,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some((sink, start)) = self.armed {
+            sink.record_span(
+                self.cat,
+                self.name,
+                start,
+                Instant::now(),
+                self.num_key,
+                self.num_val,
+                self.str_key,
+                self.str_val,
+            );
+        }
+    }
+}
+
+/// Open a span with both a numeric and a string argument.
+#[inline]
+pub fn span_full(
+    cat: &'static str,
+    name: &'static str,
+    num_key: &'static str,
+    num_val: u64,
+    str_key: &'static str,
+    str_val: &'static str,
+) -> SpanGuard {
+    SpanGuard {
+        armed: current().map(|s| (s, Instant::now())),
+        cat,
+        name,
+        num_key,
+        num_val,
+        str_key,
+        str_val,
+    }
+}
+
+/// Open an argument-less span.
+#[inline]
+pub fn span(cat: &'static str, name: &'static str) -> SpanGuard {
+    span_full(cat, name, "", 0, "", "")
+}
+
+/// Open a span with one numeric argument (e.g. a request id).
+#[inline]
+pub fn span_num(cat: &'static str, name: &'static str, key: &'static str, val: u64) -> SpanGuard {
+    span_full(cat, name, key, val, "", "")
+}
+
+/// Open a per-block execution span tagged with the block index and the
+/// backend name.
+#[inline]
+pub fn span_block(
+    cat: &'static str,
+    name: &'static str,
+    block: u64,
+    backend: &'static str,
+) -> SpanGuard {
+    span_full(cat, name, "block", block, "backend", backend)
+}
+
+/// Record an interval whose start predates this call (e.g. a queue wait
+/// measured from the submit instant on another thread). Exported as an
+/// async `b`/`e` pair keyed by `id`. No-op while tracing is disabled.
+#[inline]
+pub fn record_past(cat: &'static str, name: &'static str, start: Instant, end: Instant, id: u64) {
+    if let Some(s) = current() {
+        s.record_async(cat, name, start, end, id);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Export + verification.
+// ---------------------------------------------------------------------------
+
+/// Write the sink's Chrome-trace JSON as `TRACE_<name>.json`, following the
+/// shared artifact-path convention: a `path` ending in `.json` names the
+/// file exactly, anything else is a directory that receives the file.
+pub fn write_trace_artifact(name: &str, path: &Path, sink: &TraceSink) -> std::io::Result<PathBuf> {
+    let file = if path.extension().is_some_and(|e| e == "json") {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        path.to_path_buf()
+    } else {
+        std::fs::create_dir_all(path)?;
+        path.join(format!("TRACE_{name}.json"))
+    };
+    std::fs::write(&file, sink.to_chrome_json().render())?;
+    Ok(file)
+}
+
+/// Summary of a verified trace document.
+#[derive(Debug, Clone, Default)]
+pub struct TraceCheck {
+    pub events: usize,
+    pub threads: usize,
+    pub max_depth: usize,
+    pub dropped: u64,
+    /// Event counts per span name, sorted by name.
+    pub by_name: Vec<(String, usize)>,
+}
+
+impl TraceCheck {
+    /// Events recorded under `name` (0 if absent).
+    pub fn count(&self, name: &str) -> usize {
+        self.by_name
+            .binary_search_by(|(n, _)| n.as_str().cmp(name))
+            .map(|k| self.by_name[k].1)
+            .unwrap_or(0)
+    }
+}
+
+/// Validate a Chrome-trace JSON document: required fields on every event,
+/// proper nesting per thread lane for `ph:"X"` complete events (a span may
+/// not partially overlap an enclosing one), and matched `ph:"b"`/`ph:"e"`
+/// async pairs.
+pub fn verify_chrome_trace(doc: &Json) -> anyhow::Result<TraceCheck> {
+    let evs = doc
+        .get("traceEvents")
+        .and_then(|e| e.as_array())
+        .ok_or_else(|| anyhow::anyhow!("trace: missing traceEvents array"))?;
+    let mut by_tid: std::collections::BTreeMap<i64, Vec<(f64, f64, String)>> =
+        std::collections::BTreeMap::new();
+    let mut names: std::collections::BTreeMap<String, usize> = std::collections::BTreeMap::new();
+    // (name, id) -> (begin count, end count, last begin ts, last end ts)
+    let mut asyncs: std::collections::BTreeMap<(String, i64), (usize, usize, f64, f64)> =
+        std::collections::BTreeMap::new();
+    for (k, e) in evs.iter().enumerate() {
+        let name = e
+            .get("name")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow::anyhow!("trace: event {k} missing name"))?;
+        if e.get("cat").and_then(|v| v.as_str()).is_none() {
+            anyhow::bail!("trace: event {k} ({name}) missing cat");
+        }
+        let ph = e
+            .get("ph")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow::anyhow!("trace: event {k} ({name}) missing ph"))?;
+        let num = |f: &str| -> anyhow::Result<f64> {
+            e.get(f)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| anyhow::anyhow!("trace: event {k} ({name}) missing {f}"))
+        };
+        let ts = num("ts")?;
+        let tid = e
+            .get("tid")
+            .and_then(|v| v.as_i64())
+            .ok_or_else(|| anyhow::anyhow!("trace: event {k} ({name}) missing tid"))?;
+        if !ts.is_finite() || ts < 0.0 {
+            anyhow::bail!("trace: event {k} ({name}) has non-finite or negative ts");
+        }
+        match ph {
+            "X" => {
+                let dur = num("dur")?;
+                if !dur.is_finite() || dur < 0.0 {
+                    anyhow::bail!("trace: event {k} ({name}) has non-finite or negative dur");
+                }
+                by_tid.entry(tid).or_default().push((ts, dur, name.to_string()));
+                *names.entry(name.to_string()).or_default() += 1;
+            }
+            "b" | "e" => {
+                let id = e
+                    .get("id")
+                    .and_then(|v| v.as_i64())
+                    .ok_or_else(|| anyhow::anyhow!("trace: async event {k} ({name}) missing id"))?;
+                let slot = asyncs.entry((name.to_string(), id)).or_insert((0, 0, 0.0, 0.0));
+                if ph == "b" {
+                    slot.0 += 1;
+                    slot.2 = ts;
+                    *names.entry(name.to_string()).or_default() += 1;
+                } else {
+                    slot.1 += 1;
+                    slot.3 = ts;
+                }
+            }
+            other => anyhow::bail!("trace: event {k} ({name}) has unsupported ph '{other}'"),
+        }
+    }
+    for ((name, id), (b, e, bts, ets)) in &asyncs {
+        if b != e {
+            anyhow::bail!("trace: async '{name}' id {id}: {b} begin vs {e} end events");
+        }
+        if *b == 1 && ets < bts {
+            anyhow::bail!("trace: async '{name}' id {id} ends before it begins");
+        }
+    }
+    let mut max_depth = 0usize;
+    for (tid, lane) in by_tid.iter_mut() {
+        // Earlier start first; at equal starts the longer span is the parent.
+        lane.sort_by(|a, b| a.0.total_cmp(&b.0).then(b.1.total_cmp(&a.1)));
+        let mut stack: Vec<(f64, String)> = Vec::new(); // (end, name)
+        for (ts, dur, name) in lane.iter() {
+            while let Some((end, _)) = stack.last() {
+                if *ts >= *end {
+                    stack.pop();
+                } else {
+                    break;
+                }
+            }
+            if let Some((end, parent)) = stack.last() {
+                if ts + dur > *end {
+                    anyhow::bail!(
+                        "trace: tid {tid}: span '{name}' [{ts}, {}] partially overlaps \
+                         enclosing '{parent}' (ends {end})",
+                        ts + dur
+                    );
+                }
+            }
+            stack.push((ts + dur, name.clone()));
+            max_depth = max_depth.max(stack.len());
+        }
+    }
+    Ok(TraceCheck {
+        events: evs.len(),
+        threads: by_tid.len(),
+        max_depth,
+        dropped: doc.get("droppedEvents").and_then(|v| v.as_u64()).unwrap_or(0),
+        by_name: names.into_iter().collect(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(name: &'static str, start_ns: u64, dur_ns: u64) -> SpanRecord {
+        SpanRecord {
+            cat: "test",
+            name,
+            start_ns,
+            dur_ns,
+            num_key: "",
+            num_val: 0,
+            str_key: "",
+            str_val: "",
+            is_async: false,
+        }
+    }
+
+    #[test]
+    fn ring_overflow_drops_and_counts() {
+        let sink = TraceSink::new(1, 4);
+        for k in 0..7u64 {
+            sink.push(rec("s", k, 1));
+        }
+        assert_eq!(sink.len(), 4);
+        assert_eq!(sink.dropped(), 3);
+        // The earliest spans are retained; the newest were dropped.
+        let evs = sink.events();
+        assert_eq!(evs[0].1.start_ns, 0);
+        assert_eq!(evs[3].1.start_ns, 3);
+    }
+
+    #[test]
+    fn threads_claim_distinct_buffers_and_pool_exhaustion_counts() {
+        let sink = TraceSink::new(2, 16);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for k in 0..8u64 {
+                        sink.push(rec("t", k, 1));
+                    }
+                });
+            }
+        });
+        // 2 threads land in buffers, 2 hit pool exhaustion: 16 recorded,
+        // 16 counted as dropped (no blocking, no reallocation either way).
+        assert_eq!(sink.len() as u64 + sink.dropped(), 32);
+        assert_eq!(sink.len(), 16);
+    }
+
+    #[test]
+    fn chrome_json_roundtrips_and_verifies() {
+        let sink = TraceSink::new(1, 16);
+        sink.push(SpanRecord {
+            num_key: "request",
+            num_val: 7,
+            str_key: "backend",
+            str_val: "fused-host-v3",
+            ..rec("inference", 1_000, 9_000)
+        });
+        sink.push(rec("block", 2_000, 3_000)); // nested inside inference
+        let doc = Json::parse(&sink.to_chrome_json().render()).unwrap();
+        let check = verify_chrome_trace(&doc).unwrap();
+        assert_eq!(check.events, 2);
+        assert_eq!(check.threads, 1);
+        assert_eq!(check.max_depth, 2);
+        assert_eq!(check.count("inference"), 1);
+        assert_eq!(check.count("block"), 1);
+        assert_eq!(check.count("absent"), 0);
+        let ev = doc.get("traceEvents").unwrap().as_array().unwrap();
+        let args = ev[0].get("args").unwrap();
+        assert_eq!(args.get("request").and_then(|v| v.as_u64()), Some(7));
+        assert_eq!(args.get("backend").and_then(|v| v.as_str()), Some("fused-host-v3"));
+    }
+
+    #[test]
+    fn verify_rejects_partial_overlap() {
+        let bad = Json::obj().set(
+            "traceEvents",
+            Json::arr()
+                .push(mk_ev("outer", 0.0, 10.0))
+                .push(mk_ev("straddler", 5.0, 10.0)),
+        );
+        let err = verify_chrome_trace(&bad).unwrap_err().to_string();
+        assert!(err.contains("partially overlaps"), "{err}");
+    }
+
+    fn mk_ev(name: &str, ts: f64, dur: f64) -> Json {
+        Json::obj()
+            .set("name", name)
+            .set("cat", "t")
+            .set("ph", "X")
+            .set("ts", ts)
+            .set("dur", dur)
+            .set("pid", 1i64)
+            .set("tid", 1i64)
+            .set("args", Json::obj())
+    }
+
+    #[test]
+    fn siblings_and_adjacent_spans_verify() {
+        let doc = Json::obj().set(
+            "traceEvents",
+            Json::arr()
+                .push(mk_ev("a", 0.0, 5.0))
+                .push(mk_ev("b", 5.0, 5.0))
+                .push(mk_ev("parent", 20.0, 10.0))
+                .push(mk_ev("child1", 21.0, 4.0))
+                .push(mk_ev("child2", 25.0, 5.0)),
+        );
+        let check = verify_chrome_trace(&doc).unwrap();
+        assert_eq!(check.events, 5);
+        assert_eq!(check.max_depth, 2);
+    }
+
+    #[test]
+    fn async_intervals_export_as_matched_pairs() {
+        let sink = TraceSink::new(1, 8);
+        let t0 = sink.epoch();
+        sink.record_async("serve", "queue_wait", t0, t0 + std::time::Duration::from_micros(50), 9);
+        sink.push(rec("inference", 20_000, 10_000)); // straddled by the wait
+        let doc = Json::parse(&sink.to_chrome_json().render()).unwrap();
+        let check = verify_chrome_trace(&doc).unwrap();
+        assert_eq!(check.events, 3); // b + e + X
+        assert_eq!(check.count("queue_wait"), 1);
+        assert_eq!(check.count("inference"), 1);
+    }
+
+    #[test]
+    fn record_past_saturates_before_epoch() {
+        let before = Instant::now();
+        let sink = TraceSink::new(1, 4);
+        sink.record_span("t", "early", before, Instant::now(), "", 0, "", "");
+        let evs = sink.events();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].1.start_ns, 0);
+    }
+}

@@ -311,7 +311,43 @@ pub fn print_compile() -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Print one named report (table1..table7, fig14, tune, compile, all).
+/// `fused-dsc report profile` — cycle-attribution profile of the whole
+/// compiled backbone under the ISS: the marker-derived phase partition, the
+/// hottest basic blocks (I$/D$ misses and CFU stalls included), and a
+/// collapsed-stack file for flamegraph tooling.  Both attribution axes are
+/// checked bit-equal to the run's total simulated cycles before anything
+/// prints.  Not part of `all`: it is this repo's extension, not a paper
+/// table.
+pub fn print_profile() -> anyhow::Result<()> {
+    let params = crate::model::weights::make_model_params(None);
+    let cm = crate::compile::compile(&params, PipelineVersion::V3)?;
+    let engine = crate::coordinator::Engine::new(params, Backend::Reference);
+    let x = engine.synthetic_input("report.profile");
+    let (run, profile) = cm.run_iss_profiled(&x, false)?;
+    let want = engine.infer(&x)?;
+    anyhow::ensure!(
+        run.logits == want.logits && run.class == want.class,
+        "profiled backbone logits diverge from the exec/ layer"
+    );
+    profile.check()?;
+    println!("== Compiled backbone: ISS cycle attribution (v3) ==");
+    profile.print(20);
+    println!(
+        "profile attribution: OK ({} cycles, {} basic blocks, {} phases)",
+        run.cycles,
+        profile.blocks.len(),
+        profile.phases.len()
+    );
+    let dir = std::path::Path::new(".");
+    let (json, collapsed) =
+        crate::obs::profile::write_profile_artifacts("backbone", dir, &profile)?;
+    println!("profile json written: {}", json.display());
+    println!("collapsed stacks written: {}", collapsed.display());
+    Ok(())
+}
+
+/// Print one named report (table1..table7, fig14, tune, compile, profile,
+/// all).
 pub fn print_report(which: &str) -> anyhow::Result<()> {
     let needs_data = matches!(which, "fig14" | "table3" | "table4" | "table6" | "all");
     let data = if needs_data { Some(super::collect_measurements()?) } else { None };
@@ -327,10 +363,11 @@ pub fn print_report(which: &str) -> anyhow::Result<()> {
         "fig14" => print_fig14(d.unwrap()),
         "tune" => print_tune()?,
         "compile" => print_compile()?,
+        "profile" => print_profile()?,
         "all" => print_all(d.unwrap()),
         other => {
             anyhow::bail!(
-                "unknown report '{other}' (try: table1..table7, fig14, tune, compile, all)"
+                "unknown report '{other}' (try: table1..table7, fig14, tune, compile, profile, all)"
             )
         }
     }

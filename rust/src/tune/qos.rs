@@ -14,7 +14,9 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::coordinator::{Coordinator, Engine, Rejected, ServeConfig, Ticket};
+use crate::coordinator::{
+    Coordinator, Engine, Metrics, MetricsSnapshot, Rejected, ServeConfig, Ticket,
+};
 use crate::tensor::TensorI8;
 
 use super::search::Objective;
@@ -127,6 +129,25 @@ impl QosRouter {
         &self.lanes.iter().find(|(c, _)| *c == class).expect("no lane for this class").1
     }
 
+    /// One labeled metrics snapshot per running lane: `qos_class` carries
+    /// the class name, so a merged dump stays per-class attributable.
+    pub fn snapshots(&self) -> Vec<MetricsSnapshot> {
+        self.lanes
+            .iter()
+            .map(|(class, coord)| coord.metrics.snapshot_labeled(class.name()))
+            .collect()
+    }
+
+    /// `(label, metrics)` handles for every lane, in the shape
+    /// [`crate::coordinator::MetricsDumper::spawn`] consumes for a
+    /// periodic `--metrics-out` dump.
+    pub fn metrics_sources(&self) -> Vec<(Option<String>, Arc<Metrics>)> {
+        self.lanes
+            .iter()
+            .map(|(class, coord)| (Some(class.name().to_string()), Arc::clone(&coord.metrics)))
+            .collect()
+    }
+
     /// Drain and join every lane.
     pub fn shutdown(self) {
         for (_, coordinator) in self.lanes {
@@ -158,6 +179,12 @@ mod tests {
             assert_eq!(got.logits, want.logits, "{class}");
             assert_eq!(got.class, want.class, "{class}");
             assert_eq!(router.coordinator(class).metrics.snapshot().completed, 1, "{class}");
+        }
+        let snaps = router.snapshots();
+        assert_eq!(snaps.len(), 3);
+        for class in QosClass::ALL {
+            let s = snaps.iter().find(|s| s.class.as_deref() == Some(class.name())).unwrap();
+            assert_eq!(s.completed, 1, "{class}");
         }
         router.shutdown();
     }

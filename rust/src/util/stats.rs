@@ -37,9 +37,25 @@ pub struct Summary {
 }
 
 impl Summary {
-    /// Compute every statistic over a non-empty sample (panics on empty).
+    /// Compute every statistic over a sample.  An empty sample yields the
+    /// all-zero summary (`n == 0`, every statistic `0.0`, no NaNs) so
+    /// callers summarizing a filtered-down measurement set — a loadgen run
+    /// where every request was shed, a bench with zero iterations — render
+    /// zeros instead of panicking or poisoning tables with NaN.
     pub fn of(samples: &[f64]) -> Self {
-        assert!(!samples.is_empty(), "empty sample");
+        if samples.is_empty() {
+            return Self {
+                n: 0,
+                mean: 0.0,
+                std: 0.0,
+                min: 0.0,
+                max: 0.0,
+                p50: 0.0,
+                p90: 0.0,
+                p95: 0.0,
+                p99: 0.0,
+            };
+        }
         let n = samples.len();
         let mean = samples.iter().sum::<f64>() / n as f64;
         let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
@@ -59,10 +75,14 @@ impl Summary {
     }
 }
 
-/// Nearest-rank percentile on a pre-sorted slice.
+/// Nearest-rank percentile on a pre-sorted slice; `0.0` when empty (the
+/// same empty-sample convention as [`Summary::of`] and
+/// [`Histogram::quantile`]).
 pub fn percentile(sorted: &[f64], q: f64) -> f64 {
-    assert!(!sorted.is_empty());
     assert!((0.0..=1.0).contains(&q));
+    if sorted.is_empty() {
+        return 0.0;
+    }
     let idx = ((sorted.len() as f64 * q).ceil() as usize).clamp(1, sorted.len());
     sorted[idx - 1]
 }
@@ -346,9 +366,75 @@ mod tests {
     }
 
     #[test]
-    #[should_panic]
-    fn summary_rejects_empty() {
-        Summary::of(&[]);
+    fn empty_sample_summarizes_to_zeros_without_nans() {
+        let s = Summary::of(&[]);
+        assert_eq!(s.n, 0);
+        for (name, v) in [
+            ("mean", s.mean),
+            ("std", s.std),
+            ("min", s.min),
+            ("max", s.max),
+            ("p50", s.p50),
+            ("p90", s.p90),
+            ("p95", s.p95),
+            ("p99", s.p99),
+        ] {
+            assert_eq!(v, 0.0, "{name} not zeroed");
+            assert!(!v.is_nan(), "{name} is NaN");
+        }
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentile(&[], 1.0), 0.0);
+    }
+
+    #[test]
+    fn empty_histogram_quantile_is_zero() {
+        let h = Histogram::new();
+        for q in [0.0, 0.5, 0.999, 1.0] {
+            let v = h.quantile(q);
+            assert_eq!(v, 0.0, "quantile({q})");
+            assert!(!v.is_nan());
+        }
+    }
+
+    #[test]
+    fn concurrent_records_match_exact_summary() {
+        // Quantile accuracy holds when the histogram is fed from many
+        // threads at once: relaxed-atomic bucket increments lose nothing,
+        // so the converged snapshot matches an exact Summary of the same
+        // values — min/max/count exactly, quantiles within the documented
+        // bucket error.  Whole-nanosecond values keep the comparison
+        // quantization-free (recording truncates to nanos anyway).
+        fn lane_nanos(t: u64) -> Vec<u64> {
+            let mut rng = crate::util::rng::SplitMix64::new(0xC0DE + t);
+            // Log-uniform over ~1 µs .. 10 ms, in whole nanoseconds.
+            (0..2_000).map(|_| (1e3 * (10f64).powf(rng.f64() * 4.0)) as u64).collect()
+        }
+        let h = Histogram::new();
+        std::thread::scope(|scope| {
+            for t in 0u64..8 {
+                let h = &h;
+                scope.spawn(move || {
+                    for n in lane_nanos(t) {
+                        h.record_nanos(n);
+                    }
+                });
+            }
+        });
+        let exact: Vec<f64> =
+            (0u64..8).flat_map(lane_nanos).map(|n| n as f64 * 1e-9).collect();
+        let want = Summary::of(&exact);
+        let snap = h.snapshot();
+        assert_eq!(snap.count, 16_000);
+        assert_eq!(snap.min_s, want.min);
+        assert_eq!(snap.max_s, want.max);
+        assert!((snap.mean_s - want.mean).abs() / want.mean < 1e-9);
+        for (got, want, what) in [
+            (snap.p50_s, want.p50, "p50"),
+            (snap.p90_s, want.p90, "p90"),
+            (snap.p99_s, want.p99, "p99"),
+        ] {
+            assert!((got - want).abs() / want < 0.07, "{what}: {got} vs exact {want}");
+        }
     }
 
     #[test]

@@ -261,6 +261,67 @@ fn metrics_recording_is_o_buckets_not_o_requests() {
 }
 
 #[test]
+fn span_instrumentation_allocates_nothing_on_the_hot_path() {
+    // The observability overhead contract (ARCHITECTURE.md §Observability):
+    // with tracing disabled an instrumentation point costs one relaxed
+    // atomic load; enabled, spans are written into the sink's preallocated
+    // per-thread ring slots.  Neither side may allocate on the steady-state
+    // serving path — the sink's fixed rings at install time are the only
+    // allocation the tracing subsystem ever makes.
+    //
+    // Disabled and enabled are measured inside one test so ordering is
+    // deterministic: the process-global sink, once installed, stays for the
+    // life of the process.
+    use fused_dsc::obs;
+    let params = make_model_params(Some(vec![
+        BlockConfig::new(8, 8, 8, 16, 8, 2, false),
+        BlockConfig::new(4, 4, 8, 16, 16, 1, false),
+        BlockConfig::new(4, 4, 16, 32, 16, 1, true),
+    ]));
+    let engine = Arc::new(Engine::new(params, Backend::FusedHost(PipelineVersion::V3)));
+    let mut shard = EngineShard::new(Arc::clone(&engine));
+    let inputs: Vec<TensorI8> =
+        (0..7).map(|i| engine.synthetic_input(&format!("alloc.s{i}"))).collect();
+    let mut out = InferenceOutput::default();
+    shard.infer_into(&inputs[0], &mut out).unwrap();
+
+    // Tracing disabled (no sink installed yet in this process): the
+    // span-instrumented inference loop stays allocation-free.
+    let before = alloc_events_now();
+    for x in &inputs[1..3] {
+        shard.infer_into(x, &mut out).unwrap();
+    }
+    assert_eq!(
+        alloc_events_now() - before,
+        0,
+        "span instrumentation with tracing disabled allocated on the warm-shard path"
+    );
+
+    // Sink setup is the one permitted allocation site: fixed-capacity
+    // rings, sized up front.
+    let sink = obs::trace::install(obs::TraceSink::new(8, 512));
+    // Warm-up under tracing: the first span claims this thread's ring.
+    shard.infer_into(&inputs[3], &mut out).unwrap();
+    let recorded = sink.len();
+    assert!(recorded > 0, "enabled tracing should be recording spans");
+
+    let before = alloc_events_now();
+    for x in &inputs[4..] {
+        shard.infer_into(x, &mut out).unwrap();
+    }
+    assert_eq!(
+        alloc_events_now() - before,
+        0,
+        "span recording allocated on the hot path (rings are preallocated at install)"
+    );
+    assert!(sink.len() > recorded, "steady-state spans were still recorded");
+    let want = engine.infer(&inputs[6]).unwrap();
+    assert_eq!(out.logits, want.logits, "tracing must not perturb inference");
+    assert_eq!(out.sim_cycles, want.sim_cycles);
+    obs::trace::set_enabled(false);
+}
+
+#[test]
 fn warm_up_then_reconfigure_allocates_then_settles() {
     // Sanity check that the counter actually observes allocations: a layer
     // reconfiguration (materialize) must allocate, and the steady state

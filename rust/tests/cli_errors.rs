@@ -1,0 +1,59 @@
+//! Negative-path CLI contract: unknown choice values fail fast, exit
+//! non-zero, and — the part a user actually needs — name the valid
+//! choices in the error message.
+
+use std::process::{Command, Output};
+
+fn run_cli(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_fused-dsc"))
+        .args(args)
+        .output()
+        .expect("spawn fused-dsc")
+}
+
+fn failing_stderr(args: &[&str]) -> String {
+    let out = run_cli(args);
+    assert!(
+        !out.status.success(),
+        "`fused-dsc {}` should exit non-zero",
+        args.join(" ")
+    );
+    String::from_utf8_lossy(&out.stderr).into_owned()
+}
+
+#[test]
+fn unknown_report_lists_the_valid_reports() {
+    let err = failing_stderr(&["report", "bogus"]);
+    assert!(err.contains("unknown report 'bogus'"), "got: {err}");
+    for choice in ["table1", "fig14", "tune", "compile", "profile", "all"] {
+        assert!(err.contains(choice), "error should offer '{choice}': {err}");
+    }
+}
+
+#[test]
+fn unknown_engine_mode_lists_the_valid_modes() {
+    let err = failing_stderr(&["serve", "loadgen", "--requests", "1", "--engine", "bogus"]);
+    assert!(err.contains("unknown engine mode 'bogus'"), "got: {err}");
+    assert!(err.contains("exec | compiled-iss"), "got: {err}");
+}
+
+#[test]
+fn unknown_qos_class_lists_the_valid_classes_fast() {
+    // Must fail on parse, *before* the per-class tuning pass runs.
+    let err = failing_stderr(&["serve", "--qos", "bogus", "--requests", "1"]);
+    assert!(err.contains("unknown QoS class 'bogus'"), "got: {err}");
+    assert!(err.contains("latency|energy|balanced"), "got: {err}");
+}
+
+#[test]
+fn unknown_backend_points_at_backend_list() {
+    let err = failing_stderr(&["run", "--backend", "bogus"]);
+    assert!(err.contains("unknown backend 'bogus'"), "got: {err}");
+    assert!(err.contains("--backend list"), "got: {err}");
+}
+
+#[test]
+fn profile_without_compiled_iss_engine_is_rejected() {
+    let err = failing_stderr(&["serve", "loadgen", "--requests", "1", "--profile", "."]);
+    assert!(err.contains("--profile needs --engine compiled-iss"), "got: {err}");
+}

@@ -1,0 +1,168 @@
+//! End-to-end contracts for the observability layer (PR 10):
+//!
+//! * **Non-perturbation** — attaching the ISS profiler or enabling span
+//!   tracing changes no architectural or measured state: runs are
+//!   bit-identical with observability on and off.
+//! * **100% attribution** — the profiler's per-basic-block partition (and,
+//!   for single runs, the marker-derived phase partition) sums *exactly*
+//!   to the run's total simulated cycles; under serving, the aggregate
+//!   across every warm session equals the metrics sink's `sim_cycles`.
+//! * **Valid export** — the Chrome-trace JSON a serving run emits parses
+//!   back and passes structural verification (required fields, per-lane
+//!   span nesting, matched async pairs), with span counts covering every
+//!   completed inference.
+//!
+//! The trace sink and the profile collector are process-global, so the
+//! tests that touch them serialize on one mutex.
+
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use fused_dsc::cfu::PipelineVersion;
+use fused_dsc::compile::compile;
+use fused_dsc::coordinator::loadgen::{self, LoadMode, LoadgenConfig};
+use fused_dsc::coordinator::{Backend, Engine, EngineMode, ServeConfig};
+use fused_dsc::model::blocks::BlockConfig;
+use fused_dsc::model::weights::make_model_params;
+use fused_dsc::obs;
+use fused_dsc::util::json::Json;
+
+/// Serializes the tests that use the process-global sink / collector.
+static GLOBALS: Mutex<()> = Mutex::new(());
+
+fn lock_globals() -> MutexGuard<'static, ()> {
+    GLOBALS.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn tiny_params() -> fused_dsc::model::weights::ModelParams {
+    make_model_params(Some(vec![
+        BlockConfig::new(8, 8, 8, 16, 8, 2, false),
+        BlockConfig::new(4, 4, 8, 16, 8, 1, true),
+    ]))
+}
+
+#[test]
+fn profiled_iss_run_is_bit_identical_and_fully_attributed() {
+    let params = tiny_params();
+    let cm = compile(&params, PipelineVersion::V3).unwrap();
+    let engine = Engine::new(params, Backend::Reference);
+    let x = engine.synthetic_input("obs.profiled");
+
+    let plain = cm.run_iss(&x).unwrap();
+    let (run, profile) = cm.run_iss_profiled(&x, false).unwrap();
+    assert_eq!(run, plain, "attaching the profiler perturbed the run");
+
+    profile.check().expect("100% attribution");
+    assert_eq!(profile.total.cycles, run.cycles);
+    assert_eq!(profile.block_cycle_sum(), run.cycles);
+    assert_eq!(profile.phase_cycle_sum(), run.cycles);
+    // Marker-exact phase partition: per block a glue phase + the block
+    // itself, plus the classifier head.
+    assert_eq!(profile.phases.len(), 2 * cm.params().blocks.len() + 1);
+    assert!(!profile.blocks.is_empty(), "no basic blocks attributed");
+    assert!(profile.total.instret > 0);
+
+    // The per-instruction oracle loop under the profiler: same contract.
+    let (srun, sprofile) = cm.run_iss_profiled(&x, true).unwrap();
+    assert_eq!(srun, plain, "profiled stepped run diverged");
+    sprofile.check().expect("stepped attribution");
+    assert_eq!(sprofile.total.cycles, run.cycles);
+}
+
+#[test]
+fn serving_profile_attributes_every_simulated_cycle() {
+    let _g = lock_globals();
+    let params = tiny_params();
+    let n_blocks = params.blocks.len();
+    let engine = Arc::new(Engine::new(params, Backend::Reference));
+    let requests = 10usize;
+
+    // Request collection before the coordinator starts: each worker's warm
+    // IssSession attaches a profiler at construction and flushes it into
+    // the global collector when the shard tears down (inside shutdown).
+    obs::profile::request();
+    let serve = ServeConfig {
+        engine: EngineMode::CompiledIss,
+        workers: 2,
+        ..ServeConfig::default()
+    };
+    let report = loadgen::run(
+        Arc::clone(&engine),
+        &LoadgenConfig {
+            mode: LoadMode::Closed { clients: 3 },
+            requests,
+            serve,
+            metrics_out: None,
+        },
+        |i| engine.synthetic_input(&format!("obs.serve.{i}")),
+    );
+    assert_eq!(report.metrics.completed, requests as u64);
+
+    let prof = obs::profile::take_collected().expect("sessions flushed a profiler");
+    let profile = obs::Profile::from_collected(&prof, n_blocks);
+    profile.check().expect("aggregate attribution");
+    // The strong cross-subsystem invariant: the profiler's aggregate over
+    // every session equals the metrics sink's summed per-request cycles.
+    assert_eq!(
+        profile.total.cycles, report.metrics.sim_cycles,
+        "serving profile does not attribute every simulated cycle"
+    );
+    assert!(profile.total.cycles > 0);
+    // Collection is one-shot: the flag was cleared with the take.
+    assert!(!obs::profile::requested());
+    assert!(obs::profile::take_collected().is_none());
+}
+
+#[test]
+fn trace_export_round_trips_and_covers_serving() {
+    let _g = lock_globals();
+    let params = tiny_params();
+    let n_blocks = params.blocks.len();
+    let engine = Arc::new(Engine::new(
+        params,
+        Backend::FusedHost(PipelineVersion::V3),
+    ));
+    let x = engine.synthetic_input("obs.trace");
+    // Reference outputs computed before the sink exists.
+    let want = engine.infer(&x).unwrap();
+
+    let sink = obs::trace::install(obs::TraceSink::new(16, 8192));
+    obs::trace::set_enabled(true);
+
+    // Tracing must not perturb inference.
+    let traced = engine.infer(&x).unwrap();
+    assert_eq!(traced.logits, want.logits);
+    assert_eq!(traced.sim_cycles, want.sim_cycles);
+
+    let requests = 8usize;
+    let report = loadgen::run(
+        Arc::clone(&engine),
+        &LoadgenConfig {
+            mode: LoadMode::Closed { clients: 2 },
+            requests,
+            serve: ServeConfig { workers: 2, ..ServeConfig::default() },
+            metrics_out: None,
+        },
+        |i| engine.synthetic_input(&format!("obs.trace.{i}")),
+    );
+    obs::trace::set_enabled(false);
+    assert_eq!(report.metrics.completed, requests as u64);
+
+    // Export → parse → structural verification, exactly the CLI's path.
+    let doc = Json::parse(&sink.to_chrome_json().render()).expect("trace JSON parses back");
+    let check = obs::trace::verify_chrome_trace(&doc).expect("structurally valid trace");
+    assert_eq!(check.dropped, 0, "rings sized for this run should not drop");
+    assert!(check.threads >= 2, "spans from client and worker threads");
+
+    // Coverage floors: every completed inference leaves its span shadow.
+    let completed = report.metrics.completed as usize;
+    assert!(check.count("inference") >= completed);
+    assert!(check.count("admission") >= completed);
+    assert!(check.count("response") >= completed);
+    assert!(check.count("queue_wait") >= completed);
+    assert!(
+        check.count("block") >= completed * n_blocks,
+        "want >= {} per-block spans, got {}",
+        completed * n_blocks,
+        check.count("block")
+    );
+}
